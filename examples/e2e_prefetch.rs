@@ -1,0 +1,67 @@
+//! End-to-end driver — the full three-layer stack on a real workload.
+//!
+//! Proves all layers compose (DESIGN.md §3): the Rust simulator
+//! generates far-faults for a real benchmark; the coordinator clusters
+//! them, batches windows, executes the **AOT-compiled JAX/Pallas
+//! model through PJRT** (Layer 2/1 artifacts from `make artifacts`),
+//! and feeds predicted pages back as prefetches — then reports the
+//! paper's headline metrics (IPC, page hit rate, PCIe traffic) against
+//! the UVMSmart baseline.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_prefetch [benchmark]
+//! ```
+
+use uvm_prefetch::eval::runner::{run_benchmark, RunOptions};
+
+fn main() -> anyhow::Result<()> {
+    let benchmark =
+        std::env::args().nth(1).unwrap_or_else(|| "pathfinder".to_string());
+    let artifacts = std::env::var("ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        anyhow::bail!("artifacts/ missing — run `make artifacts` first");
+    }
+
+    // The paper's operating regime: a fixed instruction window over a
+    // working set several times larger (DESIGN.md §5c).
+    let opts = RunOptions {
+        scale: 4.0,
+        max_instructions: 2_000_000,
+        artifacts,
+        ..Default::default()
+    };
+
+    eprintln!("=== e2e: {benchmark} under UVMSmart (baseline U) ===");
+    let u = run_benchmark(&benchmark, "uvmsmart", &opts)?;
+    eprintln!("{}", u.summary());
+
+    eprintln!("\n=== e2e: {benchmark} under the DL prefetcher (R, PJRT) ===");
+    let r = run_benchmark(&benchmark, "dl", &opts)?;
+    eprintln!("{}", r.summary());
+
+    println!("\n================= paper-style report =================");
+    println!("benchmark           : {benchmark}");
+    println!("simulated inst      : {} (U) / {} (R)", u.instructions, r.instructions);
+    println!(
+        "IPC                 : {:.4} → {:.4}  ({:+.2}%)",
+        u.ipc(),
+        r.ipc(),
+        (r.ipc() / u.ipc() - 1.0) * 100.0
+    );
+    println!("page hit rate       : {:.4} → {:.4}", u.page_hit_rate(), r.page_hit_rate());
+    println!(
+        "PCIe traffic        : {} → {} bytes ({:+.2}%)",
+        u.pcie_bytes(),
+        r.pcie_bytes(),
+        (r.pcie_bytes() as f64 / u.pcie_bytes() as f64 - 1.0) * 100.0
+    );
+    println!("unity (U vs R)      : {:.3} vs {:.3}  (ideal 1.0)", u.unity(), r.unity());
+    println!(
+        "model predictions   : {} in {} batches ({} bypassed, {} OOV)",
+        r.predictions, r.prediction_batches, r.bypass_predictions, r.oov_predictions
+    );
+    println!("======================================================");
+    println!("paper §7.4 reference: IPC +10.89% geomean, hit 76.10%→89.02%,");
+    println!("PCIe −11.05%, unity 0.85→0.90 across the 11-benchmark suite.");
+    Ok(())
+}

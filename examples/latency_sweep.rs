@@ -1,0 +1,44 @@
+//! Prediction-overhead sensitivity (paper §7.3 / Figure 10): sweep
+//! the prediction latency over 1/2/5/10 µs and report normalized IPC
+//! against the UVMSmart baseline for one benchmark.
+//!
+//! Paper averages across the suite: 1.10×, 1.06×, 1.00×, 0.90× —
+//! "our predictor, as well as other learning-based methods, are
+//! sensitive to the prediction overhead."
+//!
+//! ```sh
+//! cargo run --release --example latency_sweep [benchmark]
+//! ```
+
+use uvm_prefetch::eval::runner::{run_benchmark, run_benchmark_with, RunOptions};
+
+fn main() -> anyhow::Result<()> {
+    let benchmark = std::env::args().nth(1).unwrap_or_else(|| "pathfinder".to_string());
+    let opts = RunOptions {
+        scale: 4.0,
+        max_instructions: 2_000_000,
+        artifacts: if std::path::Path::new("artifacts/manifest.json").exists() {
+            "artifacts".into()
+        } else {
+            String::new() // stride fallback
+        },
+        ..Default::default()
+    };
+    let u = run_benchmark(&benchmark, "uvmsmart", &opts)?;
+    println!("{benchmark}: UVMSmart IPC = {:.4}\n", u.ipc());
+    println!("{:>12} {:>10} {:>16}", "latency(us)", "dl IPC", "normalized(R/U)");
+    for us in [1.0f64, 2.0, 5.0, 10.0] {
+        let r = run_benchmark_with(
+            &benchmark,
+            "dl",
+            &opts,
+            |mut e| {
+                e.runtime.prediction_latency_cycles = e.sim.us_to_cycles(us);
+                e
+            },
+            None,
+        )?;
+        println!("{:>12} {:>10.4} {:>16.3}", us, r.ipc(), r.ipc() / u.ipc());
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Quickstart: simulate one benchmark under demand paging, the tree
+//! prefetcher, and the DL prefetcher (stride fallback — no artifacts
+//! needed), and print the paper's core metrics side by side.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use uvm_prefetch::eval::runner::{run_benchmark, RunOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = RunOptions {
+        scale: 0.25,
+        max_instructions: 0, // run the workload to completion
+        ..Default::default()
+    };
+    println!("ATAX (y = AᵀAx) under three prefetch policies\n");
+    println!(
+        "{:<10} {:>10} {:>8} {:>8} {:>8} {:>8} {:>8} {:>12}",
+        "policy", "cycles", "ipc", "hit", "faults", "acc", "unity", "pcie-bytes"
+    );
+    for policy in ["none", "tree", "dl"] {
+        let m = run_benchmark("atax", policy, &opts)?;
+        println!(
+            "{:<10} {:>10} {:>8.4} {:>8.4} {:>8} {:>8.4} {:>8.4} {:>12}",
+            policy,
+            m.cycles,
+            m.ipc(),
+            m.page_hit_rate(),
+            m.far_faults,
+            m.accuracy(),
+            m.unity(),
+            m.pcie_bytes(),
+        );
+    }
+    println!("\n(dl used the pure-Rust fallback backend; pass artifacts via");
+    println!(" `repro simulate --prefetcher dl --artifacts artifacts` for the real model.)");
+    Ok(())
+}

@@ -1,0 +1,293 @@
+"""AOT compilation: train the predictors and emit the Rust-consumable
+artifacts.
+
+    python -m compile.aot --traces ../traces --out ../artifacts
+
+Outputs, per model (9 per-benchmark revised models + the "shared"
+model pre-trained on the paper's 5-benchmark corpus, §7.1):
+
+    <name>.infer.hlo.txt   logits = f(p_0..p_k, tokens i32[B,S,3])
+    <name>.train.hlo.txt   (p_0'..p_k', loss) = g(p.., tokens, labels)
+    <name>.params.bin      tensor store (f32; int4 path covered by tests)
+    <name>.vocab.json      delta vocabulary + encoders
+    manifest.json          registry (rust runtime entry point)
+
+HLO **text** is the interchange format — the image's xla_extension
+0.5.1 rejects jax≥0.5 serialized protos (64-bit instruction ids); the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Parameter convention: the model's param dict flattens in sorted-key
+order (jax dict flattening); the executables take those tensors as
+leading positional arguments so the Rust runtime can keep them
+device-resident and swap them after fine-tune steps.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import nn
+from .model import make_revised
+from .train import train
+
+MAGIC = b"UVMT"
+DT_F32, DT_I32, DT_I4 = 0, 1, 2
+
+# Quantization constants — must match rust predictor/quant.rs.
+QUANT_LO, QUANT_HI, QUANT_LEVELS = -8.0, 8.0, 16
+QUANT_STEP = (QUANT_HI - QUANT_LO) / (QUANT_LEVELS - 1)
+
+# The paper's pretraining corpus (§7.1): "we randomly select 5
+# benchmark applications (ATAX, Backprop, Bicg, Hotspot, NW)".
+SHARED_CORPUS = ("atax", "backprop", "bicg", "hotspot", "nw")
+
+INFER_BATCH = 8
+TRAIN_BATCH = 16
+FINETUNE_LR = 0.05
+
+
+# ---------------------------------------------------------------------------
+# tensor store (shared format with rust runtime/params.rs)
+# ---------------------------------------------------------------------------
+
+def quant_pack(values: np.ndarray) -> bytes:
+    codes = np.clip(np.round((np.clip(values, QUANT_LO, QUANT_HI) - QUANT_LO) / QUANT_STEP),
+                    0, QUANT_LEVELS - 1).astype(np.uint8).reshape(-1)
+    if len(codes) % 2:
+        codes = np.concatenate([codes, np.zeros(1, np.uint8)])
+    packed = (codes[0::2] | (codes[1::2] << 4)).astype(np.uint8)
+    return packed.tobytes()
+
+
+def save_params(path: str, named_tensors, dtype=DT_F32):
+    """Write the UVMT tensor store (see rust runtime/params.rs)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<I", len(named_tensors)))
+        for name, arr in named_tensors:
+            arr = np.asarray(arr, dtype=np.float32)
+            name_b = name.encode()
+            f.write(struct.pack("<H", len(name_b)))
+            f.write(name_b)
+            f.write(struct.pack("<BB", dtype, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            if dtype == DT_F32:
+                raw = arr.astype("<f4").tobytes()
+            elif dtype == DT_I4:
+                raw = quant_pack(arr)
+            else:
+                raise ValueError(dtype)
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def flatten_params(params: dict):
+    """Flatten to (names, arrays) in the canonical (sorted-key) order."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    names = sorted(params.keys())
+    assert len(names) == len(leaves), "params must be a flat dict"
+    return names, [np.asarray(l) for l in leaves], treedef
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """Lower to HLO text. `return_tuple=True` for single-output infer
+    (the Rust side unwraps a 1-tuple); the train step uses
+    `return_tuple=False` so PJRT returns one buffer per output — the
+    updated parameters stay device-resident and the xla crate's
+    tuple-literal decomposition (which is not memory-safe for wide
+    tuples) is never exercised."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def lower_infer(apply_fn, params: dict, batch: int, seq_len: int, n_feat: int) -> str:
+    names, arrays, treedef = flatten_params(params)
+
+    def fn(*args):
+        flat, tokens = args[:-1], args[-1]
+        p = jax.tree_util.tree_unflatten(treedef, list(flat))
+        return (apply_fn(p, tokens),)
+
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays]
+    tok_spec = jax.ShapeDtypeStruct((batch, seq_len, n_feat), jnp.int32)
+    lowered = jax.jit(fn).lower(*specs, tok_spec)
+    return to_hlo_text(lowered)
+
+
+def lower_train(apply_fn, params: dict, batch: int, seq_len: int, n_feat: int,
+                lr: float = FINETUNE_LR) -> str:
+    """One SGD step: (params…, tokens, labels) → (flat_params', loss).
+
+    The updated parameters come back as ONE concatenated f32 vector
+    (the Rust runtime splits it by the tensor-store shapes): the xla
+    crate's literal tuple decomposition is only exercised for a
+    2-tuple, the same code path the infer module's 1-tuple uses.
+    """
+    names, arrays, treedef = flatten_params(params)
+
+    def fn(*args):
+        flat, tokens, labels = args[:-2], args[-2], args[-1]
+        p = jax.tree_util.tree_unflatten(treedef, list(flat))
+
+        def loss_fn(p_):
+            return nn.cross_entropy(apply_fn(p_, tokens), labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p2 = nn.clip_params(nn.sgd_step(p, grads, lr=lr))
+        flat2, _ = jax.tree_util.tree_flatten(p2)
+        packed = jnp.concatenate([jnp.ravel(x) for x in flat2])
+        return (packed, loss)
+
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays]
+    tok_spec = jax.ShapeDtypeStruct((batch, seq_len, n_feat), jnp.int32)
+    lab_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lowered = jax.jit(fn).lower(*specs, tok_spec, lab_spec)
+    return to_hlo_text(lowered, return_tuple=True)
+
+
+# ---------------------------------------------------------------------------
+# model building + export
+# ---------------------------------------------------------------------------
+
+def train_revised_for(traces: list, *, seq_len: int, epochs: int,
+                      max_samples: int, log, seed=0):
+    """Build vocab + dataset from one or more traces, train the revised
+    predictor (clamped), return (vocab, params, apply_fn, metrics)."""
+    vocab = D.build_vocab(traces, history_len=seq_len)
+    sizes = D.feature_vocab_sizes(vocab, D.REVISED_FEATURES)
+
+    Xs, ys = [], []
+    for t in traces:
+        X, y = D.build_dataset(t, vocab, features=D.REVISED_FEATURES,
+                               seq_len=seq_len, max_samples=max_samples // len(traces))
+        Xs.append(X)
+        ys.append(y)
+    X, y = np.concatenate(Xs), np.concatenate(ys)
+    (Xtr, ytr), (Xva, yva) = D.split_dataset(X, y)
+
+    init_fn, apply_fn = make_revised(sizes, vocab.n_classes, seq_len=seq_len)
+    # Small traces (stencil benchmarks at low fault volume) would get
+    # almost no optimizer steps at the default batch of 256 — shrink
+    # the batch so every model sees ≥ ~40 steps/epoch.
+    batch = int(min(256, max(16, len(Xtr) // 40)))
+    res = train(init_fn, apply_fn, Xtr, ytr, epochs=epochs, batch_size=batch,
+                clamp=True, eval_data=(Xva, yva), seed=seed, log=log)
+    return vocab, res, apply_fn
+
+
+def export_model(out_dir: str, name: str, vocab, params, apply_fn,
+                 seq_len: int, with_train: bool = True) -> dict:
+    """Write all artifacts for one model; returns its manifest entry."""
+    n_feat = len(D.REVISED_FEATURES)
+    infer_hlo = f"{name}.infer.hlo.txt"
+    with open(os.path.join(out_dir, infer_hlo), "w") as f:
+        f.write(lower_infer(apply_fn, params, INFER_BATCH, seq_len, n_feat))
+    train_hlo = None
+    if with_train:
+        train_hlo = f"{name}.train.hlo.txt"
+        with open(os.path.join(out_dir, train_hlo), "w") as f:
+            f.write(lower_train(apply_fn, params, TRAIN_BATCH, seq_len, n_feat))
+
+    names, arrays, _ = flatten_params(params)
+    save_params(os.path.join(out_dir, f"{name}.params.bin"),
+                list(zip(names, arrays)), dtype=DT_F32)
+    vocab.save(os.path.join(out_dir, f"{name}.vocab.json"))
+
+    entry = {
+        "infer_hlo": infer_hlo,
+        "params": f"{name}.params.bin",
+        "vocab": f"{name}.vocab.json",
+        "batch": INFER_BATCH,
+        "train_batch": TRAIN_BATCH,
+        "seq_len": seq_len,
+        "n_features": n_feat,
+        "n_classes": vocab.n_classes,
+        "n_params": len(names),
+        "arch": "revised",
+    }
+    if train_hlo:
+        entry["train_hlo"] = train_hlo
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--traces", default="../traces")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--benchmarks", nargs="*", default=None,
+                    help="default: traces/benchmarks.json model list")
+    ap.add_argument("--seq-len", type=int, default=30)
+    ap.add_argument("--epochs", type=int, default=int(os.environ.get("AOT_EPOCHS", "4")))
+    ap.add_argument("--max-samples", type=int, default=int(os.environ.get("AOT_SAMPLES", "60000")))
+    ap.add_argument("--trace-limit", type=int, default=300_000)
+    ap.add_argument("--skip-shared", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+
+    if args.benchmarks:
+        benchmarks = args.benchmarks
+    else:
+        with open(os.path.join(args.traces, "benchmarks.json")) as f:
+            benchmarks = json.load(f)["model"]
+
+    def log(msg):
+        print(f"[aot +{time.time() - t0:6.1f}s] {msg}", flush=True)
+
+    models = {}
+    traces_cache = {}
+
+    def load(b):
+        if b not in traces_cache:
+            traces_cache[b] = D.load_trace(D.trace_path(args.traces, b), args.trace_limit)
+        return traces_cache[b]
+
+    # Per-benchmark revised models.
+    for b in benchmarks:
+        log(f"training revised model for {b}…")
+        vocab, res, apply_fn = train_revised_for(
+            [load(b)], seq_len=args.seq_len, epochs=args.epochs,
+            max_samples=args.max_samples, log=log)
+        log(f"  {b}: f1={res.f1:.4f} top1={res.top1:.4f} top10={res.top10:.4f} "
+            f"classes={vocab.n_classes} conv={vocab.convergence:.3f}")
+        models[b] = export_model(args.out, b, vocab, res.params, apply_fn, args.seq_len)
+
+    # Shared pretrained model (paper §7.1's 5-benchmark corpus).
+    if not args.skip_shared:
+        corpus = [b for b in SHARED_CORPUS if b in benchmarks or
+                  os.path.exists(D.trace_path(args.traces, b))]
+        log(f"training shared model on {corpus}…")
+        vocab, res, apply_fn = train_revised_for(
+            [load(b) for b in corpus], seq_len=args.seq_len,
+            epochs=args.epochs, max_samples=args.max_samples, log=log)
+        log(f"  shared: f1={res.f1:.4f} top1={res.top1:.4f}")
+        models["shared"] = export_model(args.out, "shared", vocab, res.params,
+                                        apply_fn, args.seq_len)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "models": models}, f, indent=1)
+    log(f"wrote {len(models)} models to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

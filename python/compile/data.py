@@ -1,0 +1,297 @@
+"""Data pipeline: GMMU trace CSV → clustered, featurized training
+sequences (paper §4, Figure 3).
+
+The Rust simulator (`repro trace-gen`) is the single source of truth
+for traces; this module never synthesizes access patterns (no parity
+drift — DESIGN.md §6).
+
+Feature catalogue (Figure 3, 13 features):
+    pc, miss, warp, sm, tpc, cta, page (pAddr), bb (bbAddr),
+    root (rAddr), array (In), dpage (Δp), dbb (Δbb), droot (Δr)
+The revised predictor (§6) uses ``REVISED_FEATURES`` = (pc, page,
+dpage); the unconstrained Transformer uses all 13.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+PAGES_PER_BB = 16
+PAGES_PER_ROOT = 512
+
+ALL_FEATURES = (
+    "pc", "miss", "warp", "sm", "tpc", "cta",
+    "page", "bb", "root", "array", "dpage", "dbb", "droot",
+)
+REVISED_FEATURES = ("pc", "page", "dpage")
+
+CLUSTER_KEYS = ("pc", "kernel_id", "sm", "cta", "warp", "sm_warp")
+
+TRACE_COLUMNS = ("cycle", "pc", "page", "sm", "warp", "cta", "tpc", "kernel_id", "array_id", "miss")
+
+
+def load_trace(path: str, limit: int = 0) -> dict:
+    """Load a trace CSV into column arrays (int64)."""
+    data = np.loadtxt(path, delimiter=",", skiprows=1, dtype=np.int64, ndmin=2)
+    if limit and len(data) > limit:
+        data = data[:limit]
+    cols = {name: data[:, i] for i, name in enumerate(TRACE_COLUMNS)}
+    return cols
+
+
+def cluster_ids(trace: dict, cluster_by: str) -> np.ndarray:
+    """Cluster key per record (paper §5.1 / Table 2 variants)."""
+    if cluster_by == "pc":
+        return trace["pc"]
+    if cluster_by == "kernel_id":
+        return trace["kernel_id"]
+    if cluster_by == "sm":
+        return trace["sm"]
+    if cluster_by == "cta":
+        return trace["cta"]
+    if cluster_by == "warp":
+        return trace["warp"]
+    if cluster_by == "sm_warp":
+        return (trace["sm"] << 32) | trace["warp"]
+    raise ValueError(f"unknown cluster key '{cluster_by}' (one of {CLUSTER_KEYS})")
+
+
+@dataclass
+class Vocab:
+    """Feature encoders shared between training and the Rust runtime.
+
+    Output classes = unique page deltas (+ OOV as the last class).
+    """
+
+    deltas: list  # class id → delta
+    pcs: list  # pc id table
+    page_buckets: int = 4096
+    dominant_delta: int = 0
+    convergence: float = 0.0
+    history_len: int = 30
+    # Small-cardinality side tables for the 13-feature model.
+    aux_sizes: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._delta_ids = {d: i for i, d in enumerate(self.deltas)}
+        self._pc_ids = {p: i for i, p in enumerate(self.pcs)}
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.deltas) + 1  # + OOV
+
+    @property
+    def oov(self) -> int:
+        return len(self.deltas)
+
+    def encode_delta(self, d: int) -> int:
+        return self._delta_ids.get(int(d), self.oov)
+
+    def encode_deltas(self, ds: np.ndarray) -> np.ndarray:
+        return np.array([self.encode_delta(d) for d in ds], dtype=np.int32)
+
+    def encode_pc(self, pc: int) -> int:
+        return self._pc_ids.get(int(pc), len(self.pcs))
+
+    def encode_page(self, page: int) -> int:
+        return int(page) % self.page_buckets
+
+    def to_json(self) -> dict:
+        return {
+            "deltas": [int(d) for d in self.deltas],
+            "pcs": [int(p) for p in self.pcs],
+            "page_buckets": int(self.page_buckets),
+            "dominant_delta": int(self.dominant_delta),
+            "convergence": float(self.convergence),
+            "history_len": int(self.history_len),
+        }
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f)
+
+    @staticmethod
+    def from_json(d: dict) -> "Vocab":
+        return Vocab(
+            deltas=list(d["deltas"]),
+            pcs=list(d["pcs"]),
+            page_buckets=int(d["page_buckets"]),
+            dominant_delta=int(d["dominant_delta"]),
+            convergence=float(d["convergence"]),
+            history_len=int(d["history_len"]),
+        )
+
+
+def build_vocab(traces: list, history_len: int = 30, max_classes: int = 512,
+                page_buckets: int = 4096, cluster_by: str = "sm_warp") -> Vocab:
+    """Vocabulary over per-cluster page deltas across one or more traces.
+
+    `max_classes` keeps the output head bounded (the paper notes the
+    category count "varies among different benchmarks"); rare deltas
+    fall into OOV.
+    """
+    from collections import Counter
+
+    delta_counts: Counter = Counter()
+    pcs: set = set()
+    for trace in traces:
+        pcs.update(int(p) for p in np.unique(trace["pc"]))
+        keys = cluster_ids(trace, cluster_by)
+        order = np.argsort(keys, kind="stable")
+        sk, sp = keys[order], trace["page"][order]
+        same = sk[1:] == sk[:-1]
+        deltas = (sp[1:] - sp[:-1])[same]
+        delta_counts.update(int(d) for d in deltas)
+
+    total = sum(delta_counts.values()) or 1
+    most = delta_counts.most_common(max_classes)
+    deltas = [d for d, _ in most]
+    dominant, dom_count = most[0] if most else (0, 0)
+    return Vocab(
+        deltas=deltas,
+        pcs=sorted(pcs),
+        page_buckets=page_buckets,
+        dominant_delta=dominant,
+        convergence=dom_count / total,
+        history_len=history_len,
+    )
+
+
+def _per_cluster_sequences(trace: dict, cluster_by: str):
+    """Yield (key, index array) per cluster, preserving record order."""
+    keys = cluster_ids(trace, cluster_by)
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    boundaries = np.nonzero(sk[1:] != sk[:-1])[0] + 1
+    for chunk in np.split(order, boundaries):
+        if len(chunk) > 1:
+            yield int(keys[chunk[0]]), chunk
+
+
+def featurize_cluster(trace: dict, idx: np.ndarray, vocab: Vocab,
+                      features=REVISED_FEATURES) -> np.ndarray:
+    """Encode one cluster's records to an int32 feature matrix [T, F].
+
+    The first record has no delta and is dropped (matching the Rust
+    `ClusterHistory` semantics).
+    """
+    pages = trace["page"][idx]
+    deltas = pages[1:] - pages[:-1]
+    idx = idx[1:]
+    pages = pages[1:]
+    out = np.zeros((len(idx), len(features)), dtype=np.int32)
+    for f_i, name in enumerate(features):
+        if name == "pc":
+            out[:, f_i] = [vocab.encode_pc(p) for p in trace["pc"][idx]]
+        elif name == "page":
+            out[:, f_i] = pages % vocab.page_buckets
+        elif name == "dpage":
+            out[:, f_i] = vocab.encode_deltas(deltas)
+        elif name == "bb":
+            out[:, f_i] = (pages // PAGES_PER_BB) % vocab.page_buckets
+        elif name == "root":
+            out[:, f_i] = (pages // PAGES_PER_ROOT) % vocab.page_buckets
+        elif name == "dbb":
+            dbb = (pages // PAGES_PER_BB) - (np.concatenate([[pages[0] // PAGES_PER_BB], pages[:-1] // PAGES_PER_BB]))
+            out[:, f_i] = np.clip(dbb + 64, 0, 127)
+        elif name == "droot":
+            droot = (pages // PAGES_PER_ROOT) - (np.concatenate([[pages[0] // PAGES_PER_ROOT], pages[:-1] // PAGES_PER_ROOT]))
+            out[:, f_i] = np.clip(droot + 8, 0, 15)
+        elif name == "miss":
+            out[:, f_i] = trace["miss"][idx]
+        elif name == "warp":
+            out[:, f_i] = trace["warp"][idx] % 64
+        elif name == "sm":
+            out[:, f_i] = trace["sm"][idx] % 64
+        elif name == "tpc":
+            out[:, f_i] = trace["tpc"][idx] % 32
+        elif name == "cta":
+            out[:, f_i] = trace["cta"][idx] % 256
+        elif name == "array":
+            out[:, f_i] = trace["array_id"][idx] % 16
+        else:
+            raise ValueError(f"unknown feature '{name}'")
+    labels = vocab.encode_deltas(deltas)  # delta id of THIS record
+    return out, labels
+
+
+def build_dataset(trace: dict, vocab: Vocab, cluster_by: str = "sm_warp",
+                  features=REVISED_FEATURES, seq_len: int = 30,
+                  distance: int = 1, max_samples: int = 200_000,
+                  shuffle_seed: int = 0):
+    """Sliding-window sequence dataset.
+
+    X[i] = tokens t-seq_len+1 … t;  y[i] = delta class at t + distance
+    (paper §5.2: the prediction distance; Table 3 sweeps 1 vs 30).
+
+    Returns (X [N, seq_len, F] int32, y [N] int32).
+    """
+    xs, ys = [], []
+    budget = max_samples
+    for _key, idx in _per_cluster_sequences(trace, cluster_by):
+        feats, labels = featurize_cluster(trace, idx, vocab, features)
+        t_count = len(feats) - seq_len - distance + 1
+        if t_count <= 0:
+            continue
+        windows = np.lib.stride_tricks.sliding_window_view(
+            feats, (seq_len, feats.shape[1])
+        )[:, 0][:t_count]
+        lbl = labels[seq_len + distance - 1:seq_len + distance - 1 + t_count]
+        xs.append(windows.astype(np.int32))
+        ys.append(lbl.astype(np.int32))
+        budget -= t_count
+        if budget <= 0:
+            break
+    if not xs:
+        raise ValueError("trace too small for the requested seq_len/distance")
+    X = np.concatenate(xs)
+    y = np.concatenate(ys)
+    rng = np.random.default_rng(shuffle_seed)
+    perm = rng.permutation(len(X))
+    X, y = X[perm], y[perm]
+    if len(X) > max_samples:
+        X, y = X[:max_samples], y[:max_samples]
+    return X, y
+
+
+def split_dataset(X, y, train_frac: float = 0.8):
+    """The paper's §4 split: 80 % train / 20 % validation."""
+    n = int(len(X) * train_frac)
+    return (X[:n], y[:n]), (X[n:], y[n:])
+
+
+def feature_vocab_sizes(vocab: Vocab, features=REVISED_FEATURES) -> list:
+    """Embedding-table size per feature (order matches the tokens)."""
+    sizes = []
+    for name in features:
+        if name == "pc":
+            sizes.append(len(vocab.pcs) + 1)  # + PC-OOV
+        elif name in ("page", "bb", "root"):
+            sizes.append(vocab.page_buckets)
+        elif name == "dpage":
+            sizes.append(vocab.n_classes)
+        elif name == "dbb":
+            sizes.append(128)
+        elif name == "droot":
+            sizes.append(16)
+        elif name == "miss":
+            sizes.append(2)
+        elif name in ("warp", "sm"):
+            sizes.append(64)
+        elif name == "tpc":
+            sizes.append(32)
+        elif name == "cta":
+            sizes.append(256)
+        elif name == "array":
+            sizes.append(16)
+        else:
+            raise ValueError(name)
+    return sizes
+
+
+def trace_path(traces_dir: str, benchmark: str) -> str:
+    return os.path.join(traces_dir, f"{benchmark}.csv")

@@ -1,0 +1,83 @@
+"""Model memory-footprint accounting (paper Tables 6/7).
+
+The paper measures parameters + forward/backward activation memory with
+torchinfo. We compute the same quantities analytically from the jaxpr:
+
+* parameter bytes — sum of leaf sizes × 4 (f32);
+* activation bytes — the sum of every intermediate array produced while
+  evaluating loss + gradients (a faithful stand-in for torchinfo's
+  "forward/backward pass size", which likewise counts stored
+  activations for both passes);
+* the Table 7 "revised" row additionally reports the 4-bit storage
+  estimate (paper §6: "4 bits are enough to represent all the integers
+  within [-8, +8]" ⇒ ⅛ of f32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import nn
+
+
+def param_bytes(params) -> int:
+    return sum(int(np.prod(l.shape)) * 4 for l in jax.tree_util.tree_leaves(params))
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def activation_bytes(apply_fn, params, batch: int, seq_len: int, n_feat: int) -> int:
+    """Sum of intermediate arrays in the fwd+bwd jaxpr."""
+    tokens = jnp.zeros((batch, seq_len, n_feat), jnp.int32)
+    labels = jnp.zeros((batch,), jnp.int32)
+
+    def loss(p):
+        return nn.cross_entropy(apply_fn(p, tokens), labels)
+
+    jaxpr = jax.make_jaxpr(jax.value_and_grad(loss))(params)
+
+    total = 0
+
+    def walk(jpr):
+        nonlocal total
+        for eqn in jpr.eqns:
+            for v in eqn.outvars:
+                total += _aval_bytes(v.aval)
+            # Recurse into nested jaxprs (custom_vjp, scan, …).
+            for p in eqn.params.values():
+                if hasattr(p, "jaxpr"):
+                    inner = p.jaxpr if hasattr(p.jaxpr, "eqns") else p
+                    walk(inner if hasattr(inner, "eqns") else inner.jaxpr)
+                elif isinstance(p, (list, tuple)):
+                    for q in p:
+                        if hasattr(q, "jaxpr"):
+                            walk(q.jaxpr if hasattr(q.jaxpr, "eqns") else q)
+
+    walk(jaxpr.jaxpr)
+    return total
+
+
+def footprint(apply_fn, params, batch: int = 512, seq_len: int = 30,
+              n_feat: int = 3) -> dict:
+    """Tables 6/7 row: params / activations / total, in bytes."""
+    pb = param_bytes(params)
+    ab = activation_bytes(apply_fn, params, batch, seq_len, n_feat)
+    return {
+        "params_bytes": pb,
+        "activation_bytes": ab,
+        "total_bytes": pb + ab,
+        "params_int4_bytes": (pb // 4 + 1) // 2,  # f32 → 4-bit codes
+    }
+
+
+def fmt_mb(b: int) -> str:
+    if b < 1 << 20:
+        return f"{b / 1024:.2f}KB"
+    return f"{b / (1 << 20):.2f}MB"

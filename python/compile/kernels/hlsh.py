@@ -1,0 +1,118 @@
+"""Layer 1 — the HLSH attention mechanism (paper Algorithm 1) as a
+Pallas kernel.
+
+The kernel fuses, per batch element:
+  Hamming scoring of the LSH codes → erase/share masking → masked
+  shared-QK attention → shared-row output copy.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+implementation targets CUDA; on a TPU-shaped target the whole
+(S=30, D=12) working set fits one VMEM-resident block, so the grid
+iterates over the batch only and every phase is expressed as dense
+masked arithmetic (multiplicative masks instead of gather/scatter —
+the MXU wants dense tiles and the zeroed rows are free relative to
+re-tiling). `interpret=True` everywhere: the CPU PJRT client cannot
+execute Mosaic custom-calls, and numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS
+
+
+def _hlsh_kernel(qk_ref, v_ref, hashes_ref, o_ref, *, htop: float, hbot: float):
+    """One batch element: blocks are [1, S, D] / [1, S, H]; index away
+    the unit batch dim."""
+    qk = qk_ref[0]
+    v = v_ref[0]
+    hashes = hashes_ref[0]
+    s_len, d = qk.shape
+
+    # --- Hamming scoring (Algorithm 1 lines 2-3) -----------------------
+    sampled = hashes[::2]  # deterministic seq/2 sample
+    diff = (hashes[:, None, :] != sampled[None, :, :]).sum(-1).astype(jnp.float32)
+    score = jnp.exp(jnp.log(diff + EPS).mean(axis=1))  # geomean [S]
+
+    # --- erase / share masks (lines 5-17) ------------------------------
+    erase = score >= htop
+    share_all = score <= hbot
+    any_share = share_all.any()
+    base_idx = jnp.argmax(share_all)
+    idx = jax.lax.iota(jnp.int32, s_len)
+    share_rest = share_all & (idx != base_idx) & any_share
+    keep = (~(erase | share_rest)).astype(jnp.float32)
+
+    # --- masked shared-QK attention (line 18) ---------------------------
+    qm = qk * keep[:, None]
+    scores = jnp.dot(qm, qm.T, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.dot(w, v, preferred_element_type=jnp.float32)
+
+    # --- copy base output into shared rows (line 19) --------------------
+    base_row = jnp.take(out, base_idx, axis=0)
+    out = jnp.where(share_rest[:, None], base_row[None, :], out)
+    o_ref[0] = out
+
+
+def _hlsh_pallas(qk: jnp.ndarray, v: jnp.ndarray, hashes: jnp.ndarray,
+                 htop: float, hbot: float) -> jnp.ndarray:
+    """Raw pallas_call: grid = batch; each program owns one (S, D)
+    block in VMEM."""
+    b, s, d = qk.shape
+    h = hashes.shape[-1]
+    kernel = functools.partial(_hlsh_kernel, htop=float(htop), hbot=float(hbot))
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, h), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qk, v, hashes)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def hlsh_attention(qk: jnp.ndarray, v: jnp.ndarray, hashes: jnp.ndarray,
+                   htop: float, hbot: float) -> jnp.ndarray:
+    """HLSH attention over a batch.
+
+    qk, v: f32 [B, S, D]; hashes: int32 [B, S, H].
+
+    Forward runs the Pallas kernel; the backward pass differentiates
+    the pure-jnp reference (pallas_call in interpret mode has no
+    reverse-mode rule — and the two are verified numerically identical
+    by `tests/test_kernels.py`, so the gradients are exact).
+    """
+    return _hlsh_pallas(qk, v, hashes, htop, hbot)
+
+
+def _hlsh_fwd(qk, v, hashes, htop, hbot):
+    return _hlsh_pallas(qk, v, hashes, htop, hbot), (qk, v, hashes)
+
+
+def _hlsh_bwd(htop, hbot, res, g):
+    from .ref import hlsh_attention_batched_ref
+
+    qk, v, hashes = res
+    _, vjp = jax.vjp(
+        lambda q_, v_: hlsh_attention_batched_ref(q_, v_, hashes, htop, hbot), qk, v
+    )
+    dqk, dv = vjp(g)
+    import numpy as np
+
+    dhash = np.zeros(hashes.shape, dtype=jax.dtypes.float0)
+    return dqk, dv, dhash
+
+
+hlsh_attention.defvjp(_hlsh_fwd, _hlsh_bwd)

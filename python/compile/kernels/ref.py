@@ -1,0 +1,102 @@
+"""Pure-jnp reference (oracle) implementations for the Pallas kernels.
+
+These are the ground truth the kernel tests compare against
+(`python/tests/test_kernels.py`, hypothesis sweeps), and the fallback
+path the models can run when Pallas is unavailable.
+
+HLSH attention = the paper's Algorithm 1:
+  1. LSH-bucket the shared Q/K matrix (angular LSH → sign bits).
+  2. Sample seq_len/2 key rows; per query row, geomean of Hamming
+     distances to the sampled rows → HSCORE.
+  3. HSCORE ≥ HTOP  → erase the row (distinct entry, negligible dot
+     products).
+     HSCORE ≤ HBOT  → share: keep the first such row ("base"), erase
+     the rest, and copy base's attention output to them.
+  4. Ordinary scaled-dot-product attention over the surviving rows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def lsh_hash(qk: jnp.ndarray, n_hashes: int, seed: int = 0) -> jnp.ndarray:
+    """Angular LSH: sign bits of random projections.
+
+    qk: [..., S, D] → int32 bits [..., S, n_hashes].
+    The projection matrix is a fixed function of `seed` (NOT trained),
+    shared between train/AOT/runtime so hash codes are reproducible.
+    """
+    d = qk.shape[-1]
+    r = jax.random.normal(jax.random.PRNGKey(seed), (d, n_hashes), dtype=jnp.float32)
+    return (qk @ r > 0).astype(jnp.int32)
+
+
+def hscore(hashes: jnp.ndarray) -> jnp.ndarray:
+    """Per-row Hamming score (Algorithm 1 lines 2-3) for [S, H] codes.
+
+    Samples every other row (seq/2 deterministic 'random' sample — the
+    simulator must be reproducible), computes the Hamming distance from
+    each row to each sample, and reduces by geometric mean.
+    """
+    sampled = hashes[::2]  # [S/2, H]
+    # [S, S/2]: number of differing bits.
+    diff = (hashes[:, None, :] != sampled[None, :, :]).sum(-1).astype(jnp.float32)
+    # Geometric mean along the sample axis (ε keeps zeros finite).
+    return jnp.exp(jnp.log(diff + EPS).mean(axis=1))
+
+
+def hlsh_masks(hashes: jnp.ndarray, htop: float, hbot: float):
+    """Erase/share masks for one sequence [S, H] (Algorithm 1 lines 5-17).
+
+    Returns (keep [S] f32, base_idx scalar int, share [S] bool):
+    * keep = 0 for erased rows (score ≥ htop, or shared non-base rows)
+    * base_idx = first shared row (or -1 encoded as 0 with empty share)
+    * share = rows whose output is copied from base after attention
+    """
+    s = hscore(hashes)
+    erase = s >= htop
+    share_all = s <= hbot
+    any_share = share_all.any()
+    base_idx = jnp.argmax(share_all)  # first True (0 if none — guarded by any_share)
+    idx = jnp.arange(hashes.shape[0])
+    share_rest = share_all & (idx != base_idx)
+    keep = (~(erase | share_rest)).astype(jnp.float32)
+    share_rest = share_rest & any_share
+    return keep, base_idx, share_rest
+
+
+def hlsh_attention_ref(qk: jnp.ndarray, v: jnp.ndarray, hashes: jnp.ndarray,
+                       htop: float, hbot: float) -> jnp.ndarray:
+    """Reference HLSH attention for one sequence.
+
+    qk, v: [S, D]; hashes: [S, H] → out [S, D].
+    """
+    s_len, d = qk.shape
+    keep, base_idx, share_rest = hlsh_masks(hashes, htop, hbot)
+    qm = qk * keep[:, None]
+    km = qk * keep[:, None]
+    scores = qm @ km.T / jnp.sqrt(jnp.float32(d))  # [S, S]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = w @ v
+    # Copy the base row's output into the shared rows (line 19).
+    base_row = out[base_idx]
+    out = jnp.where(share_rest[:, None], base_row[None, :], out)
+    return out
+
+
+def hlsh_attention_batched_ref(qk, v, hashes, htop: float, hbot: float):
+    """vmap over batch: qk, v [B, S, D]; hashes [B, S, H]."""
+    return jax.vmap(lambda q_, v_, h_: hlsh_attention_ref(q_, v_, h_, htop, hbot))(qk, v, hashes)
+
+
+def full_attention_ref(qk: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Single-head shared-QK full attention [B, S, D] (the module HLSH
+    approximates; Table 5's comparison baseline)."""
+    d = qk.shape[-1]
+    scores = qk @ qk.transpose(0, 2, 1) / jnp.sqrt(jnp.float32(d))
+    w = jax.nn.softmax(scores, axis=-1)
+    return w @ v

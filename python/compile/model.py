@@ -1,0 +1,262 @@
+"""Layer 2 — the predictor model zoo in pure JAX.
+
+* ``transformer_full`` — the unconstrained model of §4/Table 1:
+  encoder-only (BERT-like), 13 embedded features concatenated to
+  d_model = 200, sinusoidal positions, 2 encoder layers, full
+  multi-head self-attention, linear + softmax head.
+* ``revised`` — the §6 predictor: 3 features (PC, page, Δ) embedded to
+  d_model = 12, 1 encoder layer, 1 head, **HLSH attention** (the
+  Layer-1 Pallas kernel), activations clamped to [-8, 8].
+* ``fc`` / ``mlp`` / ``lstm`` / ``cnn`` — Table 4 and Figure 9
+  comparison baselines.
+
+Every factory returns ``(init_fn, apply_fn)`` with
+``apply_fn(params, tokens int32 [B, S, F]) -> logits f32 [B, C]``.
+Parameter dicts flatten in sorted-key order — the AOT argument
+convention the Rust runtime relies on.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .kernels.hlsh import hlsh_attention
+from .kernels.ref import hlsh_attention_batched_ref, lsh_hash
+
+HLSH_N_HASHES = 16
+HTOP = 0.9 * HLSH_N_HASHES
+HBOT = 0.1 * HLSH_N_HASHES
+
+
+def _embed_tokens(params, tokens, n_features, prefix="emb"):
+    """Concatenate per-feature embeddings: [B,S,F] → [B,S,sum(dims)]."""
+    parts = [
+        params[f"{prefix}{i}"][tokens[:, :, i]] for i in range(n_features)
+    ]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def _embed_init(key, vocab_sizes, dims, prefix="emb"):
+    ks = jax.random.split(key, len(vocab_sizes))
+    return {
+        f"{prefix}{i}": nn.embed_init(ks[i], v, d)
+        for i, (v, d) in enumerate(zip(vocab_sizes, dims))
+    }
+
+
+def _head_apply(params, x, clamp=False):
+    """Pool the last token and project to classes."""
+    h = x[:, -1, :]
+    if clamp:
+        h = nn.clamp(h)
+    return nn.dense(params, "head", h)
+
+
+# ---------------------------------------------------------------------------
+# transformer_full — §4 unconstrained model
+# ---------------------------------------------------------------------------
+
+def make_transformer_full(vocab_sizes, n_classes, seq_len=30, n_layers=2,
+                          n_heads=4, d_ff=256):
+    """13-feature encoder-only Transformer (paper Figure 4).
+
+    Embedding dims are spread over the features so they sum to ~200
+    (the paper: "200 is the total dimensions of the concatenation of 13
+    features after embedding").
+    """
+    n_feat = len(vocab_sizes)
+    base = 200 // n_feat
+    dims = [base + (1 if i < 200 - base * n_feat else 0) for i in range(n_feat)]
+    d_model = sum(dims)
+    assert d_model % n_heads == 0 or n_heads == 1, (d_model, n_heads)
+
+    def init(key):
+        ks = jax.random.split(key, n_layers + 2)
+        params = _embed_init(ks[0], vocab_sizes, dims)
+        for layer in range(n_layers):
+            params.update(nn.encoder_layer_init(ks[1 + layer], d_model, d_ff, f"enc{layer}"))
+        params.update(nn.dense_init(ks[-1], d_model, n_classes, "head"))
+        return params
+
+    pe = nn.positional_encoding(seq_len, d_model)
+
+    def apply(params, tokens):
+        x = _embed_tokens(params, tokens, n_feat) + pe[None, : tokens.shape[1]]
+        for layer in range(n_layers):
+            x = nn.encoder_layer(params, f"enc{layer}", x, n_heads)
+        return _head_apply(params, x)
+
+    return init, apply
+
+
+# ---------------------------------------------------------------------------
+# revised — §6 simplified model (the AOT'd production path)
+# ---------------------------------------------------------------------------
+
+def make_revised(vocab_sizes, n_classes, seq_len=30, use_pallas=True,
+                 attention="hlsh", quant_clamp=True):
+    """The revised predictor (paper §6, Figure 8).
+
+    3 features → 12-dim embedding (4+4+4), positional encoding, one
+    single-head encoder block whose attention is the HLSH kernel
+    (Layer 1), residual + head. ``attention`` ∈ {"hlsh", "full",
+    "none"} — "none" is the FC-only ablation of Table 4, "full" the
+    Table 5 baseline.
+    """
+    n_feat = len(vocab_sizes)
+    dims = [4] * n_feat
+    d_model = sum(dims)
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        params = _embed_init(ks[0], vocab_sizes, dims)
+        params.update(nn.dense_init(ks[1], d_model, d_model, "qk"))
+        params.update(nn.dense_init(ks[2], d_model, d_model, "v"))
+        params.update(nn.dense_init(ks[3], d_model, d_model, "ff"))
+        params.update(nn.layer_norm_init(d_model, "ln"))
+        params.update(nn.dense_init(ks[4], d_model, n_classes, "head"))
+        return params
+
+    pe = nn.positional_encoding(seq_len, d_model)
+    attn_fn = hlsh_attention if use_pallas else hlsh_attention_batched_ref
+
+    def apply(params, tokens):
+        x = _embed_tokens(params, tokens, n_feat) + pe[None, : tokens.shape[1]]
+        if quant_clamp:
+            x = nn.clamp(x)
+        if attention != "none":
+            # Shared-QK projection (Reformer-style — §5.4).
+            qk = nn.dense(params, "qk", x)
+            v = nn.dense(params, "v", x)
+            if quant_clamp:
+                qk, v = nn.clamp(qk), nn.clamp(v)
+            if attention == "hlsh":
+                hashes = lsh_hash(qk, HLSH_N_HASHES)
+                a = attn_fn(qk, v, hashes, HTOP, HBOT)
+            else:  # "full"
+                from .kernels.ref import full_attention_ref
+                a = full_attention_ref(qk, v)
+            x = nn.layer_norm(params, "ln", x + a)
+        h = jax.nn.relu(nn.dense(params, "ff", x))
+        if quant_clamp:
+            h = nn.clamp(h)
+        return _head_apply(params, x + h, clamp=quant_clamp)
+
+    return init, apply
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def make_fc(vocab_sizes, n_classes, seq_len=30):
+    """Single fully-connected layer over the flattened embeddings
+    (paper Table 4's degenerate-case winner)."""
+    n_feat = len(vocab_sizes)
+    dims = [4] * n_feat
+    d_model = sum(dims)
+
+    def init(key):
+        ks = jax.random.split(key, 2)
+        params = _embed_init(ks[0], vocab_sizes, dims)
+        params.update(nn.dense_init(ks[1], seq_len * d_model, n_classes, "head"))
+        return params
+
+    def apply(params, tokens):
+        x = _embed_tokens(params, tokens, n_feat)
+        flat = x.reshape(x.shape[0], -1)
+        return nn.dense(params, "head", flat)
+
+    return init, apply
+
+
+def make_mlp(vocab_sizes, n_classes, seq_len=30, hidden=128):
+    """Two-hidden-layer MLP (Fig. 9 baseline; Peled et al. style)."""
+    n_feat = len(vocab_sizes)
+    dims = [4] * n_feat
+    d_model = sum(dims)
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        params = _embed_init(ks[0], vocab_sizes, dims)
+        params.update(nn.dense_init(ks[1], seq_len * d_model, hidden, "h1"))
+        params.update(nn.dense_init(ks[2], hidden, hidden, "h2"))
+        params.update(nn.dense_init(ks[3], hidden, n_classes, "head"))
+        return params
+
+    def apply(params, tokens):
+        x = _embed_tokens(params, tokens, n_feat).reshape(tokens.shape[0], -1)
+        x = jax.nn.relu(nn.dense(params, "h1", x))
+        x = jax.nn.relu(nn.dense(params, "h2", x))
+        return nn.dense(params, "head", x)
+
+    return init, apply
+
+
+def make_lstm(vocab_sizes, n_classes, seq_len=30, hidden=64):
+    """LSTM over the token embeddings (Fig. 9; Hashemi et al. style)."""
+    n_feat = len(vocab_sizes)
+    dims = [4] * n_feat
+    d_model = sum(dims)
+
+    def init(key):
+        ks = jax.random.split(key, 3)
+        params = _embed_init(ks[0], vocab_sizes, dims)
+        params.update(nn.lstm_init(ks[1], d_model, hidden, "lstm"))
+        params.update(nn.dense_init(ks[2], hidden, n_classes, "head"))
+        return params
+
+    def apply(params, tokens):
+        x = _embed_tokens(params, tokens, n_feat)
+        h = nn.lstm(params, "lstm", x)
+        return nn.dense(params, "head", h)
+
+    return init, apply
+
+
+def make_cnn(vocab_sizes, n_classes, seq_len=30, channels=64, width=3):
+    """1-D CNN over the sequence (Fig. 9 baseline)."""
+    n_feat = len(vocab_sizes)
+    dims = [4] * n_feat
+    d_model = sum(dims)
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        params = _embed_init(ks[0], vocab_sizes, dims)
+        params.update(nn.conv1d_init(ks[1], d_model, channels, width, "c1"))
+        params.update(nn.conv1d_init(ks[2], channels, channels, width, "c2"))
+        params.update(nn.dense_init(ks[3], channels, n_classes, "head"))
+        return params
+
+    def apply(params, tokens):
+        x = _embed_tokens(params, tokens, n_feat)
+        x = jax.nn.relu(nn.conv1d(params, "c1", x))
+        x = jax.nn.relu(nn.conv1d(params, "c2", x))
+        return nn.dense(params, "head", x.mean(axis=1))
+
+    return init, apply
+
+
+MODEL_FACTORIES = {
+    "transformer": make_transformer_full,
+    "revised": make_revised,
+    "fc": make_fc,
+    "mlp": make_mlp,
+    "lstm": make_lstm,
+    "cnn": make_cnn,
+    "hlsh": make_revised,  # Fig. 9 alias
+}
+
+
+def make_model(arch: str, vocab_sizes, n_classes, seq_len=30, **kw):
+    factory = MODEL_FACTORIES[arch]
+    return factory(vocab_sizes, n_classes, seq_len=seq_len, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _noop():  # pragma: no cover - keeps functools import purposeful
+    return None

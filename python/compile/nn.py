@@ -1,0 +1,204 @@
+"""Minimal pure-JAX neural-network library (no flax/optax in the build
+environment — and the models here are tiny, so explicit param dicts keep
+the AOT parameter ordering trivially stable for the Rust runtime).
+
+Every layer is an (init, apply) pair over plain dicts. Parameter trees
+flatten in sorted-key order (jax dict flattening), which `aot.py` relies
+on for the executable argument order.
+
+Quantization-aware mode: the paper clamps weights and activations to
+[-8, +8] (§6, Table 8 "R"). `clamp()` is applied to activations inside
+the revised model, and `clip_params` is applied to weights after each
+optimizer step.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+QUANT_LO, QUANT_HI = -8.0, 8.0
+
+
+def clamp(x):
+    """The paper's [-8, 8] activation clamp."""
+    return jnp.clip(x, QUANT_LO, QUANT_HI)
+
+
+def clip_params(params):
+    """Clamp every weight tensor to [-8, 8] (post-step projection)."""
+    return jax.tree_util.tree_map(lambda p: jnp.clip(p, QUANT_LO, QUANT_HI), params)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def glorot(key, shape):
+    fan_in, fan_out = shape[-2], shape[-1]
+    scale = math.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+def embed_init(key, vocab, dim):
+    return jax.random.normal(key, (vocab, dim), dtype=jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, prefix):
+    kw, _ = jax.random.split(key)
+    return {f"{prefix}_w": glorot(kw, (d_in, d_out)), f"{prefix}_b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def dense(params, prefix, x):
+    return x @ params[f"{prefix}_w"] + params[f"{prefix}_b"]
+
+
+def layer_norm_init(dim, prefix):
+    return {f"{prefix}_g": jnp.ones((dim,), jnp.float32), f"{prefix}_b": jnp.zeros((dim,), jnp.float32)}
+
+
+def layer_norm(params, prefix, x, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * params[f"{prefix}_g"] + params[f"{prefix}_b"]
+
+
+def positional_encoding(seq_len: int, dim: int) -> jnp.ndarray:
+    """The original sinusoidal scheme (Vaswani et al.; paper §4)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, (2 * (i // 2)) / dim)
+    pe = jnp.where(i % 2 == 0, jnp.sin(angle), jnp.cos(angle))
+    return pe  # [seq, dim]
+
+
+def full_attention(q, k, v, n_heads: int):
+    """Multi-head scaled dot-product self-attention over [B, S, D]."""
+    b, s, d = q.shape
+    dh = d // n_heads
+
+    def split(x):
+        return x.reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)  # [B,H,S,dh]
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = qh @ kh.transpose(0, 1, 3, 2) / math.sqrt(dh)  # [B,H,S,S]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = w @ vh  # [B,H,S,dh]
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+def encoder_layer_init(key, d_model, d_ff, prefix):
+    ks = jax.random.split(key, 5)
+    p = {}
+    p.update(dense_init(ks[0], d_model, d_model, f"{prefix}_q"))
+    p.update(dense_init(ks[1], d_model, d_model, f"{prefix}_k"))
+    p.update(dense_init(ks[2], d_model, d_model, f"{prefix}_v"))
+    p.update(dense_init(ks[3], d_model, d_ff, f"{prefix}_ff1"))
+    p.update(dense_init(ks[4], d_ff, d_model, f"{prefix}_ff2"))
+    p.update(layer_norm_init(d_model, f"{prefix}_ln1"))
+    p.update(layer_norm_init(d_model, f"{prefix}_ln2"))
+    return p
+
+
+def encoder_layer(params, prefix, x, n_heads):
+    """Post-LN transformer encoder layer (BERT-style, paper Figure 4)."""
+    q = dense(params, f"{prefix}_q", x)
+    k = dense(params, f"{prefix}_k", x)
+    v = dense(params, f"{prefix}_v", x)
+    a = full_attention(q, k, v, n_heads)
+    x = layer_norm(params, f"{prefix}_ln1", x + a)
+    h = jax.nn.relu(dense(params, f"{prefix}_ff1", x))
+    h = dense(params, f"{prefix}_ff2", h)
+    return layer_norm(params, f"{prefix}_ln2", x + h)
+
+
+# ---------------------------------------------------------------------------
+# LSTM (Fig. 9 baseline)
+# ---------------------------------------------------------------------------
+
+def lstm_init(key, d_in, d_hidden, prefix):
+    ks = jax.random.split(key, 2)
+    return {
+        f"{prefix}_wx": glorot(ks[0], (d_in, 4 * d_hidden)),
+        f"{prefix}_wh": glorot(ks[1], (d_hidden, 4 * d_hidden)),
+        f"{prefix}_b": jnp.zeros((4 * d_hidden,), jnp.float32),
+    }
+
+
+def lstm(params, prefix, x):
+    """Run an LSTM over [B, S, D]; returns final hidden state [B, H]."""
+    b, s, _ = x.shape
+    h_dim = params[f"{prefix}_wh"].shape[0]
+
+    def cell(carry, xt):
+        h, c = carry
+        gates = xt @ params[f"{prefix}_wx"] + h @ params[f"{prefix}_wh"] + params[f"{prefix}_b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    init = (jnp.zeros((b, h_dim), jnp.float32), jnp.zeros((b, h_dim), jnp.float32))
+    (h, _), _ = jax.lax.scan(cell, init, x.transpose(1, 0, 2))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Conv1D (Fig. 9 CNN baseline)
+# ---------------------------------------------------------------------------
+
+def conv1d_init(key, d_in, d_out, width, prefix):
+    return {
+        f"{prefix}_w": glorot(key, (width, d_in, d_out)) ,
+        f"{prefix}_b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def conv1d(params, prefix, x):
+    """'SAME' 1-D convolution over [B, S, D]."""
+    w = params[f"{prefix}_w"]  # [W, Din, Dout]
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+    return out + params[f"{prefix}_b"]
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.float32)}
+
+
+def adam_step(params, opt_state, grads, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt_state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, opt_state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, opt_state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def sgd_step(params, grads, lr=0.05):
+    """Plain SGD — the online fine-tune step baked into the AOT train
+    executable (small and stateless, so Rust carries no optimizer
+    state)."""
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()

@@ -1,0 +1,113 @@
+"""Training loop + evaluation metrics (top-k accuracy, weighted F1 —
+the paper's Table 1/8 columns), with the paper's quantization-aware
+[-8, 8] clamp.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import nn
+
+
+@dataclass
+class TrainResult:
+    params: dict
+    losses: list
+    f1: float
+    top1: float
+    top10: float
+
+
+def make_loss_fn(apply_fn):
+    def loss_fn(params, tokens, labels):
+        return nn.cross_entropy(apply_fn(params, tokens), labels)
+    return loss_fn
+
+
+def make_train_step(apply_fn, lr=1e-3, clamp=False):
+    loss_fn = make_loss_fn(apply_fn)
+
+    @jax.jit
+    def step(params, opt_state, tokens, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+        params, opt_state = nn.adam_step(params, opt_state, grads, lr=lr)
+        if clamp:
+            params = nn.clip_params(params)
+        return params, opt_state, loss
+
+    return step
+
+
+def train(init_fn, apply_fn, X, y, *, epochs=3, batch_size=256, lr=1e-3,
+          clamp=False, seed=0, eval_data=None, log=None):
+    """Train a model; returns TrainResult with validation metrics."""
+    key = jax.random.PRNGKey(seed)
+    params = init_fn(key)
+    opt_state = nn.adam_init(params)
+    step = make_train_step(apply_fn, lr=lr, clamp=clamp)
+
+    n = len(X)
+    rng = np.random.default_rng(seed)
+    losses = []
+    for epoch in range(epochs):
+        perm = rng.permutation(n)
+        epoch_loss, batches = 0.0, 0
+        for start in range(0, n - batch_size + 1, batch_size):
+            idx = perm[start:start + batch_size]
+            params, opt_state, loss = step(params, opt_state, jnp.asarray(X[idx]), jnp.asarray(y[idx]))
+            epoch_loss += float(loss)
+            batches += 1
+        mean_loss = epoch_loss / max(batches, 1)
+        losses.append(mean_loss)
+        if log:
+            log(f"  epoch {epoch}: loss {mean_loss:.4f}")
+
+    Xe, ye = eval_data if eval_data is not None else (X, y)
+    metrics = evaluate(apply_fn, params, Xe, ye)
+    return TrainResult(params=params, losses=losses, **metrics)
+
+
+def predict_logits(apply_fn, params, X, batch_size=512):
+    """Batched inference over a numpy dataset."""
+    jit_apply = jax.jit(apply_fn)
+    outs = []
+    for start in range(0, len(X), batch_size):
+        outs.append(np.asarray(jit_apply(params, jnp.asarray(X[start:start + batch_size]))))
+    return np.concatenate(outs)
+
+
+def evaluate(apply_fn, params, X, y, batch_size=512) -> dict:
+    """top-1 / top-10 accuracy + weighted F1 (paper Tables 1-8)."""
+    logits = predict_logits(apply_fn, params, X, batch_size)
+    return metrics_from_logits(logits, y)
+
+
+def metrics_from_logits(logits: np.ndarray, y: np.ndarray) -> dict:
+    pred = logits.argmax(-1)
+    top1 = float((pred == y).mean())
+    k = min(10, logits.shape[-1])
+    topk = np.argpartition(-logits, kth=k - 1, axis=-1)[:, :k]
+    top10 = float((topk == y[:, None]).any(-1).mean())
+    return {"f1": weighted_f1(y, pred), "top1": top1, "top10": top10}
+
+
+def weighted_f1(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    """Support-weighted F1 over the observed classes (sklearn
+    `f1_score(average="weighted")` semantics, implemented locally)."""
+    classes, support = np.unique(y_true, return_counts=True)
+    total = support.sum()
+    f1_sum = 0.0
+    for c, sup in zip(classes, support):
+        tp = float(((y_pred == c) & (y_true == c)).sum())
+        fp = float(((y_pred == c) & (y_true != c)).sum())
+        fn = float(((y_pred != c) & (y_true == c)).sum())
+        prec = tp / (tp + fp) if tp + fp > 0 else 0.0
+        rec = tp / (tp + fn) if tp + fn > 0 else 0.0
+        f1 = 2 * prec * rec / (prec + rec) if prec + rec > 0 else 0.0
+        f1_sum += f1 * sup
+    return f1_sum / total if total else 0.0

@@ -1,0 +1,37 @@
+"""Shared fixtures: synthetic traces shaped like `repro trace-gen`
+output (so the python pipeline is testable without the Rust binary)."""
+
+import numpy as np
+import pytest
+
+
+def synth_trace(n_clusters=4, steps=200, stride=2, pc_cycle=(0x1000, 0x1008, 0x1010),
+                noise_every=0, seed=0):
+    """A trace dict with per-(sm,warp) strided page streams."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    cycle = 0
+    for c in range(n_clusters):
+        page = 1000 * (c + 1)
+        for t in range(steps):
+            pc = pc_cycle[t % len(pc_cycle)]
+            if noise_every and t % noise_every == noise_every - 1:
+                page += int(rng.integers(3, 60))
+            else:
+                page += stride
+            rows.append((cycle, pc, page, c % 2, c // 2, c, (c % 2) // 2, 0, 0, 1))
+            cycle += 3
+    rows.sort(key=lambda r: r[0])
+    arr = np.array(rows, dtype=np.int64)
+    names = ("cycle", "pc", "page", "sm", "warp", "cta", "tpc", "kernel_id", "array_id", "miss")
+    return {k: arr[:, i] for i, k in enumerate(names)}
+
+
+@pytest.fixture
+def strided_trace():
+    return synth_trace()
+
+
+@pytest.fixture
+def noisy_trace():
+    return synth_trace(noise_every=7, seed=3)

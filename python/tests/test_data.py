@@ -1,0 +1,118 @@
+"""Data-pipeline tests: clustering, vocabulary, featurization,
+sequence construction (paper §4/§5.1 semantics)."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+from tests.conftest import synth_trace
+
+
+def test_build_vocab_finds_dominant_delta(strided_trace):
+    v = D.build_vocab([strided_trace])
+    assert v.dominant_delta == 2
+    assert v.convergence > 0.95
+    assert 2 in v.deltas
+    assert v.n_classes == len(v.deltas) + 1
+
+
+def test_vocab_encode_decode_roundtrip(strided_trace):
+    v = D.build_vocab([strided_trace])
+    for d in v.deltas:
+        assert v.deltas[v.encode_delta(d)] == d
+    assert v.encode_delta(987654321) == v.oov
+
+
+def test_vocab_json_roundtrip(strided_trace, tmp_path):
+    v = D.build_vocab([strided_trace])
+    p = tmp_path / "v.json"
+    v.save(str(p))
+    import json
+    v2 = D.Vocab.from_json(json.load(open(p)))
+    assert v2.deltas == v.deltas
+    assert v2.dominant_delta == v.dominant_delta
+    assert abs(v2.convergence - v.convergence) < 1e-9
+
+
+@pytest.mark.parametrize("cluster_by", D.CLUSTER_KEYS)
+def test_cluster_ids_all_modes(strided_trace, cluster_by):
+    ids = D.cluster_ids(strided_trace, cluster_by)
+    assert len(ids) == len(strided_trace["page"])
+
+
+def test_sm_warp_clusters_are_joint_key():
+    t = synth_trace(n_clusters=4)
+    ids = D.cluster_ids(t, "sm_warp")
+    # 4 clusters built as (sm=c%2, warp=c//2) → 4 distinct joint keys.
+    assert len(np.unique(ids)) == 4
+    assert len(np.unique(D.cluster_ids(t, "sm"))) == 2
+
+
+def test_dataset_shapes_and_labels(strided_trace):
+    v = D.build_vocab([strided_trace])
+    X, y = D.build_dataset(strided_trace, v, seq_len=10, distance=1, max_samples=1000)
+    assert X.shape[1:] == (10, 3)
+    assert X.dtype == np.int32
+    assert len(X) == len(y)
+    # A pure-stride trace: every label is the dominant delta's class.
+    assert (y == v.encode_delta(2)).mean() > 0.99
+
+
+def test_dataset_distance_shifts_labels():
+    # Pattern with period-2 deltas (2, 4, 2, 4, ...): at distance 2 the
+    # label equals the delta two steps ahead = same parity as current.
+    rows = []
+    page = 100
+    for t in range(120):
+        page += 2 if t % 2 == 0 else 4
+        rows.append((t, 0x10, page, 0, 0, 0, 0, 0, 0, 1))
+    arr = np.array(rows, dtype=np.int64)
+    names = ("cycle", "pc", "page", "sm", "warp", "cta", "tpc", "kernel_id", "array_id", "miss")
+    t = {k: arr[:, i] for i, k in enumerate(names)}
+    v = D.build_vocab([t])
+    X1, y1 = D.build_dataset(t, v, seq_len=4, distance=1, max_samples=10_000)
+    X2, y2 = D.build_dataset(t, v, seq_len=4, distance=2, max_samples=10_000)
+    # distance=2 labels are the distance=1 labels shifted by one step:
+    # both alternate, but out of phase.
+    assert set(np.unique(y1)) == set(np.unique(y2))
+    assert len(X2) == len(X1) - 1
+
+
+def test_dataset_respects_max_samples(strided_trace):
+    v = D.build_vocab([strided_trace])
+    X, y = D.build_dataset(strided_trace, v, seq_len=5, max_samples=37)
+    assert len(X) <= 37
+
+
+def test_featurize_all_13_features(strided_trace):
+    v = D.build_vocab([strided_trace])
+    X, y = D.build_dataset(strided_trace, v, features=D.ALL_FEATURES, seq_len=8)
+    assert X.shape[2] == 13
+    sizes = D.feature_vocab_sizes(v, D.ALL_FEATURES)
+    assert len(sizes) == 13
+    # Every token id must be within its declared vocab size.
+    for f in range(13):
+        assert X[:, :, f].min() >= 0
+        assert X[:, :, f].max() < sizes[f], D.ALL_FEATURES[f]
+
+
+def test_split_dataset_80_20(strided_trace):
+    v = D.build_vocab([strided_trace])
+    X, y = D.build_dataset(strided_trace, v, seq_len=6)
+    (Xtr, ytr), (Xva, yva) = D.split_dataset(X, y)
+    assert len(Xtr) == int(0.8 * len(X))
+    assert len(Xtr) + len(Xva) == len(X)
+
+
+def test_trace_too_small_raises():
+    t = synth_trace(n_clusters=1, steps=5)
+    v = D.build_vocab([t])
+    with pytest.raises(ValueError):
+        D.build_dataset(t, v, seq_len=30)
+
+
+def test_max_classes_caps_vocab():
+    t = synth_trace(noise_every=2, steps=400, seed=9)
+    v = D.build_vocab([t], max_classes=8)
+    assert len(v.deltas) == 8
+    assert v.n_classes == 9

@@ -1,0 +1,166 @@
+"""Layer-1 kernel tests: the Pallas HLSH attention against the pure-jnp
+oracle, with hypothesis sweeping shapes and value ranges (the L1
+correctness gate of the three-layer stack)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.hlsh import hlsh_attention
+from compile.kernels.ref import (
+    full_attention_ref,
+    hlsh_attention_batched_ref,
+    hlsh_masks,
+    hscore,
+    lsh_hash,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(b, s, d, h, seed=0, scale=1.0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    qk = jax.random.normal(k1, (b, s, d), dtype=jnp.float32) * scale
+    v = jax.random.normal(k2, (b, s, d), dtype=jnp.float32) * scale
+    hashes = lsh_hash(qk, h)
+    return qk, v, hashes
+
+
+# -------------------------------------------------------------------------
+# hypothesis sweep: kernel == oracle over shapes/values
+# -------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    s=st.sampled_from([4, 8, 30, 32]),
+    d=st.sampled_from([4, 8, 12, 16]),
+    h=st.sampled_from([8, 16]),
+    seed=st.integers(0, 10_000),
+    scale=st.sampled_from([0.1, 1.0, 8.0]),
+)
+def test_hlsh_kernel_matches_ref(b, s, d, h, seed, scale):
+    qk, v, hashes = make_inputs(b, s, d, h, seed, scale)
+    htop, hbot = 0.9 * h, 0.1 * h
+    out_k = hlsh_attention(qk, v, hashes, htop, hbot)
+    out_r = hlsh_attention_batched_ref(qk, v, hashes, htop, hbot)
+    # f32 matmul/softmax accumulate in different orders in the
+    # interpret-mode kernel vs the vmapped reference — allow a few ulp.
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_output_shape_and_dtype():
+    qk, v, hashes = make_inputs(3, 30, 12, 16)
+    out = hlsh_attention(qk, v, hashes, 14.4, 1.6)
+    assert out.shape == (3, 30, 12)
+    assert out.dtype == jnp.float32
+    assert bool(jnp.isfinite(out).all())
+
+
+# -------------------------------------------------------------------------
+# algorithmic properties (Algorithm 1 semantics)
+# -------------------------------------------------------------------------
+
+def test_lsh_hash_is_deterministic_and_binary():
+    qk, _, _ = make_inputs(2, 8, 12, 16)
+    h1 = lsh_hash(qk, 16)
+    h2 = lsh_hash(qk, 16)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    assert set(np.unique(np.asarray(h1))).issubset({0, 1})
+
+
+def test_lsh_similar_vectors_get_similar_codes():
+    base = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 12))
+    near = base + 1e-4
+    far = -base
+    codes = lsh_hash(jnp.concatenate([base, near, far], axis=1), 32)[0]
+    ham_near = int((codes[0] != codes[1]).sum())
+    ham_far = int((codes[0] != codes[2]).sum())
+    assert ham_near == 0
+    assert ham_far == 32, "antipodal vector flips every angular bit"
+
+
+def test_hscore_zero_for_identical_rows():
+    hashes = jnp.zeros((8, 16), dtype=jnp.int32)
+    s = np.asarray(hscore(hashes))
+    assert (s < 0.01).all(), "identical codes → geomean distance ~0"
+
+
+def test_masks_share_groups_identical_rows():
+    # All rows identical → everything is 'share': base row kept, rest
+    # erased and copy-marked.
+    hashes = jnp.ones((6, 16), dtype=jnp.int32)
+    keep, base_idx, share_rest = hlsh_masks(hashes, htop=14.4, hbot=1.6)
+    assert int(base_idx) == 0
+    assert np.asarray(share_rest)[1:].all()
+    assert not bool(np.asarray(share_rest)[0])
+    assert np.asarray(keep)[1:].sum() == 0
+
+
+def test_shared_rows_copy_base_output():
+    # Identical qk rows → identical hash codes → share group; the
+    # kernel must emit identical outputs for all shared rows.
+    qk = jnp.tile(jax.random.normal(jax.random.PRNGKey(1), (1, 1, 12)), (1, 8, 1))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 12))
+    hashes = lsh_hash(qk, 16)
+    out = np.asarray(hlsh_attention(qk, v, hashes, 14.4, 1.6))
+    for i in range(1, 8):
+        np.testing.assert_allclose(out[0, i], out[0, 0], rtol=1e-6)
+
+
+def test_erase_rows_with_distant_codes():
+    # One row antipodal to all others: its Hamming distance is maximal
+    # → HSCORE ≥ HTOP → erased from the attention matrix.
+    base = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 12))
+    rows = jnp.tile(base, (1, 7, 1))
+    outlier = -base * 5
+    qk = jnp.concatenate([rows, outlier], axis=1)
+    hashes = lsh_hash(qk, 16)
+    keep, _, _ = hlsh_masks(hashes[0], htop=14.4, hbot=1.6)
+    assert np.asarray(keep)[-1] == 0.0, "outlier erased"
+
+
+def test_full_attention_ref_is_softmax_weighted():
+    qk, v, _ = make_inputs(2, 6, 4, 8)
+    out = full_attention_ref(qk, v)
+    assert out.shape == v.shape
+    # Rows of the attention matrix sum to 1 → output within convex
+    # hull of V values along each dim.
+    lo = np.asarray(v).min(axis=1, keepdims=True) - 1e-5
+    hi = np.asarray(v).max(axis=1, keepdims=True) + 1e-5
+    o = np.asarray(out)
+    assert (o >= lo).all() and (o <= hi).all()
+
+
+# -------------------------------------------------------------------------
+# autodiff path (the custom_vjp used by training)
+# -------------------------------------------------------------------------
+
+def test_hlsh_gradients_match_reference():
+    qk, v, hashes = make_inputs(2, 8, 12, 16, seed=5)
+    htop, hbot = 14.4, 1.6
+
+    def loss_kernel(q, v_):
+        return hlsh_attention(q, v_, hashes, htop, hbot).sum()
+
+    def loss_ref(q, v_):
+        return hlsh_attention_batched_ref(q, v_, hashes, htop, hbot).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1))(qk, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(qk, v)
+    np.testing.assert_allclose(np.asarray(gk[0]), np.asarray(gr[0]), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gk[1]), np.asarray(gr[1]), rtol=1e-4, atol=1e-5)
+
+
+def test_hlsh_jits_and_lowers():
+    # The kernel must lower inside jit (the AOT path requirement).
+    qk, v, hashes = make_inputs(2, 30, 12, 16)
+
+    @jax.jit
+    def f(q, v_, h_):
+        return hlsh_attention(q, v_, h_, 14.4, 1.6)
+
+    out = f(qk, v, hashes)
+    assert out.shape == (2, 30, 12)

@@ -1,0 +1,125 @@
+"""Layer-2 model-zoo tests: shapes, determinism, trainability, and the
+quantization clamp."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import nn
+from compile.model import MODEL_FACTORIES, make_model, make_revised
+
+SIZES3 = [16, 64, 10]  # pc, page, delta vocab sizes
+SIZES13 = [16, 2, 64, 64, 32, 256, 64, 64, 64, 16, 10, 128, 16]
+
+
+def toy_tokens(b=4, s=12, sizes=SIZES3, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = np.stack(
+        [rng.integers(0, v, size=(b, s)) for v in sizes], axis=-1
+    ).astype(np.int32)
+    return jnp.asarray(toks)
+
+
+@pytest.mark.parametrize("arch", sorted(MODEL_FACTORIES))
+def test_every_arch_produces_logits(arch):
+    sizes = SIZES13 if arch == "transformer" else SIZES3
+    n_classes = 10
+    init, apply = make_model(arch, sizes, n_classes, seq_len=12)
+    params = init(jax.random.PRNGKey(0))
+    logits = apply(params, toy_tokens(sizes=sizes))
+    assert logits.shape == (4, n_classes)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+
+@pytest.mark.parametrize("arch", sorted(MODEL_FACTORIES))
+def test_every_arch_is_deterministic(arch):
+    sizes = SIZES13 if arch == "transformer" else SIZES3
+    init, apply = make_model(arch, sizes, 10, seq_len=12)
+    params = init(jax.random.PRNGKey(1))
+    t = toy_tokens(sizes=sizes)
+    a = apply(params, t)
+    b = apply(params, t)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_revised_attention_variants_differ():
+    init, apply_hlsh = make_revised(SIZES3, 10, seq_len=12, attention="hlsh")
+    _, apply_full = make_revised(SIZES3, 10, seq_len=12, attention="full")
+    _, apply_none = make_revised(SIZES3, 10, seq_len=12, attention="none")
+    params = init(jax.random.PRNGKey(2))
+    t = toy_tokens()
+    out_h = np.asarray(apply_hlsh(params, t))
+    out_f = np.asarray(apply_full(params, t))
+    out_n = np.asarray(apply_none(params, t))
+    # Attention-off is structurally different; hlsh approximates full.
+    assert not np.allclose(out_h, out_n)
+    # HLSH should land closer to full attention than attention-off does.
+    assert np.abs(out_h - out_f).mean() <= np.abs(out_n - out_f).mean() + 1e-3
+
+
+def test_revised_pallas_and_ref_paths_agree():
+    init, apply_pl = make_revised(SIZES3, 10, seq_len=12, use_pallas=True)
+    _, apply_ref = make_revised(SIZES3, 10, seq_len=12, use_pallas=False)
+    params = init(jax.random.PRNGKey(3))
+    t = toy_tokens()
+    np.testing.assert_allclose(
+        np.asarray(apply_pl(params, t)), np.asarray(apply_ref(params, t)),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_quant_clamp_bounds_params_after_step():
+    init, apply = make_revised(SIZES3, 10, seq_len=12)
+    params = init(jax.random.PRNGKey(4))
+    # Blow a weight out of range, then verify clip_params restores it.
+    params["head_w"] = params["head_w"] + 100.0
+    clipped = nn.clip_params(params)
+    for v in jax.tree_util.tree_leaves(clipped):
+        assert float(jnp.max(jnp.abs(v))) <= 8.0
+
+
+def test_gradient_step_reduces_loss():
+    init, apply = make_revised(SIZES3, 10, seq_len=12)
+    params = init(jax.random.PRNGKey(5))
+    t = toy_tokens(b=32)
+    labels = jnp.asarray(np.arange(32) % 10, dtype=jnp.int32)
+
+    def loss(p):
+        return nn.cross_entropy(apply(p, t), labels)
+
+    l0 = float(loss(params))
+    opt = nn.adam_init(params)
+    for _ in range(20):
+        g = jax.grad(loss)(params)
+        params, opt = nn.adam_step(params, opt, g, lr=5e-3)
+    assert float(loss(params)) < l0 * 0.9
+
+
+def test_positional_encoding_properties():
+    pe = nn.positional_encoding(30, 12)
+    assert pe.shape == (30, 12)
+    # Even dims are sin (0 at pos 0), odd dims cos (1 at pos 0).
+    np.testing.assert_allclose(np.asarray(pe[0, 0::2]), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(pe[0, 1::2]), 1.0, atol=1e-6)
+
+
+def test_transformer_shuffle_sensitivity_machinery():
+    """Shuffling token order changes the transformer's output (the
+    Fig. 6 experiment machinery is meaningful)."""
+    init, apply = make_model("transformer", SIZES13, 10, seq_len=12)
+    params = init(jax.random.PRNGKey(6))
+    t = toy_tokens(sizes=SIZES13, seed=7)
+    shuffled = t[:, ::-1, :]
+    a = np.asarray(apply(params, t))
+    b = np.asarray(apply(params, shuffled))
+    assert not np.allclose(a, b), "positional encoding must break permutation invariance"
+
+
+def test_lstm_final_state_depends_on_order():
+    init, apply = make_model("lstm", SIZES3, 10, seq_len=12)
+    params = init(jax.random.PRNGKey(8))
+    t = toy_tokens(seed=9)
+    a = np.asarray(apply(params, t))
+    b = np.asarray(apply(params, t[:, ::-1, :]))
+    assert not np.allclose(a, b)

@@ -1,0 +1,101 @@
+//! Coordinator/serving-path benches: router throughput, batcher,
+//! history table, JSON parsing (artifact load path), and the threaded
+//! pipeline end to end with a constant backend.
+
+use std::time::Duration;
+use uvm_prefetch::config::{BypassMode, RuntimeConfig};
+use uvm_prefetch::coordinator::{CoordinatorService, FaultEvent, Router};
+use uvm_prefetch::predictor::batcher::{Batcher, PendingRequest};
+use uvm_prefetch::predictor::history::HistoryTable;
+use uvm_prefetch::predictor::{ConstantBackend, DeltaVocab, FeatTok, Window};
+use uvm_prefetch::types::AccessOrigin;
+use uvm_prefetch::util::bench::{black_box, Bench};
+use uvm_prefetch::util::Json;
+
+fn event(page: u64, warp: u16, at: u64, miss: bool) -> FaultEvent {
+    FaultEvent {
+        at,
+        pc: 0x1000,
+        page,
+        origin: AccessOrigin { sm: warp % 28, warp, cta: 0, tpc: 0, kernel_id: 0 },
+        miss,
+    }
+}
+
+fn main() {
+    let mut b = Bench::new().with_min_time(Duration::from_millis(800));
+    println!("== coordinator ==");
+
+    // Router: cluster + history + window extraction per access.
+    b.case("router: 10k accesses (10% misses)", 10_000, || {
+        let vocab = DeltaVocab::synthetic((1..=16).collect(), 30);
+        let rcfg = RuntimeConfig { bypass: BypassMode::Never, ..Default::default() };
+        let mut r = Router::new(vocab, &rcfg);
+        let mut windows = 0usize;
+        for i in 0..10_000u64 {
+            let warp = (i % 16) as u16;
+            let out = r.route(&event(1000 * warp as u64 + i / 16, warp, i, i % 10 == 0));
+            windows += out.window.is_some() as usize;
+        }
+        windows
+    });
+
+    // History table push path.
+    b.case("history: 100k pushes over 64 clusters", 100_000, || {
+        let mut h: HistoryTable<u64> = HistoryTable::new(30);
+        for i in 0..100_000u64 {
+            h.push(i % 64, 0x10, i / 64 * 2, i);
+        }
+        h.n_clusters()
+    });
+
+    // Batcher enqueue/flush.
+    b.case("batcher: 10k requests (batch 8)", 10_000, || {
+        let mut bt = Batcher::new(8, 2_000);
+        let w = Window { tokens: vec![FeatTok { pc_id: 0, page_id: 0, delta_id: 0 }; 30] };
+        let mut flushed = 0usize;
+        for i in 0..10_000u64 {
+            if let Some(batch) =
+                bt.push(PendingRequest { window: w.clone(), anchor_page: i, enqueued_at: i })
+            {
+                flushed += batch.len();
+            }
+        }
+        flushed
+    });
+
+    // JSON parse (vocab-file-shaped payload) — artifact load path.
+    let vocab_json = {
+        let deltas: Vec<String> = (0..512).map(|i| (i - 256).to_string()).collect();
+        format!(
+            "{{\"deltas\":[{}],\"pcs\":[4096,4104,4112],\"page_buckets\":4096,\
+             \"dominant_delta\":2,\"convergence\":0.93,\"history_len\":30}}",
+            deltas.join(",")
+        )
+    };
+    b.case("json: parse 512-delta vocab file", 1, || {
+        black_box(Json::parse(&vocab_json).unwrap())
+    });
+
+    // Threaded pipeline end to end (constant backend).
+    b.case("pipeline: 2k accesses through service", 2_000, || {
+        let vocab = DeltaVocab::synthetic(vec![1, 2, 4], 30);
+        let rcfg = RuntimeConfig {
+            history_len: 30,
+            batch_size: 8,
+            bypass: BypassMode::Never,
+            ..Default::default()
+        };
+        let router = Router::new(vocab.clone(), &rcfg);
+        let backend = Box::new(ConstantBackend { class: 0, n_classes: vocab.n_classes() });
+        let handle = CoordinatorService::spawn(router, backend, &rcfg);
+        for i in 0..2_000u64 {
+            let warp = (i % 8) as u16;
+            handle
+                .faults_tx
+                .send(event(1000 * warp as u64 + i / 8, warp, i, i % 4 == 0))
+                .unwrap();
+        }
+        handle.shutdown().len()
+    });
+}

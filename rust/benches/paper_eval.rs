@@ -1,0 +1,32 @@
+//! End-to-end paper-table benches: times one full U-vs-R benchmark
+//! pair (the unit of work behind Tables 10/11 and Figs 10/12) and a
+//! Fig. 11 BICG slice, so regressions in harness wall-clock are
+//! caught. Uses the stride fallback to stay artifact-independent.
+
+use std::time::Duration;
+use uvm_prefetch::eval::runner::{run_benchmark, run_pair, RunOptions};
+use uvm_prefetch::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new().with_min_time(Duration::from_millis(1500));
+    println!("== paper_eval (stride fallback, scale 0.25, 1M-inst cap) ==");
+    let opts = RunOptions {
+        scale: 0.25,
+        max_instructions: 1_000_000,
+        ..Default::default()
+    };
+
+    let insts = 2 * 1_000_000u64;
+    b.case("pair: atax U+R (Tables 10/11 unit)", insts, || {
+        let p = run_pair("atax", &opts).unwrap();
+        p.u.instructions + p.r.instructions
+    });
+
+    b.case("fig11 slice: bicg uvmsmart 1M inst", 1_000_000, || {
+        run_benchmark("bicg", "uvmsmart", &opts).unwrap().cycles
+    });
+
+    b.case("oracle recording+replay: atax", 1_000_000, || {
+        run_benchmark("atax", "oracle", &opts).unwrap().cycles
+    });
+}

@@ -1,0 +1,63 @@
+//! PJRT inference benches (needs `make artifacts`): wall-clock of one
+//! batched model execution — the quantity the paper's §7.3 latency
+//! sensitivity is about. The paper assumes 1 µs/prediction on
+//! datacenter hardware (TensorRT-class); we report what the CPU PJRT
+//! path actually costs per batch and per prediction, which EXPERIMENTS
+//! §Perf compares against the simulated budget.
+
+use std::path::Path;
+use std::time::Duration;
+use uvm_prefetch::predictor::{PredictorBackend, FeatTok, Window};
+use uvm_prefetch::runtime::{Manifest, ModelExecutable, PjrtBackend};
+use uvm_prefetch::util::bench::Bench;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    let Ok(manifest) = Manifest::load(dir) else {
+        println!("pjrt_infer: artifacts/ missing — run `make artifacts` first (skipping)");
+        return;
+    };
+    let (name, entry) = manifest
+        .resolve("", "atax")
+        .or_else(|_| manifest.resolve("shared", ""))
+        .expect("no model in manifest");
+    println!("== pjrt_infer (model '{name}') ==");
+    let exe = ModelExecutable::load(dir, entry).expect("load model");
+    let mut backend = PjrtBackend::new(exe, entry.arch.clone());
+
+    let window = |seed: i32| Window {
+        tokens: (0..entry.seq_len)
+            .map(|i| FeatTok {
+                pc_id: (seed + i as i32) % 3,
+                page_id: (seed * 7 + i as i32) % 512,
+                delta_id: (seed + i as i32) % entry.n_classes as i32,
+            })
+            .collect(),
+    };
+
+    let mut b = Bench::new().with_min_time(Duration::from_millis(1500));
+    for batch in [1usize, 4, 8] {
+        let windows: Vec<Window> = (0..batch as i32).map(window).collect();
+        let label = format!(
+            "infer: {batch} windows (exe batch {}) → per-prediction cost",
+            entry.batch
+        );
+        b.case(&label, batch as u64, || backend.predict(&windows).len());
+    }
+    println!(
+        "model mean infer wall: {:.1} µs/call over {} calls (simulated budget: 1 µs/prediction)",
+        backend.model.mean_infer_us(),
+        backend.model.infer_calls
+    );
+
+    // Fine-tune step cost (rare: every 50M instructions in-paper).
+    if entry.train_hlo.is_some() {
+        use uvm_prefetch::predictor::LabelledWindow;
+        let batch: Vec<LabelledWindow> = (0..entry.train_batch as i32)
+            .map(|i| LabelledWindow { window: window(i), label: i % entry.n_classes as i32 })
+            .collect();
+        b.case("finetune: one SGD step (batch 16)", 1, || {
+            backend.finetune(&batch).map(|l| l.to_bits()).unwrap_or(0)
+        });
+    }
+}

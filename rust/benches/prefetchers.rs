@@ -1,0 +1,82 @@
+//! Prefetch-policy micro-benchmarks: per-fault decision cost for each
+//! policy, plus the ablation of the bypass indicator (DESIGN.md §6 —
+//! "ablation benches for the design choices").
+
+use std::time::Duration;
+use uvm_prefetch::config::{BypassMode, RuntimeConfig};
+use uvm_prefetch::prefetch::dl::dl_with_stride_backend;
+use uvm_prefetch::prefetch::stride::StridePrefetcher;
+use uvm_prefetch::prefetch::tree::TreePrefetcher;
+use uvm_prefetch::prefetch::uvmsmart::UvmSmartPrefetcher;
+use uvm_prefetch::prefetch::{FaultInfo, Prefetcher};
+use uvm_prefetch::types::AccessOrigin;
+use uvm_prefetch::util::bench::{black_box, Bench};
+
+fn fault(page: u64, warp: u16, now: u64) -> FaultInfo {
+    FaultInfo {
+        now,
+        service_at: now + 66_645,
+        pc: 0x1000 + (page % 3) * 8,
+        page,
+        origin: AccessOrigin { sm: warp % 28, warp, cta: warp as u32, tpc: 0, kernel_id: 0 },
+        array_id: 0,
+    }
+}
+
+/// Drive `n` faults with a strided pattern through a policy.
+fn drive(p: &mut dyn Prefetcher, n: u64) -> usize {
+    let mut total = 0;
+    for i in 0..n {
+        let warp = (i % 16) as u16;
+        let page = 1000 * warp as u64 + (i / 16) * 2;
+        let f = fault(page, warp, i * 40);
+        total += p.on_fault(&f).requests.len();
+        p.on_access(f.origin, f.pc, f.page, false, f.now);
+        total += p.drain(i * 40 + 39).len();
+    }
+    total
+}
+
+fn main() {
+    let mut b = Bench::new().with_min_time(Duration::from_millis(800));
+    println!("== prefetchers (per-fault decision cost) ==");
+
+    b.case("tree: 10k faults", 10_000, || {
+        let mut p = TreePrefetcher::new(0.5);
+        drive(&mut p, 10_000)
+    });
+
+    b.case("uvmsmart: 10k faults", 10_000, || {
+        let mut p = UvmSmartPrefetcher::new(0.5, 1 << 18, 0.85);
+        drive(&mut p, 10_000)
+    });
+
+    b.case("stride: 10k faults", 10_000, || {
+        let mut p = StridePrefetcher::default();
+        drive(&mut p, 10_000)
+    });
+
+    // DL policy with the pure-Rust backend: full cluster/history/
+    // batcher/vocab path, no PJRT (that cost is in pjrt_infer.rs).
+    let mk = |bypass: BypassMode| {
+        let rcfg = RuntimeConfig { bypass, history_len: 30, batch_size: 8, ..Default::default() };
+        dl_with_stride_backend(&rcfg, (-8i64..=8).filter(|&d| d != 0).collect())
+    };
+    b.case("dl(stride-backend, bypass=never): 10k faults", 10_000, || {
+        let mut p = mk(BypassMode::Never);
+        drive(&mut p, 10_000)
+    });
+
+    // Ablation: the §6 bypass indicator removes the model call on
+    // converged clusters — measure the decision-path saving.
+    b.case("dl(stride-backend, bypass=auto):  10k faults", 10_000, || {
+        let mut p = mk(BypassMode::Auto);
+        drive(&mut p, 10_000)
+    });
+    b.case("dl(stride-backend, bypass=always):10k faults", 10_000, || {
+        let mut p = mk(BypassMode::Always);
+        drive(&mut p, 10_000)
+    });
+
+    black_box(());
+}

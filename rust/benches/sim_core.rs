@@ -1,0 +1,80 @@
+//! Micro-benchmarks for the simulator hot path: event engine
+//! throughput, interconnect model, device-memory LRU, TLB. These are
+//! the L3 components the §Perf pass optimizes — the Fig 10-12 suite
+//! runs dozens of full simulations, so simulated-instructions/second
+//! is the quantity that gates the whole harness.
+
+use std::time::Duration;
+use uvm_prefetch::config::ExperimentConfig;
+use uvm_prefetch::prefetch::none::NonePrefetcher;
+use uvm_prefetch::prefetch::tree::TreePrefetcher;
+use uvm_prefetch::sim::device_memory::DeviceMemory;
+use uvm_prefetch::sim::gmmu::Tlb;
+use uvm_prefetch::sim::interconnect::Interconnect;
+use uvm_prefetch::sim::Simulator;
+use uvm_prefetch::util::bench::{black_box, Bench};
+use uvm_prefetch::workloads;
+
+fn sim_run(prefetcher: &str, max_insts: u64) -> u64 {
+    let mut exp = ExperimentConfig::default();
+    exp.benchmark = "atax".into();
+    exp.max_instructions = max_insts;
+    let wl = workloads::build("atax", &exp.sim, 1, 0.25).unwrap();
+    let pf: Box<dyn uvm_prefetch::prefetch::Prefetcher> = match prefetcher {
+        "none" => Box::new(NonePrefetcher),
+        _ => Box::new(TreePrefetcher::new(0.5)),
+    };
+    let m = Simulator::new(&exp, wl, pf, None).run();
+    m.instructions
+}
+
+fn main() {
+    let mut b = Bench::new().with_min_time(Duration::from_millis(1200));
+    println!("== sim_core ==");
+
+    // End-to-end simulated-instruction throughput (the headline).
+    let insts = sim_run("none", 150_000);
+    b.case("sim: atax demand-paging 150k-inst run", insts, || sim_run("none", 150_000));
+    let insts = sim_run("tree", 150_000);
+    b.case("sim: atax tree-prefetch 150k-inst run", insts, || sim_run("tree", 150_000));
+
+    // Interconnect model.
+    b.case("interconnect: 1k transfers", 1000, || {
+        let mut link = Interconnect::new(10.63, 100, 10_000);
+        for i in 0..1000u64 {
+            black_box(link.transfer(i * 50, 4096, i % 3 == 0));
+        }
+        link.total_bytes()
+    });
+
+    // Device-memory admit/touch/evict cycle at capacity.
+    b.case("device-memory: admit+touch at capacity (1k pages)", 1000, || {
+        let mut dm = DeviceMemory::new(512);
+        for p in 0..1000u64 {
+            dm.admit(p, p, p % 2 == 0, p);
+            dm.touch(p, p + 1);
+        }
+        dm.occupancy()
+    });
+
+    // TLB lookup/insert (64-entry linear scan).
+    b.case("tlb: 10k lookups on 64-entry LRU", 10_000, || {
+        let mut tlb = Tlb::new(64);
+        let mut hits = 0u64;
+        for i in 0..10_000u64 {
+            let page = i % 96; // 2/3 fit
+            if tlb.lookup(page, i) {
+                hits += 1;
+            } else {
+                tlb.insert(page, i);
+            }
+        }
+        hits
+    });
+
+    // Workload generation (materialization cost).
+    b.case("workload-gen: atax @0.25", 1, || {
+        let exp = ExperimentConfig::default();
+        workloads::build("atax", &exp.sim, 1, 0.25).unwrap().total_ops
+    });
+}

@@ -1,0 +1,102 @@
+//! Configuration system: simulator (Table 9), workload scaling, and
+//! runtime/predictor knobs. Configs serialize to JSON via the in-tree
+//! [`crate::util::Json`] module (see `configs/` and the
+//! `repro simulate --config` flag); every field has a default so
+//! partial config files work.
+
+mod runtime_config;
+mod sim_config;
+
+pub use runtime_config::{BypassMode, PredictorBackendKind, RuntimeConfig};
+pub use sim_config::SimConfig;
+
+use crate::util::Json;
+use anyhow::Result;
+
+/// Top-level experiment description: one simulated benchmark run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub sim: SimConfig,
+    pub runtime: RuntimeConfig,
+    /// Benchmark name (one of [`crate::workloads::ALL_BENCHMARKS`]).
+    pub benchmark: String,
+    /// Stop after this many simulated instructions (0 = run the
+    /// workload to completion).
+    pub max_instructions: u64,
+    /// RNG seed for the workload's input-dependent components.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            sim: SimConfig::default(),
+            runtime: RuntimeConfig::default(),
+            benchmark: "addvectors".to_string(),
+            max_instructions: 2_000_000,
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("benchmark", Json::str(&self.benchmark)),
+            ("max_instructions", Json::Num(self.max_instructions as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("sim", self.sim.to_json()),
+            ("runtime", self.runtime.to_json()),
+        ])
+    }
+
+    /// Build from JSON; missing fields keep their defaults.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(b) = j.get("benchmark").and_then(Json::as_str) {
+            cfg.benchmark = b.to_string();
+        }
+        if let Some(v) = j.get("max_instructions").and_then(Json::as_u64) {
+            cfg.max_instructions = v;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_u64) {
+            cfg.seed = v;
+        }
+        if let Some(s) = j.get("sim") {
+            cfg.sim = SimConfig::from_json(s)?;
+        }
+        if let Some(r) = j.get("runtime") {
+            cfg.runtime = RuntimeConfig::from_json(r)?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_json() {
+        let cfg = ExperimentConfig::default();
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.benchmark, cfg.benchmark);
+        assert_eq!(back.sim.n_sms, cfg.sim.n_sms);
+        assert_eq!(back.runtime.prediction_latency_cycles, cfg.runtime.prediction_latency_cycles);
+        assert_eq!(back.runtime.backend, cfg.runtime.backend);
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let j = Json::parse(r#"{"benchmark":"nw","sim":{"n_sms":4}}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.benchmark, "nw");
+        assert_eq!(cfg.sim.n_sms, 4);
+        assert_eq!(cfg.sim.warps_per_sm, 64, "untouched field keeps default");
+    }
+}

@@ -1,0 +1,224 @@
+//! Runtime / prefetcher configuration — which prefetching policy is
+//! active and how the learned predictor is deployed (paper §6, §7.1,
+//! §7.3).
+
+use crate::util::Json;
+use anyhow::Result;
+
+/// Which backend produces page-delta predictions for the DL prefetcher.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PredictorBackendKind {
+    /// AOT-compiled JAX model executed through PJRT (`artifacts/`).
+    Pjrt {
+        /// Directory holding `manifest.json`, `*.hlo.txt`,
+        /// `*.params.bin`, `*.vocab.json`.
+        artifacts: String,
+        /// Model key in the manifest ("shared" or a benchmark name).
+        /// Empty ⇒ prefer the per-benchmark model, fall back to
+        /// "shared" (the paper's pretrained-on-5-benchmarks corpus).
+        model: String,
+    },
+    /// Pure-Rust majority/stride fallback (no artifacts needed). Used
+    /// by tests and as a degraded mode when artifacts are missing.
+    Stride,
+    /// Always predict the given delta (unit tests / ablation).
+    Constant(i64),
+}
+
+impl PredictorBackendKind {
+    fn to_json(&self) -> Json {
+        match self {
+            Self::Pjrt { artifacts, model } => Json::obj(vec![
+                ("kind", Json::str("pjrt")),
+                ("artifacts", Json::str(artifacts)),
+                ("model", Json::str(model)),
+            ]),
+            Self::Stride => Json::obj(vec![("kind", Json::str("stride"))]),
+            Self::Constant(d) => Json::obj(vec![
+                ("kind", Json::str("constant")),
+                ("delta", Json::Num(*d as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        match j.req("kind")?.as_str() {
+            Some("pjrt") => Ok(Self::Pjrt {
+                artifacts: j.get("artifacts").and_then(Json::as_str).unwrap_or("artifacts").into(),
+                model: j.get("model").and_then(Json::as_str).unwrap_or("").into(),
+            }),
+            Some("stride") => Ok(Self::Stride),
+            Some("constant") => {
+                Ok(Self::Constant(j.get("delta").and_then(Json::as_i64).unwrap_or(1)))
+            }
+            other => anyhow::bail!("unknown backend kind {other:?}"),
+        }
+    }
+}
+
+/// Bypass policy (paper §6 item 5: "1 indicator to decide whether to
+/// bypass the attention module according to the page convergence").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BypassMode {
+    /// Never bypass — always run the model.
+    Never,
+    /// Bypass when the cluster's observed delta convergence exceeds
+    /// `bypass_convergence` (emit the dominant delta directly).
+    Auto,
+    /// Always bypass (the ATAX/BICG/MVT degenerate case).
+    Always,
+}
+
+impl BypassMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "never" => Self::Never,
+            "auto" => Self::Auto,
+            "always" => Self::Always,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Never => "never",
+            Self::Auto => "auto",
+            Self::Always => "always",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    /// Active prefetch policy: "none" | "tree" | "uvmsmart" | "dl" |
+    /// "oracle" | "stride".
+    pub prefetcher: String,
+    /// Prediction overhead in core cycles (paper §7.3: 1 µs ⇒ ~1500
+    /// cycles at 1481 MHz; swept over 1/2/5/10 µs for Figure 10).
+    pub prediction_latency_cycles: u64,
+    /// Sequence length fed to the predictor (paper: 30).
+    pub history_len: usize,
+    /// Prediction distance (paper Table 3; runtime uses 1).
+    pub prediction_distance: usize,
+    /// Max windows per PJRT inference batch (coordinator batching).
+    pub batch_size: usize,
+    /// Flush a partial batch once its oldest request is this many
+    /// cycles old (keeps timeliness under low fault rates).
+    pub batch_flush_cycles: u64,
+    /// Delta-convergence threshold for [`BypassMode::Auto`].
+    pub bypass_convergence: f64,
+    pub bypass: BypassMode,
+    /// Fine-tune the model online every N simulated instructions
+    /// (paper §7.1: every 50 M instructions; scaled down by default).
+    /// 0 disables online fine-tuning.
+    pub finetune_interval_insts: u64,
+    /// Number of labelled windows replayed per fine-tune round.
+    pub finetune_batch: usize,
+    pub backend: PredictorBackendKind,
+    /// Tree prefetcher: promote a node once its valid fraction
+    /// exceeds this (paper §2.2: 50%).
+    pub tree_threshold: f64,
+    /// Cap on prefetch pages issued per fault by any policy (the
+    /// paper's §4: one basic block + top-1 page = 16 pages for DL;
+    /// the tree policy may go up to a 2 MB node).
+    pub max_prefetch_pages_dl: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self {
+            prefetcher: "tree".to_string(),
+            prediction_latency_cycles: 1481, // 1 µs
+            history_len: 30,
+            prediction_distance: 1,
+            batch_size: 8,
+            batch_flush_cycles: 2_000,
+            bypass_convergence: 0.9,
+            bypass: BypassMode::Auto,
+            finetune_interval_insts: 0,
+            finetune_batch: 64,
+            backend: PredictorBackendKind::Stride,
+            tree_threshold: 0.5,
+            max_prefetch_pages_dl: 16,
+        }
+    }
+}
+
+impl RuntimeConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("prefetcher", Json::str(&self.prefetcher)),
+            ("prediction_latency_cycles", Json::Num(self.prediction_latency_cycles as f64)),
+            ("history_len", Json::Num(self.history_len as f64)),
+            ("prediction_distance", Json::Num(self.prediction_distance as f64)),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("batch_flush_cycles", Json::Num(self.batch_flush_cycles as f64)),
+            ("bypass_convergence", Json::Num(self.bypass_convergence)),
+            ("bypass", Json::str(self.bypass.as_str())),
+            ("finetune_interval_insts", Json::Num(self.finetune_interval_insts as f64)),
+            ("finetune_batch", Json::Num(self.finetune_batch as f64)),
+            ("backend", self.backend.to_json()),
+            ("tree_threshold", Json::Num(self.tree_threshold)),
+            ("max_prefetch_pages_dl", Json::Num(self.max_prefetch_pages_dl as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = Self::default();
+        if let Some(v) = j.get("prefetcher").and_then(Json::as_str) {
+            c.prefetcher = v.to_string();
+        }
+        macro_rules! num {
+            ($field:ident, $ty:ty) => {
+                if let Some(v) = j.get(stringify!($field)).and_then(Json::as_f64) {
+                    c.$field = v as $ty;
+                }
+            };
+        }
+        num!(prediction_latency_cycles, u64);
+        num!(history_len, usize);
+        num!(prediction_distance, usize);
+        num!(batch_size, usize);
+        num!(batch_flush_cycles, u64);
+        num!(bypass_convergence, f64);
+        num!(finetune_interval_insts, u64);
+        num!(finetune_batch, usize);
+        num!(tree_threshold, f64);
+        num!(max_prefetch_pages_dl, usize);
+        if let Some(b) = j.get("bypass").and_then(Json::as_str) {
+            c.bypass = BypassMode::parse(b)
+                .ok_or_else(|| anyhow::anyhow!("bad bypass mode '{b}'"))?;
+        }
+        if let Some(b) = j.get("backend") {
+            c.backend = PredictorBackendKind::from_json(b)?;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_json_roundtrip() {
+        let cfg = RuntimeConfig {
+            backend: PredictorBackendKind::Pjrt {
+                artifacts: "artifacts".into(),
+                model: "shared".into(),
+            },
+            bypass: BypassMode::Always,
+            ..Default::default()
+        };
+        let back =
+            RuntimeConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.backend, cfg.backend);
+        assert_eq!(back.bypass, BypassMode::Always);
+    }
+
+    #[test]
+    fn bypass_parse() {
+        assert_eq!(BypassMode::parse("auto"), Some(BypassMode::Auto));
+        assert_eq!(BypassMode::parse("bogus"), None);
+    }
+}

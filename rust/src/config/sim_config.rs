@@ -1,0 +1,157 @@
+//! Simulator parameters — a direct transcription of the paper's
+//! Table 9 (GPGPU-Sim UVMSmart configuration, GTX 1080Ti Pascal-like).
+
+use crate::util::Json;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Streaming multiprocessors (Table 9: 28 SMs @ 1481 MHz).
+    pub n_sms: u16,
+    /// Warp contexts per SM (Table 9: max 64 warps per SM).
+    pub warps_per_sm: u16,
+    /// Threads per warp (Table 9: 32).
+    pub threads_per_warp: u16,
+    /// Core clock in MHz — used to convert the µs-denominated
+    /// latencies (far fault, prediction overhead) into cycles.
+    pub clock_mhz: u64,
+    /// GMMU page-table-walk latency in core cycles (Table 9: 100).
+    pub page_walk_cycles: u64,
+    /// Device DRAM access latency in core cycles (Table 9: 100).
+    pub dram_cycles: u64,
+    /// Remote zero-copy access latency in core cycles (Table 9: 200).
+    pub zero_copy_cycles: u64,
+    /// Far-fault handling latency in microseconds (Table 9: 45 µs) —
+    /// covers host interrupt, host page-table walk and fault service
+    /// setup, before the page transfer itself starts.
+    pub far_fault_us: f64,
+    /// CPU-GPU interconnect one-way bandwidth in GB/s.
+    /// Table 9: PCIe 3.0 x16, 8 GT/s/lane ⇒ ~15.75 GB/s effective.
+    pub pcie_gbps: f64,
+    /// Interconnect propagation latency in core cycles (Table 9: 100).
+    pub pcie_latency_cycles: u64,
+    /// Device memory capacity in bytes. Paper §7.1 evaluates with
+    /// "device memory size larger than the benchmarks' working set";
+    /// the default (1 GiB simulated) keeps us un-oversubscribed for
+    /// every scaled workload. The oversubscription example shrinks it.
+    pub device_mem_bytes: u64,
+    /// Last-level GMMU TLB entries per SM (page-granularity, LRU).
+    pub tlb_entries: usize,
+    /// PCIe usage histogram bucket width in cycles (Figure 11 series).
+    pub pcie_bucket_cycles: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            n_sms: 28,
+            warps_per_sm: 64,
+            threads_per_warp: 32,
+            clock_mhz: 1481,
+            page_walk_cycles: 100,
+            dram_cycles: 100,
+            zero_copy_cycles: 200,
+            far_fault_us: 45.0,
+            pcie_gbps: 15.75,
+            pcie_latency_cycles: 100,
+            device_mem_bytes: 1 << 30,
+            tlb_entries: 64,
+            pcie_bucket_cycles: 10_000,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Far-fault latency in core cycles (45 µs @ 1481 MHz ≈ 66 645).
+    pub fn far_fault_cycles(&self) -> u64 {
+        (self.far_fault_us * self.clock_mhz as f64).round() as u64
+    }
+
+    /// Interconnect bandwidth in bytes per core cycle
+    /// (15.75 GB/s @ 1481 MHz ≈ 10.63 B/cycle).
+    pub fn pcie_bytes_per_cycle(&self) -> f64 {
+        self.pcie_gbps * 1e9 / (self.clock_mhz as f64 * 1e6)
+    }
+
+    /// Convert microseconds to core cycles.
+    pub fn us_to_cycles(&self, us: f64) -> u64 {
+        (us * self.clock_mhz as f64).round() as u64
+    }
+
+    /// Device memory capacity in 4 KB page frames.
+    pub fn device_mem_pages(&self) -> u64 {
+        self.device_mem_bytes / crate::types::PAGE_SIZE
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_sms", Json::Num(self.n_sms as f64)),
+            ("warps_per_sm", Json::Num(self.warps_per_sm as f64)),
+            ("threads_per_warp", Json::Num(self.threads_per_warp as f64)),
+            ("clock_mhz", Json::Num(self.clock_mhz as f64)),
+            ("page_walk_cycles", Json::Num(self.page_walk_cycles as f64)),
+            ("dram_cycles", Json::Num(self.dram_cycles as f64)),
+            ("zero_copy_cycles", Json::Num(self.zero_copy_cycles as f64)),
+            ("far_fault_us", Json::Num(self.far_fault_us)),
+            ("pcie_gbps", Json::Num(self.pcie_gbps)),
+            ("pcie_latency_cycles", Json::Num(self.pcie_latency_cycles as f64)),
+            ("device_mem_bytes", Json::Num(self.device_mem_bytes as f64)),
+            ("tlb_entries", Json::Num(self.tlb_entries as f64)),
+            ("pcie_bucket_cycles", Json::Num(self.pcie_bucket_cycles as f64)),
+        ])
+    }
+
+    /// Missing fields keep their defaults.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = Self::default();
+        macro_rules! num {
+            ($field:ident, $ty:ty) => {
+                if let Some(v) = j.get(stringify!($field)).and_then(Json::as_f64) {
+                    c.$field = v as $ty;
+                }
+            };
+        }
+        num!(n_sms, u16);
+        num!(warps_per_sm, u16);
+        num!(threads_per_warp, u16);
+        num!(clock_mhz, u64);
+        num!(page_walk_cycles, u64);
+        num!(dram_cycles, u64);
+        num!(zero_copy_cycles, u64);
+        num!(far_fault_us, f64);
+        num!(pcie_gbps, f64);
+        num!(pcie_latency_cycles, u64);
+        num!(device_mem_bytes, u64);
+        num!(tlb_entries, usize);
+        num!(pcie_bucket_cycles, u64);
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table9_derived_constants() {
+        let c = SimConfig::default();
+        // 45 µs at 1481 MHz.
+        assert_eq!(c.far_fault_cycles(), 66_645);
+        // ~10.6 bytes/cycle over PCIe 3.0 x16.
+        let bpc = c.pcie_bytes_per_cycle();
+        assert!((bpc - 10.63).abs() < 0.05, "bpc = {bpc}");
+        // 1 µs prediction overhead ≈ the paper's "1500 cycles".
+        assert_eq!(c.us_to_cycles(1.0), 1481);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = SimConfig::default();
+        c.n_sms = 4;
+        c.pcie_gbps = 31.5;
+        let back = SimConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.n_sms, 4);
+        assert!((back.pcie_gbps - 31.5).abs() < 1e-12);
+        assert_eq!(back.tlb_entries, 64);
+    }
+}

@@ -1,0 +1,17 @@
+//! Async serving front (vLLM-router-style): a tokio service that
+//! consumes a stream of far-fault events, routes them through the
+//! clustering/history/batching pipeline, runs PJRT inference on a
+//! blocking worker, and emits prefetch commands plus live telemetry.
+//!
+//! The simulator uses the synchronous path in [`crate::prefetch::dl`]
+//! directly (deterministic simulated time); this module is the
+//! *deployment* shape — `repro serve` replays a trace file through it
+//! and the `e2e_prefetch` example drives it end-to-end.
+
+pub mod router;
+pub mod service;
+pub mod stats;
+
+pub use router::{FaultEvent, PrefetchCommand, Router};
+pub use service::{CoordinatorHandle, CoordinatorService};
+pub use stats::CoordinatorStats;

@@ -1,0 +1,175 @@
+//! Fault routing: cluster key computation, history update, window
+//! extraction, bypass decision — the synchronous brain shared by the
+//! async service. (The sim-side `DlPrefetcher` embeds the same
+//! pipeline; the router exposes it for streaming deployments.)
+
+use crate::config::{BypassMode, RuntimeConfig};
+use crate::predictor::engine::featurize_window;
+use crate::predictor::history::HistoryTable;
+use crate::predictor::{ClusterBy, ClusterKey, DeltaVocab, Window};
+use crate::types::{bb_base, AccessOrigin, Cycle, PageNum, PAGES_PER_BB};
+
+/// A GMMU access delivered to the coordinator. Every access extends
+/// the cluster history (the predictor windows over the full access
+/// stream — Figure 3's Hit/Miss feature); only misses (`miss = true`)
+/// trigger migration + prediction.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultEvent {
+    pub at: Cycle,
+    pub pc: u64,
+    pub page: PageNum,
+    pub origin: AccessOrigin,
+    pub miss: bool,
+}
+
+/// What the coordinator tells the migration engine to do.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PrefetchCommand {
+    /// Migrate these pages now (basic-block floor).
+    Migrate(Vec<PageNum>),
+    /// Migrate one predicted page (model answer).
+    Predicted { page: PageNum, batched: usize },
+}
+
+/// Result of routing one fault.
+#[derive(Debug)]
+pub struct RouteOutcome {
+    /// Basic-block pages to migrate immediately.
+    pub block: Vec<PageNum>,
+    /// A model-ready window, if the cluster history is full and the
+    /// bypass did not fire.
+    pub window: Option<(ClusterKey, Window)>,
+    /// Bypass answer, if the cluster's delta distribution converged.
+    pub bypass_page: Option<PageNum>,
+}
+
+pub struct Router {
+    cluster_by: ClusterBy,
+    history: HistoryTable<ClusterKey>,
+    vocab: DeltaVocab,
+    bypass: BypassMode,
+    bypass_convergence: f64,
+    pub faults_routed: u64,
+    pub windows_emitted: u64,
+    pub bypasses: u64,
+}
+
+impl Router {
+    pub fn new(vocab: DeltaVocab, rcfg: &RuntimeConfig) -> Self {
+        Self {
+            cluster_by: ClusterBy::SmWarp,
+            history: HistoryTable::new(vocab.history_len.max(1)),
+            vocab,
+            bypass: rcfg.bypass,
+            bypass_convergence: rcfg.bypass_convergence,
+            faults_routed: 0,
+            windows_emitted: 0,
+            bypasses: 0,
+        }
+    }
+
+    pub fn vocab(&self) -> &DeltaVocab {
+        &self.vocab
+    }
+
+    pub fn route(&mut self, ev: &FaultEvent) -> RouteOutcome {
+        let key = self.cluster_by.key(&ev.origin, ev.pc);
+        self.history.push(key, ev.pc, ev.page, ev.at);
+        if !ev.miss {
+            // Hits only feed the history.
+            return RouteOutcome { block: Vec::new(), window: None, bypass_page: None };
+        }
+        self.faults_routed += 1;
+
+        let bb = bb_base(ev.page);
+        let block: Vec<PageNum> =
+            (bb..bb + PAGES_PER_BB).filter(|&p| p != ev.page).collect();
+
+        let cluster = self.history.get_mut(&key).expect("pushed above");
+        if cluster.full_window().is_none() {
+            return RouteOutcome { block, window: None, bypass_page: None };
+        }
+
+        let do_bypass = match self.bypass {
+            BypassMode::Always => true,
+            BypassMode::Never => false,
+            BypassMode::Auto => cluster
+                .dominant_delta()
+                .map(|(_, c)| c >= self.bypass_convergence)
+                .unwrap_or(false),
+        };
+        if do_bypass {
+            self.bypasses += 1;
+            let page = cluster
+                .dominant_delta()
+                .map(|(d, _)| ev.page as i64 + d)
+                .filter(|&p| p >= 0)
+                .map(|p| p as PageNum);
+            return RouteOutcome { block, window: None, bypass_page: page };
+        }
+
+        self.windows_emitted += 1;
+        let toks = cluster.full_window().expect("checked above");
+        let window = featurize_window(&self.vocab, toks);
+        RouteOutcome { block, window: Some((key, window)), bypass_page: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::DeltaVocab;
+
+    fn event(page: u64, at: u64) -> FaultEvent {
+        FaultEvent {
+            at,
+            pc: 0x44,
+            page,
+            origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
+            miss: true,
+        }
+    }
+
+    fn router(bypass: BypassMode) -> Router {
+        let vocab = DeltaVocab::synthetic(vec![1, 2], 3);
+        let rcfg = RuntimeConfig { bypass, bypass_convergence: 0.9, ..Default::default() };
+        Router::new(vocab, &rcfg)
+    }
+
+    #[test]
+    fn emits_block_always_window_when_full() {
+        let mut r = router(BypassMode::Never);
+        for (i, p) in [0u64, 1, 2].iter().enumerate() {
+            let out = r.route(&event(*p, i as u64));
+            assert_eq!(out.block.len(), 15);
+            assert!(out.window.is_none(), "history not full yet");
+        }
+        let out = r.route(&event(3, 3));
+        assert!(out.window.is_some(), "3 deltas accumulated");
+        assert_eq!(out.window.unwrap().1.tokens.len(), 3);
+    }
+
+    #[test]
+    fn bypass_fires_on_converged_stream() {
+        let mut r = router(BypassMode::Auto);
+        for i in 0..6u64 {
+            r.route(&event(i, i));
+        }
+        let out = r.route(&event(6, 6));
+        assert_eq!(out.bypass_page, Some(7), "dominant delta 1 applied");
+        assert!(out.window.is_none());
+        assert!(r.bypasses >= 1);
+    }
+
+    #[test]
+    fn separate_warps_route_to_separate_clusters() {
+        let mut r = router(BypassMode::Never);
+        for i in 0..4u64 {
+            r.route(&event(i, i));
+        }
+        let mut ev = event(100, 10);
+        ev.origin.warp = 9;
+        let out = r.route(&ev);
+        assert!(out.window.is_none(), "fresh cluster has no history");
+    }
+}

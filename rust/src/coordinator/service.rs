@@ -1,0 +1,262 @@
+//! The serving pipeline: fault events in, prefetch commands out.
+//!
+//! Topology (one OS thread per stage, bounded sync channels —
+//! backpressure propagates to the fault producer):
+//!
+//! ```text
+//! faults ─► router thread ─► batch+infer thread (size/deadline
+//!              │               batching, synchronous PJRT)
+//!              └── block prefetches ──► commands ◄── predicted pages
+//! ```
+//!
+//! The simulator uses the synchronous path in [`crate::prefetch::dl`]
+//! directly (deterministic simulated time); this service is the
+//! *deployment* shape — `repro serve` replays a fault stream through
+//! it and the `e2e_prefetch` example drives it end to end.
+
+use crate::config::RuntimeConfig;
+use crate::coordinator::router::{FaultEvent, PrefetchCommand, Router};
+use crate::coordinator::stats::CoordinatorStats;
+use crate::predictor::{DeltaVocab, PredictorBackend, Prediction, Window};
+use crate::types::PageNum;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Handle returned by [`CoordinatorService::spawn`].
+pub struct CoordinatorHandle {
+    pub faults_tx: SyncSender<FaultEvent>,
+    pub commands_rx: Receiver<PrefetchCommand>,
+    pub stats: Arc<CoordinatorStats>,
+    tasks: Vec<JoinHandle<()>>,
+}
+
+impl CoordinatorHandle {
+    /// Close the input, drain remaining commands, and join the
+    /// pipeline threads. Returns the drained commands.
+    pub fn shutdown(self) -> Vec<PrefetchCommand> {
+        let CoordinatorHandle { faults_tx, commands_rx, stats: _, tasks } = self;
+        drop(faults_tx);
+        let mut rest = Vec::new();
+        while let Ok(c) = commands_rx.recv() {
+            rest.push(c);
+        }
+        for t in tasks {
+            let _ = t.join();
+        }
+        rest
+    }
+}
+
+/// One inference request flowing router → infer.
+struct InferReq {
+    window: Window,
+    anchor: PageNum,
+}
+
+pub struct CoordinatorService;
+
+impl CoordinatorService {
+    /// Spawn the two-stage pipeline.
+    pub fn spawn(
+        mut router: Router,
+        mut backend: Box<dyn PredictorBackend>,
+        rcfg: &RuntimeConfig,
+    ) -> CoordinatorHandle {
+        let stats = Arc::new(CoordinatorStats::default());
+        let vocab: DeltaVocab = router.vocab().clone();
+        let (faults_tx, faults_rx) = std::sync::mpsc::sync_channel::<FaultEvent>(1024);
+        let (infer_tx, infer_rx) = std::sync::mpsc::sync_channel::<InferReq>(1024);
+        let (cmd_tx, commands_rx) = std::sync::mpsc::sync_channel::<PrefetchCommand>(65536);
+        let batch_size = rcfg.batch_size.max(1);
+        let flush_after = Duration::from_micros(200);
+
+        // Router thread.
+        let st = stats.clone();
+        let cmd = cmd_tx.clone();
+        let route_task = std::thread::Builder::new()
+            .name("uvm-router".into())
+            .spawn(move || {
+                while let Ok(ev) = faults_rx.recv() {
+                    CoordinatorStats::inc(&st.faults, 1);
+                    let out = router.route(&ev);
+                    CoordinatorStats::inc(&st.block_prefetches, out.block.len() as u64);
+                    // Hits only feed the history — no migration command.
+                    if !out.block.is_empty()
+                        && cmd.send(PrefetchCommand::Migrate(out.block)).is_err()
+                    {
+                        break;
+                    }
+                    if let Some(page) = out.bypass_page {
+                        CoordinatorStats::inc(&st.bypasses, 1);
+                        let _ = cmd.send(PrefetchCommand::Predicted { page, batched: 1 });
+                    }
+                    if let Some((_key, window)) = out.window {
+                        if infer_tx.send(InferReq { window, anchor: ev.page }).is_err() {
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn router thread");
+
+        // Batch + infer thread.
+        let st = stats.clone();
+        let infer_task = std::thread::Builder::new()
+            .name("uvm-infer".into())
+            .spawn(move || {
+                let mut pending: Vec<InferReq> = Vec::with_capacity(batch_size);
+                'outer: while let Ok(first) = infer_rx.recv() {
+                    pending.push(first);
+                    let deadline = Instant::now() + flush_after;
+                    while pending.len() < batch_size {
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        match infer_rx.recv_timeout(left) {
+                            Ok(r) => pending.push(r),
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => {
+                                if pending.is_empty() {
+                                    break 'outer;
+                                }
+                                break;
+                            }
+                        }
+                    }
+                    let batch: Vec<InferReq> = pending.drain(..).collect();
+                    let windows: Vec<Window> = batch.iter().map(|r| r.window.clone()).collect();
+                    let n = batch.len();
+                    let t0 = Instant::now();
+                    let classes = backend.predict(&windows);
+                    st.record_batch_latency(t0.elapsed().as_secs_f64() * 1e6);
+                    CoordinatorStats::inc(&st.batches, 1);
+                    CoordinatorStats::inc(&st.predictions, classes.len() as u64);
+                    for (class, req) in classes.into_iter().zip(batch) {
+                        match vocab.decode(class) {
+                            Prediction::Delta(d) => {
+                                let target = req.anchor as i64 + d;
+                                if target >= 0 && d != 0 {
+                                    if cmd_tx
+                                        .send(PrefetchCommand::Predicted {
+                                            page: target as PageNum,
+                                            batched: n,
+                                        })
+                                        .is_err()
+                                    {
+                                        return;
+                                    }
+                                }
+                            }
+                            Prediction::Oov => CoordinatorStats::inc(&st.oov, 1),
+                        }
+                    }
+                }
+            })
+            .expect("spawn infer thread");
+
+        CoordinatorHandle { faults_tx, commands_rx, stats, tasks: vec![route_task, infer_task] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BypassMode;
+    use crate::predictor::{ConstantBackend, DeltaVocab};
+    use crate::types::AccessOrigin;
+
+    fn event(page: u64, at: u64) -> FaultEvent {
+        FaultEvent {
+            at,
+            pc: 0x44,
+            page,
+            origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
+            miss: true,
+        }
+    }
+
+    #[test]
+    fn end_to_end_pipeline_with_constant_backend() {
+        let vocab = DeltaVocab::synthetic(vec![5, 9], 2);
+        let rcfg = RuntimeConfig {
+            history_len: 2,
+            batch_size: 2,
+            bypass: BypassMode::Never,
+            ..Default::default()
+        };
+        let router = Router::new(vocab.clone(), &rcfg);
+        // Always class 1 → delta 9.
+        let backend = Box::new(ConstantBackend { class: 1, n_classes: vocab.n_classes() });
+        let handle = CoordinatorService::spawn(router, backend, &rcfg);
+
+        for (i, page) in [100u64, 101, 102, 103].iter().enumerate() {
+            handle.faults_tx.send(event(*page, i as u64)).unwrap();
+        }
+        let cmds = handle.shutdown();
+
+        let migrates = cmds.iter().filter(|c| matches!(c, PrefetchCommand::Migrate(_))).count();
+        assert_eq!(migrates, 4, "one block migration per fault");
+        let mut predicted: Vec<u64> = cmds
+            .iter()
+            .filter_map(|c| match c {
+                PrefetchCommand::Predicted { page, .. } => Some(*page),
+                _ => None,
+            })
+            .collect();
+        predicted.sort();
+        // Windows full from fault #3 onward (history_len=2): anchors
+        // 102 and 103 each get +9.
+        assert_eq!(predicted, vec![111, 112]);
+    }
+
+    #[test]
+    fn oov_predictions_are_counted_not_emitted() {
+        let vocab = DeltaVocab::synthetic(vec![5], 2);
+        let rcfg = RuntimeConfig {
+            history_len: 2,
+            batch_size: 1,
+            bypass: BypassMode::Never,
+            ..Default::default()
+        };
+        let router = Router::new(vocab.clone(), &rcfg);
+        let backend = Box::new(ConstantBackend { class: 1, n_classes: vocab.n_classes() }); // OOV
+        let handle = CoordinatorService::spawn(router, backend, &rcfg);
+        for (i, page) in [1u64, 2, 3, 4].iter().enumerate() {
+            handle.faults_tx.send(event(*page, i as u64)).unwrap();
+        }
+        let stats = handle.stats.clone();
+        let cmds = handle.shutdown();
+        assert!(cmds.iter().all(|c| matches!(c, PrefetchCommand::Migrate(_))));
+        assert!(stats.oov.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn bypass_path_emits_without_backend() {
+        let vocab = DeltaVocab::synthetic(vec![1], 2);
+        let rcfg = RuntimeConfig {
+            history_len: 2,
+            batch_size: 4,
+            bypass: BypassMode::Always,
+            ..Default::default()
+        };
+        let router = Router::new(vocab.clone(), &rcfg);
+        let backend = Box::new(ConstantBackend { class: 0, n_classes: 2 });
+        let handle = CoordinatorService::spawn(router, backend, &rcfg);
+        for (i, page) in [10u64, 11, 12, 13].iter().enumerate() {
+            handle.faults_tx.send(event(*page, i as u64)).unwrap();
+        }
+        let stats = handle.stats.clone();
+        let cmds = handle.shutdown();
+        let predicted = cmds
+            .iter()
+            .filter(|c| matches!(c, PrefetchCommand::Predicted { .. }))
+            .count();
+        assert!(predicted >= 1, "bypass produced predictions");
+        assert!(stats.bypasses.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        assert_eq!(
+            stats.predictions.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "model never invoked under Always bypass"
+        );
+    }
+}

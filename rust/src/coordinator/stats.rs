@@ -1,0 +1,61 @@
+//! Live coordinator telemetry (shared across the async tasks).
+
+use crate::util::OnlineStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+pub struct CoordinatorStats {
+    pub faults: AtomicU64,
+    pub block_prefetches: AtomicU64,
+    pub predictions: AtomicU64,
+    pub batches: AtomicU64,
+    pub bypasses: AtomicU64,
+    pub oov: AtomicU64,
+    /// Wall-clock batch latency in microseconds.
+    pub batch_latency_us: Mutex<OnlineStats>,
+}
+
+impl CoordinatorStats {
+    pub fn inc(counter: &AtomicU64, by: u64) {
+        counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn record_batch_latency(&self, us: f64) {
+        self.batch_latency_us.lock().unwrap().push(us);
+    }
+
+    pub fn snapshot(&self) -> String {
+        let lat = self.batch_latency_us.lock().unwrap();
+        format!(
+            "faults={} block_pf={} predictions={} batches={} bypass={} oov={} \
+             batch_lat_us(mean={:.1} min={:.1} max={:.1} n={})",
+            self.faults.load(Ordering::Relaxed),
+            self.block_prefetches.load(Ordering::Relaxed),
+            self.predictions.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.bypasses.load(Ordering::Relaxed),
+            self.oov.load(Ordering::Relaxed),
+            lat.mean(),
+            lat.min,
+            lat.max,
+            lat.n,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_snapshot() {
+        let s = CoordinatorStats::default();
+        CoordinatorStats::inc(&s.faults, 3);
+        s.record_batch_latency(120.0);
+        s.record_batch_latency(80.0);
+        let snap = s.snapshot();
+        assert!(snap.contains("faults=3"), "{snap}");
+        assert!(snap.contains("mean=100.0"), "{snap}");
+    }
+}

@@ -1,0 +1,37 @@
+//! # uvm-prefetch
+//!
+//! Reproduction of *"Deep Learning based Data Prefetching in CPU-GPU
+//! Unified Virtual Memory"* (Long, Gong, Zhou, Zhang — JPDC 2022) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: a
+//!   discrete-event GPU-UVM simulator ([`sim`]), eleven benchmark
+//!   access-pattern workloads ([`workloads`]), the tree-based /
+//!   UVMSmart baselines and the DL-driven prefetcher ([`prefetch`]),
+//!   the deployment path for the learned predictor — clustering,
+//!   history windows, dynamic batching, vocab mapping, online
+//!   fine-tuning ([`predictor`]) — and an async serving front
+//!   ([`coordinator`]).
+//! * **Layer 2 (python/compile/model.py)** — the JAX predictor zoo
+//!   (full Transformer, revised HLSH predictor, MLP/LSTM/CNN/FC
+//!   baselines), AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels/hlsh.py)** — the paper's HLSH
+//!   attention (Algorithm 1) as a Pallas kernel, verified against a
+//!   pure-jnp oracle.
+//!
+//! Python runs only at build time (`make artifacts`); the request path
+//! is pure Rust executing the AOT HLO through PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the full inventory and the per-table/figure
+//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured.
+
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod predictor;
+pub mod prefetch;
+pub mod runtime;
+pub mod sim;
+pub mod types;
+pub mod util;
+pub mod workloads;

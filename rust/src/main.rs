@@ -1,0 +1,264 @@
+//! `repro` — leader binary for the UVM-prefetching reproduction.
+//!
+//! ```text
+//! repro trace-gen  [--out traces] [--benchmarks a --benchmarks b]
+//!                  [--limit N] [--scale F] [--max-instructions N]
+//! repro simulate   [--benchmark B] [--prefetcher P] [--artifacts DIR]
+//!                  [--model M] [--scale F] [--max-instructions N]
+//!                  [--prediction-us F] [--config FILE] [--oversubscribe F]
+//! repro eval       <table10|table11|fig10|fig11|fig12|summary|all>
+//!                  [--artifacts DIR] [--out results] [--scale F]
+//!                  [--max-instructions N] [--no-pjrt]
+//! repro serve      [--artifacts DIR] [--benchmark B] [--model M]
+//!                  [--max-faults N] [--scale F]
+//! repro info       [--artifacts DIR] [--dump-config]
+//! ```
+
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+use uvm_prefetch::config::ExperimentConfig;
+use uvm_prefetch::coordinator::{CoordinatorService, FaultEvent, Router};
+use uvm_prefetch::eval::report::Table;
+use uvm_prefetch::eval::{self, runner::RunOptions};
+use uvm_prefetch::predictor::DeltaVocab;
+use uvm_prefetch::runtime::{Manifest, ModelExecutable, PjrtBackend};
+use uvm_prefetch::sim::TraceWriter;
+use uvm_prefetch::types::AccessOrigin;
+use uvm_prefetch::util::cli::Args;
+use uvm_prefetch::util::Json;
+use uvm_prefetch::workloads::{ALL_BENCHMARKS, MODEL_BENCHMARKS};
+
+const USAGE: &str = "repro <trace-gen|simulate|eval|serve|info> [flags] (see rust/src/main.rs header)";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let cmd = args.positional0(USAGE)?.to_string();
+    match cmd.as_str() {
+        "trace-gen" => trace_gen(&args),
+        "simulate" => simulate(&args),
+        "eval" => eval_cmd(&args),
+        "serve" => serve(&args),
+        "info" => info(&args),
+        other => anyhow::bail!("unknown command '{other}'\nusage: {USAGE}"),
+    }
+}
+
+fn opts_from(args: &Args) -> Result<RunOptions> {
+    Ok(RunOptions {
+        scale: args.f64("scale", 4.0)?,
+        max_instructions: args.u64("max-instructions", 2_000_000)?,
+        artifacts: args.str("artifacts", ""),
+        model: args.str("model", ""),
+        seed: args.u64("seed", 0x5eed)?,
+    })
+}
+
+fn trace_gen(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.str("out", "traces"));
+    std::fs::create_dir_all(&out)?;
+    let limit = args.u64("limit", 400_000)?;
+    let scale = args.f64("scale", 1.0)?;
+    let names: Vec<String> = {
+        let given = args.get_all("benchmarks");
+        if given.is_empty() {
+            ALL_BENCHMARKS.iter().map(|s| s.to_string()).collect()
+        } else {
+            given.into_iter().map(|s| s.to_string()).collect()
+        }
+    };
+    let mut opts = opts_from(args)?;
+    opts.scale = scale;
+    opts.max_instructions = args.u64("max-instructions", 60_000_000)?;
+    for name in names {
+        let path = out.join(format!("{name}.csv"));
+        let writer = TraceWriter::create(&path, limit)?;
+        // Trace under the tree prefetcher: the paper collects traces
+        // from the GMMU of the existing (tree-based) runtime, so the
+        // hit/miss flags reflect that baseline.
+        let m = eval::runner::run_benchmark_with(&name, "tree", &opts, |e| e, Some(writer))?;
+        println!(
+            "trace-gen {name}: accesses={} faults={} → {}",
+            m.mem_accesses,
+            m.far_faults,
+            path.display()
+        );
+    }
+    Json::obj(vec![
+        ("all", Json::arr(ALL_BENCHMARKS.iter().map(|s| Json::str(s)))),
+        ("model", Json::arr(MODEL_BENCHMARKS.iter().map(|s| Json::str(s)))),
+    ])
+    .write_file(&out.join("benchmarks.json"))?;
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let benchmark = args.str("benchmark", "addvectors");
+    let prefetcher = args.str("prefetcher", "tree");
+    let prediction_us = args.f64("prediction-us", 1.0)?;
+    let oversubscribe = args.f64("oversubscribe", 0.0)?;
+    let config: Option<ExperimentConfig> = match args.get("config") {
+        Some(p) => Some(ExperimentConfig::from_file(Path::new(p))?),
+        None => None,
+    };
+    let opts = opts_from(args)?;
+    let m = eval::runner::run_benchmark_with(
+        &benchmark,
+        &prefetcher,
+        &opts,
+        move |mut e| {
+            if let Some(b) = config {
+                e = b;
+            }
+            e.runtime.prediction_latency_cycles = e.sim.us_to_cycles(prediction_us);
+            if oversubscribe > 0.0 {
+                e.sim.device_mem_bytes = (e.sim.device_mem_bytes as f64 * oversubscribe) as u64;
+            }
+            e
+        },
+        None,
+    )?;
+    println!("benchmark={benchmark} prefetcher={prefetcher}");
+    println!("{}", m.summary());
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("eval needs a target: table10|table11|fig10|fig11|fig12|summary|all"))?;
+    let out = PathBuf::from(args.str("out", "results"));
+    std::fs::create_dir_all(&out)?;
+    let mut opts = opts_from(args)?;
+    if opts.artifacts.is_empty() && !args.bool("no-pjrt") {
+        opts.artifacts = "artifacts".to_string();
+    }
+    if args.bool("no-pjrt") {
+        opts.artifacts = String::new();
+    }
+    let run = |name: &str| -> Result<Table> {
+        match name {
+            "table10" => eval::table10(&opts, &out),
+            "table11" => eval::table11(&opts, &out),
+            "fig10" => eval::fig10(&opts, &out),
+            "fig11" => eval::fig11(&opts, &out),
+            "fig12" => eval::fig12(&opts, &out),
+            "summary" => eval::summary(&opts, &out),
+            other => anyhow::bail!("unknown eval target '{other}'"),
+        }
+    };
+    let targets: Vec<&str> = if which == "all" {
+        vec!["table10", "table11", "fig11", "fig12", "fig10", "summary"]
+    } else {
+        vec![which]
+    };
+    for t in targets {
+        let table = run(t)?;
+        println!("{}", table.to_markdown());
+    }
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    if args.bool("dump-config") {
+        println!("{}", ExperimentConfig::default().to_json().to_string());
+        return Ok(());
+    }
+    let artifacts = args.str("artifacts", "artifacts");
+    let manifest = Manifest::load(Path::new(&artifacts))?;
+    println!("artifacts v{} — {} models:", manifest.version, manifest.models.len());
+    for (name, e) in &manifest.models {
+        println!(
+            "  {name:<14} arch={:<12} batch={} seq={} classes={} params={}",
+            e.arch, e.batch, e.seq_len, e.n_classes, e.n_params
+        );
+    }
+    Ok(())
+}
+
+/// Replay a benchmark's far-fault stream through the threaded
+/// coordinator with the real PJRT backend — the serving deployment
+/// shape.
+fn serve(args: &Args) -> Result<()> {
+    use uvm_prefetch::config::RuntimeConfig;
+    use uvm_prefetch::prefetch::none::NonePrefetcher;
+    use uvm_prefetch::sim::Simulator;
+
+    let artifacts = args.str("artifacts", "artifacts");
+    let benchmark = args.str("benchmark", "addvectors");
+    let model = args.str("model", "");
+    let max_faults = args.usize("max-faults", 20_000)?;
+    let scale = args.f64("scale", 0.1)?;
+
+    let dir = Path::new(&artifacts);
+    let manifest = Manifest::load(dir)?;
+    let (key, entry) = manifest.resolve(&model, &benchmark)?;
+    println!("serve: model '{key}' for benchmark '{benchmark}'");
+    let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
+    let exe = ModelExecutable::load(dir, entry)?;
+    let backend = Box::new(PjrtBackend::new(exe, entry.arch.clone()));
+    let rcfg = RuntimeConfig::default();
+
+    // Produce a fault stream by running the workload once under
+    // demand paging with a trace.
+    let exp = ExperimentConfig {
+        benchmark: benchmark.clone(),
+        max_instructions: 2_000_000,
+        ..Default::default()
+    };
+    let wl = uvm_prefetch::workloads::build(&benchmark, &exp.sim, exp.seed, scale)?;
+    let tmp = std::env::temp_dir().join(format!("uvm-serve-{}.csv", std::process::id()));
+    let writer = TraceWriter::create(&tmp, max_faults as u64 * 8)?;
+    let _ = Simulator::new(&exp, wl, Box::new(NonePrefetcher), Some(writer)).run();
+
+    // Replay every access record: hits extend the predictor history,
+    // misses trigger migration + prediction (capped at `max_faults`
+    // misses).
+    let text = std::fs::read_to_string(&tmp)?;
+    let _ = std::fs::remove_file(&tmp);
+    let mut events = Vec::new();
+    let mut misses = 0usize;
+    for line in text.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        let miss = cols[9] == "1";
+        events.push(FaultEvent {
+            at: cols[0].parse()?,
+            pc: cols[1].parse()?,
+            page: cols[2].parse()?,
+            origin: AccessOrigin {
+                sm: cols[3].parse()?,
+                warp: cols[4].parse()?,
+                cta: cols[5].parse()?,
+                tpc: cols[6].parse()?,
+                kernel_id: cols[7].parse()?,
+            },
+            miss,
+        });
+        misses += miss as usize;
+        if misses >= max_faults {
+            break;
+        }
+    }
+    println!("serve: replaying {} accesses ({} misses)", events.len(), misses);
+
+    let router = Router::new(vocab, &rcfg);
+    let handle = CoordinatorService::spawn(router, backend, &rcfg);
+    let t0 = std::time::Instant::now();
+    let stats = handle.stats.clone();
+    let n = events.len();
+    for ev in events {
+        handle.faults_tx.send(ev)?;
+    }
+    let cmds = handle.shutdown();
+    let dt = t0.elapsed();
+    println!(
+        "serve: {} commands in {:.1} ms ({:.1} faults/ms)",
+        cmds.len(),
+        dt.as_secs_f64() * 1e3,
+        n as f64 / dt.as_secs_f64() / 1e3
+    );
+    println!("serve: {}", stats.snapshot());
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Dynamic batching of inference requests.
+//!
+//! Far-faults arrive one at a time; the PJRT executable is compiled
+//! for a fixed batch shape. The batcher accumulates ready windows and
+//! flushes when (a) the batch is full, or (b) the oldest pending
+//! request exceeds `flush_cycles` of age — bounding the timeliness
+//! penalty that §5.2 warns about. Partial batches are padded by the
+//! backend.
+
+use crate::predictor::Window;
+use crate::types::{Cycle, PageNum};
+
+/// A queued inference request: the window plus everything needed to
+/// turn the answer into a prefetch.
+#[derive(Debug, Clone)]
+pub struct PendingRequest {
+    pub window: Window,
+    /// Faulting page the predicted delta is applied to.
+    pub anchor_page: PageNum,
+    pub enqueued_at: Cycle,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    pending: Vec<PendingRequest>,
+    batch_size: usize,
+    flush_cycles: Cycle,
+    pub batches_flushed: u64,
+    pub requests_seen: u64,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize, flush_cycles: Cycle) -> Self {
+        assert!(batch_size > 0);
+        Self {
+            pending: Vec::with_capacity(batch_size),
+            batch_size,
+            flush_cycles,
+            batches_flushed: 0,
+            requests_seen: 0,
+        }
+    }
+
+    /// Enqueue a request; returns a full batch if this push filled it.
+    pub fn push(&mut self, req: PendingRequest) -> Option<Vec<PendingRequest>> {
+        self.requests_seen += 1;
+        self.pending.push(req);
+        (self.pending.len() >= self.batch_size).then(|| self.take())
+    }
+
+    /// Flush a partial batch whose oldest entry has aged out.
+    pub fn poll(&mut self, now: Cycle) -> Option<Vec<PendingRequest>> {
+        let oldest = self.pending.first()?.enqueued_at;
+        (now.saturating_sub(oldest) >= self.flush_cycles).then(|| self.take())
+    }
+
+    /// Unconditional flush (end of run).
+    pub fn flush(&mut self) -> Option<Vec<PendingRequest>> {
+        (!self.pending.is_empty()).then(|| self.take())
+    }
+
+    fn take(&mut self) -> Vec<PendingRequest> {
+        self.batches_flushed += 1;
+        std::mem::take(&mut self.pending)
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::FeatTok;
+
+    fn req(at: Cycle) -> PendingRequest {
+        PendingRequest {
+            window: Window { tokens: vec![FeatTok { pc_id: 0, page_id: 0, delta_id: 0 }] },
+            anchor_page: 7,
+            enqueued_at: at,
+        }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(2, 1000);
+        assert!(b.push(req(0)).is_none());
+        let batch = b.push(req(1)).expect("full");
+        assert_eq!(batch.len(), 2);
+        assert!(b.is_empty());
+        assert_eq!(b.batches_flushed, 1);
+    }
+
+    #[test]
+    fn poll_flushes_aged_partials() {
+        let mut b = Batcher::new(8, 100);
+        b.push(req(50));
+        assert!(b.poll(100).is_none(), "49 cycles old: keep waiting");
+        let batch = b.poll(151).expect("aged out");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn poll_on_empty_is_none() {
+        let mut b = Batcher::new(4, 10);
+        assert!(b.poll(1_000_000).is_none());
+    }
+
+    #[test]
+    fn explicit_flush_drains() {
+        let mut b = Batcher::new(4, 10);
+        b.push(req(0));
+        b.push(req(1));
+        assert_eq!(b.flush().unwrap().len(), 2);
+        assert!(b.flush().is_none());
+    }
+}

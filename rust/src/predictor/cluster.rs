@@ -1,0 +1,90 @@
+//! Trace clustering (paper §5.1, Table 2).
+//!
+//! The paper evaluates clustering the fault stream by PC, kernel id,
+//! SM id, CTA id and warp id, finds SM id best (concurrent warps mix
+//! at the GMMU and destroy PC-order information), and the revised
+//! predictor (§6 item 1) uses **SM id + warp id**. All variants are
+//! implemented so the Table 2 experiment can be regenerated from the
+//! same machinery the runtime uses.
+
+use crate::types::AccessOrigin;
+
+/// Which feature(s) partition the fault stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterBy {
+    Pc,
+    KernelId,
+    Sm,
+    Cta,
+    Warp,
+    /// The revised predictor's choice (paper §6 item 1).
+    SmWarp,
+}
+
+/// Opaque cluster key (hashable, cheap to copy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClusterKey(pub u64);
+
+impl ClusterBy {
+    /// Compute the cluster key for an access.
+    pub fn key(self, origin: &AccessOrigin, pc: u64) -> ClusterKey {
+        let k = match self {
+            ClusterBy::Pc => pc,
+            ClusterBy::KernelId => origin.kernel_id as u64,
+            ClusterBy::Sm => origin.sm as u64,
+            ClusterBy::Cta => origin.cta as u64,
+            ClusterBy::Warp => origin.warp as u64,
+            // Disjoint ranges: sm in high bits, warp in low bits.
+            ClusterBy::SmWarp => ((origin.sm as u64) << 32) | origin.warp as u64,
+        };
+        ClusterKey(k)
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "pc" => ClusterBy::Pc,
+            "kernel_id" | "kernel" => ClusterBy::KernelId,
+            "sm" => ClusterBy::Sm,
+            "cta" => ClusterBy::Cta,
+            "warp" => ClusterBy::Warp,
+            "sm_warp" | "smwarp" => ClusterBy::SmWarp,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn origin(sm: u16, warp: u16, cta: u32) -> AccessOrigin {
+        AccessOrigin { sm, warp, cta, tpc: sm / 2, kernel_id: 3 }
+    }
+
+    #[test]
+    fn sm_warp_keys_are_disjoint() {
+        let a = ClusterBy::SmWarp.key(&origin(1, 2, 0), 0);
+        let b = ClusterBy::SmWarp.key(&origin(2, 1, 0), 0);
+        let c = ClusterBy::SmWarp.key(&origin(1, 2, 9), 0);
+        assert_ne!(a, b);
+        assert_eq!(a, c, "cta does not affect sm_warp key");
+    }
+
+    #[test]
+    fn each_mode_uses_its_feature() {
+        let o = origin(5, 7, 11);
+        assert_eq!(ClusterBy::Pc.key(&o, 0x40).0, 0x40);
+        assert_eq!(ClusterBy::KernelId.key(&o, 0).0, 3);
+        assert_eq!(ClusterBy::Sm.key(&o, 0).0, 5);
+        assert_eq!(ClusterBy::Cta.key(&o, 0).0, 11);
+        assert_eq!(ClusterBy::Warp.key(&o, 0).0, 7);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["pc", "kernel_id", "sm", "cta", "warp", "sm_warp"] {
+            assert!(ClusterBy::parse(s).is_some(), "{s}");
+        }
+        assert!(ClusterBy::parse("bogus").is_none());
+    }
+}

@@ -1,0 +1,150 @@
+//! Predictor engine: glue between raw history windows and a
+//! [`PredictorBackend`] — featurization, batch prediction, and the
+//! delta-vocabulary decode back to concrete pages.
+
+use crate::predictor::history::HistoryToken;
+use crate::predictor::{
+    ClassId, DeltaVocab, LabelledWindow, Prediction, PredictorBackend, Window,
+};
+
+/// Featurize a raw token window using the vocabulary.
+pub fn featurize_window(vocab: &DeltaVocab, tokens: &[HistoryToken]) -> Window {
+    Window { tokens: tokens.iter().map(|t| vocab.featurize(t)).collect() }
+}
+
+/// Engine = backend + vocab.
+pub struct PredictorEngine {
+    backend: Box<dyn PredictorBackend>,
+    pub vocab: DeltaVocab,
+}
+
+impl PredictorEngine {
+    pub fn new(backend: Box<dyn PredictorBackend>, vocab: DeltaVocab) -> Self {
+        Self { backend, vocab }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Predict the next delta for each window.
+    pub fn predict(&mut self, windows: &[Window]) -> Vec<Prediction> {
+        if windows.is_empty() {
+            return Vec::new();
+        }
+        let classes = self.backend.predict(windows);
+        debug_assert_eq!(classes.len(), windows.len());
+        classes.into_iter().map(|c| self.vocab.decode(c)).collect()
+    }
+
+    /// One online fine-tune round; returns loss when supported.
+    pub fn finetune(&mut self, batch: &[LabelledWindow]) -> Option<f64> {
+        self.backend.finetune(batch)
+    }
+}
+
+/// Pure-Rust fallback backend: majority vote over the window's recent
+/// delta ids (a frequency predictor — degenerates to the stride
+/// predictor on regular streams). Lets the full DL pipeline run
+/// without artifacts; tests and CI use it.
+#[derive(Debug)]
+pub struct StrideBackend {
+    n_classes: usize,
+    /// Vote over the last `lookback` tokens of the window.
+    lookback: usize,
+}
+
+impl StrideBackend {
+    pub fn new(n_classes: usize, lookback: usize) -> Self {
+        assert!(lookback > 0);
+        Self { n_classes, lookback }
+    }
+}
+
+impl PredictorBackend for StrideBackend {
+    fn name(&self) -> &'static str {
+        "stride-backend"
+    }
+
+    fn predict(&mut self, windows: &[Window]) -> Vec<ClassId> {
+        windows
+            .iter()
+            .map(|w| {
+                let tail = &w.tokens[w.tokens.len().saturating_sub(self.lookback)..];
+                // Majority delta id; ties broken toward the most
+                // recent occurrence.
+                let mut best: Option<(i32, usize)> = None;
+                for (i, t) in tail.iter().enumerate() {
+                    let count = tail.iter().filter(|u| u.delta_id == t.delta_id).count();
+                    match best {
+                        Some((_, bc)) if bc > count => {}
+                        Some((bd, bc)) if bc == count && bd == t.delta_id => {}
+                        _ => best = Some((t.delta_id, count)),
+                        // Later equal counts overwrite → recency bias.
+                    }
+                    let _ = i;
+                }
+                best.map(|(d, _)| d as ClassId).unwrap_or(0)
+            })
+            .collect()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::FeatTok;
+
+    fn window(delta_ids: &[i32]) -> Window {
+        Window {
+            tokens: delta_ids
+                .iter()
+                .map(|&d| FeatTok { pc_id: 0, page_id: 0, delta_id: d })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn stride_backend_majority_vote() {
+        let mut b = StrideBackend::new(8, 8);
+        let out = b.predict(&[window(&[1, 1, 1, 2]), window(&[3, 3, 2, 2, 2])]);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn engine_decodes_through_vocab() {
+        let vocab = DeltaVocab::synthetic(vec![5, -1], 4);
+        let mut engine =
+            PredictorEngine::new(Box::new(StrideBackend::new(vocab.n_classes(), 4)), vocab);
+        let preds = engine.predict(&[window(&[1, 1, 0, 1])]);
+        assert_eq!(preds, vec![Prediction::Delta(-1)]);
+        // Class 2 = OOV in a 2-delta vocab.
+        let preds = engine.predict(&[window(&[2, 2, 2, 2])]);
+        assert_eq!(preds, vec![Prediction::Oov]);
+    }
+
+    #[test]
+    fn featurize_window_maps_all_tokens() {
+        let vocab = DeltaVocab::synthetic(vec![1], 2);
+        let toks = vec![
+            HistoryToken { pc: 0xdead, page: 5, delta: 1 },
+            HistoryToken { pc: 0xbeef, page: 6, delta: 99 },
+        ];
+        let w = featurize_window(&vocab, &toks);
+        assert_eq!(w.tokens.len(), 2);
+        assert_eq!(w.tokens[0].delta_id, 0);
+        assert_eq!(w.tokens[1].delta_id, 1, "unseen delta → OOV id");
+    }
+
+    #[test]
+    fn empty_predict_is_empty() {
+        let vocab = DeltaVocab::synthetic(vec![1], 4);
+        let mut engine =
+            PredictorEngine::new(Box::new(StrideBackend::new(2, 4)), vocab);
+        assert!(engine.predict(&[]).is_empty());
+    }
+}

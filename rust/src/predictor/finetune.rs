@@ -1,0 +1,127 @@
+//! Online fine-tuning scheduler (paper §7.1: "we fine-tuned this model
+//! in each simulation every 50 million instructions to make it become
+//! adaptive in different program phases").
+//!
+//! Labelled windows are harvested for free on the fault path: once the
+//! *next* delta of a cluster is observed, the previous full window
+//! gains its ground-truth label. A bounded replay buffer keeps the
+//! most recent examples; every `interval_insts` retired instructions
+//! the scheduler hands a batch to the backend's AOT train-step.
+
+use crate::predictor::{LabelledWindow, Window};
+
+#[derive(Debug)]
+pub struct FinetuneScheduler {
+    /// Replay buffer (ring, newest wins).
+    buffer: Vec<LabelledWindow>,
+    capacity: usize,
+    write: usize,
+    filled: bool,
+    interval_insts: u64,
+    next_due: u64,
+    batch: usize,
+    pub rounds: u64,
+    pub last_loss: Option<f64>,
+}
+
+impl FinetuneScheduler {
+    pub fn new(interval_insts: u64, batch: usize, capacity: usize) -> Self {
+        assert!(capacity >= batch.max(1));
+        Self {
+            buffer: Vec::with_capacity(capacity),
+            capacity,
+            write: 0,
+            filled: false,
+            interval_insts,
+            next_due: interval_insts,
+            batch,
+            rounds: 0,
+            last_loss: None,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.interval_insts != 0
+    }
+
+    /// Record a labelled example.
+    pub fn record(&mut self, window: Window, label: i32) {
+        if !self.enabled() {
+            return;
+        }
+        let lw = LabelledWindow { window, label };
+        if self.buffer.len() < self.capacity {
+            self.buffer.push(lw);
+        } else {
+            self.buffer[self.write] = lw;
+            self.filled = true;
+        }
+        self.write = (self.write + 1) % self.capacity;
+    }
+
+    /// Called with the running instruction counter; returns a training
+    /// batch when a round is due and enough examples exist.
+    pub fn due(&mut self, instructions: u64) -> Option<Vec<LabelledWindow>> {
+        if !self.enabled() || instructions < self.next_due {
+            return None;
+        }
+        self.next_due = instructions + self.interval_insts;
+        if self.buffer.len() < self.batch {
+            return None;
+        }
+        self.rounds += 1;
+        // Most recent `batch` examples (newest program phase).
+        let n = self.buffer.len();
+        let start = if self.filled { self.write } else { 0 };
+        let batch: Vec<LabelledWindow> = (0..self.batch)
+            .map(|i| self.buffer[(start + n - self.batch + i) % n].clone())
+            .collect();
+        Some(batch)
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::FeatTok;
+
+    fn w(tag: i32) -> Window {
+        Window { tokens: vec![FeatTok { pc_id: tag, page_id: 0, delta_id: 0 }] }
+    }
+
+    #[test]
+    fn disabled_scheduler_is_inert() {
+        let mut s = FinetuneScheduler::new(0, 4, 16);
+        s.record(w(1), 0);
+        assert_eq!(s.buffered(), 0);
+        assert!(s.due(1_000_000).is_none());
+    }
+
+    #[test]
+    fn fires_on_interval_with_enough_examples() {
+        let mut s = FinetuneScheduler::new(100, 2, 8);
+        s.record(w(1), 1);
+        assert!(s.due(100).is_none(), "only one example buffered");
+        s.record(w(2), 2);
+        assert!(s.due(150).is_none(), "interval already consumed at 100");
+        // Next due at 200.
+        let batch = s.due(200).expect("due");
+        assert_eq!(batch.len(), 2);
+        assert_eq!(s.rounds, 1);
+    }
+
+    #[test]
+    fn batch_takes_most_recent_examples() {
+        let mut s = FinetuneScheduler::new(10, 2, 4);
+        for i in 0..6 {
+            s.record(w(i), i);
+        }
+        let batch = s.due(10).unwrap();
+        let tags: Vec<i32> = batch.iter().map(|b| b.label).collect();
+        assert_eq!(tags, vec![4, 5], "newest two survive the ring");
+    }
+}

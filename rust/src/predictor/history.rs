@@ -1,0 +1,167 @@
+//! Per-cluster sliding history windows and delta-convergence tracking.
+//!
+//! Each cluster keeps the last `history_len` (PC, page, Δ) tokens.
+//! The paper's *delta convergence* — "the ratio of the largest number
+//! of address delta to the total size of the output vocabulary"
+//! (§5.4, Fig. 6) — is tracked online per cluster and drives the
+//! bypass indicator (§6 item 5).
+
+use crate::types::{Cycle, PageDelta, PageNum};
+use std::collections::{HashMap, VecDeque};
+
+/// Raw history token before featurization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistoryToken {
+    pub pc: u64,
+    pub page: PageNum,
+    pub delta: PageDelta,
+}
+
+/// State of one cluster's stream.
+#[derive(Debug)]
+pub struct ClusterHistory {
+    /// Ring of the last `capacity` tokens. VecDeque: the push path
+    /// runs once per GMMU access — `Vec::remove(0)` was the hottest
+    /// line of the coordinator benches (see EXPERIMENTS.md §Perf).
+    window: VecDeque<HistoryToken>,
+    capacity: usize,
+    last_page: Option<PageNum>,
+    /// delta → occurrences (convergence statistics).
+    delta_counts: HashMap<PageDelta, u64>,
+    total_deltas: u64,
+    pub last_update: Cycle,
+}
+
+impl ClusterHistory {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            window: VecDeque::with_capacity(capacity + 1),
+            capacity,
+            last_page: None,
+            delta_counts: HashMap::new(),
+            total_deltas: 0,
+            last_update: 0,
+        }
+    }
+
+    /// Record an access; returns the token pushed (None for the very
+    /// first access of the cluster — no delta exists yet).
+    pub fn push(&mut self, pc: u64, page: PageNum, now: Cycle) -> Option<HistoryToken> {
+        self.last_update = now;
+        let last = self.last_page.replace(page);
+        let delta = page as i64 - last? as i64;
+        let tok = HistoryToken { pc, page, delta };
+        if self.window.len() == self.capacity {
+            self.window.pop_front();
+        }
+        self.window.push_back(tok);
+        *self.delta_counts.entry(delta).or_insert(0) += 1;
+        self.total_deltas += 1;
+        Some(tok)
+    }
+
+    /// Full window if the cluster has accumulated enough history.
+    /// The deque is kept contiguous (pop+push never wraps a deque
+    /// whose spare capacity ≥ 1), so this is O(1) in steady state.
+    pub fn full_window(&mut self) -> Option<&[HistoryToken]> {
+        if self.window.len() != self.capacity {
+            return None;
+        }
+        Some(self.window.make_contiguous())
+    }
+
+    /// Most frequent delta and its convergence ratio.
+    pub fn dominant_delta(&self) -> Option<(PageDelta, f64)> {
+        let (&delta, &count) = self.delta_counts.iter().max_by_key(|&(d, c)| (*c, *d))?;
+        Some((delta, count as f64 / self.total_deltas as f64))
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+}
+
+/// All clusters' histories.
+#[derive(Debug)]
+pub struct HistoryTable<K: std::hash::Hash + Eq + Copy> {
+    clusters: HashMap<K, ClusterHistory>,
+    capacity: usize,
+}
+
+impl<K: std::hash::Hash + Eq + Copy> HistoryTable<K> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self { clusters: HashMap::new(), capacity }
+    }
+
+    pub fn push(&mut self, key: K, pc: u64, page: PageNum, now: Cycle) -> Option<HistoryToken> {
+        self.clusters.entry(key).or_insert_with(|| ClusterHistory::new(self.capacity)).push(
+            pc, page, now,
+        )
+    }
+
+    pub fn get(&self, key: &K) -> Option<&ClusterHistory> {
+        self.clusters.get(key)
+    }
+
+    pub fn get_mut(&mut self, key: &K) -> Option<&mut ClusterHistory> {
+        self.clusters.get_mut(key)
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_access_has_no_delta() {
+        let mut h = ClusterHistory::new(4);
+        assert!(h.push(0x10, 100, 0).is_none());
+        let tok = h.push(0x10, 102, 1).unwrap();
+        assert_eq!(tok.delta, 2);
+    }
+
+    #[test]
+    fn window_slides_at_capacity() {
+        let mut h = ClusterHistory::new(3);
+        for (i, p) in [10u64, 11, 12, 13, 20].iter().enumerate() {
+            h.push(0, *p, i as u64);
+        }
+        let w = h.full_window().expect("full");
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[2].delta, 7, "newest token is the 13→20 jump");
+        assert_eq!(w[0].delta, 1);
+    }
+
+    #[test]
+    fn convergence_tracks_dominant_delta() {
+        let mut h = ClusterHistory::new(8);
+        h.push(0, 0, 0);
+        for i in 1..=9u64 {
+            h.push(0, i, i); // delta 1 × 9
+        }
+        h.push(0, 100, 10); // delta 91 × 1
+        let (d, conv) = h.dominant_delta().unwrap();
+        assert_eq!(d, 1);
+        assert!((conv - 0.9).abs() < 1e-9, "conv = {conv}");
+    }
+
+    #[test]
+    fn table_isolates_clusters() {
+        let mut t: HistoryTable<u32> = HistoryTable::new(2);
+        t.push(1, 0, 10, 0);
+        t.push(2, 0, 99, 0);
+        t.push(1, 0, 11, 1);
+        assert_eq!(t.n_clusters(), 2);
+        assert_eq!(t.get(&1).unwrap().len(), 1, "one delta in cluster 1");
+        assert!(t.get(&2).unwrap().is_empty(), "cluster 2 still has no delta");
+    }
+}

@@ -1,0 +1,107 @@
+//! The learned predictor's deployment path (Layer 3 side).
+//!
+//! This is the paper's §6 "revised predictor" as it would ship inside
+//! a UVM runtime: far-fault streams are **clustered** by (SM id, warp
+//! id), each cluster keeps a **sliding window** of the last 30
+//! (PC, page, Δpage) tokens, ready windows are **dynamically batched**
+//! and pushed through the AOT-compiled model (PJRT), and the top-1
+//! class is mapped back through the **delta vocabulary** to a concrete
+//! prefetch candidate. A **bypass indicator** short-circuits clusters
+//! whose delta distribution has converged (paper §5.3/§6 item 5), and
+//! an **online fine-tune** scheduler periodically replays labelled
+//! windows through the AOT train-step (paper §7.1, every 50 M
+//! instructions).
+
+pub mod batcher;
+pub mod cluster;
+pub mod engine;
+pub mod finetune;
+pub mod history;
+pub mod quant;
+pub mod vocab;
+
+pub use cluster::{ClusterBy, ClusterKey};
+pub use engine::{PredictorEngine, StrideBackend};
+pub use history::HistoryToken;
+pub use vocab::DeltaVocab;
+
+use crate::types::PageDelta;
+
+/// One featurized token as fed to the model: ids into the embedding
+/// tables built at training time (see `python/compile/data.py` —
+/// `FEAT_PC`, `FEAT_PAGE`, `FEAT_DELTA`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeatTok {
+    pub pc_id: i32,
+    pub page_id: i32,
+    pub delta_id: i32,
+}
+
+/// A model-ready window of `history_len` featurized tokens.
+#[derive(Debug, Clone)]
+pub struct Window {
+    pub tokens: Vec<FeatTok>,
+}
+
+/// A labelled window for online fine-tuning.
+#[derive(Debug, Clone)]
+pub struct LabelledWindow {
+    pub window: Window,
+    /// Class id of the observed next delta.
+    pub label: i32,
+}
+
+/// What a backend returns per window: a class id over the delta
+/// vocabulary (the vocabulary's last class is OOV).
+pub type ClassId = u32;
+
+/// Inference/learning backend. Implementations: [`StrideBackend`]
+/// (pure Rust), `ConstantBackend` (tests), and
+/// [`crate::runtime::PjrtBackend`] (the real AOT model).
+pub trait PredictorBackend: Send {
+    fn name(&self) -> &'static str;
+
+    /// Top-1 class per window. Must return exactly
+    /// `windows.len()` entries.
+    fn predict(&mut self, windows: &[Window]) -> Vec<ClassId>;
+
+    /// One online fine-tune step over labelled windows; returns the
+    /// training loss if the backend supports learning.
+    fn finetune(&mut self, _batch: &[LabelledWindow]) -> Option<f64> {
+        None
+    }
+
+    /// Number of delta classes (incl. OOV) this backend emits.
+    fn n_classes(&self) -> usize;
+}
+
+/// Always predicts the same class — test + ablation backend.
+#[derive(Debug)]
+pub struct ConstantBackend {
+    pub class: ClassId,
+    pub n_classes: usize,
+}
+
+impl PredictorBackend for ConstantBackend {
+    fn name(&self) -> &'static str {
+        "constant"
+    }
+
+    fn predict(&mut self, windows: &[Window]) -> Vec<ClassId> {
+        vec![self.class; windows.len()]
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+}
+
+/// A concrete prediction after vocab mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Prediction {
+    Delta(PageDelta),
+    /// Model answered with the out-of-vocabulary class: suppress the
+    /// extra prefetch (fall back to basic-block-only, the paper's
+    /// floor behaviour).
+    Oov,
+}

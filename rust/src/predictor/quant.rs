@@ -1,0 +1,98 @@
+//! 4-bit quantization (paper §6, Tables 6/7).
+//!
+//! The paper clamps weights and activations to [-8, +8] during
+//! training and observes that 4 bits then suffice for storage —
+//! "memory consumption of the revised predictor could theoretically
+//! be one-eighth of the previous one". The python side trains with
+//! the clamp and writes both f32 and int4-packed parameter stores;
+//! this module is the Rust decode path plus the footprint accounting
+//! used to regenerate Table 7.
+//!
+//! Scheme: symmetric uniform quantization over [-8, 8] with 16 levels,
+//! step = 16/15; two codes per byte, low nibble first.
+
+pub const QUANT_LO: f32 = -8.0;
+pub const QUANT_HI: f32 = 8.0;
+pub const QUANT_LEVELS: u32 = 16;
+/// Quantization step (16 range / 15 intervals).
+pub const QUANT_STEP: f32 = (QUANT_HI - QUANT_LO) / (QUANT_LEVELS - 1) as f32;
+
+/// Quantize one value to a 4-bit code.
+#[inline]
+pub fn quantize(x: f32) -> u8 {
+    let clamped = x.clamp(QUANT_LO, QUANT_HI);
+    (((clamped - QUANT_LO) / QUANT_STEP).round() as u32).min(QUANT_LEVELS - 1) as u8
+}
+
+/// Dequantize a 4-bit code.
+#[inline]
+pub fn dequantize(code: u8) -> f32 {
+    QUANT_LO + (code & 0x0F) as f32 * QUANT_STEP
+}
+
+/// Pack a float slice into nibbles (low nibble first; odd lengths pad
+/// the final high nibble with code 0).
+pub fn pack(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len().div_ceil(2));
+    for pair in values.chunks(2) {
+        let lo = quantize(pair[0]);
+        let hi = pair.get(1).map(|&v| quantize(v)).unwrap_or(0);
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Unpack `n` values from a nibble-packed buffer.
+pub fn unpack(bytes: &[u8], n: usize) -> Vec<f32> {
+    assert!(bytes.len() * 2 >= n, "buffer too short: {} nibbles < {n}", bytes.len() * 2);
+    (0..n)
+        .map(|i| {
+            let b = bytes[i / 2];
+            let code = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+            dequantize(code)
+        })
+        .collect()
+}
+
+/// Worst-case absolute reconstruction error inside the clamp range.
+pub fn max_quant_error() -> f32 {
+    QUANT_STEP / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_within_half_step() {
+        for i in 0..1000 {
+            let x = -8.0 + 16.0 * (i as f32 / 999.0);
+            let err = (dequantize(quantize(x)) - x).abs();
+            assert!(err <= max_quant_error() + 1e-6, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        assert_eq!(quantize(100.0), 15);
+        assert_eq!(quantize(-100.0), 0);
+        assert!((dequantize(quantize(100.0)) - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_odd_length() {
+        let vals = [-8.0f32, -3.2, 0.0, 4.7, 8.0];
+        let packed = pack(&vals);
+        assert_eq!(packed.len(), 3, "5 values → 3 bytes");
+        let back = unpack(&packed, vals.len());
+        for (a, b) in vals.iter().zip(&back) {
+            assert!((a - b).abs() <= max_quant_error() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn endpoints_are_exact() {
+        assert_eq!(dequantize(quantize(-8.0)), -8.0);
+        assert_eq!(dequantize(quantize(8.0)), 8.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Delta vocabulary + feature encoders, loaded from the
+//! `*.vocab.json` artifact written by `python/compile/aot.py`.
+//!
+//! The classification categories are the unique page deltas observed
+//! in the training corpus (Hashemi et al.'s observation that unique
+//! deltas are orders of magnitude fewer than unique addresses — paper
+//! §4). The last class id is the out-of-vocabulary class; PC and page
+//! features are encoded exactly as at training time (closed PC table
+//! with OOV slot, page → modulo bucket).
+
+use crate::predictor::{FeatTok, Prediction};
+use crate::types::{PageDelta, PageNum};
+use crate::util::json::{arr_i64, arr_u64, vec_i64, vec_u64};
+use crate::util::Json;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// JSON schema shared with python (`data.py::Vocab.to_json`).
+#[derive(Debug, Clone)]
+pub struct VocabFile {
+    pub deltas: Vec<i64>,
+    pub pcs: Vec<u64>,
+    pub page_buckets: u32,
+    pub dominant_delta: i64,
+    /// Paper §5.4: largest delta count / total samples.
+    pub convergence: f64,
+    pub history_len: usize,
+}
+
+impl VocabFile {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("deltas", arr_i64(&self.deltas)),
+            ("pcs", arr_u64(&self.pcs)),
+            ("page_buckets", Json::Num(self.page_buckets as f64)),
+            ("dominant_delta", Json::Num(self.dominant_delta as f64)),
+            ("convergence", Json::Num(self.convergence)),
+            ("history_len", Json::Num(self.history_len as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            deltas: vec_i64(j.req("deltas")?)?,
+            pcs: vec_u64(j.req("pcs")?)?,
+            page_buckets: j.req("page_buckets")?.as_u64().unwrap_or(4096) as u32,
+            dominant_delta: j.req("dominant_delta")?.as_i64().unwrap_or(1),
+            convergence: j.req("convergence")?.as_f64().unwrap_or(0.0),
+            history_len: j.req("history_len")?.as_usize().unwrap_or(30),
+        })
+    }
+}
+
+/// Runtime-side vocabulary with O(1) encode/decode.
+#[derive(Debug, Clone)]
+pub struct DeltaVocab {
+    deltas: Vec<i64>,
+    delta_ids: HashMap<i64, u32>,
+    pc_ids: HashMap<u64, u32>,
+    n_pcs: u32,
+    page_buckets: u32,
+    pub dominant_delta: PageDelta,
+    pub convergence: f64,
+    pub history_len: usize,
+}
+
+impl DeltaVocab {
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let file = VocabFile::from_json(&Json::parse_file(path)?)?;
+        Ok(Self::from_parts(file))
+    }
+
+    pub fn from_parts(file: VocabFile) -> Self {
+        let delta_ids =
+            file.deltas.iter().enumerate().map(|(i, &d)| (d, i as u32)).collect();
+        let pc_ids = file.pcs.iter().enumerate().map(|(i, &p)| (p, i as u32)).collect();
+        Self {
+            delta_ids,
+            pc_ids,
+            n_pcs: file.pcs.len() as u32,
+            page_buckets: file.page_buckets.max(1),
+            dominant_delta: file.dominant_delta,
+            convergence: file.convergence,
+            history_len: file.history_len,
+            deltas: file.deltas,
+        }
+    }
+
+    /// Number of output classes including OOV.
+    pub fn n_classes(&self) -> usize {
+        self.deltas.len() + 1
+    }
+
+    /// The OOV class id (`len(deltas)`).
+    pub fn oov_class(&self) -> u32 {
+        self.deltas.len() as u32
+    }
+
+    /// Encode a delta to its class id (OOV when unseen).
+    pub fn encode_delta(&self, delta: PageDelta) -> u32 {
+        self.delta_ids.get(&delta).copied().unwrap_or(self.oov_class())
+    }
+
+    /// Decode a class id back to a prediction.
+    pub fn decode(&self, class: u32) -> Prediction {
+        match self.deltas.get(class as usize) {
+            Some(&d) => Prediction::Delta(d),
+            None => Prediction::Oov,
+        }
+    }
+
+    /// Encode a PC (last table slot is the PC-OOV bucket).
+    pub fn encode_pc(&self, pc: u64) -> i32 {
+        self.pc_ids.get(&pc).map(|&i| i as i32).unwrap_or(self.n_pcs as i32)
+    }
+
+    /// Encode a page address into its embedding bucket.
+    pub fn encode_page(&self, page: PageNum) -> i32 {
+        (page % self.page_buckets as u64) as i32
+    }
+
+    /// Featurize a raw history token.
+    pub fn featurize(&self, tok: &crate::predictor::history::HistoryToken) -> FeatTok {
+        FeatTok {
+            pc_id: self.encode_pc(tok.pc),
+            page_id: self.encode_page(tok.page),
+            delta_id: self.encode_delta(tok.delta) as i32,
+        }
+    }
+
+    /// A trivial vocabulary for tests and the stride backend.
+    pub fn synthetic(deltas: Vec<i64>, history_len: usize) -> Self {
+        Self::from_parts(VocabFile {
+            dominant_delta: deltas.first().copied().unwrap_or(1),
+            deltas,
+            pcs: vec![],
+            page_buckets: 1024,
+            convergence: 0.0,
+            history_len,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab() -> DeltaVocab {
+        DeltaVocab::from_parts(VocabFile {
+            deltas: vec![-2, 1, 4],
+            pcs: vec![0x10, 0x20],
+            page_buckets: 8,
+            dominant_delta: 1,
+            convergence: 0.7,
+            history_len: 30,
+        })
+    }
+
+    #[test]
+    fn delta_roundtrip_and_oov() {
+        let v = vocab();
+        assert_eq!(v.n_classes(), 4);
+        assert_eq!(v.encode_delta(1), 1);
+        assert_eq!(v.encode_delta(4), 2);
+        assert_eq!(v.encode_delta(999), 3, "unseen → OOV class");
+        assert_eq!(v.decode(0), Prediction::Delta(-2));
+        assert_eq!(v.decode(3), Prediction::Oov);
+        assert_eq!(v.decode(77), Prediction::Oov);
+    }
+
+    #[test]
+    fn pc_and_page_encoding() {
+        let v = vocab();
+        assert_eq!(v.encode_pc(0x20), 1);
+        assert_eq!(v.encode_pc(0x999), 2, "unseen PC → OOV slot");
+        assert_eq!(v.encode_page(9), 1, "modulo bucket");
+    }
+
+    #[test]
+    fn json_file_roundtrip() {
+        let dir = crate::util::TestDir::new();
+        let p = dir.file("v.json");
+        let file = VocabFile {
+            deltas: vec![1, 2],
+            pcs: vec![5],
+            page_buckets: 16,
+            dominant_delta: 1,
+            convergence: 0.99,
+            history_len: 30,
+        };
+        file.to_json().write_file(&p).unwrap();
+        let v = DeltaVocab::from_file(&p).unwrap();
+        assert_eq!(v.n_classes(), 3);
+        assert!((v.convergence - 0.99).abs() < 1e-12);
+        assert_eq!(v.history_len, 30);
+    }
+
+    #[test]
+    fn negative_deltas_roundtrip_through_json() {
+        let file = VocabFile {
+            deltas: vec![-16384, -1, 1, 16384],
+            pcs: vec![],
+            page_buckets: 4096,
+            dominant_delta: -16384,
+            convergence: 0.5,
+            history_len: 30,
+        };
+        let back = VocabFile::from_json(&Json::parse(&file.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.deltas, file.deltas);
+        assert_eq!(back.dominant_delta, -16384);
+    }
+}

@@ -1,0 +1,120 @@
+//! Prefetch policies.
+//!
+//! The simulator raises a [`FaultInfo`] for every far-fault; the active
+//! [`Prefetcher`] answers with a [`PrefetchDecision`] — the set of
+//! extra pages to migrate and when each transfer may start (learned
+//! predictors pay a prediction latency, paper §7.3).
+//!
+//! Implementations:
+//! * [`none::NonePrefetcher`] — demand paging only (lower bound).
+//! * [`tree::TreePrefetcher`] — NVIDIA's tree-based neighborhood
+//!   prefetcher (paper Fig. 2, Ganguly et al. ISCA'19).
+//! * [`uvmsmart::UvmSmartPrefetcher`] — the UVMSmart baseline "U":
+//!   tree prefetching + adaptive delayed-migration/pinning hooks.
+//! * [`stride::StridePrefetcher`] — sequential next-block policy.
+//! * [`dl::DlPrefetcher`] — the paper's contribution "R": basic-block
+//!   prefetch + top-1 predicted page from the learned model.
+//! * [`oracle::OraclePrefetcher`] — replay-based ideal prefetcher
+//!   (unity = 1 reference point).
+
+pub mod dl;
+pub mod none;
+pub mod oracle;
+pub mod stride;
+pub mod tree;
+pub mod uvmsmart;
+
+use crate::types::{AccessOrigin, Cycle, PageNum};
+
+/// A far-fault as presented to the prefetcher.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultInfo {
+    /// Cycle the access reached the GMMU.
+    pub now: Cycle,
+    /// Cycle the host-side fault service completes (now + walk +
+    /// 45 µs); transfers triggered by this fault start no earlier.
+    pub service_at: Cycle,
+    pub pc: u64,
+    pub page: PageNum,
+    pub origin: AccessOrigin,
+    pub array_id: u8,
+}
+
+/// One page the prefetcher wants migrated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefetchRequest {
+    pub page: PageNum,
+    /// The transfer may not start before this cycle (models prediction
+    /// latency; 0-latency policies use the fault service time).
+    pub earliest_start: Cycle,
+}
+
+impl PrefetchRequest {
+    pub fn at(page: PageNum, earliest_start: Cycle) -> Self {
+        Self { page, earliest_start }
+    }
+}
+
+/// Response to a single fault.
+#[derive(Debug, Clone, Default)]
+pub struct PrefetchDecision {
+    pub requests: Vec<PrefetchRequest>,
+}
+
+/// Telemetry exported by learned policies (merged into
+/// [`crate::sim::Metrics`] at the end of a run).
+#[derive(Debug, Clone, Default)]
+pub struct PrefetchTelemetry {
+    pub predictions: u64,
+    pub prediction_batches: u64,
+    pub bypass_predictions: u64,
+    pub oov_predictions: u64,
+    pub finetune_rounds: u64,
+}
+
+/// A prefetching policy. Implementations must be deterministic.
+pub trait Prefetcher {
+    fn name(&self) -> &'static str;
+
+    /// Called on every far-fault (page absent, migration initiated).
+    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision;
+
+    /// Called on every device-memory access *after* outcome
+    /// classification — feedback for learning/adaptive policies.
+    /// `hit` is true when the page was resident.
+    fn on_access(&mut self, _origin: AccessOrigin, _pc: u64, _page: PageNum, _hit: bool, _now: Cycle) {}
+
+    /// Called when the simulator evicts a page (oversubscription).
+    fn on_evict(&mut self, _page: PageNum) {}
+
+    /// Collect prefetch requests that matured asynchronously (batched
+    /// predictions completing after their flush). Called once per
+    /// simulator event; must be cheap when empty.
+    fn drain(&mut self, _now: Cycle) -> Vec<PrefetchRequest> {
+        Vec::new()
+    }
+
+    /// Called with the retired-instruction counter after each memory
+    /// event — drives the online fine-tune schedule (paper §7.1).
+    fn on_retired(&mut self, _instructions: u64) {}
+
+    /// End-of-run hook (flush outstanding state, report stats).
+    fn finish(&mut self, _now: Cycle) {}
+
+    /// Learned-policy telemetry (default: all zeros).
+    fn telemetry(&self) -> PrefetchTelemetry {
+        PrefetchTelemetry::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_constructor() {
+        let r = PrefetchRequest::at(42, 100);
+        assert_eq!(r.page, 42);
+        assert_eq!(r.earliest_start, 100);
+    }
+}

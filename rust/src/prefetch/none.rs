@@ -1,0 +1,38 @@
+//! Demand paging only — no prefetching. The lower bound every policy
+//! is implicitly compared against (pure on-demand migration, paper
+//! §2.1).
+
+use super::{FaultInfo, PrefetchDecision, Prefetcher};
+
+#[derive(Debug, Default)]
+pub struct NonePrefetcher;
+
+impl Prefetcher for NonePrefetcher {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn on_fault(&mut self, _fault: &FaultInfo) -> PrefetchDecision {
+        PrefetchDecision::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::AccessOrigin;
+
+    #[test]
+    fn never_prefetches() {
+        let mut p = NonePrefetcher;
+        let d = p.on_fault(&FaultInfo {
+            now: 0,
+            service_at: 100,
+            pc: 0,
+            page: 1,
+            origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
+            array_id: 0,
+        });
+        assert!(d.requests.is_empty());
+    }
+}

@@ -1,0 +1,88 @@
+//! Replay-based ideal prefetcher — the "perfect prefetcher" reference
+//! point of Table 11 (unity = 1.0).
+//!
+//! A recording run captures the order in which pages are first
+//! demanded; the oracle run then prefetches, on every fault, the next
+//! `lookahead` not-yet-issued pages of that exact sequence. Every
+//! prefetch is used (accuracy → 1), every future miss is anticipated
+//! (coverage → 1), and with enough lookahead pages arrive before
+//! demand (hit rate → 1).
+
+use super::{FaultInfo, PrefetchDecision, Prefetcher, PrefetchRequest};
+use crate::types::PageNum;
+use std::collections::HashSet;
+
+#[derive(Debug)]
+pub struct OraclePrefetcher {
+    /// First-touch page order from the recording run.
+    future: Vec<PageNum>,
+    cursor: usize,
+    issued: HashSet<PageNum>,
+    lookahead: usize,
+}
+
+impl OraclePrefetcher {
+    pub fn new(first_touch_order: Vec<PageNum>, lookahead: usize) -> Self {
+        Self { future: first_touch_order, cursor: 0, issued: HashSet::new(), lookahead }
+    }
+}
+
+impl Prefetcher for OraclePrefetcher {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
+        // Advance the cursor past the faulting page (we are "here" in
+        // the recorded order) and emit the next `lookahead` pages.
+        if let Some(pos) = self.future[self.cursor..].iter().position(|&p| p == fault.page) {
+            self.cursor += pos + 1;
+        }
+        self.issued.insert(fault.page);
+        let mut requests = Vec::new();
+        let mut i = self.cursor;
+        while requests.len() < self.lookahead && i < self.future.len() {
+            let p = self.future[i];
+            if self.issued.insert(p) {
+                requests.push(PrefetchRequest::at(p, fault.service_at));
+            }
+            i += 1;
+        }
+        PrefetchDecision { requests }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::AccessOrigin;
+
+    fn fault(page: PageNum) -> FaultInfo {
+        FaultInfo {
+            now: 0,
+            service_at: 10,
+            pc: 0,
+            page,
+            origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
+            array_id: 0,
+        }
+    }
+
+    #[test]
+    fn prefetches_exactly_the_future() {
+        let mut o = OraclePrefetcher::new(vec![1, 2, 3, 4, 5], 2);
+        let d = o.on_fault(&fault(1));
+        assert_eq!(d.requests.iter().map(|r| r.page).collect::<Vec<_>>(), vec![2, 3]);
+        // Pages 2,3 now arrive before demand; the next fault is 4.
+        let d = o.on_fault(&fault(4));
+        assert_eq!(d.requests.iter().map(|r| r.page).collect::<Vec<_>>(), vec![5]);
+    }
+
+    #[test]
+    fn never_reissues_a_page() {
+        let mut o = OraclePrefetcher::new(vec![1, 2, 2, 3], 3);
+        let d = o.on_fault(&fault(1));
+        let pages: Vec<_> = d.requests.iter().map(|r| r.page).collect();
+        assert_eq!(pages, vec![2, 3], "duplicate 2 skipped");
+    }
+}

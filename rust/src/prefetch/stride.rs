@@ -1,0 +1,144 @@
+//! Classic per-cluster stride prefetcher: detects a repeating page
+//! delta per (SM, warp) stream and prefetches `degree` pages ahead.
+//! Serves two roles: a comparison policy, and the pure-Rust fallback
+//! backend for the DL prefetcher when no artifacts are available.
+
+use super::{FaultInfo, PrefetchDecision, Prefetcher, PrefetchRequest};
+use crate::types::{PageDelta, PageNum};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+struct StreamState {
+    last_page: Option<PageNum>,
+    last_delta: Option<PageDelta>,
+    /// Consecutive confirmations of `last_delta`.
+    confidence: u8,
+}
+
+#[derive(Debug)]
+pub struct StridePrefetcher {
+    streams: HashMap<(u16, u16), StreamState>,
+    /// Prefetch this many strides ahead once confident.
+    degree: usize,
+    /// Confirmations required before prefetching.
+    min_confidence: u8,
+}
+
+impl StridePrefetcher {
+    pub fn new(degree: usize, min_confidence: u8) -> Self {
+        Self { streams: HashMap::new(), degree, min_confidence }
+    }
+
+    /// Observe a page in a stream; returns the confirmed stride if any.
+    fn observe(&mut self, sm: u16, warp: u16, page: PageNum) -> Option<PageDelta> {
+        let s = self.streams.entry((sm, warp)).or_default();
+        if let Some(last) = s.last_page {
+            let delta = page as i64 - last as i64;
+            if Some(delta) == s.last_delta {
+                s.confidence = s.confidence.saturating_add(1);
+            } else {
+                s.last_delta = Some(delta);
+                s.confidence = 1;
+            }
+        }
+        s.last_page = Some(page);
+        if s.confidence >= self.min_confidence && s.last_delta != Some(0) {
+            s.last_delta
+        } else {
+            None
+        }
+    }
+}
+
+impl Default for StridePrefetcher {
+    fn default() -> Self {
+        Self::new(4, 2)
+    }
+}
+
+impl Prefetcher for StridePrefetcher {
+    fn name(&self) -> &'static str {
+        "stride"
+    }
+
+    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
+        let stride = self.observe(fault.origin.sm, fault.origin.warp, fault.page);
+        let mut requests = Vec::new();
+        if let Some(d) = stride {
+            let mut p = fault.page as i64;
+            for _ in 0..self.degree {
+                p += d;
+                if p >= 0 {
+                    requests.push(PrefetchRequest::at(p as PageNum, fault.service_at));
+                }
+            }
+        }
+        PrefetchDecision { requests }
+    }
+
+    fn on_access(&mut self, origin: crate::types::AccessOrigin, _pc: u64, page: PageNum, hit: bool, _now: u64) {
+        // Keep the stride model trained on hits too (faults alone skip
+        // the intra-block steps).
+        if hit {
+            self.observe(origin.sm, origin.warp, page);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::AccessOrigin;
+
+    fn fault(page: PageNum) -> FaultInfo {
+        FaultInfo {
+            now: 0,
+            service_at: 10,
+            pc: 0,
+            page,
+            origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
+            array_id: 0,
+        }
+    }
+
+    #[test]
+    fn learns_constant_stride() {
+        let mut s = StridePrefetcher::new(2, 2);
+        assert!(s.on_fault(&fault(10)).requests.is_empty(), "cold");
+        assert!(s.on_fault(&fault(12)).requests.is_empty(), "one confirmation");
+        let d = s.on_fault(&fault(14));
+        assert_eq!(
+            d.requests.iter().map(|r| r.page).collect::<Vec<_>>(),
+            vec![16, 18],
+            "two strides ahead"
+        );
+    }
+
+    #[test]
+    fn stride_change_resets_confidence() {
+        let mut s = StridePrefetcher::new(2, 2);
+        s.on_fault(&fault(10));
+        s.on_fault(&fault(12));
+        s.on_fault(&fault(14));
+        assert!(s.on_fault(&fault(100)).requests.is_empty(), "new delta, confidence reset");
+    }
+
+    #[test]
+    fn negative_strides_supported() {
+        let mut s = StridePrefetcher::new(1, 2);
+        s.on_fault(&fault(100));
+        s.on_fault(&fault(96));
+        let d = s.on_fault(&fault(92));
+        assert_eq!(d.requests[0].page, 88);
+    }
+
+    #[test]
+    fn streams_are_per_warp() {
+        let mut s = StridePrefetcher::new(1, 2);
+        let mut f = fault(10);
+        s.on_fault(&f);
+        f.origin.warp = 1;
+        f.page = 500;
+        assert!(s.on_fault(&f).requests.is_empty(), "different warp = fresh stream");
+    }
+}

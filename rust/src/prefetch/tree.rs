@@ -1,0 +1,196 @@
+//! The tree-based neighborhood prefetcher NVIDIA ships in the CUDA
+//! driver, as reverse-engineered by Ganguly et al. (ISCA'19) and
+//! described in the paper's §2.2 / Figure 2:
+//!
+//! * A managed allocation is split into 2 MB chunks; each chunk is a
+//!   full binary tree over its 32 × 64 KB *basic blocks* (16 pages).
+//! * A far-fault migrates the whole 64 KB basic block of the faulted
+//!   page.
+//! * The runtime tracks, per non-leaf node, how much of the node's
+//!   span is valid on-device. Whenever a node becomes **more than
+//!   50 %** valid, the *remaining* invalid pages of that node are
+//!   scheduled as further prefetch candidates — so a half-touched
+//!   2 MB chunk snowballs into a full-chunk migration (the Fig. 11
+//!   bandwidth spike the paper dissects).
+
+use super::{FaultInfo, PrefetchDecision, Prefetcher, PrefetchRequest};
+use crate::types::{bb_base, root_base, Cycle, PageNum, PAGES_PER_BB, PAGES_PER_ROOT};
+use std::collections::HashMap;
+
+/// Per-2MB-chunk valid-page bitmap (512 pages = 8 × u64).
+#[derive(Debug, Clone, Default)]
+struct ChunkState {
+    valid: [u64; 8],
+}
+
+impl ChunkState {
+    #[inline]
+    fn is_valid(&self, idx: u64) -> bool {
+        self.valid[(idx / 64) as usize] >> (idx % 64) & 1 == 1
+    }
+
+    #[inline]
+    fn set_valid(&mut self, idx: u64) {
+        self.valid[(idx / 64) as usize] |= 1 << (idx % 64);
+    }
+
+    /// Count valid pages within `[lo, lo + span)`.
+    fn count(&self, lo: u64, span: u64) -> u64 {
+        (lo..lo + span).filter(|&i| self.is_valid(i)).count() as u64
+    }
+}
+
+#[derive(Debug)]
+pub struct TreePrefetcher {
+    /// root page of 2MB chunk → valid bitmap.
+    chunks: HashMap<PageNum, ChunkState>,
+    /// Promotion threshold (paper: 0.5).
+    threshold: f64,
+}
+
+impl TreePrefetcher {
+    pub fn new(threshold: f64) -> Self {
+        Self { chunks: HashMap::new(), threshold }
+    }
+
+    /// Mark pages valid and collect the promotion cascade: walk from
+    /// the faulted basic block up toward the 2 MB root; at each level,
+    /// if the enclosing node is now > threshold valid, schedule its
+    /// remaining invalid pages (and keep walking up).
+    fn fault_block(&mut self, page: PageNum, at: Cycle) -> Vec<PrefetchRequest> {
+        let root = root_base(page);
+        let chunk = self.chunks.entry(root).or_default();
+        let mut out = Vec::new();
+
+        // Leaf: migrate the whole 64 KB basic block.
+        let bb = bb_base(page) - root;
+        for i in bb..bb + PAGES_PER_BB {
+            if !chunk.is_valid(i) {
+                chunk.set_valid(i);
+                out.push(PrefetchRequest::at(root + i, at));
+            }
+        }
+
+        // Climb: node spans double from 2 basic blocks (128 KB) up to
+        // the full 512-page chunk (2 MB).
+        let mut span = PAGES_PER_BB * 2;
+        while span <= PAGES_PER_ROOT {
+            let node_lo = bb / span * span;
+            let valid = chunk.count(node_lo, span);
+            if (valid as f64) > self.threshold * span as f64 && valid < span {
+                for i in node_lo..node_lo + span {
+                    if !chunk.is_valid(i) {
+                        chunk.set_valid(i);
+                        out.push(PrefetchRequest::at(root + i, at));
+                    }
+                }
+            }
+            span *= 2;
+        }
+        out
+    }
+}
+
+impl Prefetcher for TreePrefetcher {
+    fn name(&self) -> &'static str {
+        "tree"
+    }
+
+    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
+        let requests = self.fault_block(fault.page, fault.service_at);
+        PrefetchDecision { requests }
+    }
+
+    fn on_evict(&mut self, page: PageNum) {
+        // The driver decrements node counters on eviction so chunks can
+        // be re-promoted later.
+        let root = root_base(page);
+        if let Some(chunk) = self.chunks.get_mut(&root) {
+            let idx = page - root;
+            chunk.valid[(idx / 64) as usize] &= !(1 << (idx % 64));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::AccessOrigin;
+
+    fn fault(page: PageNum) -> FaultInfo {
+        FaultInfo {
+            now: 0,
+            service_at: 10,
+            pc: 0,
+            page,
+            origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
+            array_id: 0,
+        }
+    }
+
+    #[test]
+    fn first_fault_prefetches_whole_basic_block() {
+        let mut t = TreePrefetcher::new(0.5);
+        let d = t.on_fault(&fault(5));
+        // Pages 0..16 of the chunk — including the faulted page (the
+        // block migrates as one transaction).
+        assert_eq!(d.requests.len(), 16);
+        let pages: Vec<u64> = d.requests.iter().map(|r| r.page).collect();
+        assert_eq!(pages, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn second_block_in_node_triggers_promotion() {
+        let mut t = TreePrefetcher::new(0.5);
+        t.on_fault(&fault(5)); // bb 0 valid: node(128KB) at 50% — not >50%
+        let d = t.on_fault(&fault(40)); // bb 2 (pages 32..48)
+        // bb2 migrates (16 pages). Node pages 32..64 is then 50%... the
+        // enclosing 128KB node [32,64) holds bbs 2,3: 16/32 = 50%, not
+        // promoted. But node [0,64) (256KB) holds bbs 0..4: 32/64 = 50%,
+        // not promoted either. So exactly 16 pages.
+        assert_eq!(d.requests.len(), 16);
+        // Faulting into bb 1 now makes [0,32) 100% (after leaf) and the
+        // 64-page node 48/64 = 75% > 50% ⇒ promote remaining 16 pages,
+        // then the 128-page node is 64/128 = 50%, stop.
+        let d = t.on_fault(&fault(17));
+        assert_eq!(d.requests.len(), 16 + 16, "leaf block + promoted sibling");
+    }
+
+    #[test]
+    fn promotion_cascades_to_full_chunk() {
+        let mut t = TreePrefetcher::new(0.5);
+        // Touch every *even* basic block of the 2MB chunk: exactly 50%
+        // valid at every tree level, so nothing promotes (the paper's
+        // threshold is strictly "more than 50%").
+        let mut total = 0;
+        for bb in 0..16 {
+            total += t.on_fault(&fault(bb * 32)).requests.len(); // blocks 0,2,4,…,30
+        }
+        assert_eq!(total, 16 * 16, "no promotion at exactly 50%");
+        // One more block tips every ancestor over 50% in turn: the
+        // cascade snowballs the whole 2MB chunk (§2.2 / Fig. 11 spike).
+        total += t.on_fault(&fault(16)).requests.len(); // block 1
+        assert_eq!(total as u64, PAGES_PER_ROOT, "full chunk resident after cascade");
+    }
+
+    #[test]
+    fn eviction_clears_valid_bit() {
+        let mut t = TreePrefetcher::new(0.5);
+        t.on_fault(&fault(0));
+        t.on_evict(3);
+        // Re-faulting page 3's block prefetches only the cleared page.
+        let d = t.on_fault(&fault(3));
+        assert_eq!(d.requests.len(), 1);
+        assert_eq!(d.requests[0].page, 3);
+    }
+
+    #[test]
+    fn distinct_chunks_are_independent() {
+        let mut t = TreePrefetcher::new(0.5);
+        let d1 = t.on_fault(&fault(0));
+        let d2 = t.on_fault(&fault(PAGES_PER_ROOT * 7 + 3));
+        assert_eq!(d1.requests.len(), 16);
+        assert_eq!(d2.requests.len(), 16);
+        assert!(d2.requests.iter().all(|r| r.page >= PAGES_PER_ROOT * 7));
+    }
+}

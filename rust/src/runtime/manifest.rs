@@ -1,0 +1,189 @@
+//! `artifacts/manifest.json` — the registry the coordinator uses to
+//! find a model for a benchmark. Schema shared with
+//! `python/compile/aot.py::write_manifest`.
+
+use crate::util::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub infer_hlo: String,
+    pub train_hlo: Option<String>,
+    pub params: String,
+    pub vocab: String,
+    /// Fixed inference batch size the HLO was lowered for.
+    pub batch: usize,
+    /// Fixed train-step batch size (defaults to `batch`).
+    pub train_batch: usize,
+    pub seq_len: usize,
+    /// Features per token (revised predictor: 3 — PC, page, Δ).
+    pub n_features: usize,
+    /// Output classes incl. OOV.
+    pub n_classes: usize,
+    /// Flat parameter tensors, in executable argument order.
+    pub n_params: usize,
+    /// Architecture tag ("revised", "transformer", …).
+    pub arch: String,
+}
+
+impl ModelEntry {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("infer_hlo", Json::str(&self.infer_hlo)),
+            ("params", Json::str(&self.params)),
+            ("vocab", Json::str(&self.vocab)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("train_batch", Json::Num(self.train_batch as f64)),
+            ("seq_len", Json::Num(self.seq_len as f64)),
+            ("n_features", Json::Num(self.n_features as f64)),
+            ("n_classes", Json::Num(self.n_classes as f64)),
+            ("n_params", Json::Num(self.n_params as f64)),
+            ("arch", Json::str(&self.arch)),
+        ];
+        if let Some(t) = &self.train_hlo {
+            pairs.push(("train_hlo", Json::str(t)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.req(k)?.as_str().ok_or_else(|| anyhow::anyhow!("{k}: not a string"))?.to_string())
+        };
+        let n = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().ok_or_else(|| anyhow::anyhow!("{k}: not a number"))
+        };
+        Ok(Self {
+            infer_hlo: s("infer_hlo")?,
+            train_hlo: j.get("train_hlo").and_then(Json::as_str).map(|v| v.to_string()),
+            params: s("params")?,
+            vocab: s("vocab")?,
+            batch: n("batch")?,
+            train_batch: j.get("train_batch").and_then(Json::as_usize).unwrap_or(n("batch")?),
+            seq_len: n("seq_len")?,
+            n_features: n("n_features")?,
+            n_classes: n("n_classes")?,
+            n_params: n("n_params")?,
+            arch: j.get("arch").and_then(Json::as_str).unwrap_or("").to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    /// model key → entry. Keys are benchmark names plus "shared" (the
+    /// paper's pretrained-on-5-benchmarks corpus model, §7.1).
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            anyhow::bail!("cannot read {} — run `make artifacts` first", path.display());
+        }
+        let j = Json::parse_file(&path)?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in j
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("models: not an object"))?
+        {
+            models.insert(name.clone(), ModelEntry::from_json(entry)?);
+        }
+        Ok(Self { version: j.get("version").and_then(Json::as_u64).unwrap_or(1), models })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(self.version as f64)),
+            (
+                "models",
+                Json::Obj(self.models.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
+            ),
+        ])
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        self.to_json().write_file(&dir.join("manifest.json"))
+    }
+
+    /// Resolve a model for `benchmark`: explicit `model` if given,
+    /// else the per-benchmark model, else "shared".
+    pub fn resolve(&self, model: &str, benchmark: &str) -> Result<(&str, &ModelEntry)> {
+        let candidates: Vec<&str> =
+            if model.is_empty() { vec![benchmark, "shared"] } else { vec![model] };
+        for key in candidates {
+            if let Some((k, e)) = self.models.get_key_value(key) {
+                return Ok((k.as_str(), e));
+            }
+        }
+        anyhow::bail!(
+            "no model for benchmark '{benchmark}' (asked '{model}'); available: {:?}",
+            self.models.keys().collect::<Vec<_>>()
+        )
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path(dir: &Path, rel: &str) -> PathBuf {
+        dir.join(rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(tag: &str) -> ModelEntry {
+        ModelEntry {
+            infer_hlo: format!("{tag}.infer.hlo.txt"),
+            train_hlo: Some(format!("{tag}.train.hlo.txt")),
+            params: format!("{tag}.params.bin"),
+            vocab: format!("{tag}.vocab.json"),
+            batch: 8,
+            train_batch: 16,
+            seq_len: 30,
+            n_features: 3,
+            n_classes: 12,
+            n_params: 10,
+            arch: "revised".into(),
+        }
+    }
+
+    #[test]
+    fn resolve_prefers_benchmark_then_shared() {
+        let mut models = BTreeMap::new();
+        models.insert("shared".to_string(), entry("shared"));
+        models.insert("atax".to_string(), entry("atax"));
+        let m = Manifest { version: 1, models };
+        assert_eq!(m.resolve("", "atax").unwrap().0, "atax");
+        assert_eq!(m.resolve("", "nw").unwrap().0, "shared");
+        assert_eq!(m.resolve("shared", "atax").unwrap().0, "shared");
+        assert!(m.resolve("missing", "atax").is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = crate::util::TestDir::new();
+        let mut models = BTreeMap::new();
+        models.insert("shared".to_string(), entry("shared"));
+        let m = Manifest { version: 2, models };
+        m.save(dir.path()).unwrap();
+        let back = Manifest::load(dir.path()).unwrap();
+        assert_eq!(back.version, 2);
+        let e = &back.models["shared"];
+        assert_eq!(e.train_hlo.as_deref(), Some("shared.train.hlo.txt"));
+        assert_eq!(e.n_classes, 12);
+        assert_eq!(e.arch, "revised");
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let dir = crate::util::TestDir::new();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path —
+//! python never runs here.
+//!
+//! Interchange format is **HLO text** (not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids — see
+//! /opt/xla-example/README.md).
+//!
+//! Artifact layout (written by `make artifacts`):
+//! ```text
+//! artifacts/
+//!   manifest.json            — model registry (this module's entry point)
+//!   <model>.infer.hlo.txt    — logits = f(params…, tokens[B,S,3])
+//!   <model>.train.hlo.txt    — (params…, loss) = g(params…, tokens, labels)
+//!   <model>.params.bin       — tensor store (f32 or int4-packed)
+//!   <model>.vocab.json       — delta vocabulary + feature encoders
+//! ```
+
+pub mod manifest;
+pub mod params;
+pub mod pjrt;
+
+pub use manifest::{Manifest, ModelEntry};
+pub use params::{NamedTensor, TensorStore};
+pub use pjrt::{ModelExecutable, PjrtBackend, PjrtRuntime};

@@ -1,0 +1,213 @@
+//! Tensor-store reader: the `*.params.bin` format written by
+//! `python/compile/aot.py::save_params` (a deliberately tiny
+//! safetensors-like container, shared by test fixtures on both sides).
+//!
+//! ```text
+//! magic   b"UVMT"
+//! version u32 le
+//! count   u32 le
+//! per tensor:
+//!   name_len u16 le, name bytes (utf-8)
+//!   dtype    u8   (0 = f32, 1 = i32, 2 = int4-packed-f32)
+//!   ndim     u8
+//!   dims     u32 le × ndim
+//!   nbytes   u64 le
+//!   data     nbytes
+//! ```
+//!
+//! int4 tensors (dtype 2) store two 4-bit codes per byte over the
+//! paper's [-8, 8] clamp range and are dequantized to f32 at load —
+//! the Table 7 storage story, executed for real.
+
+use crate::predictor::quant;
+use anyhow::{bail, Result};
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"UVMT";
+
+#[derive(Debug, Clone)]
+pub struct NamedTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+    /// dtype byte as stored (0 f32, 2 int4) — kept for footprint
+    /// accounting.
+    pub stored_dtype: u8,
+    pub stored_bytes: u64,
+}
+
+impl NamedTensor {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorStore {
+    pub tensors: Vec<NamedTensor>,
+}
+
+fn read_exact<R: Read>(r: &mut R, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn u16_le<R: Read>(r: &mut R) -> Result<u16> {
+    Ok(u16::from_le_bytes(read_exact(r, 2)?.try_into().unwrap()))
+}
+fn u32_le<R: Read>(r: &mut R) -> Result<u32> {
+    Ok(u32::from_le_bytes(read_exact(r, 4)?.try_into().unwrap()))
+}
+fn u64_le<R: Read>(r: &mut R) -> Result<u64> {
+    Ok(u64::from_le_bytes(read_exact(r, 8)?.try_into().unwrap()))
+}
+
+impl TensorStore {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let magic = read_exact(&mut f, 4)?;
+        if magic != MAGIC {
+            bail!("{}: bad magic {magic:?}", path.display());
+        }
+        let version = u32_le(&mut f)?;
+        if version != 1 {
+            bail!("{}: unsupported version {version}", path.display());
+        }
+        let count = u32_le(&mut f)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = u16_le(&mut f)? as usize;
+            let name = String::from_utf8(read_exact(&mut f, name_len)?)?;
+            let dtype = read_exact(&mut f, 1)?[0];
+            let ndim = read_exact(&mut f, 1)?[0] as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(u32_le(&mut f)? as usize);
+            }
+            let nbytes = u64_le(&mut f)?;
+            let raw = read_exact(&mut f, nbytes as usize)?;
+            let numel: usize = dims.iter().product();
+            let data = match dtype {
+                0 => {
+                    if raw.len() != numel * 4 {
+                        bail!("{name}: f32 size mismatch {} vs {numel}", raw.len());
+                    }
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect()
+                }
+                1 => {
+                    // i32 stored tensors are converted to f32 (only
+                    // used for integer side tables).
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as f32)
+                        .collect()
+                }
+                2 => {
+                    if raw.len() < numel.div_ceil(2) {
+                        bail!("{name}: int4 buffer too small");
+                    }
+                    quant::unpack(&raw, numel)
+                }
+                d => bail!("{name}: unknown dtype {d}"),
+            };
+            tensors.push(NamedTensor { name, dims, data, stored_dtype: dtype, stored_bytes: nbytes });
+        }
+        Ok(Self { tensors })
+    }
+
+    /// Total stored bytes (Table 7 accounting).
+    pub fn stored_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.stored_bytes).sum()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+}
+
+/// Test-only writer (mirrors the python writer bit-for-bit) — also
+/// used by `predictor::quant` round-trip tests and benches.
+pub fn write_store(path: &Path, tensors: &[(String, Vec<usize>, Vec<f32>, u8)]) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, dims, data, dtype) in tensors {
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&[*dtype, dims.len() as u8])?;
+        for d in dims {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        let raw: Vec<u8> = match dtype {
+            0 => data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            2 => quant::pack(data),
+            d => bail!("writer: unsupported dtype {d}"),
+        };
+        f.write_all(&(raw.len() as u64).to_le_bytes())?;
+        f.write_all(&raw)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let dir = crate::util::TestDir::new();
+        let p = dir.file("t.bin");
+        let data = vec![1.0f32, -2.5, 3.25];
+        write_store(&p, &[("w".into(), vec![3], data.clone(), 0)]).unwrap();
+        let s = TensorStore::load(&p).unwrap();
+        assert_eq!(s.tensors.len(), 1);
+        assert_eq!(s.tensors[0].name, "w");
+        assert_eq!(s.tensors[0].dims, vec![3]);
+        assert_eq!(s.tensors[0].data, data);
+    }
+
+    #[test]
+    fn int4_dequantizes_with_bounded_error() {
+        let dir = crate::util::TestDir::new();
+        let p = dir.file("q.bin");
+        let data = vec![-8.0f32, -1.1, 0.0, 2.7, 8.0];
+        write_store(&p, &[("q".into(), vec![5], data.clone(), 2)]).unwrap();
+        let s = TensorStore::load(&p).unwrap();
+        let t = &s.tensors[0];
+        assert_eq!(t.stored_bytes, 3, "5 nibbles → 3 bytes");
+        for (a, b) in data.iter().zip(&t.data) {
+            assert!((a - b).abs() <= quant::max_quant_error() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = crate::util::TestDir::new();
+        let p = dir.file("bad.bin");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(TensorStore::load(&p).is_err());
+    }
+
+    #[test]
+    fn multi_tensor_order_preserved() {
+        let dir = crate::util::TestDir::new();
+        let p = dir.file("m.bin");
+        write_store(
+            &p,
+            &[
+                ("a".into(), vec![2], vec![1.0, 2.0], 0),
+                ("b".into(), vec![1, 2], vec![3.0, 4.0], 0),
+            ],
+        )
+        .unwrap();
+        let s = TensorStore::load(&p).unwrap();
+        assert_eq!(s.tensors[0].name, "a");
+        assert_eq!(s.tensors[1].name, "b");
+        assert_eq!(s.total_params(), 4);
+    }
+}

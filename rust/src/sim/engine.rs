@@ -1,0 +1,442 @@
+//! The discrete-event UVM simulator.
+//!
+//! Three event kinds drive the model:
+//!
+//! * `Dispatch(sm)` — the SM picks the oldest ready warp (GTO), runs
+//!   its compute burst at 1 instruction/cycle, and schedules the
+//!   warp's memory instruction.
+//! * `MemIssue(sm, warp, op)` — the access reaches the GMMU: TLB →
+//!   page walk → residency check → hit / MSHR-merge / far-fault, with
+//!   the far-fault path invoking the active prefetch policy and the
+//!   interconnect model.
+//! * `Wake(sm, warp)` — the access completed; the warp re-enters the
+//!   ready pool.
+//!
+//! All latency constants come from [`crate::config::SimConfig`]
+//! (paper Table 9). Event ties are broken by insertion order, so runs
+//! are bit-deterministic.
+
+use crate::config::{ExperimentConfig, SimConfig};
+use crate::prefetch::{FaultInfo, Prefetcher, PrefetchRequest};
+use crate::sim::device_memory::{DeviceMemory, PageState};
+use crate::sim::gmmu::Gmmu;
+use crate::sim::interconnect::Interconnect;
+use crate::sim::metrics::Metrics;
+use crate::sim::sm::{SmState, WarpOp};
+use crate::sim::trace::TraceWriter;
+use crate::types::{page_of, AccessOrigin, Cycle, TraceRecord, PAGE_SIZE};
+use crate::workloads::WorkloadInstance;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+#[derive(Debug)]
+enum EventKind {
+    Dispatch { sm: u16 },
+    MemIssue { sm: u16, warp: u16, op: WarpOp },
+    Wake { sm: u16, warp: u16 },
+}
+
+/// Heap entry: (time, seq) ordering, min-first.
+struct Event {
+    at: Cycle,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+pub struct Simulator {
+    cfg: SimConfig,
+    sms: Vec<SmState>,
+    device: DeviceMemory,
+    gmmu: Gmmu,
+    link: Interconnect,
+    prefetcher: Box<dyn Prefetcher>,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    now: Cycle,
+    pub metrics: Metrics,
+    trace: Option<TraceWriter>,
+    max_instructions: u64,
+    stopping: bool,
+    far_fault_cycles: Cycle,
+}
+
+impl Simulator {
+    pub fn new(
+        exp: &ExperimentConfig,
+        workload: WorkloadInstance,
+        prefetcher: Box<dyn Prefetcher>,
+        trace: Option<TraceWriter>,
+    ) -> Self {
+        let cfg = exp.sim.clone();
+        let mut sms: Vec<SmState> =
+            (0..cfg.n_sms).map(|_| SmState::new(cfg.warps_per_sm as usize)).collect();
+        for task in workload.tasks {
+            sms[task.sm as usize].load_warp(task.warp, crate::sim::sm::WarpProgram::new(task.ops));
+        }
+        let device = DeviceMemory::new(cfg.device_mem_pages());
+        let gmmu = Gmmu::new(cfg.n_sms as usize, cfg.tlb_entries);
+        let link = Interconnect::new(
+            cfg.pcie_bytes_per_cycle(),
+            cfg.pcie_latency_cycles,
+            cfg.pcie_bucket_cycles,
+        );
+        let far_fault_cycles = cfg.far_fault_cycles();
+        let mut sim = Self {
+            cfg,
+            sms,
+            device,
+            gmmu,
+            link,
+            prefetcher,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+            metrics: Metrics::default(),
+            trace,
+            max_instructions: exp.max_instructions,
+            stopping: false,
+            far_fault_cycles,
+        };
+        sim.metrics.pcie_bucket_cycles = sim.cfg.pcie_bucket_cycles;
+        for sm in 0..sim.sms.len() as u16 {
+            sim.schedule(0, EventKind::Dispatch { sm });
+            sim.sms[sm as usize].dispatch_at = Some(0);
+        }
+        sim
+    }
+
+    fn schedule(&mut self, at: Cycle, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Event { at, seq: self.seq, kind }));
+    }
+
+    /// Run to completion (or to `max_instructions`). Returns final metrics.
+    pub fn run(mut self) -> Metrics {
+        while let Some(Reverse(ev)) = self.heap.pop() {
+            self.now = self.now.max(ev.at);
+            match ev.kind {
+                EventKind::Dispatch { sm } => self.on_dispatch(ev.at, sm),
+                EventKind::MemIssue { sm, warp, op } => self.on_mem_issue(ev.at, sm, warp, &op),
+                EventKind::Wake { sm, warp } => self.on_wake(ev.at, sm, warp),
+            }
+            if self.stopping {
+                break;
+            }
+            // Matured asynchronous prefetches (batched predictions).
+            let drained = self.prefetcher.drain(self.now);
+            if !drained.is_empty() {
+                self.apply_prefetches(&drained, self.now);
+            }
+        }
+        self.prefetcher.finish(self.now);
+        let drained = self.prefetcher.drain(self.now);
+        if !drained.is_empty() {
+            self.apply_prefetches(&drained, self.now);
+        }
+        let tel = self.prefetcher.telemetry();
+        self.metrics.predictions = tel.predictions;
+        self.metrics.prediction_batches = tel.prediction_batches;
+        self.metrics.bypass_predictions = tel.bypass_predictions;
+        self.metrics.oov_predictions = tel.oov_predictions;
+        self.metrics.finetune_rounds = tel.finetune_rounds;
+        self.metrics.cycles = self.now;
+        self.metrics.bytes_demand = self.link.bytes_demand;
+        self.metrics.bytes_prefetch = self.link.bytes_prefetch;
+        self.metrics.pcie_series = self.link.bandwidth_series();
+        self.metrics.tlb_hits = self.gmmu.hits();
+        self.metrics.tlb_misses = self.gmmu.misses();
+        self.metrics.evictions = self.device.evictions;
+        self.metrics.evicted_unused_prefetches = self.device.evicted_unused_prefetches;
+        if let Some(t) = self.trace.take() {
+            let _ = t.finish();
+        }
+        self.metrics
+    }
+
+    fn on_dispatch(&mut self, t: Cycle, sm: u16) {
+        let smi = sm as usize;
+        self.sms[smi].dispatch_at = None;
+        loop {
+            let Some(warp) = self.sms[smi].pop_ready() else { return };
+            match self.sms[smi].programs[warp as usize].next_op() {
+                None => {
+                    self.sms[smi].retire(warp);
+                    continue;
+                }
+                Some(op) => {
+                    let issued = op.compute as u64 + 1;
+                    self.metrics.instructions += issued;
+                    if self.max_instructions != 0 && self.metrics.instructions >= self.max_instructions {
+                        self.stopping = true;
+                    }
+                    // compute burst at 1 IPC, memory instruction issues
+                    // at the end of the burst.
+                    let issue_at = t + op.compute as Cycle;
+                    self.sms[smi].mark_waiting(warp);
+                    self.schedule(issue_at, EventKind::MemIssue { sm, warp, op });
+                    // SM is free again the cycle after the mem issue.
+                    let next = issue_at + 1;
+                    self.sms[smi].dispatch_at = Some(next);
+                    self.schedule(next, EventKind::Dispatch { sm });
+                    return;
+                }
+            }
+        }
+    }
+
+    fn on_wake(&mut self, t: Cycle, sm: u16, warp: u16) {
+        let smi = sm as usize;
+        self.sms[smi].wake(warp);
+        if self.sms[smi].dispatch_at.is_none() {
+            self.sms[smi].dispatch_at = Some(t);
+            self.schedule(t, EventKind::Dispatch { sm });
+        }
+    }
+
+    fn on_mem_issue(&mut self, t: Cycle, sm: u16, warp: u16, op: &WarpOp) {
+        let page = page_of(op.access.vaddr);
+        let origin = AccessOrigin {
+            sm,
+            warp,
+            cta: op.cta,
+            tpc: sm / 2,
+            kernel_id: op.kernel_id,
+        };
+
+        // Address translation. A TLB hit means the translation is
+        // cached — the page is guaranteed resident (entries are only
+        // installed for resident pages and shot down on eviction), the
+        // access never reaches the GMMU, and it is invisible to the
+        // trace, the metrics, and the prefetcher. This TLB filtering
+        // is what shapes the paper's GMMU traces (§5.1): repeated
+        // same-page accesses and TLB-hot vectors vanish, leaving the
+        // page-transition stream the predictors learn.
+        let walk = self.gmmu.translate(sm as usize, page, t, self.cfg.page_walk_cycles);
+        if walk == 0 {
+            // Fast path. The LRU is deliberately NOT refreshed here:
+            // TLB-covered pages are by definition hot, the BTreeSet
+            // update is the per-access hot spot (§Perf), and if the
+            // LRU does evict a TLB-resident page under oversubscription
+            // the shootdown simply forces the next access onto the
+            // walk path — correct, marginally pessimistic.
+            self.prefetcher.on_retired(self.metrics.instructions);
+            self.schedule(t + self.cfg.dram_cycles, EventKind::Wake { sm, warp });
+            return;
+        }
+        self.metrics.mem_accesses += 1;
+        let t_eff = t + walk;
+
+        let state = self.device.state(page, t_eff);
+        let (done, miss) = match state {
+            Some(PageState::Resident) => {
+                self.metrics.page_hits += 1;
+                if self.device.touch(page, t_eff) {
+                    self.metrics.prefetch_used += 1;
+                }
+                self.gmmu.fill(sm as usize, page, t_eff);
+                self.prefetcher.on_access(origin, op.access.pc, page, true, t);
+                (t_eff + self.cfg.dram_cycles, 0u8)
+            }
+            Some(PageState::Migrating { arrival }) => {
+                // MSHR merge: wait on the in-flight transfer.
+                self.metrics.coalesced += 1;
+                if self.device.touch(page, arrival) {
+                    self.metrics.prefetch_used += 1;
+                }
+                self.prefetcher.on_access(origin, op.access.pc, page, false, t);
+                (arrival.max(t_eff) + self.cfg.dram_cycles, 1u8)
+            }
+            None => {
+                // Far-fault: host-side service + page transfer.
+                self.metrics.far_faults += 1;
+                let service_at = t_eff + self.far_fault_cycles;
+                let xfer = self.link.transfer(service_at, PAGE_SIZE, false);
+                for evicted in self.device.admit(page, xfer.arrival, false, t_eff) {
+                    self.gmmu.shootdown(evicted);
+                    self.prefetcher.on_evict(evicted);
+                }
+                self.device.touch(page, t_eff);
+                let fault = FaultInfo {
+                    now: t,
+                    service_at,
+                    pc: op.access.pc,
+                    page,
+                    origin,
+                    array_id: op.access.array_id,
+                };
+                let decision = self.prefetcher.on_fault(&fault);
+                self.apply_prefetches(&decision.requests, t_eff);
+                self.prefetcher.on_access(origin, op.access.pc, page, false, t);
+                (xfer.arrival + self.cfg.dram_cycles, 1u8)
+            }
+        };
+
+        if let Some(tw) = self.trace.as_mut() {
+            let _ = tw.write(&TraceRecord {
+                cycle: t,
+                pc: op.access.pc,
+                page,
+                sm,
+                warp,
+                cta: op.cta,
+                tpc: origin.tpc,
+                kernel_id: op.kernel_id,
+                array_id: op.access.array_id,
+                miss,
+            });
+        }
+
+        self.prefetcher.on_retired(self.metrics.instructions);
+        self.schedule(done, EventKind::Wake { sm, warp });
+    }
+
+    /// Schedule migrations for prefetch requests; pages already known
+    /// (resident or in flight) are deduplicated away.
+    fn apply_prefetches(&mut self, requests: &[PrefetchRequest], now: Cycle) {
+        for r in requests {
+            if self.device.state(r.page, now).is_some() {
+                continue;
+            }
+            let start = r.earliest_start.max(now);
+            let xfer = self.link.transfer(start, PAGE_SIZE, true);
+            for evicted in self.device.admit(r.page, xfer.arrival, true, now) {
+                self.gmmu.shootdown(evicted);
+                self.prefetcher.on_evict(evicted);
+            }
+            self.metrics.prefetch_transfers += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prefetch::none::NonePrefetcher;
+    use crate::types::MemAccess;
+    use crate::workloads::{WarpTask, WorkloadInstance};
+
+    fn tiny_config() -> ExperimentConfig {
+        let mut exp = ExperimentConfig::default();
+        exp.sim.n_sms = 2;
+        exp.sim.warps_per_sm = 4;
+        exp.max_instructions = 0;
+        exp
+    }
+
+    fn seq_task(sm: u16, warp: u16, pages: &[u64]) -> WarpTask {
+        let ops = pages
+            .iter()
+            .map(|&p| WarpOp {
+                compute: 3,
+                access: MemAccess { pc: 0x10, vaddr: p * 4096, array_id: 0, is_store: false },
+                cta: 0,
+                kernel_id: 0,
+            })
+            .collect();
+        WarpTask { sm, warp, ops }
+    }
+
+    #[test]
+    fn demand_paging_counts_faults_and_hits() {
+        let exp = tiny_config();
+        let wl = WorkloadInstance {
+            name: "test".into(),
+            tasks: vec![seq_task(0, 0, &[1, 1, 1, 2])],
+            total_ops: 4,
+        };
+        let m = Simulator::new(&exp, wl, Box::new(NonePrefetcher::default()), None).run();
+        // GMMU-visible accesses only: page 1 walks twice (the first
+        // touch faults, the replayed walk after arrival installs the
+        // TLB entry and hits) — touches 3 is then a pure TLB hit and
+        // never reaches the GMMU. Page 2 faults once.
+        assert_eq!(m.mem_accesses, 3);
+        assert_eq!(m.far_faults, 2, "pages 1 and 2 each fault once");
+        assert_eq!(m.page_hits, 1, "one GMMU-visible re-walk of page 1");
+        assert_eq!(m.instructions, 16);
+        assert!(m.cycles > exp.sim.far_fault_cycles(), "fault latency dominates");
+    }
+
+    #[test]
+    fn mshr_merges_concurrent_faults_to_same_page() {
+        let exp = tiny_config();
+        // Two warps on the same SM touch the same cold page.
+        let wl = WorkloadInstance {
+            name: "test".into(),
+            tasks: vec![seq_task(0, 0, &[5]), seq_task(0, 1, &[5])],
+            total_ops: 2,
+        };
+        let m = Simulator::new(&exp, wl, Box::new(NonePrefetcher::default()), None).run();
+        assert_eq!(m.far_faults, 1, "second access merges into the MSHR");
+        assert_eq!(m.coalesced, 1);
+        assert_eq!(m.pcie_bytes(), PAGE_SIZE, "page transferred once");
+    }
+
+    #[test]
+    fn latency_hiding_with_multiple_warps() {
+        // One warp's fault should not stall the other warp's compute.
+        let exp = tiny_config();
+        let wl_serial = WorkloadInstance {
+            name: "a".into(),
+            tasks: vec![seq_task(0, 0, &[1, 2, 3, 4])],
+            total_ops: 4,
+        };
+        let m1 = Simulator::new(&exp, wl_serial, Box::new(NonePrefetcher::default()), None).run();
+        let wl_parallel = WorkloadInstance {
+            name: "b".into(),
+            tasks: vec![seq_task(0, 0, &[1, 2]), seq_task(0, 1, &[3, 4])],
+            total_ops: 4,
+        };
+        let m2 = Simulator::new(&exp, wl_parallel, Box::new(NonePrefetcher::default()), None).run();
+        assert!(
+            m2.cycles < m1.cycles,
+            "two warps overlap faults: {} !< {}",
+            m2.cycles,
+            m1.cycles
+        );
+    }
+
+    #[test]
+    fn max_instructions_stops_early() {
+        let mut exp = tiny_config();
+        exp.max_instructions = 8;
+        let wl = WorkloadInstance {
+            name: "test".into(),
+            tasks: vec![seq_task(0, 0, &[1, 2, 3, 4, 5, 6, 7, 8])],
+            total_ops: 8,
+        };
+        let m = Simulator::new(&exp, wl, Box::new(NonePrefetcher::default()), None).run();
+        assert!(m.instructions >= 8 && m.instructions <= 12, "stopped near the cap: {}", m.instructions);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let exp = tiny_config();
+        let mk = || WorkloadInstance {
+            name: "t".into(),
+            tasks: vec![seq_task(0, 0, &[1, 9, 2, 8]), seq_task(1, 0, &[3, 7, 4, 6])],
+            total_ops: 8,
+        };
+        let m1 = Simulator::new(&exp, mk(), Box::new(NonePrefetcher::default()), None).run();
+        let m2 = Simulator::new(&exp, mk(), Box::new(NonePrefetcher::default()), None).run();
+        assert_eq!(m1.cycles, m2.cycles);
+        assert_eq!(m1.instructions, m2.instructions);
+        assert_eq!(m1.far_faults, m2.far_faults);
+    }
+}

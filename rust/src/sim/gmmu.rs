@@ -1,0 +1,145 @@
+//! GPU memory-management unit front end: per-SM last-level TLBs.
+//!
+//! A TLB hit skips the 100-cycle page-table walk (Table 9). The TLB
+//! caches translations for *resident* pages only; a far-fault
+//! invalidates nothing (the entry never existed) and an eviction
+//! invalidates the page's entry in every TLB, as the driver shoots
+//! down stale translations on migration.
+
+use crate::types::{Cycle, PageNum};
+
+/// A small fully-associative LRU TLB (64 entries by default — linear
+/// scan is faster than hashing at this size).
+#[derive(Debug, Clone)]
+pub struct Tlb {
+    entries: Vec<(PageNum, Cycle)>,
+    capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Tlb {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self { entries: Vec::with_capacity(capacity), capacity, hits: 0, misses: 0 }
+    }
+
+    /// Look up a translation; counts hit/miss and refreshes LRU stamp.
+    pub fn lookup(&mut self, page: PageNum, now: Cycle) -> bool {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == page) {
+            e.1 = now;
+            self.hits += 1;
+            true
+        } else {
+            self.misses += 1;
+            false
+        }
+    }
+
+    /// Install a translation (after a successful walk of a resident
+    /// page), evicting the LRU entry if full.
+    pub fn insert(&mut self, page: PageNum, now: Cycle) {
+        if self.entries.iter().any(|e| e.0 == page) {
+            return;
+        }
+        if self.entries.len() >= self.capacity {
+            let (idx, _) =
+                self.entries.iter().enumerate().min_by_key(|(_, e)| e.1).expect("non-empty");
+            self.entries.swap_remove(idx);
+        }
+        self.entries.push((page, now));
+    }
+
+    /// Shoot down a translation (page migrated away).
+    pub fn invalidate(&mut self, page: PageNum) {
+        self.entries.retain(|e| e.0 != page);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The GMMU: one TLB per SM plus far-fault MSHR statistics. The MSHR
+/// merge itself is represented by `DeviceMemory`'s `Migrating` state
+/// (a second fault to an in-flight page waits on the same transfer).
+#[derive(Debug)]
+pub struct Gmmu {
+    tlbs: Vec<Tlb>,
+}
+
+impl Gmmu {
+    pub fn new(n_sms: usize, tlb_entries: usize) -> Self {
+        Self { tlbs: (0..n_sms).map(|_| Tlb::new(tlb_entries)).collect() }
+    }
+
+    /// Translate on SM `sm`; returns the extra latency (0 on TLB hit,
+    /// `walk_cycles` on miss).
+    pub fn translate(&mut self, sm: usize, page: PageNum, now: Cycle, walk_cycles: Cycle) -> Cycle {
+        if self.tlbs[sm].lookup(page, now) {
+            0
+        } else {
+            walk_cycles
+        }
+    }
+
+    /// Install after a successful walk (resident page).
+    pub fn fill(&mut self, sm: usize, page: PageNum, now: Cycle) {
+        self.tlbs[sm].insert(page, now);
+    }
+
+    /// Global shootdown on eviction.
+    pub fn shootdown(&mut self, page: PageNum) {
+        for t in &mut self.tlbs {
+            t.invalidate(page);
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.tlbs.iter().map(|t| t.hits).sum()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.tlbs.iter().map(|t| t.misses).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_eviction() {
+        let mut t = Tlb::new(2);
+        t.insert(1, 0);
+        t.insert(2, 1);
+        assert!(t.lookup(1, 2)); // refresh 1 → 2 is LRU
+        t.insert(3, 3);
+        assert!(!t.lookup(2, 4), "LRU entry evicted");
+        assert!(t.lookup(1, 5));
+        assert!(t.lookup(3, 6));
+    }
+
+    #[test]
+    fn duplicate_insert_is_noop() {
+        let mut t = Tlb::new(2);
+        t.insert(1, 0);
+        t.insert(1, 5);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn gmmu_translate_and_shootdown() {
+        let mut g = Gmmu::new(2, 4);
+        assert_eq!(g.translate(0, 9, 0, 100), 100, "cold miss pays walk");
+        g.fill(0, 9, 0);
+        assert_eq!(g.translate(0, 9, 1, 100), 0, "hit after fill");
+        assert_eq!(g.translate(1, 9, 1, 100), 100, "TLBs are per-SM");
+        g.shootdown(9);
+        assert_eq!(g.translate(0, 9, 2, 100), 100, "shootdown removes entry");
+    }
+}

@@ -1,0 +1,161 @@
+//! CPU-GPU interconnect model: a single serialized full-duplex-agnostic
+//! link with fixed propagation latency and finite bandwidth
+//! (Table 9: PCIe 3.0 x16 ≈ 15.75 GB/s, 100-cycle latency).
+//!
+//! Transfers are FIFO: a transfer requested at `t` starts at
+//! `max(t, busy_until)` and occupies the link for `bytes / bandwidth`
+//! cycles. This is exactly the effect the paper dissects in §7.5
+//! (Fig. 11): when the tree prefetcher floods the link, subsequent
+//! far-faults queue behind the pending pages.
+//!
+//! The model also keeps a time-bucketed byte histogram so the Figure 11
+//! bandwidth timeline can be regenerated.
+
+use crate::types::Cycle;
+
+#[derive(Debug, Clone)]
+pub struct Interconnect {
+    bytes_per_cycle: f64,
+    latency: Cycle,
+    bucket_cycles: Cycle,
+    /// Link occupied until this cycle.
+    busy_until: Cycle,
+    /// Total bytes moved host→device (demand + prefetch).
+    pub bytes_demand: u64,
+    pub bytes_prefetch: u64,
+    /// Per-bucket transferred bytes (Fig. 11 series).
+    buckets: Vec<u64>,
+}
+
+/// Result of scheduling one transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    /// When the link started serving this transfer.
+    pub start: Cycle,
+    /// When the last byte left the link.
+    pub link_done: Cycle,
+    /// When the page is usable on the device (`link_done + latency`).
+    pub arrival: Cycle,
+}
+
+impl Interconnect {
+    pub fn new(bytes_per_cycle: f64, latency: Cycle, bucket_cycles: Cycle) -> Self {
+        assert!(bytes_per_cycle > 0.0);
+        assert!(bucket_cycles > 0);
+        Self {
+            bytes_per_cycle,
+            latency,
+            bucket_cycles,
+            busy_until: 0,
+            bytes_demand: 0,
+            bytes_prefetch: 0,
+            buckets: Vec::new(),
+        }
+    }
+
+    /// Schedule a host→device transfer of `bytes` requested at `t`.
+    pub fn transfer(&mut self, t: Cycle, bytes: u64, is_prefetch: bool) -> Transfer {
+        let start = t.max(self.busy_until);
+        let duration = (bytes as f64 / self.bytes_per_cycle).ceil() as Cycle;
+        let link_done = start + duration.max(1);
+        self.busy_until = link_done;
+        if is_prefetch {
+            self.bytes_prefetch += bytes;
+        } else {
+            self.bytes_demand += bytes;
+        }
+        self.record_buckets(start, link_done, bytes);
+        Transfer { start, link_done, arrival: link_done + self.latency }
+    }
+
+    /// Spread `bytes` uniformly over the buckets spanned by
+    /// `[start, done)`.
+    fn record_buckets(&mut self, start: Cycle, done: Cycle, bytes: u64) {
+        let first = (start / self.bucket_cycles) as usize;
+        let last = ((done.saturating_sub(1)) / self.bucket_cycles) as usize;
+        if self.buckets.len() <= last {
+            self.buckets.resize(last + 1, 0);
+        }
+        let n = (last - first + 1) as u64;
+        for b in first..=last {
+            self.buckets[b] += bytes / n;
+        }
+        // Remainder goes to the first bucket (keeps totals exact).
+        self.buckets[first] += bytes % n;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_demand + self.bytes_prefetch
+    }
+
+    pub fn busy_until(&self) -> Cycle {
+        self.busy_until
+    }
+
+    /// (bucket start cycle, bytes) series for the Fig. 11 timeline.
+    pub fn bandwidth_series(&self) -> Vec<(Cycle, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (i as Cycle * self.bucket_cycles, b))
+            .collect()
+    }
+
+    pub fn bucket_cycles(&self) -> Cycle {
+        self.bucket_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> Interconnect {
+        // 10 bytes/cycle, 100-cycle latency, 1000-cycle buckets.
+        Interconnect::new(10.0, 100, 1000)
+    }
+
+    #[test]
+    fn single_transfer_timing() {
+        let mut l = link();
+        let t = l.transfer(50, 4096, false);
+        assert_eq!(t.start, 50);
+        assert_eq!(t.link_done, 50 + 410); // ceil(4096/10)
+        assert_eq!(t.arrival, t.link_done + 100);
+        assert_eq!(l.bytes_demand, 4096);
+    }
+
+    #[test]
+    fn fifo_queueing_serializes() {
+        let mut l = link();
+        let a = l.transfer(0, 4096, false);
+        let b = l.transfer(0, 4096, true);
+        assert_eq!(b.start, a.link_done, "second transfer queues behind first");
+        assert!(b.arrival > a.arrival);
+        assert_eq!(l.bytes_prefetch, 4096);
+    }
+
+    #[test]
+    fn idle_gap_is_not_charged() {
+        let mut l = link();
+        let a = l.transfer(0, 100, false);
+        let b = l.transfer(a.link_done + 10_000, 100, false);
+        assert_eq!(b.start, a.link_done + 10_000);
+    }
+
+    #[test]
+    fn bucket_totals_match_bytes() {
+        let mut l = link();
+        l.transfer(0, 4096, false);
+        l.transfer(0, 12_345, true);
+        let total: u64 = l.bandwidth_series().iter().map(|&(_, b)| b).sum();
+        assert_eq!(total, l.total_bytes());
+    }
+
+    #[test]
+    fn zero_length_transfer_still_occupies_one_cycle() {
+        let mut l = link();
+        let t = l.transfer(5, 0, false);
+        assert_eq!(t.link_done, 6);
+    }
+}

@@ -1,0 +1,185 @@
+//! Run metrics: IPC, page hit rate, interconnect traffic, prefetcher
+//! accuracy / coverage, and the paper's composite "unity" metric
+//! (§7.6, Eq. 1):
+//!
+//! ```text
+//! Unity := cbrt(Accuracy * Coverage * Page_hit_rate)
+//! ```
+//!
+//! Operational definitions (chosen to match the paper's Table 11
+//! semantics — see DESIGN.md §2):
+//!
+//! * **Page hit rate** — fraction of device-memory accesses that find
+//!   their page *resident* (arrived) on device. In-flight pages count
+//!   as misses: the demanded page was not "available at the GPU side".
+//! * **Accuracy** — fraction of prefetch *transfers* whose page is
+//!   demanded at least once before eviction ("prefetched memory chunks
+//!   that end up being used", Bhatia et al.).
+//! * **Coverage** — fraction of demanded pages whose arrival was
+//!   anticipated. Every demanded page reaches the device either via a
+//!   prefetch (covered) or via its own far-fault (not covered), so
+//!   coverage = used_prefetches / (used_prefetches + far_faults).
+//!   The tree prefetcher migrates whole blocks/nodes, so nearly every
+//!   demanded page rides a block transaction → coverage ≈ 1.0 (every
+//!   "U" row of Table 11); a learned policy's coverage tracks how many
+//!   future pages its predictions actually anticipated.
+
+use crate::types::Cycle;
+
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    // --- SM side ---
+    pub instructions: u64,
+    pub cycles: Cycle,
+    pub mem_accesses: u64,
+    pub page_hits: u64,
+    /// Access waited on an in-flight transfer (MSHR merge).
+    pub coalesced: u64,
+    pub far_faults: u64,
+    pub tlb_hits: u64,
+    pub tlb_misses: u64,
+    // --- prefetcher quality ---
+    pub prefetch_transfers: u64,
+    pub prefetch_used: u64,
+    // --- interconnect ---
+    pub bytes_demand: u64,
+    pub bytes_prefetch: u64,
+    /// (bucket start cycle, bytes) — Fig. 11 series.
+    pub pcie_series: Vec<(Cycle, u64)>,
+    pub pcie_bucket_cycles: Cycle,
+    // --- memory pressure ---
+    pub evictions: u64,
+    pub evicted_unused_prefetches: u64,
+    // --- predictor telemetry (DL policy only) ---
+    pub predictions: u64,
+    pub prediction_batches: u64,
+    pub bypass_predictions: u64,
+    pub oov_predictions: u64,
+    pub finetune_rounds: u64,
+}
+
+impl Metrics {
+    /// Aggregate IPC across all SMs (instructions per core cycle).
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.instructions as f64 / self.cycles as f64
+        }
+    }
+
+    /// Device-memory page hit rate (Table 10).
+    pub fn page_hit_rate(&self) -> f64 {
+        if self.mem_accesses == 0 {
+            0.0
+        } else {
+            self.page_hits as f64 / self.mem_accesses as f64
+        }
+    }
+
+    /// Prefetcher accuracy (Table 11 "Acc.").
+    pub fn accuracy(&self) -> f64 {
+        if self.prefetch_transfers == 0 {
+            // A policy that never prefetches is vacuously precise; the
+            // paper's ideal column uses 1.0 for this degenerate case.
+            1.0
+        } else {
+            self.prefetch_used as f64 / self.prefetch_transfers as f64
+        }
+    }
+
+    /// Prefetcher coverage (Table 11 "Cov."): anticipated page
+    /// arrivals over all page arrivals.
+    pub fn coverage(&self) -> f64 {
+        let demanded = self.prefetch_used + self.far_faults;
+        if demanded == 0 {
+            1.0
+        } else {
+            self.prefetch_used as f64 / demanded as f64
+        }
+    }
+
+    /// Composite metric (Eq. 1).
+    pub fn unity(&self) -> f64 {
+        (self.accuracy() * self.coverage() * self.page_hit_rate()).cbrt()
+    }
+
+    /// Total host→device traffic in bytes (Fig. 12 numerator).
+    pub fn pcie_bytes(&self) -> u64 {
+        self.bytes_demand + self.bytes_prefetch
+    }
+
+    /// Average PCIe bandwidth in GB/s given the core clock.
+    pub fn pcie_avg_gbps(&self, clock_mhz: u64) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let seconds = self.cycles as f64 / (clock_mhz as f64 * 1e6);
+        self.pcie_bytes() as f64 / 1e9 / seconds
+    }
+
+    /// One-line human summary (used by `repro simulate`).
+    pub fn summary(&self) -> String {
+        format!(
+            "inst={} cycles={} ipc={:.4} accesses={} hit={:.4} faults={} coalesced={} \
+             pf_xfers={} acc={:.4} cov={:.4} unity={:.4} bytes={} evict={}",
+            self.instructions,
+            self.cycles,
+            self.ipc(),
+            self.mem_accesses,
+            self.page_hit_rate(),
+            self.far_faults,
+            self.coalesced,
+            self.prefetch_transfers,
+            self.accuracy(),
+            self.coverage(),
+            self.unity(),
+            self.pcie_bytes(),
+            self.evictions,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unity_is_cbrt_of_product() {
+        let m = Metrics {
+            mem_accesses: 100,
+            page_hits: 50,
+            prefetch_transfers: 10,
+            prefetch_used: 5,
+            far_faults: 5,
+            ..Default::default()
+        };
+        // acc = 5/10, cov = 5/(5+5), hit = 50/100.
+        let expected = (0.5f64 * 0.5 * 0.5).cbrt();
+        assert!((m.unity() - expected).abs() < 1e-12);
+        assert!((m.unity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_prefetcher_unity_is_one() {
+        let m = Metrics {
+            mem_accesses: 10,
+            page_hits: 10,
+            prefetch_transfers: 4,
+            prefetch_used: 4,
+            far_faults: 0,
+            ..Default::default()
+        };
+        assert!((m.unity() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_counters_do_not_nan() {
+        let m = Metrics::default();
+        assert_eq!(m.ipc(), 0.0);
+        assert_eq!(m.page_hit_rate(), 0.0);
+        assert_eq!(m.accuracy(), 1.0);
+        assert_eq!(m.coverage(), 1.0);
+        assert!(!m.unity().is_nan());
+    }
+}

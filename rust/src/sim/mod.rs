@@ -1,0 +1,15 @@
+//! The GPU-UVM timing simulator (GPGPU-Sim/UVMSmart substitute — see
+//! DESIGN.md §2 for why this substitution preserves the paper's
+//! evaluation semantics).
+
+pub mod device_memory;
+pub mod engine;
+pub mod gmmu;
+pub mod interconnect;
+pub mod metrics;
+pub mod sm;
+pub mod trace;
+
+pub use engine::Simulator;
+pub use metrics::Metrics;
+pub use trace::{TraceWriter, TRACE_HEADER};

@@ -1,0 +1,170 @@
+//! Streaming-multiprocessor model.
+//!
+//! Each SM holds up to 64 warp contexts (Table 9) and issues **one
+//! instruction per cycle** from the ready pool under a GTO
+//! (greedy-then-oldest) policy: the current warp runs until its next
+//! memory operation, then the SM switches to the oldest ready warp
+//! while the access is serviced. Memory latency is therefore hidden
+//! exactly when other warps have compute to issue — the mechanism the
+//! paper's IPC numbers hinge on (a 45 µs far-fault stalls a warp for
+//! ~66 k cycles; with 64 warps the SM starves only when *all* of them
+//! are waiting on pages).
+
+use crate::types::{CtaId, Cycle, MemAccess};
+use std::collections::VecDeque;
+
+/// One warp-level step: `compute` arithmetic instructions followed by
+/// a single coalesced memory instruction.
+#[derive(Debug, Clone, Copy)]
+pub struct WarpOp {
+    pub compute: u32,
+    pub access: MemAccess,
+    pub cta: CtaId,
+    pub kernel_id: u16,
+}
+
+/// A warp's instruction stream (materialized by the workload
+/// generator; see `workloads/`).
+#[derive(Debug)]
+pub struct WarpProgram {
+    ops: std::vec::IntoIter<WarpOp>,
+    /// Total instructions issued by this warp so far.
+    pub issued: u64,
+}
+
+impl WarpProgram {
+    pub fn new(ops: Vec<WarpOp>) -> Self {
+        Self { ops: ops.into_iter(), issued: 0 }
+    }
+
+    pub fn empty() -> Self {
+        Self::new(Vec::new())
+    }
+
+    #[inline]
+    pub fn next_op(&mut self) -> Option<WarpOp> {
+        self.ops.next()
+    }
+
+    pub fn remaining_hint(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+/// Scheduling state of one warp slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarpState {
+    Ready,
+    WaitingMem,
+    Done,
+}
+
+/// Per-SM scheduler state.
+#[derive(Debug)]
+pub struct SmState {
+    pub programs: Vec<WarpProgram>,
+    pub states: Vec<WarpState>,
+    /// Ready warps, oldest first (GTO tie-break).
+    pub ready: VecDeque<u16>,
+    /// The SM has a dispatch event in flight at this cycle (dedup).
+    pub dispatch_at: Option<Cycle>,
+    pub live_warps: usize,
+}
+
+impl SmState {
+    pub fn new(n_warps: usize) -> Self {
+        Self {
+            programs: (0..n_warps).map(|_| WarpProgram::empty()).collect(),
+            states: vec![WarpState::Done; n_warps],
+            ready: VecDeque::new(),
+            dispatch_at: None,
+            live_warps: 0,
+        }
+    }
+
+    /// Install a program on a warp slot and mark it ready.
+    pub fn load_warp(&mut self, warp: u16, program: WarpProgram) {
+        let w = warp as usize;
+        if program.remaining_hint() == 0 {
+            self.states[w] = WarpState::Done;
+            return;
+        }
+        self.programs[w] = program;
+        self.states[w] = WarpState::Ready;
+        self.ready.push_back(warp);
+        self.live_warps += 1;
+    }
+
+    /// Oldest ready warp, if any.
+    pub fn pop_ready(&mut self) -> Option<u16> {
+        self.ready.pop_front()
+    }
+
+    pub fn mark_waiting(&mut self, warp: u16) {
+        self.states[warp as usize] = WarpState::WaitingMem;
+    }
+
+    /// Memory completed: warp becomes ready again.
+    pub fn wake(&mut self, warp: u16) {
+        debug_assert_eq!(self.states[warp as usize], WarpState::WaitingMem);
+        self.states[warp as usize] = WarpState::Ready;
+        self.ready.push_back(warp);
+    }
+
+    /// Warp ran out of instructions.
+    pub fn retire(&mut self, warp: u16) {
+        self.states[warp as usize] = WarpState::Done;
+        self.live_warps -= 1;
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.live_warps == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::MemAccess;
+
+    fn op(vaddr: u64) -> WarpOp {
+        WarpOp {
+            compute: 2,
+            access: MemAccess { pc: 0x100, vaddr, array_id: 0, is_store: false },
+            cta: 0,
+            kernel_id: 0,
+        }
+    }
+
+    #[test]
+    fn load_and_retire_lifecycle() {
+        let mut sm = SmState::new(4);
+        sm.load_warp(1, WarpProgram::new(vec![op(0)]));
+        assert_eq!(sm.live_warps, 1);
+        assert_eq!(sm.pop_ready(), Some(1));
+        sm.mark_waiting(1);
+        sm.wake(1);
+        assert_eq!(sm.pop_ready(), Some(1));
+        sm.retire(1);
+        assert!(sm.all_done());
+    }
+
+    #[test]
+    fn empty_program_is_immediately_done() {
+        let mut sm = SmState::new(2);
+        sm.load_warp(0, WarpProgram::empty());
+        assert!(sm.all_done());
+        assert_eq!(sm.pop_ready(), None);
+    }
+
+    #[test]
+    fn ready_queue_is_fifo_oldest_first() {
+        let mut sm = SmState::new(4);
+        for w in 0..3 {
+            sm.load_warp(w, WarpProgram::new(vec![op(w as u64 * 4096)]));
+        }
+        assert_eq!(sm.pop_ready(), Some(0));
+        assert_eq!(sm.pop_ready(), Some(1));
+        assert_eq!(sm.pop_ready(), Some(2));
+    }
+}

@@ -1,0 +1,137 @@
+//! Fundamental domain types shared by every subsystem.
+//!
+//! All address arithmetic in the simulator is done on 4 KB *page
+//! numbers* (`PageNum`), matching the paper's prefetch granularity
+//! hierarchy: 4 KB page → 64 KB basic block (16 pages) → 2 MB root
+//! chunk (512 pages).
+
+
+/// Simulated GPU core cycles.
+pub type Cycle = u64;
+/// Virtual byte address.
+pub type VAddr = u64;
+/// 4 KB virtual page number (`vaddr >> 12`).
+pub type PageNum = u64;
+/// Signed distance between two page numbers — the unit the predictor
+/// classifies over (Hashemi et al.'s delta-vocabulary observation).
+pub type PageDelta = i64;
+
+/// Bytes per 4 KB page.
+pub const PAGE_SIZE: u64 = 4096;
+/// log2(PAGE_SIZE).
+pub const PAGE_SHIFT: u32 = 12;
+/// Pages per 64 KB basic block — the tree prefetcher's unit.
+pub const PAGES_PER_BB: u64 = 16;
+/// Pages per 2 MB root chunk — the tree prefetcher's top node.
+pub const PAGES_PER_ROOT: u64 = 512;
+
+/// Convert a byte address to its 4 KB page number.
+#[inline]
+pub fn page_of(vaddr: VAddr) -> PageNum {
+    vaddr >> PAGE_SHIFT
+}
+
+/// First page of the 64 KB basic block containing `page`.
+#[inline]
+pub fn bb_base(page: PageNum) -> PageNum {
+    page & !(PAGES_PER_BB - 1)
+}
+
+/// First page of the 2 MB root chunk containing `page`.
+#[inline]
+pub fn root_base(page: PageNum) -> PageNum {
+    page & !(PAGES_PER_ROOT - 1)
+}
+
+/// Identifier of a streaming multiprocessor.
+pub type SmId = u16;
+/// Warp slot within an SM.
+pub type WarpId = u16;
+/// Cooperative thread array (thread block) id.
+pub type CtaId = u32;
+
+/// One coalesced device-memory access as observed by the GMMU — the
+/// token unit of the paper's Figure 3. A "memory instruction" in the
+/// SM model issues exactly one of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemAccess {
+    /// Instruction address of the load/store (feature `PC`).
+    pub pc: u64,
+    /// Virtual byte address touched (already coalesced per warp).
+    pub vaddr: VAddr,
+    /// Id of the input array the address belongs to (feature `In`),
+    /// `u8::MAX` when unknown.
+    pub array_id: u8,
+    /// True for stores (affects nothing in the timing model today but
+    /// is carried in traces for feature parity with the paper).
+    pub is_store: bool,
+}
+
+/// Where a warp-level operation came from; attached to every access at
+/// GMMU arrival so the predictor can cluster on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AccessOrigin {
+    pub sm: SmId,
+    pub warp: WarpId,
+    pub cta: CtaId,
+    /// Texture processing cluster: `sm / 2` on Pascal (GTX 1080Ti).
+    pub tpc: u16,
+    /// Kernel invocation index within the benchmark.
+    pub kernel_id: u16,
+}
+
+/// A fully-qualified trace record: what `repro trace-gen` writes and
+/// what the python data pipeline consumes (all 13 features of Figure 3
+/// are derivable from this record plus its predecessor in the same
+/// cluster).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceRecord {
+    pub cycle: Cycle,
+    pub pc: u64,
+    pub page: PageNum,
+    pub sm: SmId,
+    pub warp: WarpId,
+    pub cta: CtaId,
+    pub tpc: u16,
+    pub kernel_id: u16,
+    pub array_id: u8,
+    /// 1 when this access raised a far-fault (page not resident).
+    pub miss: u8,
+}
+
+/// Outcome classification of a single device-memory access, used for
+/// the paper's page-hit-rate metric (Table 10) and the coverage term
+/// of unity (Table 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessOutcome {
+    /// Page resident on device — a page hit.
+    Hit,
+    /// Page in flight (demand fetch or prefetch already migrating);
+    /// the warp waits for the arrival instead of raising a new fault.
+    Coalesced { prefetched: bool },
+    /// Page absent: full far-fault taken.
+    FarFault,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_arithmetic() {
+        assert_eq!(page_of(0), 0);
+        assert_eq!(page_of(4095), 0);
+        assert_eq!(page_of(4096), 1);
+        assert_eq!(bb_base(17), 16);
+        assert_eq!(bb_base(16), 16);
+        assert_eq!(bb_base(15), 0);
+        assert_eq!(root_base(513), 512);
+        assert_eq!(root_base(511), 0);
+    }
+
+    #[test]
+    fn block_sizes_match_paper() {
+        assert_eq!(PAGES_PER_BB * PAGE_SIZE, 64 * 1024); // 64 KB basic block
+        assert_eq!(PAGES_PER_ROOT * PAGE_SIZE, 2 * 1024 * 1024); // 2 MB chunk
+    }
+}

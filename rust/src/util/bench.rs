@@ -1,0 +1,140 @@
+//! Hand-rolled micro-benchmark harness (criterion is unavailable in
+//! the offline build). Warms up, runs timed batches until a minimum
+//! measurement window is reached, and reports mean/min wall time with
+//! throughput.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: u64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let thr = if self.items > 0 {
+            let per_sec = self.items as f64 / (self.mean_ns / 1e9);
+            format!("  {:>12.0} items/s", per_sec)
+        } else {
+            String::new()
+        };
+        format!(
+            "{:<44} {:>12} iters  mean {:>12}  min {:>12}{}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            thr
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner: fixed warm-up, then batches until `min_time`.
+pub struct Bench {
+    pub min_time: Duration,
+    pub max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self { min_time: Duration::from_millis(800), max_iters: u64::MAX, results: Vec::new() }
+    }
+
+    pub fn with_min_time(mut self, d: Duration) -> Self {
+        self.min_time = d;
+        self
+    }
+
+    /// Run one case. `f` is called once per iteration; its return
+    /// value is black-boxed.
+    pub fn case<T, F: FnMut() -> T>(&mut self, name: &str, items: u64, mut f: F) -> &BenchResult {
+        // Warm-up: a few calls, also measures a rough per-iter cost.
+        let warm = Instant::now();
+        black_box(f());
+        black_box(f());
+        let rough = warm.elapsed().as_nanos().max(1) as u64 / 2;
+
+        let mut total_ns: u128 = 0;
+        let mut iters: u64 = 0;
+        let mut min_ns = f64::INFINITY;
+        // Batch size targets ~10ms per measurement.
+        let batch = (10_000_000 / rough).clamp(1, 1_000_000);
+        while total_ns < self.min_time.as_nanos() && iters < self.max_iters {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos();
+            total_ns += dt;
+            iters += batch;
+            min_ns = min_ns.min(dt as f64 / batch as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: total_ns as f64 / iters as f64,
+            min_ns,
+            items,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Optimization barrier (stable-rust approximation).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new().with_min_time(Duration::from_millis(5));
+        let r = b.case("noop-ish", 1, || 1 + 1).clone();
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns * 1.5 + 1.0);
+    }
+
+    #[test]
+    fn formats_ranges() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,118 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated
+//! flags, and positional arguments; `parse` consumes `std::env::args`
+//! style vectors so it is unit-testable.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.entry(name.to_string()).or_default().push(argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    // boolean flag
+                    out.flags.entry(name.to_string()).or_default().push("true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.u64(name, default as u64)? as usize)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// First positional or error with usage text.
+    pub fn positional0(&self, usage: &str) -> Result<&str> {
+        match self.positional.first() {
+            Some(p) => Ok(p.as_str()),
+            None => bail!("missing argument\nusage: {usage}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flag_forms() {
+        let a = Args::parse(&argv("cmd --x 1 --y=2 --flag --z 3.5")).unwrap();
+        assert_eq!(a.positional, vec!["cmd"]);
+        assert_eq!(a.u64("x", 0).unwrap(), 1);
+        assert_eq!(a.str("y", ""), "2");
+        assert!(a.bool("flag"));
+        assert!((a.f64("z", 0.0).unwrap() - 3.5).abs() < 1e-12);
+        assert_eq!(a.u64("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = Args::parse(&argv("--b one --b two")).unwrap();
+        assert_eq!(a.get_all("b"), vec!["one", "two"]);
+        assert_eq!(a.get("b"), Some("two"), "last wins for scalar get");
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = Args::parse(&argv("--n abc")).unwrap();
+        assert!(a.u64("n", 0).is_err());
+    }
+}

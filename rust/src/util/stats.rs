@@ -1,0 +1,84 @@
+//! Aggregate statistics used by the evaluation harness: the paper
+//! reports IPC and PCIe improvements as *geometric* means and the page
+//! hit rate as an arithmetic mean (§1, §7.4).
+
+/// Geometric mean of strictly positive values; returns 0 for empty
+/// input and ignores non-positive entries (they would make the
+/// product undefined — the harness never produces them, but a ratio
+/// of 0 from a degenerate run must not poison a whole table).
+pub fn geomean(values: &[f64]) -> f64 {
+    let logs: Vec<f64> = values.iter().copied().filter(|v| *v > 0.0).map(f64::ln).collect();
+    if logs.is_empty() {
+        return 0.0;
+    }
+    (logs.iter().sum::<f64>() / logs.len() as f64).exp()
+}
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        0.0
+    } else {
+        values.iter().sum::<f64>() / values.len() as f64
+    }
+}
+
+/// Streaming mean/min/max accumulator (used by coordinator telemetry).
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl OnlineStats {
+    pub fn push(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_skips_nonpositive() {
+        assert!((geomean(&[0.0, 4.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_stats() {
+        let mut s = OnlineStats::default();
+        for v in [3.0, 1.0, 2.0] {
+            s.push(v);
+        }
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+}

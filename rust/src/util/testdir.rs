@@ -1,0 +1,70 @@
+//! RAII temporary directory (stand-in for the `tempfile` crate, which
+//! is unavailable in the offline build).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique directory under the system temp dir, removed on drop.
+#[derive(Debug)]
+pub struct TestDir {
+    path: PathBuf,
+}
+
+impl TestDir {
+    pub fn new() -> Self {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "uvm-prefetch-{}-{}-{n}",
+            std::process::id(),
+            std::thread::current().name().unwrap_or("t").replace("::", "-"),
+        ));
+        std::fs::create_dir_all(&path).expect("create test dir");
+        Self { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Default for TestDir {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for TestDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let p;
+        {
+            let d = TestDir::new();
+            p = d.path().to_path_buf();
+            std::fs::write(d.file("x.txt"), "hi").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists(), "removed on drop");
+    }
+
+    #[test]
+    fn unique_across_instances() {
+        let a = TestDir::new();
+        let b = TestDir::new();
+        assert_ne!(a.path(), b.path());
+    }
+}

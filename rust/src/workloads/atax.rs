@@ -1,0 +1,97 @@
+//! ATAX (Polybench) — `y = Aᵀ(A·x)`.
+//!
+//! Two kernels over the same N×M matrix:
+//! * kernel 0 (`tmp = A·x`): row sweep — warps walk rows of A
+//!   sequentially (page delta +1 within a row), with the small `x`
+//!   vector resident after first touch;
+//! * kernel 1 (`y = Aᵀ·tmp`): column sweep — each step jumps a full
+//!   row stride, so the page delta is constant at `M*4/4096` pages.
+//!
+//! The column sweep is the paper's "dominant delta" showcase (§5.3:
+//! delta 16384 bytes = 4 pages covers 99.26 % of ATAX's vocabulary);
+//! with M = 2048 our dominant delta is 2 pages at a similar ratio.
+
+use super::common::{pc, Builder, COALESCE_BYTES};
+use super::WorkloadInstance;
+
+pub fn build(mut b: Builder) -> WorkloadInstance {
+    let n = b.scaled(2048, 32).max(1024); // rows (≥1024 keeps the row stride ≥ 1 page)
+    let m = b.scaled(2048, 32).max(1024); // cols
+    let a = b.alloc(n * m * 4);
+    let x = b.alloc(m * 4);
+    let y = b.alloc(n * 4);
+    let tmp = b.alloc(n * 4);
+
+    // Kernel 0: tmp = A·x, one row per work item.
+    for (worker, (r0, rows)) in b.split(n).into_iter().enumerate() {
+        let cta = (worker / 4) as u32;
+        for r in r0..r0 + rows {
+            for g in 0..m * 4 / COALESCE_BYTES {
+                b.load(worker, pc(0, 0), &a, r * m * 4 + g * COALESCE_BYTES, 1, cta, 0);
+                // x is re-read every 4 groups (register-tiled).
+                if g % 4 == 0 {
+                    b.load(worker, pc(0, 1), &x, g * COALESCE_BYTES % (m * 4), 1, cta, 0);
+                }
+            }
+            b.store(worker, pc(0, 2), &tmp, r * 4 / COALESCE_BYTES * COALESCE_BYTES, 2, cta, 0);
+        }
+    }
+
+    // Kernel 1: y = Aᵀ·tmp, one 32-column group per work item; each
+    // group walks all rows — the constant-row-stride column sweep.
+    for (worker, (g0, groups)) in b.split(m * 4 / COALESCE_BYTES).into_iter().enumerate() {
+        let cta = (worker / 4) as u32;
+        for g in g0..g0 + groups {
+            for r in 0..n {
+                b.load(worker, pc(1, 0), &a, r * m * 4 + g * COALESCE_BYTES, 1, cta, 1);
+                if r % 8 == 0 {
+                    b.load(worker, pc(1, 1), &tmp, r * 4 / COALESCE_BYTES * COALESCE_BYTES, 1, cta, 1);
+                }
+            }
+            b.store(worker, pc(1, 2), &y, g * COALESCE_BYTES % (n * 4), 2, cta, 1);
+        }
+    }
+    b.finish("atax")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SimConfig;
+    use crate::types::page_of;
+    use crate::workloads::common::Builder;
+    use std::collections::HashMap;
+
+    #[test]
+    fn column_sweep_has_dominant_page_delta() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.25));
+        // Collect kernel-1 A-array page deltas per warp.
+        let mut counts: HashMap<i64, u64> = HashMap::new();
+        for t in &wl.tasks {
+            let pages: Vec<u64> = t
+                .ops
+                .iter()
+                .filter(|o| o.kernel_id == 1 && o.access.array_id == 0)
+                .map(|o| page_of(o.access.vaddr))
+                .collect();
+            for w in pages.windows(2) {
+                *counts.entry(w[1] as i64 - w[0] as i64).or_insert(0) += 1;
+            }
+        }
+        let total: u64 = counts.values().sum();
+        let max = counts.values().max().copied().unwrap_or(0);
+        assert!(
+            max as f64 / total as f64 > 0.9,
+            "dominant delta should cover >90%: {:?}",
+            counts
+        );
+    }
+
+    #[test]
+    fn has_two_kernels() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.1));
+        let mut kernels: Vec<u16> =
+            wl.tasks.iter().flat_map(|t| t.ops.iter().map(|o| o.kernel_id)).collect();
+        kernels.dedup();
+        assert!(kernels.contains(&0) && kernels.contains(&1));
+    }
+}

@@ -1,0 +1,72 @@
+//! BICG (Polybench) — the BiCGStab sub-kernels `s = Aᵀ·r` and
+//! `q = A·p` over the same N×M matrix.
+//!
+//! Mirror image of ATAX: the *column* sweep runs first, then the row
+//! sweep. Another member of the paper's dominant-delta family (§5.3;
+//! Table 11 BICG is the paper's §7.5 PCIe case study).
+
+use super::common::{pc, Builder, COALESCE_BYTES};
+use super::WorkloadInstance;
+
+pub fn build(mut b: Builder) -> WorkloadInstance {
+    let n = b.scaled(2048, 32).max(1024); // ≥1024 keeps the row stride ≥ 1 page
+    let m = b.scaled(2048, 32).max(1024);
+    let a = b.alloc(n * m * 4);
+    let r = b.alloc(n * 4);
+    let s = b.alloc(m * 4);
+    let p = b.alloc(m * 4);
+    let q = b.alloc(n * 4);
+
+    // Kernel 0: s = Aᵀ·r — column sweep (dominant constant delta).
+    for (worker, (g0, groups)) in b.split(m * 4 / COALESCE_BYTES).into_iter().enumerate() {
+        let cta = (worker / 4) as u32;
+        for g in g0..g0 + groups {
+            for row in 0..n {
+                b.load(worker, pc(0, 0), &a, row * m * 4 + g * COALESCE_BYTES, 1, cta, 0);
+                if row % 8 == 0 {
+                    b.load(worker, pc(0, 1), &r, row * 4 / COALESCE_BYTES * COALESCE_BYTES, 1, cta, 0);
+                }
+            }
+            b.store(worker, pc(0, 2), &s, g * COALESCE_BYTES % (m * 4), 2, cta, 0);
+        }
+    }
+
+    // Kernel 1: q = A·p — row sweep.
+    for (worker, (r0, rows)) in b.split(n).into_iter().enumerate() {
+        let cta = (worker / 4) as u32;
+        for row in r0..r0 + rows {
+            for g in 0..m * 4 / COALESCE_BYTES {
+                b.load(worker, pc(1, 0), &a, row * m * 4 + g * COALESCE_BYTES, 1, cta, 1);
+                if g % 4 == 0 {
+                    b.load(worker, pc(1, 1), &p, g * COALESCE_BYTES % (m * 4), 1, cta, 1);
+                }
+            }
+            b.store(worker, pc(1, 2), &q, row * 4 / COALESCE_BYTES * COALESCE_BYTES, 2, cta, 1);
+        }
+    }
+    b.finish("bicg")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SimConfig;
+    use crate::workloads::common::Builder;
+
+    #[test]
+    fn column_sweep_runs_first() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.1));
+        let first_kernel = wl.tasks[0].ops.first().unwrap().kernel_id;
+        assert_eq!(first_kernel, 0);
+        // Kernel 0's A accesses jump by a row stride each step.
+        let a_addrs: Vec<u64> = wl.tasks[0]
+            .ops
+            .iter()
+            .filter(|o| o.kernel_id == 0 && o.access.array_id == 0)
+            .take(3)
+            .map(|o| o.access.vaddr)
+            .collect();
+        let stride = a_addrs[1] - a_addrs[0];
+        assert_eq!(a_addrs[2] - a_addrs[1], stride);
+        assert!(stride >= 4096, "column sweep strides at least a page");
+    }
+}

@@ -1,0 +1,219 @@
+//! Shared machinery for the workload generators: virtual array
+//! allocation, CTA/warp placement, and per-warp op-stream assembly.
+
+use crate::config::SimConfig;
+use crate::sim::sm::WarpOp;
+use crate::types::{CtaId, MemAccess, SmId, VAddr, WarpId};
+use crate::util::XorShift64;
+use crate::workloads::{WarpTask, WorkloadInstance};
+
+/// Coalesced access width: 32 threads × 4-byte elements.
+pub const COALESCE_BYTES: u64 = 128;
+
+/// A managed (`cudaMallocManaged`-style) array in the unified address
+/// space. Arrays are placed 1 GiB apart so each lives in its own page
+/// and 2 MB-chunk universe (feature `In` of Figure 3 = `id`).
+#[derive(Debug, Clone, Copy)]
+pub struct ManagedArray {
+    pub id: u8,
+    pub base: VAddr,
+    pub bytes: u64,
+}
+
+impl ManagedArray {
+    /// Byte address of element `idx` (4-byte elements).
+    #[inline]
+    pub fn elem(&self, idx: u64) -> VAddr {
+        debug_assert!(idx * 4 < self.bytes, "idx {idx} out of array {}", self.id);
+        self.base + idx * 4
+    }
+}
+
+/// Allocates managed arrays and assembles warp programs.
+pub struct Builder {
+    pub n_sms: u16,
+    /// Warp slots used per SM. The paper's SMs support 64 warps; the
+    /// generators use 16 so each stream is long enough for 30-token
+    /// windows while still exercising inter-warp interleaving.
+    pub warps_used: u16,
+    pub rng: XorShift64,
+    pub scale: f64,
+    next_base: VAddr,
+    next_array: u8,
+    streams: Vec<Vec<WarpOp>>,
+}
+
+impl Builder {
+    pub fn new(cfg: &SimConfig, seed: u64, scale: f64) -> Self {
+        let warps_used = 16.min(cfg.warps_per_sm);
+        let n_workers = cfg.n_sms as usize * warps_used as usize;
+        Self {
+            n_sms: cfg.n_sms,
+            warps_used,
+            rng: XorShift64::new(seed),
+            scale: scale.max(0.01),
+            next_base: 1 << 30,
+            next_array: 0,
+            streams: (0..n_workers).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// Scale an element count, keeping it a multiple of `align`.
+    pub fn scaled(&self, n: u64, align: u64) -> u64 {
+        let s = ((n as f64 * self.scale) as u64).max(align);
+        s / align * align
+    }
+
+    /// Allocate a managed array of `bytes` bytes.
+    pub fn alloc(&mut self, bytes: u64) -> ManagedArray {
+        let a = ManagedArray { id: self.next_array, base: self.next_base, bytes };
+        self.next_array += 1;
+        self.next_base += 1 << 30; // 1 GiB spacing
+        a
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Append one op to worker `w`'s stream.
+    #[inline]
+    pub fn push(
+        &mut self,
+        worker: usize,
+        pc: u64,
+        addr: VAddr,
+        array: &ManagedArray,
+        is_store: bool,
+        compute: u32,
+        cta: CtaId,
+        kernel_id: u16,
+    ) {
+        self.streams[worker].push(WarpOp {
+            compute,
+            access: MemAccess { pc, vaddr: addr, array_id: array.id, is_store },
+            cta,
+            kernel_id,
+        });
+    }
+
+    /// Convenience: one coalesced load.
+    #[inline]
+    pub fn load(
+        &mut self,
+        worker: usize,
+        pc: u64,
+        array: &ManagedArray,
+        byte_off: u64,
+        compute: u32,
+        cta: CtaId,
+        kernel_id: u16,
+    ) {
+        self.push(worker, pc, array.base + byte_off, array, false, compute, cta, kernel_id);
+    }
+
+    /// Convenience: one coalesced store.
+    #[inline]
+    pub fn store(
+        &mut self,
+        worker: usize,
+        pc: u64,
+        array: &ManagedArray,
+        byte_off: u64,
+        compute: u32,
+        cta: CtaId,
+        kernel_id: u16,
+    ) {
+        self.push(worker, pc, array.base + byte_off, array, true, compute, cta, kernel_id);
+    }
+
+    /// Place worker streams on (SM, warp) slots: worker `w` lands on
+    /// SM `w % n_sms`, warp slot `w / n_sms` — the round-robin CTA
+    /// rasterization GPUs use.
+    pub fn finish(self, name: &str) -> WorkloadInstance {
+        let mut tasks = Vec::new();
+        let mut total_ops = 0u64;
+        for (w, ops) in self.streams.into_iter().enumerate() {
+            if ops.is_empty() {
+                continue;
+            }
+            total_ops += ops.len() as u64;
+            tasks.push(WarpTask {
+                sm: (w % self.n_sms as usize) as SmId,
+                warp: (w / self.n_sms as usize) as WarpId,
+                ops,
+            });
+        }
+        WorkloadInstance { name: name.to_string(), tasks, total_ops }
+    }
+
+    /// Split `n_items` contiguous work items across all workers;
+    /// returns per-worker `(start, len)` ranges.
+    pub fn split(&self, n_items: u64) -> Vec<(u64, u64)> {
+        let w = self.n_workers() as u64;
+        let per = n_items / w;
+        let rem = n_items % w;
+        let mut out = Vec::with_capacity(w as usize);
+        let mut start = 0;
+        for i in 0..w {
+            let len = per + u64::from(i < rem);
+            out.push((start, len));
+            start += len;
+        }
+        out
+    }
+}
+
+/// Encode a PC for kernel `k`, static load/store site `site`.
+#[inline]
+pub fn pc(kernel: u16, site: u16) -> u64 {
+    0x1000 + ((kernel as u64) << 12) + (site as u64) * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn arrays_are_gigabyte_spaced() {
+        let mut b = Builder::new(&SimConfig::default(), 0, 1.0);
+        let a0 = b.alloc(1024);
+        let a1 = b.alloc(1024);
+        assert_eq!(a1.base - a0.base, 1 << 30);
+        assert_eq!(a0.id, 0);
+        assert_eq!(a1.id, 1);
+    }
+
+    #[test]
+    fn split_covers_everything_exactly_once() {
+        let b = Builder::new(&SimConfig::default(), 0, 1.0);
+        let ranges = b.split(1000);
+        let total: u64 = ranges.iter().map(|r| r.1).sum();
+        assert_eq!(total, 1000);
+        // Contiguous, non-overlapping.
+        let mut expect = 0;
+        for (s, l) in ranges {
+            assert_eq!(s, expect);
+            expect = s + l;
+        }
+    }
+
+    #[test]
+    fn finish_drops_empty_streams_and_places_in_bounds() {
+        let cfg = SimConfig::default();
+        let mut b = Builder::new(&cfg, 0, 1.0);
+        let a = b.alloc(4096);
+        b.load(3, pc(0, 0), &a, 0, 2, 0, 0);
+        let wl = b.finish("t");
+        assert_eq!(wl.tasks.len(), 1);
+        assert_eq!(wl.tasks[0].sm, 3 % cfg.n_sms);
+    }
+
+    #[test]
+    fn scaled_respects_alignment() {
+        let b = Builder::new(&SimConfig::default(), 0, 0.3);
+        assert_eq!(b.scaled(1000, 32) % 32, 0);
+        assert!(b.scaled(10, 32) >= 32, "never below one aligned unit");
+    }
+}

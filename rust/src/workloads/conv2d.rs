@@ -1,0 +1,58 @@
+//! 2DCONV (Polybench) — 3×3 convolution over an N×N image.
+//!
+//! Streaming stencil: each output row reads three input rows. Appears
+//! only in the system-level tables (Table 10/11, Figs 10/12), like
+//! StreamTriad.
+
+use super::common::{pc, Builder, COALESCE_BYTES};
+use super::WorkloadInstance;
+
+pub fn build(mut b: Builder) -> WorkloadInstance {
+    let n = b.scaled(2048, 32);
+    let input = b.alloc(n * n * 4);
+    let output = b.alloc(n * n * 4);
+    let row = n * 4;
+
+    // Polybench drives the kernel from a timing loop — 3 invocations.
+    for rep in 0..3u16 {
+    for (worker, (r0, rows)) in b.split(n).into_iter().enumerate() {
+        let cta = (worker / 4) as u32;
+        for r in r0..r0 + rows {
+            let rm = r.saturating_sub(1);
+            let rp = (r + 1).min(n - 1);
+            for g in 0..row / COALESCE_BYTES {
+                let off = g * COALESCE_BYTES;
+                b.load(worker, pc(rep, 0), &input, rm * row + off, 1, cta, rep);
+                b.load(worker, pc(rep, 1), &input, r * row + off, 1, cta, rep);
+                b.load(worker, pc(rep, 2), &input, rp * row + off, 2, cta, rep);
+                b.store(worker, pc(rep, 3), &output, r * row + off, 3, cta, rep);
+            }
+        }
+    }
+    }
+    b.finish("conv2d")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SimConfig;
+    use crate::workloads::common::Builder;
+
+    #[test]
+    fn reads_three_input_rows_per_output() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.1));
+        let loads: usize = wl
+            .tasks
+            .iter()
+            .flat_map(|t| &t.ops)
+            .filter(|o| !o.access.is_store)
+            .count();
+        let stores: usize = wl
+            .tasks
+            .iter()
+            .flat_map(|t| &t.ops)
+            .filter(|o| o.access.is_store)
+            .count();
+        assert_eq!(loads, stores * 3);
+    }
+}

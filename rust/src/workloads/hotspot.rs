@@ -1,0 +1,66 @@
+//! Hotspot (Rodinia) — a 2-D thermal stencil: each output cell reads
+//! its 4-neighborhood of `temp` plus `power`. Two pyramid iterations
+//! with the in/out roles swapped.
+//!
+//! The stencil's per-cluster delta alphabet is wide (row ±1 page,
+//! array-to-array jumps, iteration swaps), which is why Hotspot is the
+//! paper's weakest prediction row (Table 1: 0.77 top-1) while still
+//! gaining hit rate from the learned policy (Table 10: 0.61 → 0.84).
+
+use super::common::{pc, Builder, COALESCE_BYTES};
+use super::WorkloadInstance;
+
+pub fn build(mut b: Builder) -> WorkloadInstance {
+    let n = b.scaled(1024, 32); // N×N grid; one row = N*4 bytes
+    let temp_a = b.alloc(n * n * 4);
+    let temp_b = b.alloc(n * n * 4);
+    let power = b.alloc(n * n * 4);
+    let row = n * 4;
+
+    // 6 pyramid iterations (the Rodinia default runs many; enough
+    // to exercise the repeated-phase pattern and fill the corpus).
+    for iter in 0..6u16 {
+        let (src, dst) = if iter % 2 == 0 { (&temp_a, &temp_b) } else { (&temp_b, &temp_a) };
+        for (worker, (r0, rows)) in b.split(n).into_iter().enumerate() {
+            let cta = (worker / 4) as u32;
+            for r in r0..r0 + rows {
+                let rm = r.saturating_sub(1);
+                let rp = (r + 1).min(n - 1);
+                for g in 0..row / COALESCE_BYTES {
+                    let off = g * COALESCE_BYTES;
+                    b.load(worker, pc(iter, 0), src, r * row + off, 1, cta, iter);
+                    b.load(worker, pc(iter, 1), src, rm * row + off, 1, cta, iter);
+                    b.load(worker, pc(iter, 2), src, rp * row + off, 1, cta, iter);
+                    b.load(worker, pc(iter, 3), &power, r * row + off, 2, cta, iter);
+                    b.store(worker, pc(iter, 4), dst, r * row + off, 3, cta, iter);
+                }
+            }
+        }
+    }
+    b.finish("hotspot")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SimConfig;
+    use crate::workloads::common::Builder;
+
+    #[test]
+    fn stencil_reads_three_rows_per_group() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.1));
+        let ops = &wl.tasks[5].ops; // a middle worker (interior rows)
+        // First 5 ops: src r, src r-1, src r+1, power, dst.
+        let ids: Vec<u8> = ops.iter().take(5).map(|o| o.access.array_id).collect();
+        assert_eq!(&ids[..3], &[0, 0, 0].as_slice()[..], "three src-row reads");
+        assert_eq!(ids[3], 2, "power read");
+        assert_eq!(ids[4], 1, "dst write");
+    }
+
+    #[test]
+    fn second_iteration_swaps_buffers() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.1));
+        let t = &wl.tasks[0];
+        let k1_store = t.ops.iter().find(|o| o.kernel_id == 1 && o.access.is_store).unwrap();
+        assert_eq!(k1_store.access.array_id, 0, "iteration 1 writes back into temp_a");
+    }
+}

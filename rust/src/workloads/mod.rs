@@ -1,0 +1,172 @@
+//! Benchmark workload generators.
+//!
+//! The paper evaluates 11 memory-intensive kernels from Rodinia,
+//! Polybench and Lonestar, run under UVM on GPGPU-Sim (§7.1). We have
+//! no CUDA toolchain or GPGPU-Sim here, so each benchmark is
+//! reimplemented as a *page-access-pattern generator*: the per-warp
+//! sequence of coalesced device-memory accesses the kernel's loop nest
+//! produces, at the same granularity the GMMU observes. That sequence
+//! — (PC, SM, warp, CTA, page) tuples — is everything the paper's
+//! predictors ever see (Figure 3), so the substitution preserves the
+//! learning problem exactly (see DESIGN.md §2).
+//!
+//! Pattern families, matching the paper's Fig. 6 taxonomy:
+//! * streaming — AddVectors, StreamTriad, 2DCONV, Pathfinder
+//! * dominant-delta matvec (row/column sweeps) — ATAX, BICG, MVT
+//! * stencil — Hotspot, Srad-v2
+//! * wavefront — NW
+//! * two-phase (disjoint hot sets between kernels) — Backprop
+
+pub mod addvectors;
+pub mod atax;
+pub mod backprop;
+pub mod bicg;
+pub mod common;
+pub mod conv2d;
+pub mod hotspot;
+pub mod mvt;
+pub mod nw;
+pub mod pathfinder;
+pub mod srad_v2;
+pub mod streamtriad;
+
+use crate::sim::sm::WarpOp;
+use crate::types::{SmId, WarpId};
+
+/// One warp's full instruction stream, placed on an (SM, warp) slot.
+#[derive(Debug)]
+pub struct WarpTask {
+    pub sm: SmId,
+    pub warp: WarpId,
+    pub ops: Vec<WarpOp>,
+}
+
+/// A generated workload ready to load into the simulator.
+#[derive(Debug)]
+pub struct WorkloadInstance {
+    pub name: String,
+    pub tasks: Vec<WarpTask>,
+    pub total_ops: u64,
+}
+
+impl WorkloadInstance {
+    /// Total memory instructions across all warps.
+    pub fn n_accesses(&self) -> u64 {
+        self.tasks.iter().map(|t| t.ops.len() as u64).sum()
+    }
+
+    /// Total instructions (compute + memory).
+    pub fn n_instructions(&self) -> u64 {
+        self.tasks
+            .iter()
+            .flat_map(|t| t.ops.iter())
+            .map(|op| op.compute as u64 + 1)
+            .sum()
+    }
+}
+
+/// Canonical benchmark list (paper §7, Tables 10/11 rows).
+pub const ALL_BENCHMARKS: &[&str] = &[
+    "addvectors",
+    "atax",
+    "backprop",
+    "bicg",
+    "hotspot",
+    "mvt",
+    "nw",
+    "pathfinder",
+    "srad_v2",
+    "streamtriad",
+    "conv2d",
+];
+
+/// The 9 benchmarks used in the model-quality tables (Tables 1–8).
+pub const MODEL_BENCHMARKS: &[&str] = &[
+    "addvectors",
+    "atax",
+    "backprop",
+    "bicg",
+    "hotspot",
+    "mvt",
+    "nw",
+    "pathfinder",
+    "srad_v2",
+];
+
+/// Build a benchmark by name. `scale` multiplies the problem size
+/// (1.0 = default sizes tuned for minutes-long full-suite runs);
+/// `seed` feeds input-dependent components.
+pub fn build(
+    name: &str,
+    cfg: &crate::config::SimConfig,
+    seed: u64,
+    scale: f64,
+) -> anyhow::Result<WorkloadInstance> {
+    let b = common::Builder::new(cfg, seed, scale);
+    Ok(match name {
+        "addvectors" => addvectors::build(b),
+        "atax" => atax::build(b),
+        "backprop" => backprop::build(b),
+        "bicg" => bicg::build(b),
+        "hotspot" => hotspot::build(b),
+        "mvt" => mvt::build(b),
+        "nw" => nw::build(b),
+        "pathfinder" => pathfinder::build(b),
+        "srad_v2" => srad_v2::build(b),
+        "streamtriad" => streamtriad::build(b),
+        "conv2d" | "2dconv" => conv2d::build(b),
+        other => anyhow::bail!("unknown benchmark '{other}' (expected one of {ALL_BENCHMARKS:?})"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn all_benchmarks_build_and_are_nonempty() {
+        let cfg = SimConfig::default();
+        for name in ALL_BENCHMARKS {
+            let wl = build(name, &cfg, 1, 0.1).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(wl.n_accesses() > 100, "{name} has {} accesses", wl.n_accesses());
+            assert!(!wl.tasks.is_empty(), "{name}");
+            // Every task placed within the machine.
+            for t in &wl.tasks {
+                assert!(t.sm < cfg.n_sms, "{name}");
+                assert!(t.warp < cfg.warps_per_sm, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_benchmark_errors() {
+        assert!(build("nope", &SimConfig::default(), 0, 1.0).is_err());
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let cfg = SimConfig::default();
+        let a = build("atax", &cfg, 7, 0.1).unwrap();
+        let b = build("atax", &cfg, 7, 0.1).unwrap();
+        assert_eq!(a.n_accesses(), b.n_accesses());
+        let pa: Vec<u64> = a.tasks[0].ops.iter().map(|o| o.access.vaddr).collect();
+        let pb: Vec<u64> = b.tasks[0].ops.iter().map(|o| o.access.vaddr).collect();
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn benchmarks_use_distinct_address_regions_per_array() {
+        let cfg = SimConfig::default();
+        let wl = build("addvectors", &cfg, 0, 0.1).unwrap();
+        // Three arrays → accesses must span ≥ 3 distinct 1 GB regions.
+        use std::collections::HashSet;
+        let regions: HashSet<u64> = wl
+            .tasks
+            .iter()
+            .flat_map(|t| t.ops.iter())
+            .map(|o| o.access.vaddr >> 30)
+            .collect();
+        assert!(regions.len() >= 3, "regions: {regions:?}");
+    }
+}

@@ -1,0 +1,66 @@
+//! MVT (Polybench) — `x1 += A·y1 ; x2 += Aᵀ·y2`.
+//!
+//! Both sweeps of the same matrix run as separate kernels. MVT is the
+//! paper's hardest Table 11 row (hit rate ~0.50 for both policies):
+//! the row and column hot sets are disjoint, so half the footprint is
+//! always cold. We reproduce that by giving the two kernels disjoint
+//! halves of their vectors and interleaving CTA execution.
+
+use super::common::{pc, Builder, COALESCE_BYTES};
+use super::WorkloadInstance;
+
+pub fn build(mut b: Builder) -> WorkloadInstance {
+    let n = b.scaled(2048, 32).max(1024); // ≥1024 keeps the row stride ≥ 1 page
+    let a = b.alloc(n * n * 4);
+    let x1 = b.alloc(n * 4);
+    let y1 = b.alloc(n * 4);
+    let x2 = b.alloc(n * 4);
+    let y2 = b.alloc(n * 4);
+
+    // Kernel 0: x1 += A·y1 — row sweep.
+    for (worker, (r0, rows)) in b.split(n).into_iter().enumerate() {
+        let cta = (worker / 4) as u32;
+        for row in r0..r0 + rows {
+            for g in 0..n * 4 / COALESCE_BYTES {
+                b.load(worker, pc(0, 0), &a, row * n * 4 + g * COALESCE_BYTES, 1, cta, 0);
+                if g % 4 == 0 {
+                    b.load(worker, pc(0, 1), &y1, g * COALESCE_BYTES % (n * 4), 1, cta, 0);
+                }
+            }
+            b.store(worker, pc(0, 2), &x1, row * 4 / COALESCE_BYTES * COALESCE_BYTES, 2, cta, 0);
+        }
+    }
+
+    // Kernel 1: x2 += Aᵀ·y2 — column sweep (dominant delta = row
+    // stride in pages).
+    for (worker, (g0, groups)) in b.split(n * 4 / COALESCE_BYTES).into_iter().enumerate() {
+        let cta = (worker / 4) as u32;
+        for g in g0..g0 + groups {
+            for row in 0..n {
+                b.load(worker, pc(1, 0), &a, row * n * 4 + g * COALESCE_BYTES, 1, cta, 1);
+                if row % 8 == 0 {
+                    b.load(worker, pc(1, 1), &y2, row * 4 / COALESCE_BYTES * COALESCE_BYTES, 1, cta, 1);
+                }
+            }
+            b.store(worker, pc(1, 2), &x2, g * COALESCE_BYTES % (n * 4), 2, cta, 1);
+        }
+    }
+    b.finish("mvt")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SimConfig;
+    use crate::workloads::common::Builder;
+
+    #[test]
+    fn two_sweeps_cover_matrix_rowwise_and_columnwise() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.1));
+        let k0: usize = wl.tasks.iter().flat_map(|t| &t.ops).filter(|o| o.kernel_id == 0).count();
+        let k1: usize = wl.tasks.iter().flat_map(|t| &t.ops).filter(|o| o.kernel_id == 1).count();
+        assert!(k0 > 0 && k1 > 0);
+        // Symmetric matrix sweep: similar volumes.
+        let ratio = k0 as f64 / k1 as f64;
+        assert!((0.5..2.0).contains(&ratio), "k0={k0} k1={k1}");
+    }
+}

@@ -1,0 +1,84 @@
+//! Needleman-Wunsch (Rodinia) — dynamic-programming sequence
+//! alignment, processed as anti-diagonal wavefronts of 16×16 blocks
+//! over the score matrix plus a reference matrix.
+//!
+//! Block (bi, bj) depends on (bi-1, bj) and (bi, bj-1), so blocks on
+//! the same anti-diagonal run concurrently. From a warp's point of
+//! view the page deltas alternate between within-block row strides and
+//! diagonal block jumps whose magnitude *changes every diagonal* —
+//! order information the self-attention path genuinely needs (the
+//! paper's Table 4: NW drops from 0.96 to 0.74 top-1 without it).
+
+use super::common::{pc, Builder, COALESCE_BYTES};
+use super::WorkloadInstance;
+
+const BLOCK: u64 = 16;
+
+pub fn build(mut b: Builder) -> WorkloadInstance {
+    let n = b.scaled(1024, BLOCK * 32); // matrix side (ints)
+    let items = b.alloc((n + 1) * (n + 1) * 4);
+    let reference = b.alloc(n * n * 4);
+    let nb = n / BLOCK; // blocks per side
+    let row = (n + 1) * 4;
+    let n_workers = b.n_workers() as u64;
+
+    // Forward wavefront over anti-diagonals d = 0 .. 2*nb-2.
+    for d in 0..2 * nb - 1 {
+        let lo = d.saturating_sub(nb - 1);
+        let hi = d.min(nb - 1);
+        for (idx, bi) in (lo..=hi).enumerate() {
+            let bj = d - bi;
+            let worker = ((idx as u64 + d * 7) % n_workers) as usize;
+            let cta = (d * nb + bi) as u32;
+            // Each block: 16 rows × (score row segment + reference
+            // segment + score writeback).
+            for r in 0..BLOCK {
+                let items_off = (bi * BLOCK + r + 1) * row + (bj * BLOCK + 1) * 4;
+                let ref_off = (bi * BLOCK + r) * n * 4 + bj * BLOCK * 4;
+                let seg = items_off / COALESCE_BYTES * COALESCE_BYTES;
+                b.load(worker, pc(0, 0), &items, seg, 1, cta, 0);
+                b.load(worker, pc(0, 1), &reference, ref_off / COALESCE_BYTES * COALESCE_BYTES, 2, cta, 0);
+                b.store(worker, pc(0, 2), &items, seg, 3, cta, 0);
+            }
+        }
+    }
+    b.finish("nw")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SimConfig;
+    use crate::types::page_of;
+    use crate::workloads::common::Builder;
+    use std::collections::HashMap;
+
+    #[test]
+    fn delta_alphabet_is_wide() {
+        // Wavefront traversal must produce many distinct page deltas
+        // (unlike the matvec benchmarks).
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.5));
+        let mut counts: HashMap<i64, u64> = HashMap::new();
+        for t in &wl.tasks {
+            let pages: Vec<u64> =
+                t.ops.iter().map(|o| page_of(o.access.vaddr)).collect();
+            for w in pages.windows(2) {
+                *counts.entry(w[1] as i64 - w[0] as i64).or_insert(0) += 1;
+            }
+        }
+        let total: u64 = counts.values().sum();
+        let max = counts.values().max().copied().unwrap();
+        assert!(counts.len() >= 8, "only {} deltas", counts.len());
+        assert!((max as f64 / total as f64) < 0.9, "no overwhelming dominant delta");
+    }
+
+    #[test]
+    fn wavefront_covers_all_blocks_once() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.5));
+        let stores: usize =
+            wl.tasks.iter().flat_map(|t| &t.ops).filter(|o| o.access.is_store).count();
+        // nb² blocks × 16 rows of writeback.
+        let n = Builder::new(&SimConfig::default(), 0, 0.5).scaled(1024, 16 * 32);
+        let nb = n / 16;
+        assert_eq!(stores as u64, nb * nb * 16);
+    }
+}

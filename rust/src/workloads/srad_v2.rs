@@ -1,0 +1,93 @@
+//! SRAD v2 (Rodinia) — speckle-reducing anisotropic diffusion over an
+//! N×N image: kernel 0 computes the diffusion coefficient `c` from the
+//! image's 4-neighborhood; kernel 1 updates the image from `c`'s
+//! neighborhood. Two iterations.
+//!
+//! A two-kernel stencil with a large array count (image + coefficient
+//! + 4 derivative planes) — per-cluster sequences interleave seven
+//! address streams, rewarding the attention model (Table 8: 0.97 f1).
+
+use super::common::{pc, Builder, COALESCE_BYTES};
+use super::WorkloadInstance;
+
+pub fn build(mut b: Builder) -> WorkloadInstance {
+    let n = b.scaled(1024, 32);
+    let image = b.alloc(n * n * 4);
+    let c = b.alloc(n * n * 4);
+    let dn = b.alloc(n * n * 4);
+    let ds = b.alloc(n * n * 4);
+    let row = n * 4;
+
+    for iter in 0..4u64 {
+        // Kernel 0 (srad_cuda_1): read J's neighborhood, write c + dN/dS.
+        let k0 = (iter * 2) as u16;
+        for (worker, (r0, rows)) in b.split(n).into_iter().enumerate() {
+            let cta = (worker / 4) as u32;
+            for r in r0..r0 + rows {
+                let rm = r.saturating_sub(1);
+                let rp = (r + 1).min(n - 1);
+                for g in 0..row / COALESCE_BYTES {
+                    let off = g * COALESCE_BYTES;
+                    b.load(worker, pc(k0, 0), &image, r * row + off, 1, cta, k0);
+                    b.load(worker, pc(k0, 1), &image, rm * row + off, 1, cta, k0);
+                    b.load(worker, pc(k0, 2), &image, rp * row + off, 1, cta, k0);
+                    b.store(worker, pc(k0, 3), &dn, r * row + off, 1, cta, k0);
+                    b.store(worker, pc(k0, 4), &ds, r * row + off, 1, cta, k0);
+                    b.store(worker, pc(k0, 5), &c, r * row + off, 2, cta, k0);
+                }
+            }
+        }
+        // Kernel 1 (srad_cuda_2): read c's neighborhood + dN/dS, update J.
+        let k1 = (iter * 2 + 1) as u16;
+        for (worker, (r0, rows)) in b.split(n).into_iter().enumerate() {
+            let cta = (worker / 4) as u32;
+            for r in r0..r0 + rows {
+                let rp = (r + 1).min(n - 1);
+                for g in 0..row / COALESCE_BYTES {
+                    let off = g * COALESCE_BYTES;
+                    b.load(worker, pc(k1, 0), &c, r * row + off, 1, cta, k1);
+                    b.load(worker, pc(k1, 1), &c, rp * row + off, 1, cta, k1);
+                    b.load(worker, pc(k1, 2), &dn, r * row + off, 1, cta, k1);
+                    b.load(worker, pc(k1, 3), &ds, r * row + off, 1, cta, k1);
+                    b.store(worker, pc(k1, 4), &image, r * row + off, 3, cta, k1);
+                }
+            }
+        }
+    }
+    b.finish("srad_v2")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SimConfig;
+    use crate::workloads::common::Builder;
+
+    #[test]
+    fn eight_kernel_phases() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.1));
+        let mut kernels: Vec<u16> =
+            wl.tasks.iter().flat_map(|t| t.ops.iter().map(|o| o.kernel_id)).collect();
+        kernels.sort();
+        kernels.dedup();
+        assert_eq!(kernels, vec![0, 1, 2, 3, 4, 5, 6, 7], "4 iterations x 2 kernels");
+    }
+
+    #[test]
+    fn kernel1_writes_image_kernel0_writes_c() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.1));
+        let stores = |k: u16| -> Vec<u8> {
+            let mut v: Vec<u8> = wl
+                .tasks
+                .iter()
+                .flat_map(|t| &t.ops)
+                .filter(|o| o.kernel_id == k && o.access.is_store)
+                .map(|o| o.access.array_id)
+                .collect();
+            v.sort();
+            v.dedup();
+            v
+        };
+        assert_eq!(stores(0), vec![1, 2, 3], "c, dN, dS");
+        assert_eq!(stores(1), vec![0], "image only");
+    }
+}

@@ -1,0 +1,42 @@
+//! StreamTriad — the STREAM benchmark's triad kernel
+//! (`A[i] = B[i] + s * C[i]`), the second pure-streaming workload of
+//! the paper's evaluation set (Table 10/11 only — not in the model
+//! tables). Larger working set than AddVectors, same structure.
+
+use super::common::{pc, Builder, COALESCE_BYTES};
+use super::WorkloadInstance;
+
+pub fn build(mut b: Builder) -> WorkloadInstance {
+    // 6M floats per array = 24 MB × 3.
+    let n = b.scaled(6 * 1024 * 1024, 32 * b.n_workers() as u64);
+    let a = b.alloc(n * 4);
+    let bb = b.alloc(n * 4);
+    let c = b.alloc(n * 4);
+
+    let ranges = b.split(n * 4 / COALESCE_BYTES);
+    for (worker, (start, len)) in ranges.into_iter().enumerate() {
+        let cta = (worker / 4) as u32;
+        for g in start..start + len {
+            let off = g * COALESCE_BYTES;
+            b.load(worker, pc(0, 0), &bb, off, 2, cta, 0);
+            b.load(worker, pc(0, 1), &c, off, 4, cta, 0); // fma latency
+            b.store(worker, pc(0, 2), &a, off, 2, cta, 0);
+        }
+    }
+    b.finish("streamtriad")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SimConfig;
+    use crate::workloads::common::Builder;
+
+    #[test]
+    fn loads_then_store_per_group() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.05));
+        let ops = &wl.tasks[0].ops;
+        assert!(!ops[0].access.is_store);
+        assert!(!ops[1].access.is_store);
+        assert!(ops[2].access.is_store);
+    }
+}

@@ -1,0 +1,193 @@
+//! Cross-module integration tests: full simulations over every
+//! benchmark × policy, checking the accounting invariants that the
+//! paper's metrics rest on.
+
+use uvm_prefetch::eval::runner::{run_benchmark, RunOptions};
+use uvm_prefetch::types::PAGE_SIZE;
+use uvm_prefetch::workloads::ALL_BENCHMARKS;
+
+fn quick() -> RunOptions {
+    RunOptions { scale: 0.25, max_instructions: 400_000, ..Default::default() }
+}
+
+/// Core accounting invariants that must hold for any run.
+fn check_invariants(name: &str, policy: &str, m: &uvm_prefetch::sim::Metrics) {
+    let ctx = format!("{name}/{policy}");
+    assert!(m.instructions > 0, "{ctx}: no instructions");
+    assert!(m.cycles > 0, "{ctx}: no cycles");
+    assert!(m.mem_accesses > 0, "{ctx}: no GMMU accesses");
+    // Outcome partition: every GMMU access is hit, coalesced or fault.
+    assert_eq!(
+        m.page_hits + m.coalesced + m.far_faults,
+        m.mem_accesses,
+        "{ctx}: outcome partition broken"
+    );
+    // Interconnect conservation: every byte moved is a demanded fault
+    // page or a prefetch transfer.
+    assert_eq!(m.bytes_demand, m.far_faults * PAGE_SIZE, "{ctx}: demand bytes");
+    assert_eq!(m.bytes_prefetch, m.prefetch_transfers * PAGE_SIZE, "{ctx}: prefetch bytes");
+    // Fig 11 series sums to the total traffic.
+    let series: u64 = m.pcie_series.iter().map(|&(_, b)| b).sum();
+    assert_eq!(series, m.pcie_bytes(), "{ctx}: bucket series conservation");
+    // Quality metrics are probabilities.
+    for (label, v) in [
+        ("hit", m.page_hit_rate()),
+        ("acc", m.accuracy()),
+        ("cov", m.coverage()),
+        ("unity", m.unity()),
+    ] {
+        assert!((0.0..=1.0).contains(&v), "{ctx}: {label} = {v}");
+    }
+    // Used prefetches cannot exceed issued ones.
+    assert!(m.prefetch_used <= m.prefetch_transfers, "{ctx}: used > issued");
+    // IPC bounded by the machine width (28 SMs × 1 IPC).
+    assert!(m.ipc() <= 28.0 + 1e-9, "{ctx}: ipc {}", m.ipc());
+}
+
+#[test]
+fn all_benchmarks_under_demand_paging() {
+    let opts = quick();
+    for b in ALL_BENCHMARKS {
+        let m = run_benchmark(b, "none", &opts).unwrap();
+        check_invariants(b, "none", &m);
+        assert_eq!(m.prefetch_transfers, 0, "{b}: demand paging never prefetches");
+        assert_eq!(m.coverage(), 0.0, "{b}: nothing covered without prefetch");
+    }
+}
+
+#[test]
+fn all_benchmarks_under_tree_policy() {
+    let opts = quick();
+    for b in ALL_BENCHMARKS {
+        let m = run_benchmark(b, "tree", &opts).unwrap();
+        check_invariants(b, "tree", &m);
+        assert!(m.prefetch_transfers > 0, "{b}: tree must prefetch");
+        assert!(m.coverage() > 0.5, "{b}: block transactions cover most pages: {}", m.coverage());
+    }
+}
+
+#[test]
+fn all_benchmarks_under_dl_policy_stride_fallback() {
+    let opts = quick();
+    for b in ALL_BENCHMARKS {
+        let m = run_benchmark(b, "dl", &opts).unwrap();
+        check_invariants(b, "dl", &m);
+        assert!(m.prefetch_transfers > 0, "{b}: dl prefetches at least the blocks");
+    }
+}
+
+#[test]
+fn tree_never_loses_to_demand_paging_on_faults() {
+    let opts = quick();
+    for b in ALL_BENCHMARKS {
+        let none = run_benchmark(b, "none", &opts).unwrap();
+        let tree = run_benchmark(b, "tree", &opts).unwrap();
+        assert!(
+            tree.far_faults <= none.far_faults,
+            "{b}: tree {} faults > none {}",
+            tree.far_faults,
+            none.far_faults
+        );
+    }
+}
+
+#[test]
+fn uvmsmart_equals_tree_without_pressure() {
+    // Under no oversubscription the adaptive baseline degenerates to
+    // the tree prefetcher (paper §7.1) — cycle-exact.
+    let opts = quick();
+    for b in ["atax", "hotspot", "nw"] {
+        let tree = run_benchmark(b, "tree", &opts).unwrap();
+        let uvm = run_benchmark(b, "uvmsmart", &opts).unwrap();
+        assert_eq!(tree.cycles, uvm.cycles, "{b}");
+        assert_eq!(tree.far_faults, uvm.far_faults, "{b}");
+    }
+}
+
+#[test]
+fn prediction_latency_only_hurts() {
+    // Fig 10's monotonic story: more prediction overhead can never make
+    // the DL policy faster.
+    let opts = RunOptions { scale: 0.1, max_instructions: 0, ..Default::default() };
+    let fast = uvm_prefetch::eval::runner::run_benchmark_with(
+        "pathfinder",
+        "dl",
+        &opts,
+        |mut e| {
+            e.runtime.prediction_latency_cycles = 100;
+            e
+        },
+        None,
+    )
+    .unwrap();
+    let slow = uvm_prefetch::eval::runner::run_benchmark_with(
+        "pathfinder",
+        "dl",
+        &opts,
+        |mut e| {
+            e.runtime.prediction_latency_cycles = 200_000;
+            e
+        },
+        None,
+    )
+    .unwrap();
+    assert!(slow.cycles >= fast.cycles, "slow {} < fast {}", slow.cycles, fast.cycles);
+}
+
+#[test]
+fn oversubscription_causes_evictions_and_hurts() {
+    let opts = RunOptions { scale: 0.25, max_instructions: 1_000_000, ..Default::default() };
+    let full = run_benchmark("atax", "tree", &opts).unwrap();
+    let tight = uvm_prefetch::eval::runner::run_benchmark_with(
+        "atax",
+        "tree",
+        &opts,
+        |mut e| {
+            e.sim.device_mem_bytes = 4 << 20; // 4 MB ≪ working set
+            e
+        },
+        None,
+    )
+    .unwrap();
+    assert_eq!(full.evictions, 0, "1 GiB fits the scaled working set");
+    assert!(tight.evictions > 0, "4 MB must evict");
+    assert!(tight.page_hit_rate() <= full.page_hit_rate());
+    check_invariants("atax", "tree-tight", &tight);
+}
+
+#[test]
+fn trace_gen_roundtrip_feeds_python_schema() {
+    // The CSV written by the simulator parses back with the exact
+    // column layout data.py expects.
+    use uvm_prefetch::eval::runner::run_benchmark_with;
+    use uvm_prefetch::sim::TraceWriter;
+    let dir = std::env::temp_dir().join(format!("uvm-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.csv");
+    let opts = quick();
+    let m = run_benchmark_with(
+        "nw",
+        "tree",
+        &opts,
+        |e| e,
+        Some(TraceWriter::create(&path, 10_000).unwrap()),
+    )
+    .unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut lines = text.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "cycle,pc,page,sm,warp,cta,tpc,kernel_id,array_id,miss"
+    );
+    let mut rows = 0u64;
+    for line in lines {
+        let cols: Vec<&str> = line.split(',').collect();
+        assert_eq!(cols.len(), 10);
+        let miss: u8 = cols[9].parse().unwrap();
+        assert!(miss <= 1);
+        rows += 1;
+    }
+    assert!(rows > 0 && rows <= 10_000);
+    assert!(rows <= m.mem_accesses, "trace rows bounded by GMMU accesses");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

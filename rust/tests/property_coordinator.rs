@@ -1,0 +1,161 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! history/state management), driven by seeded pseudo-random event
+//! streams — the offline stand-in for proptest, with explicit seeds so
+//! failures reproduce exactly.
+
+use uvm_prefetch::config::{BypassMode, RuntimeConfig};
+use uvm_prefetch::coordinator::{FaultEvent, PrefetchCommand, Router};
+use uvm_prefetch::predictor::batcher::{Batcher, PendingRequest};
+use uvm_prefetch::predictor::history::HistoryTable;
+use uvm_prefetch::predictor::{DeltaVocab, FeatTok, Window};
+use uvm_prefetch::types::{bb_base, AccessOrigin};
+use uvm_prefetch::util::XorShift64;
+
+fn random_event(rng: &mut XorShift64, at: u64) -> FaultEvent {
+    FaultEvent {
+        at,
+        pc: 0x1000 + rng.below(8) * 8,
+        page: rng.below(1 << 20),
+        origin: AccessOrigin {
+            sm: rng.below(28) as u16,
+            warp: rng.below(16) as u16,
+            cta: rng.below(64) as u32,
+            tpc: 0,
+            kernel_id: rng.below(2) as u16,
+        },
+        miss: rng.unit() < 0.3,
+    }
+}
+
+/// Router invariants over arbitrary event streams:
+/// * a miss always yields the 15 other pages of its basic block;
+/// * a hit never yields migrations, windows, or bypass pages;
+/// * any emitted window has exactly `history_len` tokens;
+/// * window and bypass are mutually exclusive.
+#[test]
+fn prop_router_block_and_window_invariants() {
+    for seed in 0..20u64 {
+        let mut rng = XorShift64::new(seed);
+        let vocab = DeltaVocab::synthetic((-4i64..=4).filter(|&d| d != 0).collect(), 10);
+        let rcfg = RuntimeConfig {
+            history_len: 10,
+            bypass: BypassMode::Auto,
+            bypass_convergence: 0.9,
+            ..Default::default()
+        };
+        let mut router = Router::new(vocab, &rcfg);
+        for i in 0..2_000u64 {
+            let ev = random_event(&mut rng, i);
+            let out = router.route(&ev);
+            if ev.miss {
+                assert_eq!(out.block.len(), 15, "seed {seed}: block minus fault page");
+                let bb = bb_base(ev.page);
+                assert!(out.block.iter().all(|&p| p >= bb && p < bb + 16 && p != ev.page));
+                assert!(
+                    !(out.window.is_some() && out.bypass_page.is_some()),
+                    "seed {seed}: window and bypass are exclusive"
+                );
+                if let Some((_k, w)) = &out.window {
+                    assert_eq!(w.tokens.len(), 10, "seed {seed}");
+                }
+            } else {
+                assert!(out.block.is_empty(), "seed {seed}: hits migrate nothing");
+                assert!(out.window.is_none() && out.bypass_page.is_none(), "seed {seed}");
+            }
+        }
+    }
+}
+
+/// Batcher conservation: every pushed request comes back out exactly
+/// once (full flush, age flush or final flush) and in FIFO order.
+#[test]
+fn prop_batcher_conserves_requests() {
+    for seed in 0..20u64 {
+        let mut rng = XorShift64::new(seed ^ 0xb47c);
+        let batch_size = 1 + (seed as usize % 7);
+        let mut b = Batcher::new(batch_size, 50);
+        let mut pushed = Vec::new();
+        let mut popped = Vec::new();
+        let mut now = 0u64;
+        for i in 0..1_000u64 {
+            now += rng.below(20);
+            if rng.unit() < 0.7 {
+                let req = PendingRequest {
+                    window: Window {
+                        tokens: vec![FeatTok { pc_id: i as i32, page_id: 0, delta_id: 0 }],
+                    },
+                    anchor_page: i,
+                    enqueued_at: now,
+                };
+                pushed.push(i);
+                if let Some(batch) = b.push(req) {
+                    popped.extend(batch.iter().map(|r| r.anchor_page));
+                }
+            } else if let Some(batch) = b.poll(now) {
+                popped.extend(batch.iter().map(|r| r.anchor_page));
+            }
+        }
+        if let Some(batch) = b.flush() {
+            popped.extend(batch.iter().map(|r| r.anchor_page));
+        }
+        assert_eq!(popped, pushed, "seed {seed}: FIFO conservation");
+        assert!(b.is_empty());
+    }
+}
+
+/// History-table state bounds: window length never exceeds capacity,
+/// first push of a cluster yields no delta, convergence ∈ (0, 1].
+#[test]
+fn prop_history_bounds() {
+    for seed in 0..20u64 {
+        let mut rng = XorShift64::new(seed ^ 0x415);
+        let cap = 1 + (seed as usize % 31);
+        let mut h: HistoryTable<u64> = HistoryTable::new(cap);
+        let mut firsts = std::collections::HashSet::new();
+        for i in 0..3_000u64 {
+            let key = rng.below(8);
+            let tok = h.push(key, 0x10, rng.below(10_000), i);
+            if firsts.insert(key) {
+                assert!(tok.is_none(), "seed {seed}: first push has no delta");
+            }
+            let c = h.get(&key).unwrap();
+            assert!(c.len() <= cap, "seed {seed}");
+            if let Some((_, conv)) = c.dominant_delta() {
+                assert!(conv > 0.0 && conv <= 1.0, "seed {seed}: conv {conv}");
+            }
+        }
+    }
+}
+
+/// End-to-end service conservation: one Migrate command per miss, and
+/// predicted pages only after windows fill; nothing is emitted for
+/// hit-only streams.
+#[test]
+fn prop_service_migrates_once_per_miss() {
+    use uvm_prefetch::coordinator::CoordinatorService;
+    use uvm_prefetch::predictor::ConstantBackend;
+
+    for seed in 0..5u64 {
+        let mut rng = XorShift64::new(seed ^ 0x5e2);
+        let vocab = DeltaVocab::synthetic(vec![1, 2], 5);
+        let rcfg = RuntimeConfig {
+            history_len: 5,
+            batch_size: 4,
+            bypass: BypassMode::Never,
+            ..Default::default()
+        };
+        let router = Router::new(vocab.clone(), &rcfg);
+        let backend = Box::new(ConstantBackend { class: 0, n_classes: vocab.n_classes() });
+        let handle = CoordinatorService::spawn(router, backend, &rcfg);
+        let mut misses = 0u64;
+        for i in 0..500u64 {
+            let ev = random_event(&mut rng, i);
+            misses += ev.miss as u64;
+            handle.faults_tx.send(ev).unwrap();
+        }
+        let cmds = handle.shutdown();
+        let migrates =
+            cmds.iter().filter(|c| matches!(c, PrefetchCommand::Migrate(_))).count() as u64;
+        assert_eq!(migrates, misses, "seed {seed}");
+    }
+}
