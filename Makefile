@@ -1,0 +1,48 @@
+# Single entry points shared by CI and humans (DESIGN.md §5).
+#
+#   make build       release build of the workspace
+#   make test        tier-1 verify: cargo build --release && cargo test -q
+#   make lint        rustfmt check + clippy with warnings denied
+#   make eval-smoke  small parallel all-benchmark sweep → BENCH_eval.json
+#   make eval        full paper-regime sweep (scale 4.0, 2M instructions)
+#   make artifacts   trace-gen + JAX AOT export (needs python + jax)
+
+CARGO ?= cargo
+PYTHON ?= python
+
+.PHONY: build test lint fmt clippy eval-smoke eval artifacts clean
+
+build:
+	$(CARGO) build --release
+
+# The repo's tier-1 verify (ROADMAP.md).
+test:
+	$(CARGO) build --release
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --all --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+lint: fmt clippy
+
+# Fast sweep for CI smoke: tiny scale + instruction cap, stride
+# fallback (no PJRT artifacts needed). Produces BENCH_eval.json.
+eval-smoke:
+	$(CARGO) run --release --bin repro -- eval summary --no-pjrt \
+		--scale 0.25 --max-instructions 200000 --out results-smoke
+
+# Full paper-regime sweep (Tables 10/11 + headline summary).
+eval:
+	$(CARGO) run --release --bin repro -- eval all --no-pjrt
+
+# Layer 2/1: train + AOT-export the predictor models from fresh traces.
+artifacts:
+	$(CARGO) run --release --bin repro -- trace-gen --out traces
+	cd python && $(PYTHON) -m compile.aot --traces ../traces --out ../artifacts
+
+clean:
+	$(CARGO) clean
+	rm -rf results results-smoke traces BENCH_eval.json

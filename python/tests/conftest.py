@@ -1,6 +1,14 @@
 """Shared fixtures: synthetic traces shaped like `repro trace-gen`
 output (so the python pipeline is testable without the Rust binary)."""
 
+import pathlib
+import sys
+
+# The test modules import the `compile` package; make the suite
+# runnable from the repo root (CI: `python -m pytest python/tests`)
+# as well as from `python/`.
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
 import numpy as np
 import pytest
 

@@ -2,8 +2,8 @@
 //! batched model execution — the quantity the paper's §7.3 latency
 //! sensitivity is about. The paper assumes 1 µs/prediction on
 //! datacenter hardware (TensorRT-class); we report what the CPU PJRT
-//! path actually costs per batch and per prediction, which EXPERIMENTS
-//! §Perf compares against the simulated budget.
+//! path actually costs per batch and per prediction, which DESIGN.md
+//! §6 compares against the simulated budget.
 
 use std::path::Path;
 use std::time::Duration;

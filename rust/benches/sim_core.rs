@@ -16,9 +16,11 @@ use uvm_prefetch::util::bench::{black_box, Bench};
 use uvm_prefetch::workloads;
 
 fn sim_run(prefetcher: &str, max_insts: u64) -> u64 {
-    let mut exp = ExperimentConfig::default();
-    exp.benchmark = "atax".into();
-    exp.max_instructions = max_insts;
+    let exp = ExperimentConfig {
+        benchmark: "atax".into(),
+        max_instructions: max_insts,
+        ..Default::default()
+    };
     let wl = workloads::build("atax", &exp.sim, 1, 0.25).unwrap();
     let pf: Box<dyn uvm_prefetch::prefetch::Prefetcher> = match prefetcher {
         "none" => Box::new(NonePrefetcher),

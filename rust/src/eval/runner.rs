@@ -13,9 +13,8 @@ use crate::runtime::{Manifest, ModelExecutable, PjrtBackend};
 use crate::sim::{Metrics, Simulator, TraceWriter};
 use crate::types::PageNum;
 use crate::workloads;
-use std::cell::RefCell;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// Knobs shared by all eval entry points.
 #[derive(Debug, Clone)]
@@ -48,12 +47,30 @@ impl Default for RunOptions {
     }
 }
 
+/// Deterministic per-cell workload seed: a stable FNV-1a hash of the
+/// benchmark name folded into the base seed through a splitmix64
+/// finalizer. Every policy over the same benchmark sees the *identical*
+/// generated workload (the Tables 10/11 U-vs-R comparison requires it),
+/// while distinct benchmarks draw independent streams — and the value
+/// depends on nothing but `(base, benchmark)`, so serial and parallel
+/// sweeps agree bit-for-bit.
+pub fn workload_seed(base: u64, benchmark: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in benchmark.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut z = base ^ h;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
 impl RunOptions {
     pub fn experiment(&self, benchmark: &str, prefetcher: &str) -> ExperimentConfig {
         let mut exp = ExperimentConfig::default();
         exp.benchmark = benchmark.to_string();
         exp.max_instructions = self.max_instructions;
-        exp.seed = self.seed;
+        exp.seed = workload_seed(self.seed, benchmark);
         exp.runtime.prefetcher = prefetcher.to_string();
         if !self.artifacts.is_empty() {
             exp.runtime.backend = PredictorBackendKind::Pjrt {
@@ -65,9 +82,12 @@ impl RunOptions {
     }
 }
 
-/// Records the far-fault page order (for the oracle's replay).
+/// Records the far-fault page order (for the oracle's replay). The
+/// shared handle is `Arc<Mutex<…>>` so the recording pass stays
+/// entirely inside one sweep cell while the policy remains `Send`;
+/// the lock is uncontended (one simulator thread ever touches it).
 struct RecordingPrefetcher {
-    order: Rc<RefCell<Vec<PageNum>>>,
+    order: Arc<Mutex<Vec<PageNum>>>,
 }
 
 impl Prefetcher for RecordingPrefetcher {
@@ -75,7 +95,7 @@ impl Prefetcher for RecordingPrefetcher {
         "recording"
     }
     fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
-        self.order.borrow_mut().push(fault.page);
+        self.order.lock().expect("recording order lock").push(fault.page);
         PrefetchDecision::default()
     }
 }
@@ -119,9 +139,13 @@ pub fn build_dl_prefetcher(
     }
 }
 
-/// Build any prefetcher by name.
+/// Build any prefetcher by name. `scale` feeds the oracle's recording
+/// pass, which regenerates the workload (the config struct has no
+/// scale field — `RunOptions` carries it, and each cell passes its own
+/// value, so concurrent cells never share state).
 pub fn build_prefetcher(
     exp: &ExperimentConfig,
+    scale: f64,
 ) -> anyhow::Result<Box<dyn Prefetcher>> {
     let rcfg = &exp.runtime;
     Ok(match rcfg.prefetcher.as_str() {
@@ -136,26 +160,18 @@ pub fn build_prefetcher(
         "dl" => Box::new(build_dl_prefetcher(rcfg, &exp.benchmark)?),
         "oracle" => {
             // Recording pass first (same workload, demand paging).
-            let order = Rc::new(RefCell::new(Vec::new()));
-            let wl = workloads::build(&exp.benchmark, &exp.sim, exp.seed, scale_of(exp))?;
+            let order = Arc::new(Mutex::new(Vec::new()));
+            let wl = workloads::build(&exp.benchmark, &exp.sim, exp.seed, scale)?;
             let rec = RecordingPrefetcher { order: order.clone() };
             let _ = Simulator::new(exp, wl, Box::new(rec), None).run();
-            let order = Rc::try_unwrap(order).map_err(|_| anyhow::anyhow!("order still shared"))?;
-            Box::new(OraclePrefetcher::new(order.into_inner(), 64))
+            let order = Arc::try_unwrap(order)
+                .map_err(|_| anyhow::anyhow!("order still shared"))?
+                .into_inner()
+                .expect("recording order lock");
+            Box::new(OraclePrefetcher::new(order, 64))
         }
         other => anyhow::bail!("unknown prefetcher '{other}'"),
     })
-}
-
-thread_local! {
-    /// Workload scale plumbed to `build_prefetcher`'s oracle recording
-    /// pass (the config struct has no scale field — RunOptions carries
-    /// it).
-    static SCALE: std::cell::Cell<f64> = const { std::cell::Cell::new(1.0) };
-}
-
-fn scale_of(_exp: &ExperimentConfig) -> f64 {
-    SCALE.with(|s| s.get())
 }
 
 /// Run one benchmark under one policy.
@@ -176,10 +192,9 @@ pub fn run_benchmark_with(
     tweak: impl FnOnce(ExperimentConfig) -> ExperimentConfig,
     trace: Option<TraceWriter>,
 ) -> anyhow::Result<Metrics> {
-    SCALE.with(|s| s.set(opts.scale));
     let exp = tweak(opts.experiment(benchmark, prefetcher));
     let wl = workloads::build(benchmark, &exp.sim, exp.seed, opts.scale)?;
-    let pf = build_prefetcher(&exp)?;
+    let pf = build_prefetcher(&exp, opts.scale)?;
     Ok(Simulator::new(&exp, wl, pf, trace).run())
 }
 

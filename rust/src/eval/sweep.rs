@@ -1,0 +1,300 @@
+//! Parallel sweep executor for the paper-eval harness.
+//!
+//! A *cell* is one `(benchmark, prefetcher)` simulation — the unit of
+//! Tables 10/11 and Figures 10/12. Cells are fully self-contained:
+//! each worker thread builds its own workload, prefetcher and
+//! simulator from a plain-data [`CellSpec`] (`Send + Sync`), so no
+//! predictor state is ever shared across cells. Per-cell workload
+//! seeds come from [`crate::eval::runner::workload_seed`], a pure function of
+//! `(base seed, benchmark)`, which makes parallel execution
+//! bit-identical to serial execution regardless of scheduling order —
+//! the `rust/tests/determinism.rs` suite asserts exactly that.
+//!
+//! Scheduling is work-stealing in the simplest possible form: workers
+//! race on an atomic cursor over the cell list, so a thread that
+//! finishes a cheap streaming cell immediately steals the next pending
+//! cell from the slower ones (the 11-benchmark suite is heavily
+//! skewed: the matvec column sweeps cost several times a streaming
+//! kernel). Results are re-ordered by cell index before they are
+//! merged into the [`Table`](crate::eval::report::Table) machinery.
+
+use crate::eval::runner::{run_benchmark_with, RunOptions};
+use crate::sim::Metrics;
+use crate::util::Json;
+use crate::workloads::ALL_BENCHMARKS;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Every policy of the full paper sweep (`repro eval summary`).
+pub const SWEEP_PREFETCHERS: &[&str] = &["none", "stride", "tree", "uvmsmart", "oracle", "dl"];
+
+/// One self-contained simulation cell (plain data, `Send + Sync`).
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    pub benchmark: String,
+    pub prefetcher: String,
+    pub opts: RunOptions,
+    /// Optional prediction-latency override in µs (the Fig. 10 sweep).
+    pub prediction_us: Option<f64>,
+}
+
+impl CellSpec {
+    pub fn new(benchmark: &str, prefetcher: &str, opts: &RunOptions) -> Self {
+        Self {
+            benchmark: benchmark.to_string(),
+            prefetcher: prefetcher.to_string(),
+            opts: opts.clone(),
+            prediction_us: None,
+        }
+    }
+
+    pub fn with_prediction_us(mut self, us: f64) -> Self {
+        self.prediction_us = Some(us);
+        self
+    }
+
+    /// Run the cell to completion on the calling thread.
+    pub fn run(&self) -> anyhow::Result<Metrics> {
+        let us = self.prediction_us;
+        run_benchmark_with(
+            &self.benchmark,
+            &self.prefetcher,
+            &self.opts,
+            move |mut e| {
+                if let Some(us) = us {
+                    e.runtime.prediction_latency_cycles = e.sim.us_to_cycles(us);
+                }
+                e
+            },
+            None,
+        )
+    }
+}
+
+/// A finished cell with its wall-clock cost.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub benchmark: String,
+    pub prefetcher: String,
+    pub metrics: Metrics,
+    pub wall: Duration,
+}
+
+/// A finished sweep: results in cell order plus timing telemetry.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    pub cells: Vec<CellResult>,
+    /// Wall-clock of the whole sweep (parallel elapsed time).
+    pub wall: Duration,
+    pub threads: usize,
+}
+
+impl SweepOutcome {
+    /// Serial-execution estimate: the sum of per-cell wall times (what
+    /// one thread running the same cells back-to-back would cost).
+    pub fn serial_wall(&self) -> Duration {
+        self.cells.iter().map(|c| c.wall).sum()
+    }
+
+    /// Measured speedup of the parallel sweep over the serial estimate.
+    pub fn speedup_vs_serial(&self) -> f64 {
+        let par = self.wall.as_secs_f64();
+        if par <= 0.0 {
+            0.0
+        } else {
+            self.serial_wall().as_secs_f64() / par
+        }
+    }
+
+    /// All results for one policy, in benchmark order of appearance.
+    pub fn by_prefetcher(&self, prefetcher: &str) -> Vec<&CellResult> {
+        self.cells.iter().filter(|c| c.prefetcher == prefetcher).collect()
+    }
+}
+
+/// Worker-thread count: `UVM_SWEEP_THREADS` overrides, else the
+/// machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("UVM_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// The full 11-workload × 6-policy grid behind `repro eval summary`.
+///
+/// Cells are ordered *policy-major* on purpose: the work-stealing
+/// cursor hands adjacent cells to different workers, and a
+/// benchmark-major order would run all six cells of the same heavy
+/// workload (conv2d/srad materialize hundreds of MB of warp ops each)
+/// concurrently. Policy-major order spreads the heavyweights across
+/// the sweep, bounding peak memory at roughly one copy of each big
+/// workload instead of `threads` copies of the biggest.
+pub fn full_sweep_cells(opts: &RunOptions) -> Vec<CellSpec> {
+    SWEEP_PREFETCHERS
+        .iter()
+        .flat_map(|p| ALL_BENCHMARKS.iter().map(move |b| CellSpec::new(b, p, opts)))
+        .collect()
+}
+
+/// Run `cells` on `threads` workers (1 = the serial path, same code).
+/// The first cell error stops workers from *starting* further cells
+/// (in-flight cells finish) and is returned after the pool drains;
+/// results come back in cell order, independent of which worker ran
+/// what.
+pub fn sweep(cells: &[CellSpec], threads: usize) -> anyhow::Result<SweepOutcome> {
+    let threads = threads.max(1).min(cells.len().max(1));
+    let t0 = Instant::now();
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<Metrics>, Duration)>();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let failed = &failed;
+            s.spawn(move || loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let c0 = Instant::now();
+                let res = cells[i].run();
+                if res.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                if tx.send((i, res, c0.elapsed())).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+
+    let mut slots: Vec<Option<(anyhow::Result<Metrics>, Duration)>> =
+        (0..cells.len()).map(|_| None).collect();
+    for (i, res, wall) in rx {
+        slots[i] = Some((res, wall));
+    }
+    // Surface the actual cell failure (if any) before complaining
+    // about cells that were skipped because of it.
+    for (spec, slot) in cells.iter().zip(&slots) {
+        if let Some((Err(e), _)) = slot {
+            anyhow::bail!("{}/{}: {e}", spec.benchmark, spec.prefetcher);
+        }
+    }
+    let mut out = Vec::with_capacity(cells.len());
+    for (spec, slot) in cells.iter().zip(slots) {
+        let (res, wall) = slot.ok_or_else(|| {
+            anyhow::anyhow!("cell {}/{} never ran", spec.benchmark, spec.prefetcher)
+        })?;
+        let metrics =
+            res.map_err(|e| anyhow::anyhow!("{}/{}: {e}", spec.benchmark, spec.prefetcher))?;
+        out.push(CellResult {
+            benchmark: spec.benchmark.clone(),
+            prefetcher: spec.prefetcher.clone(),
+            metrics,
+            wall,
+        });
+    }
+    Ok(SweepOutcome { cells: out, wall: t0.elapsed(), threads })
+}
+
+/// Machine-readable sweep telemetry (`BENCH_eval.json` schema v1):
+/// per-cell wall-clock + headline metrics, total sweep wall, and the
+/// measured speedup over the serial estimate — the perf trajectory
+/// record tracked from PR 1 onward.
+pub fn bench_eval_json(o: &SweepOutcome) -> Json {
+    let cells = o.cells.iter().map(|c| {
+        Json::obj(vec![
+            ("benchmark", Json::str(&c.benchmark)),
+            ("prefetcher", Json::str(&c.prefetcher)),
+            ("wall_ms", Json::Num(c.wall.as_secs_f64() * 1e3)),
+            ("instructions", Json::Num(c.metrics.instructions as f64)),
+            ("cycles", Json::Num(c.metrics.cycles as f64)),
+            ("ipc", Json::Num(c.metrics.ipc())),
+            ("page_hit_rate", Json::Num(c.metrics.page_hit_rate())),
+            ("far_faults", Json::Num(c.metrics.far_faults as f64)),
+            ("pcie_bytes", Json::Num(c.metrics.pcie_bytes() as f64)),
+            ("unity", Json::Num(c.metrics.unity())),
+        ])
+    });
+    Json::obj(vec![
+        ("schema", Json::str("bench_eval/v1")),
+        ("threads", Json::Num(o.threads as f64)),
+        ("n_cells", Json::Num(o.cells.len() as f64)),
+        ("total_wall_ms", Json::Num(o.wall.as_secs_f64() * 1e3)),
+        ("serial_wall_ms_estimate", Json::Num(o.serial_wall().as_secs_f64() * 1e3)),
+        ("speedup_vs_serial_estimate", Json::Num(o.speedup_vs_serial())),
+        ("cells", Json::arr(cells)),
+    ])
+}
+
+/// Write `BENCH_eval.json` for a finished sweep.
+pub fn write_bench_eval(o: &SweepOutcome, path: &Path) -> anyhow::Result<()> {
+    bench_eval_json(o).write_file(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> RunOptions {
+        RunOptions { scale: 0.05, max_instructions: 30_000, ..Default::default() }
+    }
+
+    #[test]
+    fn sweep_preserves_cell_order() {
+        let opts = tiny();
+        let cells = vec![
+            CellSpec::new("addvectors", "none", &opts),
+            CellSpec::new("atax", "tree", &opts),
+            CellSpec::new("addvectors", "tree", &opts),
+        ];
+        let o = sweep(&cells, 3).unwrap();
+        let order: Vec<(String, String)> =
+            o.cells.iter().map(|c| (c.benchmark.clone(), c.prefetcher.clone())).collect();
+        assert_eq!(
+            order,
+            vec![
+                ("addvectors".into(), "none".into()),
+                ("atax".into(), "tree".into()),
+                ("addvectors".into(), "tree".into()),
+            ]
+        );
+        assert!(o.cells.iter().all(|c| c.metrics.instructions > 0));
+    }
+
+    #[test]
+    fn sweep_surfaces_cell_errors() {
+        let opts = tiny();
+        let cells = vec![
+            CellSpec::new("addvectors", "none", &opts),
+            CellSpec::new("addvectors", "bogus-policy", &opts),
+        ];
+        let err = sweep(&cells, 2).unwrap_err().to_string();
+        assert!(err.contains("bogus-policy"), "{err}");
+    }
+
+    #[test]
+    fn full_grid_is_11_by_6() {
+        let cells = full_sweep_cells(&tiny());
+        assert_eq!(cells.len(), 11 * 6);
+    }
+
+    #[test]
+    fn bench_json_has_schema_and_cells() {
+        let opts = tiny();
+        let o = sweep(&[CellSpec::new("addvectors", "none", &opts)], 1).unwrap();
+        let j = bench_eval_json(&o);
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("bench_eval/v1"));
+        assert_eq!(j.get("cells").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+        assert!(j.get("speedup_vs_serial_estimate").and_then(Json::as_f64).is_some());
+    }
+}

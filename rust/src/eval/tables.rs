@@ -2,20 +2,47 @@
 //!
 //! Each function prints the paper-shaped rows and writes a CSV under
 //! `out/`. The paper's own numbers are quoted in doc comments so
-//! EXPERIMENTS.md can record paper-vs-measured side by side.
+//! DESIGN.md §5 can record paper-vs-measured side by side.
 
 use crate::eval::report::{f, Table};
-use crate::eval::runner::{run_benchmark, run_benchmark_with, run_pair, BenchPair, RunOptions};
+use crate::eval::runner::{run_pair, BenchPair, RunOptions};
+use crate::eval::sweep::{self, CellSpec};
 use crate::util::geomean;
 use crate::workloads::ALL_BENCHMARKS;
 use std::path::Path;
 
+/// U-vs-R pairs for every benchmark, computed as one parallel sweep
+/// over the 11 × {uvmsmart, dl} cell grid. Policy-major cell order
+/// (all U cells, then all R cells) keeps concurrent workers on
+/// *different* benchmarks, bounding peak workload memory.
 fn pairs(opts: &RunOptions) -> anyhow::Result<Vec<BenchPair>> {
-    ALL_BENCHMARKS
+    let cells: Vec<CellSpec> = ["uvmsmart", "dl"]
+        .into_iter()
+        .flat_map(|p| ALL_BENCHMARKS.iter().map(move |b| CellSpec::new(b, p, opts)))
+        .collect();
+    let threads = sweep::default_threads();
+    eprintln!("eval: running {} cells on {threads} threads…", cells.len());
+    let outcome = sweep::sweep(&cells, threads)?;
+    Ok(pairs_from(&outcome))
+}
+
+/// Zip a sweep's `uvmsmart` and `dl` cells into U-vs-R pairs. Both
+/// policy slices come back in `ALL_BENCHMARKS` order (the sweep
+/// preserves cell order), so pairing is positional.
+fn pairs_from(outcome: &sweep::SweepOutcome) -> Vec<BenchPair> {
+    let u_cells = outcome.by_prefetcher("uvmsmart");
+    let r_cells = outcome.by_prefetcher("dl");
+    debug_assert_eq!(u_cells.len(), r_cells.len());
+    u_cells
         .iter()
-        .map(|b| {
-            eprintln!("eval: running pair for {b}…");
-            run_pair(b, opts)
+        .zip(&r_cells)
+        .map(|(u, r)| {
+            debug_assert_eq!(u.benchmark, r.benchmark);
+            BenchPair {
+                name: u.benchmark.clone(),
+                u: u.metrics.clone(),
+                r: r.metrics.clone(),
+            }
         })
         .collect()
 }
@@ -100,22 +127,28 @@ pub fn fig10(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
         "Figure 10 — normalized IPC vs prediction overhead (R / U)",
         &["benchmark", "1us", "2us", "5us", "10us"],
     );
+    // One parallel sweep over (1 baseline + 4 latency points) × 11,
+    // in wave-major order (all baselines, then all 1 µs cells, …) so
+    // concurrent workers stay on different benchmarks (peak memory).
+    let n = ALL_BENCHMARKS.len();
+    let mut specs: Vec<CellSpec> = ALL_BENCHMARKS
+        .iter()
+        .map(|b| CellSpec::new(b, "uvmsmart", opts))
+        .collect();
+    for &us in &latencies_us {
+        specs.extend(
+            ALL_BENCHMARKS
+                .iter()
+                .map(|b| CellSpec::new(b, "dl", opts).with_prediction_us(us)),
+        );
+    }
+    let outcome = sweep::sweep(&specs, sweep::default_threads())?;
     let mut per_lat: Vec<Vec<f64>> = vec![Vec::new(); latencies_us.len()];
-    for b in ALL_BENCHMARKS {
-        eprintln!("fig10: {b}…");
-        let u = run_benchmark(b, "uvmsmart", opts)?;
+    for (bi, b) in ALL_BENCHMARKS.iter().enumerate() {
+        let u = &outcome.cells[bi].metrics;
         let mut cells = vec![b.to_string()];
-        for (i, us) in latencies_us.iter().enumerate() {
-            let r = run_benchmark_with(
-                b,
-                "dl",
-                opts,
-                |mut e| {
-                    e.runtime.prediction_latency_cycles = e.sim.us_to_cycles(*us);
-                    e
-                },
-                None,
-            )?;
+        for i in 0..latencies_us.len() {
+            let r = &outcome.cells[(i + 1) * n + bi].metrics;
             let norm = r.ipc() / u.ipc();
             per_lat[i].push(norm);
             cells.push(f(norm, 3));
@@ -196,8 +229,33 @@ pub fn fig12(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
 
 /// **Headline summary** (§7.4/§7.5/§7.6): IPC +10.89 % geomean, hit
 /// rate 89.02 % vs 76.10 %, PCIe −11.05 %, unity 0.90 vs 0.85.
+///
+/// Runs the full 11-workload × 6-policy grid as one parallel sweep and
+/// writes `BENCH_eval.json` (per-cell wall-clock, total sweep time,
+/// speedup vs the serial estimate) next to the CSVs and at the
+/// workspace root, so the perf trajectory is tracked per PR.
 pub fn summary(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
-    let pairs = pairs(opts)?;
+    let cells = sweep::full_sweep_cells(opts);
+    let threads = sweep::default_threads();
+    eprintln!("eval summary: running {} cells on {threads} threads…", cells.len());
+    let outcome = sweep::sweep(&cells, threads)?;
+    sweep::write_bench_eval(&outcome, &out.join("BENCH_eval.json"))?;
+    // Also drop a copy in the process CWD (the workspace root when run
+    // via `make`/`cargo run`) — the per-PR perf-trajectory record.
+    // Best-effort: an unwritable CWD must not fail the sweep.
+    if let Err(e) = sweep::write_bench_eval(&outcome, Path::new("BENCH_eval.json")) {
+        eprintln!("eval summary: could not write ./BENCH_eval.json: {e}");
+    }
+    eprintln!(
+        "eval summary: {} cells in {:.1} s on {} threads (serial estimate {:.1} s, speedup {:.2}×)",
+        outcome.cells.len(),
+        outcome.wall.as_secs_f64(),
+        outcome.threads,
+        outcome.serial_wall().as_secs_f64(),
+        outcome.speedup_vs_serial(),
+    );
+
+    let pairs = pairs_from(&outcome);
     let ipc_ratio: Vec<f64> = pairs.iter().map(|p| p.r.ipc() / p.u.ipc()).collect();
     let pcie_ratio: Vec<f64> =
         pairs.iter().map(|p| p.r.pcie_bytes() as f64 / p.u.pcie_bytes() as f64).collect();
@@ -230,6 +288,16 @@ pub fn summary(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
         "unity U / R (mean)".into(),
         "0.85 / 0.90".into(),
         format!("{:.2} / {:.2}", mean(&unity_u), mean(&unity_r)),
+    ]);
+    t.row(vec![
+        "sweep wall (parallel)".into(),
+        "—".into(),
+        format!("{:.1} s on {} threads", outcome.wall.as_secs_f64(), outcome.threads),
+    ]);
+    t.row(vec![
+        "sweep speedup vs serial (est.)".into(),
+        "—".into(),
+        format!("{:.2}×", outcome.speedup_vs_serial()),
     ]);
     t.write_csv(&out.join("summary.csv"))?;
     Ok(t)

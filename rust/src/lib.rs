@@ -22,8 +22,19 @@
 //! Python runs only at build time (`make artifacts`); the request path
 //! is pure Rust executing the AOT HLO through PJRT ([`runtime`]).
 //!
-//! See `DESIGN.md` for the full inventory and the per-table/figure
-//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured.
+//! See `DESIGN.md` (repo root) for the module inventory, the
+//! per-table/figure experiment index, and the paper-vs-measured notes.
+
+// Crate-wide lint posture for `clippy -- -D warnings` (CI): the three
+// allows below are deliberate idioms, not oversights — the in-tree
+// `Json` serializer exposes an inherent `to_string` (no Display on
+// purpose: serialization is not display), the workload builders take
+// flat argument lists mirroring the CUDA-kernel signatures they
+// transcribe, and configs are built by mutating `::default()` so every
+// field keeps its documented default unless overridden.
+#![allow(clippy::inherent_to_string)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::field_reassign_with_default)]
 
 pub mod config;
 pub mod coordinator;

@@ -72,8 +72,10 @@ pub struct PrefetchTelemetry {
     pub finetune_rounds: u64,
 }
 
-/// A prefetching policy. Implementations must be deterministic.
-pub trait Prefetcher {
+/// A prefetching policy. Implementations must be deterministic, and
+/// `Send` so a whole simulation cell (workload + policy + simulator)
+/// can run as a self-contained job on a sweep worker thread.
+pub trait Prefetcher: Send {
     fn name(&self) -> &'static str;
 
     /// Called on every far-fault (page absent, migration initiated).

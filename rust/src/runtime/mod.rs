@@ -19,6 +19,14 @@
 
 pub mod manifest;
 pub mod params;
+/// Real PJRT bindings (needs the `xla` crate and a local XLA build —
+/// see DESIGN.md §4); compiled only with `--features pjrt`.
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+/// API-compatible stub: loading a model reports that the binary was
+/// built without PJRT, and callers degrade to the stride backend.
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use manifest::{Manifest, ModelEntry};

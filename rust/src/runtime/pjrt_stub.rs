@@ -1,0 +1,103 @@
+//! Stub PJRT runtime, compiled when the `pjrt` cargo feature is off
+//! (the default — the real path in `pjrt.rs` binds to the `xla` crate,
+//! which needs a local XLA build that offline/CI environments lack).
+//!
+//! The stub mirrors the public API of the real module exactly, so
+//! every caller (the `repro` binary, the eval runner, benches, tests)
+//! compiles unchanged; any attempt to actually load or execute a model
+//! fails with a descriptive error, and the eval paths fall back to the
+//! pure-Rust stride backend (`--no-pjrt`).
+
+use crate::predictor::{ClassId, LabelledWindow, PredictorBackend, Window};
+use crate::runtime::manifest::ModelEntry;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "built without the `pjrt` feature — PJRT execution unavailable; \
+     rebuild with `--features pjrt` (needs the xla crate, see DESIGN.md §4) \
+     or run with `--no-pjrt` for the stride fallback";
+
+/// Stand-in for the PJRT CPU client wrapper.
+pub struct PjrtRuntime {
+    _private: (),
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stand-in for a compiled model with device-resident parameters.
+/// Field layout mirrors the real `ModelExecutable` so telemetry call
+/// sites compile; instances cannot be constructed (loads always fail).
+pub struct ModelExecutable {
+    pub batch: usize,
+    pub train_batch: usize,
+    pub seq_len: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub stored_param_bytes: u64,
+    pub infer_calls: u64,
+    pub train_calls: u64,
+    pub infer_wall_ns: u64,
+}
+
+impl ModelExecutable {
+    pub fn load(_dir: &Path, _entry: &ModelEntry) -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn load_with_runtime(_rt: &PjrtRuntime, _dir: &Path, _entry: &ModelEntry) -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn has_train(&self) -> bool {
+        false
+    }
+
+    pub fn infer(&mut self, _tokens: &[i32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn train_step(&mut self, _tokens: &[i32], _labels: &[i32]) -> Result<f32> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn mean_infer_us(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Stand-in [`PredictorBackend`] over a [`ModelExecutable`].
+pub struct PjrtBackend {
+    pub model: ModelExecutable,
+    pub arch: String,
+}
+
+impl PjrtBackend {
+    pub fn new(model: ModelExecutable, arch: String) -> Self {
+        Self { model, arch }
+    }
+}
+
+impl PredictorBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+
+    fn predict(&mut self, windows: &[Window]) -> Vec<ClassId> {
+        // Unreachable in practice (no ModelExecutable can be built),
+        // but degrade to OOV like the real backend does on error.
+        vec![self.model.n_classes.saturating_sub(1) as ClassId; windows.len()]
+    }
+
+    fn finetune(&mut self, _batch: &[LabelledWindow]) -> Option<f64> {
+        None
+    }
+
+    fn n_classes(&self) -> usize {
+        self.model.n_classes
+    }
+}

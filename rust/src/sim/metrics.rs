@@ -26,7 +26,7 @@
 
 use crate::types::Cycle;
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Metrics {
     // --- SM side ---
     pub instructions: u64,

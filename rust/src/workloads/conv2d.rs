@@ -15,20 +15,20 @@ pub fn build(mut b: Builder) -> WorkloadInstance {
 
     // Polybench drives the kernel from a timing loop — 3 invocations.
     for rep in 0..3u16 {
-    for (worker, (r0, rows)) in b.split(n).into_iter().enumerate() {
-        let cta = (worker / 4) as u32;
-        for r in r0..r0 + rows {
-            let rm = r.saturating_sub(1);
-            let rp = (r + 1).min(n - 1);
-            for g in 0..row / COALESCE_BYTES {
-                let off = g * COALESCE_BYTES;
-                b.load(worker, pc(rep, 0), &input, rm * row + off, 1, cta, rep);
-                b.load(worker, pc(rep, 1), &input, r * row + off, 1, cta, rep);
-                b.load(worker, pc(rep, 2), &input, rp * row + off, 2, cta, rep);
-                b.store(worker, pc(rep, 3), &output, r * row + off, 3, cta, rep);
+        for (worker, (r0, rows)) in b.split(n).into_iter().enumerate() {
+            let cta = (worker / 4) as u32;
+            for r in r0..r0 + rows {
+                let rm = r.saturating_sub(1);
+                let rp = (r + 1).min(n - 1);
+                for g in 0..row / COALESCE_BYTES {
+                    let off = g * COALESCE_BYTES;
+                    b.load(worker, pc(rep, 0), &input, rm * row + off, 1, cta, rep);
+                    b.load(worker, pc(rep, 1), &input, r * row + off, 1, cta, rep);
+                    b.load(worker, pc(rep, 2), &input, rp * row + off, 2, cta, rep);
+                    b.store(worker, pc(rep, 3), &output, r * row + off, 3, cta, rep);
+                }
             }
         }
-    }
     }
     b.finish("conv2d")
 }

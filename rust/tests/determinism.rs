@@ -1,0 +1,74 @@
+//! Determinism guarantees the eval harness rests on: the simulator is
+//! bit-reproducible for a fixed seed, and the parallel sweep executor
+//! produces results identical to serial execution — so parallelizing
+//! the paper tables (PR 1's tentpole) cannot change a single number.
+
+use uvm_prefetch::eval::runner::{run_benchmark, workload_seed, RunOptions};
+use uvm_prefetch::eval::sweep::{sweep, CellSpec};
+
+fn tiny() -> RunOptions {
+    RunOptions { scale: 0.1, max_instructions: 120_000, ..Default::default() }
+}
+
+#[test]
+fn same_seed_double_run_has_identical_metrics() {
+    let opts = tiny();
+    let a = run_benchmark("addvectors", "tree", &opts).unwrap();
+    let b = run_benchmark("addvectors", "tree", &opts).unwrap();
+    // Full structural equality — every counter, the PCIe series, all.
+    assert_eq!(a, b);
+    // Byte-identical, not merely equal under PartialEq.
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+}
+
+#[test]
+fn workload_seed_is_stable_and_benchmark_dependent() {
+    let s1 = workload_seed(0x5eed, "atax");
+    let s2 = workload_seed(0x5eed, "atax");
+    let s3 = workload_seed(0x5eed, "bicg");
+    let s4 = workload_seed(0x1234, "atax");
+    assert_eq!(s1, s2, "pure function of (base, benchmark)");
+    assert_ne!(s1, s3, "benchmarks draw independent streams");
+    assert_ne!(s1, s4, "base seed participates");
+}
+
+#[test]
+fn parallel_sweep_is_byte_identical_to_serial() {
+    let opts = RunOptions { scale: 0.05, max_instructions: 60_000, ..Default::default() };
+    let opts_ref = &opts;
+    let cells: Vec<CellSpec> = ["addvectors", "atax", "pathfinder"]
+        .iter()
+        .flat_map(|b| ["tree", "dl"].into_iter().map(move |p| CellSpec::new(b, p, opts_ref)))
+        .collect();
+    let serial = sweep(&cells, 1).unwrap();
+    let parallel = sweep(&cells, 4).unwrap();
+    assert_eq!(serial.cells.len(), parallel.cells.len());
+    for (s, p) in serial.cells.iter().zip(&parallel.cells) {
+        assert_eq!(s.benchmark, p.benchmark);
+        assert_eq!(s.prefetcher, p.prefetcher);
+        assert_eq!(s.metrics, p.metrics, "{}/{}", s.benchmark, s.prefetcher);
+        assert_eq!(
+            format!("{:?}", s.metrics),
+            format!("{:?}", p.metrics),
+            "{}/{}: byte-identical debug form",
+            s.benchmark,
+            s.prefetcher
+        );
+    }
+}
+
+#[test]
+fn oracle_cell_is_deterministic_in_parallel() {
+    // The oracle does a recording pass *inside* its cell; two
+    // concurrent oracle cells must not interfere (the old
+    // Rc<RefCell> + thread_local plumbing is gone).
+    let opts = RunOptions { scale: 0.05, max_instructions: 40_000, ..Default::default() };
+    let cells = vec![
+        CellSpec::new("addvectors", "oracle", &opts),
+        CellSpec::new("atax", "oracle", &opts),
+        CellSpec::new("addvectors", "oracle", &opts),
+    ];
+    let out = sweep(&cells, 3).unwrap();
+    assert_eq!(out.cells[0].metrics, out.cells[2].metrics, "same cell, same result");
+    assert!(out.cells[0].metrics.prefetch_transfers > 0, "oracle actually prefetched");
+}
