@@ -1,16 +1,21 @@
 # Single entry points shared by CI and humans (DESIGN.md §5).
 #
-#   make build       release build of the workspace
-#   make test        tier-1 verify: cargo build --release && cargo test -q
-#   make lint        rustfmt check + clippy with warnings denied
-#   make eval-smoke  small parallel all-benchmark sweep → BENCH_eval.json
-#   make eval        full paper-regime sweep (scale 4.0, 2M instructions)
-#   make artifacts   trace-gen + JAX AOT export (needs python + jax)
+#   make build         release build of the workspace
+#   make test          tier-1 verify: cargo build --release && cargo test -q
+#   make lint          rustfmt check + clippy -D warnings + check --all-targets
+#   make check         cargo check --all-targets --release (benches/examples)
+#   make eval-smoke    small parallel all-benchmark sweep → BENCH_eval.json
+#   make oversub-smoke small oversubscription sweep → BENCH_oversub.json
+#   make golden-check  CI metrics-regression gate vs ci/golden_metrics.json
+#   make golden-update re-pin the goldens from a fresh run (commit the diff)
+#   make eval          full paper-regime sweep (scale 4.0, 2M instructions)
+#   make oversub       full oversubscription grid (ratios × evictions)
+#   make artifacts     trace-gen + JAX AOT export (needs python + jax)
 
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test lint fmt clippy eval-smoke eval artifacts clean
+.PHONY: build test lint fmt clippy check eval-smoke oversub-smoke golden-check golden-update eval oversub artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -26,7 +31,12 @@ fmt:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
-lint: fmt clippy
+# Compile-gate benches (harness = false) and examples, which neither
+# `cargo build` nor `cargo test` cover in release.
+check:
+	$(CARGO) check --all-targets --release
+
+lint: fmt clippy check
 
 # Fast sweep for CI smoke: tiny scale + instruction cap, stride
 # fallback (no PJRT artifacts needed). Produces BENCH_eval.json.
@@ -34,9 +44,31 @@ eval-smoke:
 	$(CARGO) run --release --bin repro -- eval summary --no-pjrt \
 		--scale 0.25 --max-instructions 200000 --out results-smoke
 
+# Oversubscription smoke: 3 workloads, two ratios, full eviction axis.
+# Produces BENCH_oversub.json.
+oversub-smoke:
+	$(CARGO) run --release --bin repro -- eval oversub --no-pjrt \
+		--scale 0.25 --max-instructions 200000 --out results-smoke \
+		--ratios 1.0,0.5 \
+		--benchmarks addvectors --benchmarks atax --benchmarks pathfinder
+
+# Metrics-regression gate (CI): fixed 3-workload grid vs committed
+# goldens, tolerances in the JSON. Update goldens deliberately with
+# golden-update and commit the diff.
+golden-check:
+	$(CARGO) run --release --bin repro -- golden check --path ci/golden_metrics.json
+
+golden-update:
+	$(CARGO) run --release --bin repro -- golden update --path ci/golden_metrics.json
+
 # Full paper-regime sweep (Tables 10/11 + headline summary).
 eval:
 	$(CARGO) run --release --bin repro -- eval all --no-pjrt
+
+# Full oversubscription grid: {11 workloads} × {none,tree,uvmsmart,dl}
+# × {1.0,0.75,0.5} × {lru,random,freq,prefetch-aware}.
+oversub:
+	$(CARGO) run --release --bin repro -- eval oversub --no-pjrt
 
 # Layer 2/1: train + AOT-export the predictor models from fresh traces.
 artifacts:
@@ -45,4 +77,4 @@ artifacts:
 
 clean:
 	$(CARGO) clean
-	rm -rf results results-smoke traces BENCH_eval.json
+	rm -rf results results-smoke results-nightly traces BENCH_eval.json BENCH_oversub.json

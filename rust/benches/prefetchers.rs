@@ -8,7 +8,7 @@ use uvm_prefetch::prefetch::dl::dl_with_stride_backend;
 use uvm_prefetch::prefetch::stride::StridePrefetcher;
 use uvm_prefetch::prefetch::tree::TreePrefetcher;
 use uvm_prefetch::prefetch::uvmsmart::UvmSmartPrefetcher;
-use uvm_prefetch::prefetch::{FaultInfo, Prefetcher};
+use uvm_prefetch::prefetch::{FaultInfo, MemPressure, Prefetcher};
 use uvm_prefetch::types::AccessOrigin;
 use uvm_prefetch::util::bench::{black_box, Bench};
 
@@ -20,6 +20,7 @@ fn fault(page: u64, warp: u16, now: u64) -> FaultInfo {
         page,
         origin: AccessOrigin { sm: warp % 28, warp, cta: warp as u32, tpc: 0, kernel_id: 0 },
         array_id: 0,
+        mem: MemPressure::unpressured(),
     }
 }
 
@@ -47,7 +48,7 @@ fn main() {
     });
 
     b.case("uvmsmart: 10k faults", 10_000, || {
-        let mut p = UvmSmartPrefetcher::new(0.5, 1 << 18, 0.85);
+        let mut p = UvmSmartPrefetcher::new(0.5, 0.85);
         drive(&mut p, 10_000)
     });
 

@@ -1,18 +1,19 @@
 //! Oversubscription study (the regime UVMSmart was designed for,
-//! paper §2.3): shrink device memory below the working set and watch
-//! eviction/thrashing behaviour under each policy.
+//! paper §2.3): cap device memory to a fraction of the workload
+//! footprint and watch eviction/thrashing behaviour under each
+//! prefetch × eviction policy pair.
 //!
-//! The paper's main evaluation runs *without* oversubscription (§7.1);
-//! this example exercises the machinery the adaptive baseline carries
-//! for it: LRU eviction, TLB shootdown, UVMSmart's
-//! promotion-suppression under memory pressure, and the
-//! "aggressive prefetching causes thrashing" effect (§1).
+//! This drives the same machinery as `repro eval oversub`:
+//! `SimConfig::oversub_ratio` (resident fraction of the footprint),
+//! the pluggable eviction policies of `sim/eviction.rs`, and the
+//! occupancy signal that lets uvmsmart/dl throttle near capacity.
 //!
 //! ```sh
 //! cargo run --release --example oversubscription
 //! ```
 
 use uvm_prefetch::eval::runner::{run_benchmark_with, RunOptions};
+use uvm_prefetch::sim::ALL_EVICTION_POLICIES;
 
 fn main() -> anyhow::Result<()> {
     let opts = RunOptions {
@@ -20,39 +21,46 @@ fn main() -> anyhow::Result<()> {
         max_instructions: 2_000_000,
         ..Default::default()
     };
-    println!("ATAX with device memory at a fraction of the working set\n");
+    println!("ATAX with device memory capped to a fraction of the footprint\n");
     println!(
-        "{:<10} {:<10} {:>10} {:>8} {:>9} {:>10} {:>14}",
-        "capacity", "policy", "cycles", "hit", "faults", "evictions", "wasted-pf"
+        "{:<7} {:<15} {:<10} {:>10} {:>8} {:>8} {:>8} {:>9} {:>10}",
+        "ratio", "eviction", "policy", "cycles", "hit", "faults", "refault", "evictions", "wasted-pf"
     );
-    // Device capacity as a fraction of 1 GiB: 100 % holds the whole
-    // working set; 3 % (~32 MB) and 1.5 % (~16 MB) force eviction.
-    for frac in [1.0f64, 0.03, 0.015] {
-        for policy in ["tree", "uvmsmart", "dl"] {
-            let m = run_benchmark_with(
-                "atax",
-                policy,
-                &opts,
-                |mut e| {
-                    e.sim.device_mem_bytes = ((1u64 << 30) as f64 * frac) as u64;
-                    e
-                },
-                None,
-            )?;
-            println!(
-                "{:<10} {:<10} {:>10} {:>8.4} {:>9} {:>10} {:>14}",
-                format!("{:.1}%", frac * 100.0),
-                policy,
-                m.cycles,
-                m.page_hit_rate(),
-                m.far_faults,
-                m.evictions,
-                m.evicted_unused_prefetches,
-            );
+    for ratio in [1.0f64, 0.75, 0.5] {
+        let evictions: &[&str] = if ratio >= 1.0 { &["lru"] } else { ALL_EVICTION_POLICIES };
+        for eviction in evictions {
+            for policy in ["tree", "uvmsmart", "dl"] {
+                let ev = eviction.to_string();
+                let m = run_benchmark_with(
+                    "atax",
+                    policy,
+                    &opts,
+                    move |mut e| {
+                        e.sim.oversub_ratio = ratio;
+                        e.sim.eviction_policy = ev;
+                        e
+                    },
+                    None,
+                )?;
+                println!(
+                    "{:<7} {:<15} {:<10} {:>10} {:>8.4} {:>8} {:>8} {:>9} {:>10}",
+                    format!("{:.2}", ratio),
+                    eviction,
+                    policy,
+                    m.cycles,
+                    m.page_hit_rate(),
+                    m.far_faults,
+                    m.refaults,
+                    m.evictions,
+                    m.evicted_unused_prefetches,
+                );
+            }
         }
     }
-    println!("\nExpected shape: under pressure, the aggressive tree policy");
-    println!("evicts its own prefetches (wasted-pf ↑, the paper's thrashing");
-    println!("story); uvmsmart suppresses promotions; dl prefetches less.");
+    println!("\nExpected shape: under pressure the pressure-blind tree policy");
+    println!("evicts its own prefetches (wasted-pf ↑ — the paper's thrashing");
+    println!("story); uvmsmart suppresses promotions and dl narrows its block");
+    println!("floor once occupancy crosses the threshold; prefetch-aware");
+    println!("eviction absorbs the damage into never-used prefetched pages.");
     Ok(())
 }

@@ -122,6 +122,14 @@ pub struct RuntimeConfig {
     /// paper's §4: one basic block + top-1 page = 16 pages for DL;
     /// the tree policy may go up to a 2 MB node).
     pub max_prefetch_pages_dl: usize,
+    /// Device-occupancy fraction above which pressure-aware policies
+    /// (uvmsmart, dl) throttle their prefetch issue width — every
+    /// speculative page evicts a live one once memory is full
+    /// (arXiv:2204.02974). The stock tree policy has no config hook
+    /// for this on purpose (NVIDIA's driver is not pressure-aware —
+    /// that is the thrashing baseline); experiments can opt a tree in
+    /// via `TreePrefetcher::with_pressure_throttle`.
+    pub pressure_threshold: f64,
 }
 
 impl Default for RuntimeConfig {
@@ -140,6 +148,7 @@ impl Default for RuntimeConfig {
             backend: PredictorBackendKind::Stride,
             tree_threshold: 0.5,
             max_prefetch_pages_dl: 16,
+            pressure_threshold: 0.85,
         }
     }
 }
@@ -160,6 +169,7 @@ impl RuntimeConfig {
             ("backend", self.backend.to_json()),
             ("tree_threshold", Json::Num(self.tree_threshold)),
             ("max_prefetch_pages_dl", Json::Num(self.max_prefetch_pages_dl as f64)),
+            ("pressure_threshold", Json::Num(self.pressure_threshold)),
         ])
     }
 
@@ -185,6 +195,7 @@ impl RuntimeConfig {
         num!(finetune_batch, usize);
         num!(tree_threshold, f64);
         num!(max_prefetch_pages_dl, usize);
+        num!(pressure_threshold, f64);
         if let Some(b) = j.get("bypass").and_then(Json::as_str) {
             c.bypass = BypassMode::parse(b)
                 .ok_or_else(|| anyhow::anyhow!("bad bypass mode '{b}'"))?;

@@ -39,6 +39,16 @@ pub struct SimConfig {
     pub tlb_entries: usize,
     /// PCIe usage histogram bucket width in cycles (Figure 11 series).
     pub pcie_bucket_cycles: u64,
+    /// Oversubscription as *resident fraction of the workload
+    /// footprint*: 1.0 (default) disables it and keeps
+    /// `device_mem_bytes`; r < 1.0 caps device capacity to
+    /// `ceil(r × footprint_pages)` frames, resolved by the simulator
+    /// once the generated workload is in hand. Valid domain (0, 1].
+    pub oversub_ratio: f64,
+    /// Victim-selection policy under memory pressure — one of
+    /// [`crate::sim::eviction::ALL_EVICTION_POLICIES`]
+    /// ("lru" | "random" | "freq" | "prefetch-aware").
+    pub eviction_policy: String,
 }
 
 impl Default for SimConfig {
@@ -57,6 +67,8 @@ impl Default for SimConfig {
             device_mem_bytes: 1 << 30,
             tlb_entries: 64,
             pcie_bucket_cycles: 10_000,
+            oversub_ratio: 1.0,
+            eviction_policy: "lru".to_string(),
         }
     }
 }
@@ -83,6 +95,39 @@ impl SimConfig {
         self.device_mem_bytes / crate::types::PAGE_SIZE
     }
 
+    /// Device capacity in page frames for a workload with the given
+    /// footprint: `oversub_ratio` < 1.0 caps residency to that
+    /// fraction of the footprint; 1.0 keeps the configured capacity
+    /// (the baseline regime — byte-identical to a plain run). The
+    /// footprint fraction is additionally clamped to the configured
+    /// device size, so a ratio just below 1.0 can never grant *more*
+    /// frames than its own baseline when the footprint exceeds device
+    /// memory.
+    pub fn effective_capacity_pages(&self, footprint_pages: u64) -> u64 {
+        if self.oversub_ratio >= 1.0 {
+            self.device_mem_pages()
+        } else {
+            ((footprint_pages as f64 * self.oversub_ratio).ceil() as u64)
+                .min(self.device_mem_pages())
+                .max(1)
+        }
+    }
+
+    /// Reject configs the simulator cannot honour: `oversub_ratio`
+    /// outside (0, 1] (the flag is a resident *fraction*, not a
+    /// multiplier) or an unknown eviction-policy name.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.oversub_ratio > 0.0 && self.oversub_ratio <= 1.0) {
+            anyhow::bail!(
+                "oversub_ratio must be in (0, 1] — it is the resident fraction of the \
+                 workload footprint (1.0 = no oversubscription); got {}",
+                self.oversub_ratio
+            );
+        }
+        crate::sim::eviction::build(&self.eviction_policy, 0)?;
+        Ok(())
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("n_sms", Json::Num(self.n_sms as f64)),
@@ -98,6 +143,8 @@ impl SimConfig {
             ("device_mem_bytes", Json::Num(self.device_mem_bytes as f64)),
             ("tlb_entries", Json::Num(self.tlb_entries as f64)),
             ("pcie_bucket_cycles", Json::Num(self.pcie_bucket_cycles as f64)),
+            ("oversub_ratio", Json::Num(self.oversub_ratio)),
+            ("eviction_policy", Json::str(&self.eviction_policy)),
         ])
     }
 
@@ -124,6 +171,10 @@ impl SimConfig {
         num!(device_mem_bytes, u64);
         num!(tlb_entries, usize);
         num!(pcie_bucket_cycles, u64);
+        num!(oversub_ratio, f64);
+        if let Some(s) = j.get("eviction_policy").and_then(Json::as_str) {
+            c.eviction_policy = s.to_string();
+        }
         Ok(c)
     }
 }
@@ -149,9 +200,38 @@ mod tests {
         let mut c = SimConfig::default();
         c.n_sms = 4;
         c.pcie_gbps = 31.5;
+        c.oversub_ratio = 0.5;
+        c.eviction_policy = "freq".to_string();
         let back = SimConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.n_sms, 4);
         assert!((back.pcie_gbps - 31.5).abs() < 1e-12);
         assert_eq!(back.tlb_entries, 64);
+        assert!((back.oversub_ratio - 0.5).abs() < 1e-12);
+        assert_eq!(back.eviction_policy, "freq");
+    }
+
+    #[test]
+    fn oversub_validation_and_capacity_resolution() {
+        let mut c = SimConfig::default();
+        assert!(c.validate().is_ok(), "defaults are valid");
+        assert_eq!(c.effective_capacity_pages(10_000), c.device_mem_pages(), "1.0 = baseline");
+        c.oversub_ratio = 0.5;
+        assert_eq!(c.effective_capacity_pages(10_000), 5_000);
+        assert_eq!(c.effective_capacity_pages(1), 1, "capacity floor of one frame");
+        // Footprint beyond device memory: the fraction clamps to the
+        // device size instead of exceeding the ratio-1.0 baseline.
+        c.oversub_ratio = 0.75;
+        assert_eq!(
+            c.effective_capacity_pages(600_000),
+            c.device_mem_pages(),
+            "capacity never exceeds the configured device size"
+        );
+        for bad in [0.0, -0.25, 1.5, f64::NAN] {
+            c.oversub_ratio = bad;
+            assert!(c.validate().is_err(), "ratio {bad} must be rejected");
+        }
+        c.oversub_ratio = 0.5;
+        c.eviction_policy = "bogus".to_string();
+        assert!(c.validate().is_err(), "unknown eviction policy rejected");
     }
 }

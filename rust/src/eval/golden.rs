@@ -1,0 +1,271 @@
+//! CI golden-metrics regression gate (`repro golden check|update`).
+//!
+//! `check` re-runs a small fixed grid — a 3-workload subset of
+//! `repro eval summary` plus a slice of the `repro eval oversub` axis —
+//! at tiny scale, and compares hit-rate / accuracy / coverage and the
+//! pressure counters against `ci/golden_metrics.json` with tolerances.
+//! Drift fails the build; intentional changes are committed by
+//! re-pinning with `repro golden update` (or `make golden-update`) and
+//! reviewing the diff.
+//!
+//! A golden file with `"bootstrap": true` has no pinned numbers yet
+//! (e.g. the gate was introduced on a machine without a toolchain).
+//! Bootstrap mode is still a gate: the grid runs **twice** and any
+//! nondeterminism fails the build; the measured values are printed so
+//! a maintainer can pin them with one `repro golden update` run.
+
+use crate::eval::runner::RunOptions;
+use crate::eval::sweep::{self, CellSpec};
+use crate::sim::Metrics;
+use crate::util::Json;
+use std::path::Path;
+
+pub const GOLDEN_SCHEMA: &str = "golden_metrics/v1";
+
+/// 3-workload subset: one streaming, one matvec-sweep, one staged
+/// kernel — cheap but covers the pattern families.
+const GOLDEN_BENCHMARKS: &[&str] = &["addvectors", "atax", "pathfinder"];
+const GOLDEN_PREFETCHERS: &[&str] = &["none", "tree", "uvmsmart", "dl"];
+const GOLDEN_OVERSUB_PREFETCHERS: &[&str] = &["tree", "dl"];
+const GOLDEN_OVERSUB_EVICTIONS: &[&str] = &["lru", "prefetch-aware"];
+const GOLDEN_RATIO: f64 = 0.5;
+
+/// Default tolerances written by `update` (and used when the golden
+/// file omits them): quality ratios may drift by this absolute amount,
+/// integer counters must match exactly.
+const DEFAULT_FLOAT_ABS_TOL: f64 = 0.005;
+const DEFAULT_INT_REL_TOL: f64 = 0.0;
+
+/// Fixed eval-smoke regime (mirrors `make eval-smoke`), independent of
+/// CLI defaults so the goldens never move with them silently.
+fn golden_opts() -> RunOptions {
+    RunOptions { scale: 0.25, max_instructions: 200_000, ..Default::default() }
+}
+
+/// The gated cell grid, in a stable order.
+pub fn golden_cells() -> Vec<CellSpec> {
+    let opts = golden_opts();
+    let mut cells = Vec::new();
+    for p in GOLDEN_PREFETCHERS {
+        for b in GOLDEN_BENCHMARKS {
+            cells.push(CellSpec::new(b, p, &opts));
+        }
+    }
+    for ev in GOLDEN_OVERSUB_EVICTIONS {
+        for p in GOLDEN_OVERSUB_PREFETCHERS {
+            for b in GOLDEN_BENCHMARKS {
+                cells.push(CellSpec::new(b, p, &opts).with_oversub(GOLDEN_RATIO, ev));
+            }
+        }
+    }
+    cells
+}
+
+/// Stable key for one cell: `bench/prefetcher[/rX.XX/eviction]`.
+pub fn cell_key(c: &CellSpec) -> String {
+    match (c.oversub_ratio, &c.eviction) {
+        (Some(r), Some(e)) => format!("{}/{}/r{:.2}/{}", c.benchmark, c.prefetcher, r, e),
+        _ => format!("{}/{}", c.benchmark, c.prefetcher),
+    }
+}
+
+/// The gated metric slice of one cell.
+fn metrics_json(m: &Metrics) -> Json {
+    Json::obj(vec![
+        ("page_hit_rate", Json::Num(m.page_hit_rate())),
+        ("accuracy", Json::Num(m.accuracy())),
+        ("coverage", Json::Num(m.coverage())),
+        ("far_faults", Json::Num(m.far_faults as f64)),
+        ("evictions", Json::Num(m.evictions as f64)),
+        ("refaults", Json::Num(m.refaults as f64)),
+        ("instructions", Json::Num(m.instructions as f64)),
+    ])
+}
+
+/// Which keys of [`metrics_json`] are float ratios (tolerance-compared)
+/// vs exact integer counters.
+const FLOAT_KEYS: &[&str] = &["page_hit_rate", "accuracy", "coverage"];
+const INT_KEYS: &[&str] = &["far_faults", "evictions", "refaults", "instructions"];
+
+/// Run the golden grid through the parallel sweep executor.
+pub fn measure() -> anyhow::Result<Vec<(String, Metrics)>> {
+    let cells = golden_cells();
+    let outcome = sweep::sweep(&cells, sweep::default_threads())?;
+    Ok(cells
+        .iter()
+        .zip(outcome.cells)
+        .map(|(spec, res)| (cell_key(spec), res.metrics))
+        .collect())
+}
+
+/// Re-pin the goldens from a fresh run.
+pub fn update(path: &Path) -> anyhow::Result<()> {
+    let measured = measure()?;
+    let cells: std::collections::BTreeMap<String, Json> =
+        measured.iter().map(|(k, m)| (k.clone(), metrics_json(m))).collect();
+    Json::obj(vec![
+        ("schema", Json::str(GOLDEN_SCHEMA)),
+        ("bootstrap", Json::Bool(false)),
+        ("float_abs_tol", Json::Num(DEFAULT_FLOAT_ABS_TOL)),
+        ("int_rel_tol", Json::Num(DEFAULT_INT_REL_TOL)),
+        ("cells", Json::Obj(cells)),
+    ])
+    .write_file(path)?;
+    println!("golden: pinned {} cells to {}", measured.len(), path.display());
+    Ok(())
+}
+
+/// Compare one measured cell against its golden record. Returns the
+/// list of drift descriptions (empty = clean).
+fn compare_cell(key: &str, golden: &Json, m: &Metrics, float_tol: f64, int_rel_tol: f64) -> Vec<String> {
+    let measured = metrics_json(m);
+    let mut drifts = Vec::new();
+    for k in FLOAT_KEYS {
+        let (Some(g), Some(v)) = (
+            golden.get(k).and_then(Json::as_f64),
+            measured.get(k).and_then(Json::as_f64),
+        ) else {
+            drifts.push(format!("{key}: golden field '{k}' missing"));
+            continue;
+        };
+        if (g - v).abs() > float_tol {
+            drifts.push(format!("{key}: {k} = {v:.6}, golden {g:.6} (tol ±{float_tol})"));
+        }
+    }
+    for k in INT_KEYS {
+        let (Some(g), Some(v)) = (
+            golden.get(k).and_then(Json::as_f64),
+            measured.get(k).and_then(Json::as_f64),
+        ) else {
+            drifts.push(format!("{key}: golden field '{k}' missing"));
+            continue;
+        };
+        let limit = g.abs() * int_rel_tol;
+        if (g - v).abs() > limit {
+            drifts.push(format!("{key}: {k} = {v}, golden {g} (rel tol {int_rel_tol})"));
+        }
+    }
+    drifts
+}
+
+/// Gate: compare a fresh run against the committed goldens; any drift
+/// is an error. Bootstrap files gate determinism instead (see module
+/// docs).
+pub fn check(path: &Path) -> anyhow::Result<()> {
+    let golden = Json::parse_file(path)?;
+    match golden.get("schema").and_then(Json::as_str) {
+        Some(GOLDEN_SCHEMA) => {}
+        other => anyhow::bail!("{}: unsupported golden schema {other:?}", path.display()),
+    }
+    if golden.get("bootstrap").and_then(Json::as_bool).unwrap_or(false) {
+        eprintln!(
+            "golden: {} is in BOOTSTRAP mode — no pinned numbers yet. \
+             Gating determinism instead (double run must match bit-for-bit).",
+            path.display()
+        );
+        let a = measure()?;
+        let b = measure()?;
+        for ((key, ma), (_, mb)) in a.iter().zip(&b) {
+            if ma != mb {
+                anyhow::bail!("golden bootstrap: {key} is nondeterministic across runs");
+            }
+        }
+        println!("golden: bootstrap determinism gate OK ({} cells). Candidates:", a.len());
+        for (key, m) in &a {
+            println!(
+                "  {key}: hit={:.6} acc={:.6} cov={:.6} faults={} evict={} refault={}",
+                m.page_hit_rate(),
+                m.accuracy(),
+                m.coverage(),
+                m.far_faults,
+                m.evictions,
+                m.refaults,
+            );
+        }
+        println!("golden: pin them with `repro golden update --path {}`", path.display());
+        return Ok(());
+    }
+
+    let float_tol =
+        golden.get("float_abs_tol").and_then(Json::as_f64).unwrap_or(DEFAULT_FLOAT_ABS_TOL);
+    let int_rel_tol =
+        golden.get("int_rel_tol").and_then(Json::as_f64).unwrap_or(DEFAULT_INT_REL_TOL);
+    let cells = golden.req("cells")?;
+    let measured = measure()?;
+    let mut failures = Vec::new();
+    for (key, m) in &measured {
+        match cells.get(key) {
+            None => failures.push(format!("{key}: missing from goldens (run `repro golden update`)")),
+            Some(g) => failures.extend(compare_cell(key, g, m, float_tol, int_rel_tol)),
+        }
+    }
+    // Stale golden keys (grid shrank) are drift too.
+    if let Some(obj) = cells.as_obj() {
+        for key in obj.keys() {
+            if !measured.iter().any(|(k, _)| k == key) {
+                failures.push(format!("{key}: golden cell no longer measured"));
+            }
+        }
+    }
+    if !failures.is_empty() {
+        anyhow::bail!(
+            "golden gate FAILED — {} drift(s):\n  {}",
+            failures.len(),
+            failures.join("\n  ")
+        );
+    }
+    println!("golden: gate OK ({} cells within tolerance)", measured.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shape_and_keys() {
+        let cells = golden_cells();
+        // 4 prefetchers × 3 benchmarks + 2 evictions × 2 prefetchers × 3.
+        assert_eq!(cells.len(), 12 + 12);
+        assert_eq!(cell_key(&cells[0]), "addvectors/none");
+        let last = cells.last().unwrap();
+        assert_eq!(cell_key(last), "pathfinder/dl/r0.50/prefetch-aware");
+    }
+
+    #[test]
+    fn compare_detects_drift_and_accepts_tolerance() {
+        let m = Metrics {
+            mem_accesses: 100,
+            page_hits: 50,
+            far_faults: 50,
+            instructions: 1_000,
+            ..Default::default()
+        };
+        let exact = metrics_json(&m);
+        assert!(compare_cell("k", &exact, &m, 0.005, 0.0).is_empty(), "self-compare clean");
+
+        // Drift the hit rate beyond tolerance.
+        let mut drifted = m.clone();
+        drifted.page_hits = 60;
+        let drifts = compare_cell("k", &exact, &drifted, 0.005, 0.0);
+        assert!(drifts.iter().any(|d| d.contains("page_hit_rate")), "{drifts:?}");
+
+        // Integer drift within a relative tolerance passes.
+        let mut faults = m.clone();
+        faults.far_faults = 51;
+        assert!(!compare_cell("k", &exact, &faults, 0.5, 0.0).is_empty(), "exact mode trips");
+        let only_int: Vec<String> = compare_cell("k", &exact, &faults, 0.5, 0.05)
+            .into_iter()
+            .filter(|d| d.contains("far_faults"))
+            .collect();
+        assert!(only_int.is_empty(), "2% drift inside 5% tolerance");
+    }
+
+    #[test]
+    fn missing_golden_field_is_drift() {
+        let m = Metrics::default();
+        let partial = Json::obj(vec![("page_hit_rate", Json::Num(0.0))]);
+        let drifts = compare_cell("k", &partial, &m, 0.005, 0.0);
+        assert!(drifts.iter().any(|d| d.contains("accuracy")), "{drifts:?}");
+    }
+}

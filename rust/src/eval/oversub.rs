@@ -1,0 +1,295 @@
+//! `repro eval oversub` — the oversubscription sweep.
+//!
+//! The paper's main evaluation runs with device memory comfortably
+//! above the working set (§7.1); its companion work (arXiv:2204.02974)
+//! and GPUVM (arXiv:2411.05309) show that prefetching quality is
+//! really decided under *memory pressure*, where every speculative
+//! page evicts a live one. This axis drives the work-stealing sweep
+//! executor over
+//!
+//! ```text
+//! {workloads} × {prefetch policies} × {memory ratios} × {eviction policies}
+//! ```
+//!
+//! where a *memory ratio* is the resident fraction of the workload
+//! footprint (`SimConfig::oversub_ratio`). At ratio 1.0 nothing ever
+//! evicts, so only the `lru` eviction column runs there — and those
+//! cells are byte-identical to the corresponding `repro eval summary`
+//! cells (asserted by `rust/tests/oversub.rs`), anchoring the sweep to
+//! the paper-regime numbers.
+//!
+//! Output: an aggregate table (hit rate, evictions, thrash ratio, and
+//! PCIe traffic normalized to the ratio-1.0 baseline of the same
+//! prefetcher), a per-cell CSV, and `BENCH_oversub.json`
+//! (schema `bench_oversub/v1`).
+//!
+//! Caveat — instruction-capped runs: the ratio is a fraction of the
+//! workload's *full* footprint, but a capped run (the paper-regime
+//! default) only touches the pages its measurement window reaches. If
+//! the window covers less than `ratio × footprint` pages, a pressure
+//! cell never fills the device and measures nothing; the sweep prints
+//! a loud warning when that happens. For guaranteed pressure, run to
+//! completion (`--max-instructions 0`) or lower `--ratios`.
+
+use crate::eval::report::{f, Table};
+use crate::eval::runner::RunOptions;
+use crate::eval::sweep::{self, CellSpec, SweepOutcome};
+use crate::sim::eviction::ALL_EVICTION_POLICIES;
+use crate::util::Json;
+use crate::workloads::ALL_BENCHMARKS;
+use std::path::Path;
+
+/// Default memory-ratio axis: baseline, mild and heavy pressure.
+pub const OVERSUB_RATIOS: &[f64] = &[1.0, 0.75, 0.5];
+
+/// Default prefetch-policy axis (oracle and the bare stride comparison
+/// are omitted: the oracle's recording pass doubles every cell's cost
+/// and neither changes the pressure story).
+pub const OVERSUB_PREFETCHERS: &[&str] = &["none", "tree", "uvmsmart", "dl"];
+
+/// The sweep grid; every axis can be narrowed from the CLI.
+#[derive(Debug, Clone)]
+pub struct OversubGrid {
+    pub benchmarks: Vec<String>,
+    pub prefetchers: Vec<String>,
+    pub ratios: Vec<f64>,
+    pub evictions: Vec<String>,
+}
+
+impl Default for OversubGrid {
+    fn default() -> Self {
+        Self {
+            benchmarks: ALL_BENCHMARKS.iter().map(|s| s.to_string()).collect(),
+            prefetchers: OVERSUB_PREFETCHERS.iter().map(|s| s.to_string()).collect(),
+            ratios: OVERSUB_RATIOS.to_vec(),
+            evictions: ALL_EVICTION_POLICIES.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+impl OversubGrid {
+    /// Flatten the grid into sweep cells, benchmark-innermost so
+    /// adjacent cells (taken by different workers) hit different
+    /// workloads — the same peak-memory argument as
+    /// [`sweep::full_sweep_cells`]. The eviction axis is degenerate at
+    /// ratio 1.0 (nothing evicts), so only `lru` runs there.
+    pub fn cells(&self, opts: &RunOptions) -> Vec<CellSpec> {
+        let lru_only = vec!["lru".to_string()];
+        let mut out = Vec::new();
+        for &ratio in &self.ratios {
+            let evictions = if ratio >= 1.0 { &lru_only } else { &self.evictions };
+            for eviction in evictions {
+                for p in &self.prefetchers {
+                    for b in &self.benchmarks {
+                        out.push(CellSpec::new(b, p, opts).with_oversub(ratio, eviction));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Machine-readable sweep telemetry (`BENCH_oversub.json` schema v1):
+/// one record per cell with its grid coordinates, pressure counters
+/// and wall-clock, plus sweep-level timing.
+pub fn bench_oversub_json(specs: &[CellSpec], o: &SweepOutcome) -> Json {
+    let cells = specs.iter().zip(&o.cells).map(|(s, c)| {
+        Json::obj(vec![
+            ("benchmark", Json::str(&c.benchmark)),
+            ("prefetcher", Json::str(&c.prefetcher)),
+            ("ratio", Json::Num(s.oversub_ratio.unwrap_or(1.0))),
+            ("eviction", Json::str(s.eviction.as_deref().unwrap_or("lru"))),
+            ("wall_ms", Json::Num(c.wall.as_secs_f64() * 1e3)),
+            ("instructions", Json::Num(c.metrics.instructions as f64)),
+            ("cycles", Json::Num(c.metrics.cycles as f64)),
+            ("page_hit_rate", Json::Num(c.metrics.page_hit_rate())),
+            ("far_faults", Json::Num(c.metrics.far_faults as f64)),
+            ("evictions", Json::Num(c.metrics.evictions as f64)),
+            ("refaults", Json::Num(c.metrics.refaults as f64)),
+            ("thrash_ratio", Json::Num(c.metrics.thrash_ratio())),
+            ("evicted_unused_prefetches", Json::Num(c.metrics.evicted_unused_prefetches as f64)),
+            ("pcie_bytes", Json::Num(c.metrics.pcie_bytes() as f64)),
+            ("capacity_pages", Json::Num(c.metrics.capacity_pages as f64)),
+            ("footprint_pages", Json::Num(c.metrics.footprint_pages as f64)),
+        ])
+    });
+    Json::obj(vec![
+        ("schema", Json::str("bench_oversub/v1")),
+        ("threads", Json::Num(o.threads as f64)),
+        ("n_cells", Json::Num(o.cells.len() as f64)),
+        ("total_wall_ms", Json::Num(o.wall.as_secs_f64() * 1e3)),
+        ("serial_wall_ms_estimate", Json::Num(o.serial_wall().as_secs_f64() * 1e3)),
+        ("cells", Json::arr(cells)),
+    ])
+}
+
+/// Run the grid through the parallel sweep executor; write the
+/// per-cell CSV and `BENCH_oversub.json`; return the aggregate table.
+pub fn oversub(opts: &RunOptions, out: &Path, grid: &OversubGrid) -> anyhow::Result<Table> {
+    let specs = grid.cells(opts);
+    let threads = sweep::default_threads();
+    eprintln!("eval oversub: running {} cells on {threads} threads…", specs.len());
+    let outcome = sweep::sweep(&specs, threads)?;
+    let bench = bench_oversub_json(&specs, &outcome);
+    bench.write_file(&out.join("BENCH_oversub.json"))?;
+    // CWD copy, like BENCH_eval.json — the per-PR perf record.
+    // Best-effort: an unwritable CWD must not fail the sweep.
+    if let Err(e) = bench.write_file(Path::new("BENCH_oversub.json")) {
+        eprintln!("eval oversub: could not write ./BENCH_oversub.json: {e}");
+    }
+    eprintln!(
+        "eval oversub: {} cells in {:.1} s on {} threads (serial estimate {:.1} s)",
+        outcome.cells.len(),
+        outcome.wall.as_secs_f64(),
+        outcome.threads,
+        outcome.serial_wall().as_secs_f64(),
+    );
+    // A pressure cell whose instruction window never filled the capped
+    // device measures nothing — say so loudly instead of letting a
+    // vacuous sweep pose as data (see the module-docs caveat).
+    let vacuous = specs
+        .iter()
+        .zip(&outcome.cells)
+        .filter(|(s, c)| s.oversub_ratio.is_some_and(|r| r < 1.0) && c.metrics.evictions == 0)
+        .count();
+    if vacuous > 0 {
+        eprintln!(
+            "eval oversub: WARNING — {vacuous} pressure cell(s) (ratio < 1.0) saw zero \
+             evictions: the instruction cap covered less than the capped footprint fraction. \
+             Lower --ratios, raise --max-instructions, or pass --max-instructions 0."
+        );
+    }
+
+    // Per-cell CSV for downstream plotting.
+    let mut detail = Table::new(
+        "Oversubscription sweep — per cell",
+        &[
+            "benchmark", "prefetcher", "ratio", "eviction", "hit_rate", "far_faults",
+            "evictions", "refaults", "thrash", "pcie_bytes",
+        ],
+    );
+    for (s, c) in specs.iter().zip(&outcome.cells) {
+        detail.row(vec![
+            c.benchmark.clone(),
+            c.prefetcher.clone(),
+            f(s.oversub_ratio.unwrap_or(1.0), 2),
+            s.eviction.clone().unwrap_or_else(|| "lru".into()),
+            f(c.metrics.page_hit_rate(), 6),
+            c.metrics.far_faults.to_string(),
+            c.metrics.evictions.to_string(),
+            c.metrics.refaults.to_string(),
+            f(c.metrics.thrash_ratio(), 4),
+            c.metrics.pcie_bytes().to_string(),
+        ]);
+    }
+    detail.write_csv(&out.join("oversub_cells.csv"))?;
+
+    // Aggregate over benchmarks per (ratio, eviction, prefetcher), with
+    // PCIe traffic normalized to the same prefetcher's ratio-1.0 total.
+    let mut t = Table::new(
+        "Oversubscription — hit rate / evictions / thrash / PCIe vs memory ratio",
+        &["ratio", "eviction", "prefetcher", "hit_rate", "evictions", "thrash", "pcie_bytes", "pcie_vs_full"],
+    );
+    let group_pcie = |ratio: f64, eviction: &str, prefetcher: &str| -> u64 {
+        specs
+            .iter()
+            .zip(&outcome.cells)
+            .filter(|(s, c)| {
+                s.oversub_ratio == Some(ratio)
+                    && s.eviction.as_deref() == Some(eviction)
+                    && c.prefetcher == prefetcher
+            })
+            .map(|(_, c)| c.metrics.pcie_bytes())
+            .sum()
+    };
+    for &ratio in &grid.ratios {
+        let lru_only = vec!["lru".to_string()];
+        let evictions = if ratio >= 1.0 { &lru_only } else { &grid.evictions };
+        for eviction in evictions {
+            for p in &grid.prefetchers {
+                let group: Vec<&crate::sim::Metrics> = specs
+                    .iter()
+                    .zip(&outcome.cells)
+                    .filter(|(s, c)| {
+                        s.oversub_ratio == Some(ratio)
+                            && s.eviction.as_deref() == Some(eviction.as_str())
+                            && c.prefetcher == *p
+                    })
+                    .map(|(_, c)| &c.metrics)
+                    .collect();
+                if group.is_empty() {
+                    continue;
+                }
+                let n = group.len() as f64;
+                let hit = group.iter().map(|m| m.page_hit_rate()).sum::<f64>() / n;
+                let evictions_total: u64 = group.iter().map(|m| m.evictions).sum();
+                let refaults: u64 = group.iter().map(|m| m.refaults).sum();
+                let faults: u64 = group.iter().map(|m| m.far_faults).sum();
+                let thrash = if faults == 0 { 0.0 } else { refaults as f64 / faults as f64 };
+                let pcie: u64 = group.iter().map(|m| m.pcie_bytes()).sum();
+                let baseline = group_pcie(1.0, "lru", p);
+                let vs_full = if baseline == 0 {
+                    "—".to_string()
+                } else {
+                    f(pcie as f64 / baseline as f64, 3)
+                };
+                t.row(vec![
+                    f(ratio, 2),
+                    eviction.clone(),
+                    p.clone(),
+                    f(hit, 4),
+                    evictions_total.to_string(),
+                    f(thrash, 4),
+                    pcie.to_string(),
+                    vs_full,
+                ]);
+            }
+        }
+    }
+    t.write_csv(&out.join("oversub.csv"))?;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> RunOptions {
+        RunOptions { scale: 0.05, max_instructions: 30_000, ..Default::default() }
+    }
+
+    #[test]
+    fn default_grid_shape() {
+        let grid = OversubGrid::default();
+        let cells = grid.cells(&tiny());
+        // ratio 1.0 → 1 eviction × 4 prefetchers × 11 benchmarks = 44;
+        // ratios 0.75 and 0.5 → 4 evictions × 4 × 11 = 176 each.
+        assert_eq!(cells.len(), 44 + 176 + 176);
+        assert!(cells
+            .iter()
+            .filter(|c| c.oversub_ratio == Some(1.0))
+            .all(|c| c.eviction.as_deref() == Some("lru")));
+    }
+
+    #[test]
+    fn bench_json_schema_and_coordinates() {
+        let opts = tiny();
+        let grid = OversubGrid {
+            benchmarks: vec!["addvectors".into()],
+            prefetchers: vec!["tree".into()],
+            ratios: vec![0.5],
+            evictions: vec!["prefetch-aware".into()],
+        };
+        let specs = grid.cells(&opts);
+        assert_eq!(specs.len(), 1);
+        let outcome = sweep::sweep(&specs, 1).unwrap();
+        let j = bench_oversub_json(&specs, &outcome);
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("bench_oversub/v1"));
+        let cells = j.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].get("eviction").and_then(Json::as_str), Some("prefetch-aware"));
+        assert_eq!(cells[0].get("ratio").and_then(Json::as_f64), Some(0.5));
+        assert!(cells[0].get("capacity_pages").and_then(Json::as_u64).unwrap() > 0);
+    }
+}

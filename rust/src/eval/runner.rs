@@ -153,8 +153,7 @@ pub fn build_prefetcher(
         "tree" => Box::new(TreePrefetcher::new(rcfg.tree_threshold)),
         "uvmsmart" => Box::new(UvmSmartPrefetcher::new(
             rcfg.tree_threshold,
-            exp.sim.device_mem_pages(),
-            0.85,
+            rcfg.pressure_threshold,
         )),
         "stride" => Box::new(StridePrefetcher::default()),
         "dl" => Box::new(build_dl_prefetcher(rcfg, &exp.benchmark)?),
@@ -193,6 +192,7 @@ pub fn run_benchmark_with(
     trace: Option<TraceWriter>,
 ) -> anyhow::Result<Metrics> {
     let exp = tweak(opts.experiment(benchmark, prefetcher));
+    exp.sim.validate()?;
     let wl = workloads::build(benchmark, &exp.sim, exp.seed, opts.scale)?;
     let pf = build_prefetcher(&exp, opts.scale)?;
     Ok(Simulator::new(&exp, wl, pf, trace).run())

@@ -38,6 +38,12 @@ pub struct CellSpec {
     pub opts: RunOptions,
     /// Optional prediction-latency override in µs (the Fig. 10 sweep).
     pub prediction_us: Option<f64>,
+    /// Optional oversubscription ratio (resident fraction of the
+    /// workload footprint — the `repro eval oversub` axis).
+    pub oversub_ratio: Option<f64>,
+    /// Optional eviction-policy override (defaults to the config's
+    /// "lru" when unset).
+    pub eviction: Option<String>,
 }
 
 impl CellSpec {
@@ -47,6 +53,8 @@ impl CellSpec {
             prefetcher: prefetcher.to_string(),
             opts: opts.clone(),
             prediction_us: None,
+            oversub_ratio: None,
+            eviction: None,
         }
     }
 
@@ -55,9 +63,17 @@ impl CellSpec {
         self
     }
 
+    pub fn with_oversub(mut self, ratio: f64, eviction: &str) -> Self {
+        self.oversub_ratio = Some(ratio);
+        self.eviction = Some(eviction.to_string());
+        self
+    }
+
     /// Run the cell to completion on the calling thread.
     pub fn run(&self) -> anyhow::Result<Metrics> {
         let us = self.prediction_us;
+        let ratio = self.oversub_ratio;
+        let eviction = self.eviction.clone();
         run_benchmark_with(
             &self.benchmark,
             &self.prefetcher,
@@ -65,6 +81,12 @@ impl CellSpec {
             move |mut e| {
                 if let Some(us) = us {
                     e.runtime.prediction_latency_cycles = e.sim.us_to_cycles(us);
+                }
+                if let Some(r) = ratio {
+                    e.sim.oversub_ratio = r;
+                }
+                if let Some(ev) = eviction {
+                    e.sim.eviction_policy = ev;
                 }
                 e
             },

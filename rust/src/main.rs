@@ -5,10 +5,22 @@
 //!                  [--limit N] [--scale F] [--max-instructions N]
 //! repro simulate   [--benchmark B] [--prefetcher P] [--artifacts DIR]
 //!                  [--model M] [--scale F] [--max-instructions N]
-//!                  [--prediction-us F] [--config FILE] [--oversubscribe F]
-//! repro eval       <table10|table11|fig10|fig11|fig12|summary|all>
+//!                  [--prediction-us F] [--config FILE]
+//!                  [--oversubscribe R] [--eviction P]
+//!                    --oversubscribe: resident fraction of the
+//!                    workload footprint, in (0, 1]; 1.0 (default) =
+//!                    no oversubscription. --eviction: lru | random |
+//!                    freq | prefetch-aware.
+//! repro eval       <table10|table11|fig10|fig11|fig12|summary|oversub|all>
 //!                  [--artifacts DIR] [--out results] [--scale F]
 //!                  [--max-instructions N] [--no-pjrt]
+//!                  oversub only: [--ratios 1.0,0.75,0.5]
+//!                  [--evictions lru,random,freq,prefetch-aware]
+//!                  [--prefetchers none,tree,uvmsmart,dl]
+//!                  [--benchmarks a --benchmarks b]
+//!                  ("all" covers the paper artifacts; oversub is its
+//!                  own axis and must be requested explicitly)
+//! repro golden     <check|update> [--path ci/golden_metrics.json]
 //! repro serve      [--artifacts DIR] [--benchmark B] [--model M]
 //!                  [--max-faults N] [--scale F]
 //! repro info       [--artifacts DIR] [--dump-config]
@@ -28,7 +40,8 @@ use uvm_prefetch::util::cli::Args;
 use uvm_prefetch::util::Json;
 use uvm_prefetch::workloads::{ALL_BENCHMARKS, MODEL_BENCHMARKS};
 
-const USAGE: &str = "repro <trace-gen|simulate|eval|serve|info> [flags] (see rust/src/main.rs header)";
+const USAGE: &str =
+    "repro <trace-gen|simulate|eval|golden|serve|info> [flags] (see rust/src/main.rs header)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -38,6 +51,7 @@ fn main() -> Result<()> {
         "trace-gen" => trace_gen(&args),
         "simulate" => simulate(&args),
         "eval" => eval_cmd(&args),
+        "golden" => golden(&args),
         "serve" => serve(&args),
         "info" => info(&args),
         other => anyhow::bail!("unknown command '{other}'\nusage: {USAGE}"),
@@ -96,7 +110,23 @@ fn simulate(args: &Args) -> Result<()> {
     let benchmark = args.str("benchmark", "addvectors");
     let prefetcher = args.str("prefetcher", "tree");
     let prediction_us = args.f64("prediction-us", 1.0)?;
-    let oversubscribe = args.f64("oversubscribe", 0.0)?;
+    // Resident fraction of the *workload footprint*, not a multiplier
+    // on the raw config bytes: 1.0 (default) = no oversubscription;
+    // 0.5 = only half the footprint fits. Domain (0, 1]. Left unset,
+    // a `--config` file's own oversub_ratio is honoured.
+    let oversubscribe: Option<f64> = match args.get("oversubscribe") {
+        None => None,
+        Some(_) => Some(args.f64("oversubscribe", 1.0)?),
+    };
+    if let Some(r) = oversubscribe {
+        if !(r > 0.0 && r <= 1.0) {
+            anyhow::bail!(
+                "--oversubscribe must be in (0, 1]: it is the resident fraction of the workload \
+                 footprint (1.0 = no oversubscription), got {r}"
+            );
+        }
+    }
+    let eviction = args.str("eviction", "");
     let config: Option<ExperimentConfig> = match args.get("config") {
         Some(p) => Some(ExperimentConfig::from_file(Path::new(p))?),
         None => None,
@@ -111,8 +141,11 @@ fn simulate(args: &Args) -> Result<()> {
                 e = b;
             }
             e.runtime.prediction_latency_cycles = e.sim.us_to_cycles(prediction_us);
-            if oversubscribe > 0.0 {
-                e.sim.device_mem_bytes = (e.sim.device_mem_bytes as f64 * oversubscribe) as u64;
+            if let Some(r) = oversubscribe {
+                e.sim.oversub_ratio = r;
+            }
+            if !eviction.is_empty() {
+                e.sim.eviction_policy = eviction;
             }
             e
         },
@@ -128,7 +161,9 @@ fn eval_cmd(args: &Args) -> Result<()> {
         .positional
         .get(1)
         .map(|s| s.as_str())
-        .ok_or_else(|| anyhow::anyhow!("eval needs a target: table10|table11|fig10|fig11|fig12|summary|all"))?;
+        .ok_or_else(|| {
+            anyhow::anyhow!("eval needs a target: table10|table11|fig10|fig11|fig12|summary|oversub|all")
+        })?;
     let out = PathBuf::from(args.str("out", "results"));
     std::fs::create_dir_all(&out)?;
     let mut opts = opts_from(args)?;
@@ -146,6 +181,7 @@ fn eval_cmd(args: &Args) -> Result<()> {
             "fig11" => eval::fig11(&opts, &out),
             "fig12" => eval::fig12(&opts, &out),
             "summary" => eval::summary(&opts, &out),
+            "oversub" => eval::oversub(&opts, &out, &oversub_grid_from(args)?),
             other => anyhow::bail!("unknown eval target '{other}'"),
         }
     };
@@ -159,6 +195,54 @@ fn eval_cmd(args: &Args) -> Result<()> {
         println!("{}", table.to_markdown());
     }
     Ok(())
+}
+
+/// Parse the `repro eval oversub` axes; every axis defaults to the
+/// full grid.
+fn oversub_grid_from(args: &Args) -> Result<eval::OversubGrid> {
+    use uvm_prefetch::sim::eviction;
+    let mut grid = eval::OversubGrid::default();
+    if let Some(list) = args.get("ratios") {
+        grid.ratios = list
+            .split(',')
+            .map(|s| s.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("--ratios '{s}': {e}")))
+            .collect::<Result<Vec<f64>>>()?;
+        for &r in &grid.ratios {
+            if !(r > 0.0 && r <= 1.0) {
+                anyhow::bail!("--ratios entries must be in (0, 1], got {r}");
+            }
+        }
+    }
+    if let Some(list) = args.get("evictions") {
+        grid.evictions = list.split(',').map(|s| s.trim().to_string()).collect();
+        for ev in &grid.evictions {
+            eviction::build(ev, 0)?; // name validation
+        }
+    }
+    if let Some(list) = args.get("prefetchers") {
+        grid.prefetchers = list.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    let benches = args.get_all("benchmarks");
+    if !benches.is_empty() {
+        grid.benchmarks = benches.into_iter().map(|s| s.to_string()).collect();
+    }
+    Ok(grid)
+}
+
+/// CI golden-metrics gate: `repro golden <check|update>` (see
+/// `eval::golden` and ci/golden_metrics.json).
+fn golden(args: &Args) -> Result<()> {
+    let mode = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("golden needs a mode: check|update"))?;
+    let path = PathBuf::from(args.str("path", "ci/golden_metrics.json"));
+    match mode {
+        "check" => eval::golden::check(&path),
+        "update" => eval::golden::update(&path),
+        other => anyhow::bail!("unknown golden mode '{other}' (expected check|update)"),
+    }
 }
 
 fn info(args: &Args) -> Result<()> {

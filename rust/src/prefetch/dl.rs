@@ -30,6 +30,10 @@ use std::collections::HashMap;
 /// the attention module is "the main source of complexity").
 const BYPASS_LATENCY_DIV: u64 = 10;
 
+/// Issue width of the block prefetch when the device is near capacity:
+/// a quarter basic block (4 pages) instead of the full 64 KB block.
+const THROTTLED_SPAN: u64 = PAGES_PER_BB / 4;
+
 pub struct DlPrefetcher {
     engine: PredictorEngine,
     cluster_by: ClusterBy,
@@ -41,6 +45,10 @@ pub struct DlPrefetcher {
     latency: Cycle,
     bypass_mode: BypassMode,
     bypass_convergence: f64,
+    /// Occupancy fraction above which the block prefetch shrinks to a
+    /// quarter block (the learned prediction still issues — it is the
+    /// high-value transfer worth an eviction).
+    pressure_threshold: f64,
     #[allow(dead_code)]
     history_len: usize,
     /// Prediction prefetches waiting to be drained by the simulator.
@@ -66,6 +74,7 @@ impl DlPrefetcher {
             latency: rcfg.prediction_latency_cycles,
             bypass_mode: rcfg.bypass,
             bypass_convergence: rcfg.bypass_convergence,
+            pressure_threshold: rcfg.pressure_threshold,
             history_len,
             matured: Vec::new(),
             telemetry: PrefetchTelemetry::default(),
@@ -156,8 +165,17 @@ impl Prefetcher for DlPrefetcher {
         // at 1 µs decaying to 0.90× at 10 µs); only the demanded page
         // itself rides the hardware fault path unaffected.
         let decision_at = fault.service_at + self.latency;
-        let bb = bb_base(fault.page);
-        let mut requests: Vec<PrefetchRequest> = (bb..bb + PAGES_PER_BB)
+        // Near capacity every speculative page evicts a live one, so
+        // the block floor shrinks to the faulted quarter block; the
+        // top-1 predicted page below still issues at full priority.
+        let (lo, hi) = if fault.mem.above(self.pressure_threshold) {
+            let q = fault.page & !(THROTTLED_SPAN - 1);
+            (q, q + THROTTLED_SPAN)
+        } else {
+            let bb = bb_base(fault.page);
+            (bb, bb + PAGES_PER_BB)
+        };
+        let mut requests: Vec<PrefetchRequest> = (lo..hi)
             .filter(|&p| p != fault.page)
             .map(|p| PrefetchRequest::at(p, decision_at))
             .collect();
@@ -247,6 +265,7 @@ pub fn dl_with_stride_backend(rcfg: &RuntimeConfig, deltas: Vec<i64>) -> DlPrefe
 mod tests {
     use super::*;
     use crate::predictor::{ConstantBackend, DeltaVocab, PredictorEngine};
+    use crate::prefetch::MemPressure;
     use crate::types::AccessOrigin;
 
     fn origin() -> AccessOrigin {
@@ -254,7 +273,15 @@ mod tests {
     }
 
     fn fault(page: PageNum, now: Cycle) -> FaultInfo {
-        FaultInfo { now, service_at: now + 100, pc: 0x30, page, origin: origin(), array_id: 0 }
+        FaultInfo {
+            now,
+            service_at: now + 100,
+            pc: 0x30,
+            page,
+            origin: origin(),
+            array_id: 0,
+            mem: MemPressure::unpressured(),
+        }
     }
 
     fn small_cfg() -> RuntimeConfig {
@@ -299,6 +326,17 @@ mod tests {
         // Block prefetches wait for the prediction decision:
         // service_at (100) + latency (1000).
         assert!(d.requests.iter().all(|r| r.earliest_start == 1100));
+    }
+
+    #[test]
+    fn throttles_block_width_near_capacity() {
+        let cfg = small_cfg(); // pressure_threshold default 0.85
+        let mut p = dl(&cfg, 0, vec![1]);
+        let mut f = fault(5, 0);
+        f.mem = MemPressure::at(99, 100);
+        let d = p.on_fault(&f);
+        assert_eq!(d.requests.len(), 3, "quarter block minus the faulted page");
+        assert!(d.requests.iter().all(|r| r.page >= 4 && r.page < 8 && r.page != 5));
     }
 
     #[test]

@@ -26,6 +26,43 @@ pub mod uvmsmart;
 
 use crate::types::{AccessOrigin, Cycle, PageNum};
 
+/// Device-memory occupancy at fault time. Threaded through every
+/// [`FaultInfo`] so policies can throttle their issue width near
+/// capacity — under oversubscription every speculative page evicts a
+/// live one, and a pressure-blind prefetcher thrashes (arXiv:2204.02974).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemPressure {
+    /// Pages currently known to the device (resident or in flight).
+    pub occupancy: u64,
+    /// Device capacity in page frames.
+    pub capacity: u64,
+}
+
+impl MemPressure {
+    pub fn at(occupancy: u64, capacity: u64) -> Self {
+        Self { occupancy, capacity }
+    }
+
+    /// "No pressure" placeholder for unit tests and benches.
+    pub fn unpressured() -> Self {
+        Self { occupancy: 0, capacity: u64::MAX }
+    }
+
+    /// Occupancy as a fraction of capacity.
+    pub fn fraction(&self) -> f64 {
+        if self.capacity == 0 {
+            1.0
+        } else {
+            self.occupancy as f64 / self.capacity as f64
+        }
+    }
+
+    /// True once occupancy has reached `threshold` (a fraction).
+    pub fn above(&self, threshold: f64) -> bool {
+        self.fraction() >= threshold
+    }
+}
+
 /// A far-fault as presented to the prefetcher.
 #[derive(Debug, Clone, Copy)]
 pub struct FaultInfo {
@@ -38,6 +75,9 @@ pub struct FaultInfo {
     pub page: PageNum,
     pub origin: AccessOrigin,
     pub array_id: u8,
+    /// Device occupancy when the fault was raised (post-admit of the
+    /// demanded page) — the pressure signal for issue-width throttling.
+    pub mem: MemPressure,
 }
 
 /// One page the prefetcher wants migrated.
@@ -118,5 +158,15 @@ mod tests {
         let r = PrefetchRequest::at(42, 100);
         assert_eq!(r.page, 42);
         assert_eq!(r.earliest_start, 100);
+    }
+
+    #[test]
+    fn mem_pressure_fraction_and_threshold() {
+        let m = MemPressure::at(90, 100);
+        assert!((m.fraction() - 0.9).abs() < 1e-12);
+        assert!(m.above(0.85));
+        assert!(!m.above(0.95));
+        assert!(!MemPressure::unpressured().above(0.5));
+        assert!(MemPressure::at(1, 0).above(0.99), "zero capacity counts as full");
     }
 }

@@ -20,6 +20,7 @@ impl Prefetcher for NonePrefetcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prefetch::MemPressure;
     use crate::types::AccessOrigin;
 
     #[test]
@@ -32,6 +33,7 @@ mod tests {
             page: 1,
             origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
             array_id: 0,
+            mem: MemPressure::unpressured(),
         });
         assert!(d.requests.is_empty());
     }

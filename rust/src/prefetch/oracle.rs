@@ -55,6 +55,7 @@ impl Prefetcher for OraclePrefetcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prefetch::MemPressure;
     use crate::types::AccessOrigin;
 
     fn fault(page: PageNum) -> FaultInfo {
@@ -65,6 +66,7 @@ mod tests {
             page,
             origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
             array_id: 0,
+            mem: MemPressure::unpressured(),
         }
     }
 

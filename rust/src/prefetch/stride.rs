@@ -88,6 +88,7 @@ impl Prefetcher for StridePrefetcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prefetch::MemPressure;
     use crate::types::AccessOrigin;
 
     fn fault(page: PageNum) -> FaultInfo {
@@ -98,6 +99,7 @@ mod tests {
             page,
             origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
             array_id: 0,
+            mem: MemPressure::unpressured(),
         }
     }
 

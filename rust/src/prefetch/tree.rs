@@ -17,6 +17,16 @@ use super::{FaultInfo, PrefetchDecision, Prefetcher, PrefetchRequest};
 use crate::types::{bb_base, root_base, Cycle, PageNum, PAGES_PER_BB, PAGES_PER_ROOT};
 use std::collections::HashMap;
 
+/// Drop every request outside the faulted page's 64 KB basic block,
+/// returning how many were dropped — the conservative-mode primitive
+/// shared by the tree throttle and UVMSmart's promotion suppression.
+pub(crate) fn retain_basic_block(requests: &mut Vec<PrefetchRequest>, page: PageNum) -> u64 {
+    let bb = bb_base(page);
+    let before = requests.len();
+    requests.retain(|r| r.page >= bb && r.page < bb + PAGES_PER_BB);
+    (before - requests.len()) as u64
+}
+
 /// Per-2MB-chunk valid-page bitmap (512 pages = 8 × u64).
 #[derive(Debug, Clone, Default)]
 struct ChunkState {
@@ -46,11 +56,27 @@ pub struct TreePrefetcher {
     chunks: HashMap<PageNum, ChunkState>,
     /// Promotion threshold (paper: 0.5).
     threshold: f64,
+    /// Occupancy fraction above which promotion cascades are dropped
+    /// (issue-width throttle). `None` — the default — is the stock
+    /// driver behaviour: NVIDIA's tree prefetcher is not
+    /// pressure-aware, which is exactly why it thrashes under
+    /// oversubscription (the baseline the oversub sweep measures).
+    pressure_throttle: Option<f64>,
+    /// Promotion pages dropped by the throttle.
+    pub throttled: u64,
 }
 
 impl TreePrefetcher {
     pub fn new(threshold: f64) -> Self {
-        Self { chunks: HashMap::new(), threshold }
+        Self { chunks: HashMap::new(), threshold, pressure_throttle: None, throttled: 0 }
+    }
+
+    /// Enable the near-capacity throttle: above `frac` occupancy the
+    /// policy migrates only the faulted basic block (like UVMSmart's
+    /// conservative mode), never a promotion cascade.
+    pub fn with_pressure_throttle(mut self, frac: f64) -> Self {
+        self.pressure_throttle = Some(frac);
+        self
     }
 
     /// Mark pages valid and collect the promotion cascade: walk from
@@ -97,7 +123,15 @@ impl Prefetcher for TreePrefetcher {
     }
 
     fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
-        let requests = self.fault_block(fault.page, fault.service_at);
+        let mut requests = self.fault_block(fault.page, fault.service_at);
+        if let Some(thr) = self.pressure_throttle {
+            if fault.mem.above(thr) {
+                // Keep only the faulted basic block; promoted pages
+                // stay marked valid in the bitmap (the driver believes
+                // them handled), mirroring UVMSmart's conservative mode.
+                self.throttled += retain_basic_block(&mut requests, fault.page);
+            }
+        }
         PrefetchDecision { requests }
     }
 
@@ -115,6 +149,7 @@ impl Prefetcher for TreePrefetcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prefetch::MemPressure;
     use crate::types::AccessOrigin;
 
     fn fault(page: PageNum) -> FaultInfo {
@@ -125,6 +160,7 @@ mod tests {
             page,
             origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
             array_id: 0,
+            mem: MemPressure::unpressured(),
         }
     }
 
@@ -171,6 +207,33 @@ mod tests {
         // cascade snowballs the whole 2MB chunk (§2.2 / Fig. 11 spike).
         total += t.on_fault(&fault(16)).requests.len(); // block 1
         assert_eq!(total as u64, PAGES_PER_ROOT, "full chunk resident after cascade");
+    }
+
+    #[test]
+    fn pressure_throttle_drops_promotions_near_capacity() {
+        let mut t = TreePrefetcher::new(0.5).with_pressure_throttle(0.9);
+        t.on_fault(&fault(5)); // bb 0
+        t.on_fault(&fault(40)); // bb 2
+        // Unthrottled this fault would add the [48, 64) promotion (see
+        // `second_block_in_node_triggers_promotion`); at 95 % occupancy
+        // only the faulted basic block survives.
+        let mut f = fault(17);
+        f.mem = MemPressure::at(95, 100);
+        let d = t.on_fault(&f);
+        assert_eq!(d.requests.len(), 16, "leaf block only under pressure");
+        assert!(d.requests.iter().all(|r| r.page >= 16 && r.page < 32));
+        assert_eq!(t.throttled, 16);
+    }
+
+    #[test]
+    fn default_tree_ignores_pressure() {
+        let mut t = TreePrefetcher::new(0.5);
+        t.on_fault(&fault(5));
+        t.on_fault(&fault(40));
+        let mut f = fault(17);
+        f.mem = MemPressure::at(100, 100);
+        let d = t.on_fault(&f);
+        assert_eq!(d.requests.len(), 32, "stock driver promotes regardless of pressure");
     }
 
     #[test]

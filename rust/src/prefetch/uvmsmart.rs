@@ -10,23 +10,20 @@
 //! that is exactly what the paper's "U" rows measure.
 //!
 //! We therefore implement "U" as the tree prefetcher plus the
-//! delayed-migration hook: when the device is under memory pressure
-//! (occupancy above `pressure_threshold`), the policy suppresses tree
-//! *promotions* and falls back to basic-block-only prefetching —
+//! delayed-migration hook: when the device is under memory pressure —
+//! judged from the *true* occupancy signal the simulator threads
+//! through every [`FaultInfo`] — the policy suppresses tree
+//! *promotions* and falls back to basic-block-only prefetching:
 //! UVMSmart's "switch to conservative policy on thrash detection"
-//! behaviour, exercised by the oversubscription example.
+//! behaviour, exercised by `repro eval oversub`.
 
-use super::tree::TreePrefetcher;
-use super::{FaultInfo, PrefetchDecision, Prefetcher, PrefetchRequest};
-use crate::types::{bb_base, PageNum, PAGES_PER_BB};
+use super::tree::{retain_basic_block, TreePrefetcher};
+use super::{FaultInfo, PrefetchDecision, Prefetcher};
+use crate::types::PageNum;
 
 #[derive(Debug)]
 pub struct UvmSmartPrefetcher {
     tree: TreePrefetcher,
-    /// Pages currently believed resident (tracked from our own
-    /// requests + faults − evictions) to estimate pressure.
-    resident_estimate: i64,
-    capacity_pages: i64,
     /// Above this occupancy fraction, suppress tree promotion.
     pressure_threshold: f64,
     /// Evictions observed in the current window (thrash detector).
@@ -35,20 +32,13 @@ pub struct UvmSmartPrefetcher {
 }
 
 impl UvmSmartPrefetcher {
-    pub fn new(tree_threshold: f64, capacity_pages: u64, pressure_threshold: f64) -> Self {
+    pub fn new(tree_threshold: f64, pressure_threshold: f64) -> Self {
         Self {
             tree: TreePrefetcher::new(tree_threshold),
-            resident_estimate: 0,
-            capacity_pages: capacity_pages as i64,
             pressure_threshold,
             recent_evictions: 0,
             promotions_suppressed: 0,
         }
-    }
-
-    fn under_pressure(&self) -> bool {
-        self.resident_estimate as f64 >= self.pressure_threshold * self.capacity_pages as f64
-            || self.recent_evictions > 0
     }
 }
 
@@ -59,23 +49,15 @@ impl Prefetcher for UvmSmartPrefetcher {
 
     fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
         let mut decision = self.tree.on_fault(fault);
-        self.resident_estimate += 1; // demand page
-        if self.under_pressure() {
+        if fault.mem.above(self.pressure_threshold) || self.recent_evictions > 0 {
             // Conservative mode: keep only the faulted basic block.
-            let bb = bb_base(fault.page);
-            let before = decision.requests.len();
-            decision
-                .requests
-                .retain(|r: &PrefetchRequest| r.page >= bb && r.page < bb + PAGES_PER_BB);
-            self.promotions_suppressed += (before - decision.requests.len()) as u64;
+            self.promotions_suppressed += retain_basic_block(&mut decision.requests, fault.page);
         }
-        self.resident_estimate += decision.requests.len() as i64;
         decision
     }
 
     fn on_evict(&mut self, page: PageNum) {
         self.tree.on_evict(page);
-        self.resident_estimate -= 1;
         self.recent_evictions += 1;
     }
 
@@ -90,9 +72,10 @@ impl Prefetcher for UvmSmartPrefetcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prefetch::MemPressure;
     use crate::types::AccessOrigin;
 
-    fn fault(page: PageNum) -> FaultInfo {
+    fn fault(page: PageNum, mem: MemPressure) -> FaultInfo {
         FaultInfo {
             now: 0,
             service_at: 10,
@@ -100,35 +83,43 @@ mod tests {
             page,
             origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
             array_id: 0,
+            mem,
         }
     }
 
     #[test]
     fn behaves_like_tree_when_unpressured() {
-        let mut u = UvmSmartPrefetcher::new(0.5, 1_000_000, 0.8);
-        let d = u.on_fault(&fault(5));
+        let mut u = UvmSmartPrefetcher::new(0.5, 0.85);
+        let d = u.on_fault(&fault(5, MemPressure::unpressured()));
         assert_eq!(d.requests.len(), 16, "whole basic block, like the tree");
         assert_eq!(u.promotions_suppressed, 0);
     }
 
     #[test]
-    fn suppresses_promotion_under_pressure() {
-        // Tiny capacity: pressure hits immediately.
-        let mut u = UvmSmartPrefetcher::new(0.5, 16, 0.5);
-        u.on_fault(&fault(0)); // fills estimate to 17 ≥ 0.5*16
-        let d = u.on_fault(&fault(40)); // bb 2
-        assert!(d.requests.len() <= 16, "no promotion beyond the block");
-        // All requests stay within the faulted basic block.
-        assert!(d.requests.iter().all(|r| r.page >= 32 && r.page < 48));
+    fn suppresses_promotion_under_occupancy_pressure() {
+        let mut u = UvmSmartPrefetcher::new(0.5, 0.85);
+        let hot = MemPressure::at(95, 100);
+        u.on_fault(&fault(5, hot)); // bb 0
+        u.on_fault(&fault(40, hot)); // bb 2
+        // Unpressured this fault would also promote [48, 64).
+        let d = u.on_fault(&fault(17, hot));
+        assert_eq!(d.requests.len(), 16, "basic block only");
+        assert!(d.requests.iter().all(|r| r.page >= 16 && r.page < 32));
+        assert_eq!(u.promotions_suppressed, 16);
     }
 
     #[test]
-    fn eviction_marks_thrash_and_decays_on_hits() {
-        let mut u = UvmSmartPrefetcher::new(0.5, 1_000_000, 0.99);
-        u.on_evict(3);
-        assert!(u.under_pressure());
+    fn thrash_detector_suppresses_and_decays_on_hits() {
+        let mut u = UvmSmartPrefetcher::new(0.5, 0.85);
+        let quiet = MemPressure::unpressured();
+        u.on_fault(&fault(5, quiet));
+        u.on_fault(&fault(40, quiet));
+        u.on_evict(100); // page 100's bit is unset — pure thrash signal
+        let d = u.on_fault(&fault(17, quiet));
+        assert_eq!(d.requests.len(), 16, "eviction marks thrash: block only");
+        assert_eq!(u.promotions_suppressed, 16);
         let origin = AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 };
         u.on_access(origin, 0, 3, true, 0);
-        assert!(!u.under_pressure(), "decayed after quiet traffic");
+        assert_eq!(u.recent_evictions, 0, "decayed after quiet traffic");
     }
 }

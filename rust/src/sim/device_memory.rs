@@ -1,9 +1,11 @@
 //! Device-memory residency tracking: page frames, migration state,
-//! LRU eviction, and the per-page bookkeeping behind the paper's
-//! accuracy / coverage / hit-rate metrics.
+//! pluggable eviction (see [`crate::sim::eviction`]), and the per-page
+//! bookkeeping behind the paper's accuracy / coverage / hit-rate
+//! metrics.
 
+use crate::sim::eviction::{EvictionPolicy, LruPolicy};
 use crate::types::{Cycle, PageNum};
-use std::collections::{BTreeSet, HashMap};
+use std::collections::HashMap;
 
 /// Migration state of a page known to the device.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -26,7 +28,19 @@ pub struct PageInfo {
     pub last_touch: Cycle,
 }
 
-/// Device memory: a bounded set of page frames with LRU eviction.
+impl PageInfo {
+    /// Resident by `now` under lazy promotion — the only pages an
+    /// eviction policy may target (in-flight pages are never evicted).
+    pub fn evictable(&self, now: Cycle) -> bool {
+        match self.state {
+            PageState::Resident => true,
+            PageState::Migrating { arrival } => arrival <= now,
+        }
+    }
+}
+
+/// Device memory: a bounded set of page frames with pluggable
+/// eviction ([`LruPolicy`] by default — the paper's baseline).
 ///
 /// Residency flips lazily: a `Migrating` page whose arrival has passed
 /// is promoted to `Resident` at the next query, so no event is needed
@@ -35,9 +49,7 @@ pub struct PageInfo {
 pub struct DeviceMemory {
     capacity_pages: u64,
     pages: HashMap<PageNum, PageInfo>,
-    /// LRU index: (last_touch, page). Entries are kept in sync with
-    /// `pages[p].last_touch`.
-    lru: BTreeSet<(Cycle, PageNum)>,
+    policy: Box<dyn EvictionPolicy>,
     /// Number of prefetched copies that were evicted before ever being
     /// demanded (wasted transfers — hurts accuracy).
     pub evicted_unused_prefetches: u64,
@@ -46,14 +58,22 @@ pub struct DeviceMemory {
 
 impl DeviceMemory {
     pub fn new(capacity_pages: u64) -> Self {
+        Self::with_policy(capacity_pages, Box::new(LruPolicy::default()))
+    }
+
+    pub fn with_policy(capacity_pages: u64, policy: Box<dyn EvictionPolicy>) -> Self {
         assert!(capacity_pages > 0);
         Self {
             capacity_pages,
             pages: HashMap::new(),
-            lru: BTreeSet::new(),
+            policy,
             evicted_unused_prefetches: 0,
             evictions: 0,
         }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
     }
 
     pub fn occupancy(&self) -> u64 {
@@ -79,30 +99,32 @@ impl DeviceMemory {
         self.pages.get(&page)
     }
 
-    /// Record a demand touch (updates LRU + prefetch-use accounting).
-    /// Returns `true` when this is the first demand touch of a
-    /// prefetched copy (the prefetch "hit").
+    /// Record a demand touch (updates the eviction policy's index +
+    /// prefetch-use accounting). Returns `true` when this is the first
+    /// demand touch of a prefetched copy (the prefetch "hit").
     pub fn touch(&mut self, page: PageNum, now: Cycle) -> bool {
-        let Some(info) = self.pages.get_mut(&page) else { return false };
-        self.lru.remove(&(info.last_touch, page));
-        info.last_touch = now;
-        self.lru.insert((now, page));
-        if info.via_prefetch && !info.prefetch_used {
-            info.prefetch_used = true;
-            true
-        } else {
-            false
-        }
+        let (prev, first_use) = {
+            let Some(info) = self.pages.get_mut(&page) else { return false };
+            let prev = info.last_touch;
+            info.last_touch = now;
+            let first_use = info.via_prefetch && !info.prefetch_used;
+            if first_use {
+                info.prefetch_used = true;
+            }
+            (prev, first_use)
+        };
+        self.policy.on_touch(page, prev, now);
+        first_use
     }
 
-    /// Admit a page that is starting migration. Evicts LRU pages if at
-    /// capacity. Returns the evicted pages (resident only — in-flight
-    /// pages are never evicted).
+    /// Admit a page that is starting migration. Evicts policy-chosen
+    /// pages if at capacity. Returns the evicted pages (resident only —
+    /// in-flight pages are never evicted).
     pub fn admit(&mut self, page: PageNum, arrival: Cycle, via_prefetch: bool, now: Cycle) -> Vec<PageNum> {
         debug_assert!(!self.pages.contains_key(&page), "admit of already-known page {page}");
         let mut evicted = Vec::new();
         while self.pages.len() as u64 >= self.capacity_pages {
-            match self.evict_lru(now) {
+            match self.evict_one(now) {
                 Some(p) => evicted.push(p),
                 None => break, // everything in flight; over-commit rather than deadlock
             }
@@ -111,29 +133,20 @@ impl DeviceMemory {
             page,
             PageInfo { state: PageState::Migrating { arrival }, via_prefetch, prefetch_used: false, last_touch: now },
         );
-        self.lru.insert((now, page));
+        self.policy.on_admit(page, now, via_prefetch);
         evicted
     }
 
-    /// Evict the least-recently-used *resident* page.
-    fn evict_lru(&mut self, now: Cycle) -> Option<PageNum> {
-        // Scan LRU order for the first entry that is resident by `now`.
-        let victim = self.lru.iter().copied().find(|&(_, p)| {
-            match self.pages.get(&p) {
-                Some(i) => match i.state {
-                    PageState::Resident => true,
-                    PageState::Migrating { arrival } => arrival <= now,
-                },
-                None => false,
-            }
-        })?;
-        self.lru.remove(&victim);
-        let info = self.pages.remove(&victim.1).expect("lru entry without page");
+    /// Evict the policy's victim among pages resident by `now`.
+    fn evict_one(&mut self, now: Cycle) -> Option<PageNum> {
+        let victim = self.policy.pick_victim(&self.pages, now)?;
+        let info = self.pages.remove(&victim).expect("policy picked an unknown page");
+        self.policy.on_remove(victim, &info);
         if info.via_prefetch && !info.prefetch_used {
             self.evicted_unused_prefetches += 1;
         }
         self.evictions += 1;
-        Some(victim.1)
+        Some(victim)
     }
 
     /// All pages currently known (resident or in flight). Test helper.
@@ -166,6 +179,7 @@ mod tests {
     #[test]
     fn eviction_is_lru_and_counts_unused_prefetch() {
         let mut m = DeviceMemory::new(2);
+        assert_eq!(m.policy_name(), "lru", "default policy is the paper's LRU");
         m.admit(1, 0, true, 0);
         m.admit(2, 0, false, 1);
         m.touch(1, 5); // 2 is now LRU... but 1 was touched later

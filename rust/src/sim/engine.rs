@@ -17,17 +17,18 @@
 //! are bit-deterministic.
 
 use crate::config::{ExperimentConfig, SimConfig};
-use crate::prefetch::{FaultInfo, Prefetcher, PrefetchRequest};
+use crate::prefetch::{FaultInfo, MemPressure, Prefetcher, PrefetchRequest};
 use crate::sim::device_memory::{DeviceMemory, PageState};
+use crate::sim::eviction;
 use crate::sim::gmmu::Gmmu;
 use crate::sim::interconnect::Interconnect;
 use crate::sim::metrics::Metrics;
 use crate::sim::sm::{SmState, WarpOp};
 use crate::sim::trace::TraceWriter;
-use crate::types::{page_of, AccessOrigin, Cycle, TraceRecord, PAGE_SIZE};
+use crate::types::{page_of, AccessOrigin, Cycle, PageNum, TraceRecord, PAGE_SIZE};
 use crate::workloads::WorkloadInstance;
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 #[derive(Debug)]
 enum EventKind {
@@ -75,6 +76,9 @@ pub struct Simulator {
     max_instructions: u64,
     stopping: bool,
     far_fault_cycles: Cycle,
+    /// Pages evicted at least once — a far-fault on one of these is a
+    /// *refault* (the thrash-ratio numerator under oversubscription).
+    evicted_pages: HashSet<PageNum>,
 }
 
 impl Simulator {
@@ -85,12 +89,25 @@ impl Simulator {
         trace: Option<TraceWriter>,
     ) -> Self {
         let cfg = exp.sim.clone();
+        // Oversubscription resolves here, where the generated workload
+        // is in hand: `oversub_ratio` < 1.0 caps residency to that
+        // fraction of the workload's page footprint (DESIGN.md §2).
+        let (capacity_pages, footprint_pages) = if cfg.oversub_ratio < 1.0 {
+            let fp = workload.footprint_pages();
+            (cfg.effective_capacity_pages(fp), fp)
+        } else {
+            (cfg.device_mem_pages(), 0)
+        };
         let mut sms: Vec<SmState> =
             (0..cfg.n_sms).map(|_| SmState::new(cfg.warps_per_sm as usize)).collect();
         for task in workload.tasks {
             sms[task.sm as usize].load_warp(task.warp, crate::sim::sm::WarpProgram::new(task.ops));
         }
-        let device = DeviceMemory::new(cfg.device_mem_pages());
+        let device = DeviceMemory::with_policy(
+            capacity_pages,
+            eviction::build(&cfg.eviction_policy, exp.seed)
+                .expect("eviction policy name is validated upstream (SimConfig::validate)"),
+        );
         let gmmu = Gmmu::new(cfg.n_sms as usize, cfg.tlb_entries);
         let link = Interconnect::new(
             cfg.pcie_bytes_per_cycle(),
@@ -113,8 +130,11 @@ impl Simulator {
             max_instructions: exp.max_instructions,
             stopping: false,
             far_fault_cycles,
+            evicted_pages: HashSet::new(),
         };
         sim.metrics.pcie_bucket_cycles = sim.cfg.pcie_bucket_cycles;
+        sim.metrics.capacity_pages = capacity_pages;
+        sim.metrics.footprint_pages = footprint_pages;
         for sm in 0..sim.sms.len() as u16 {
             sim.schedule(0, EventKind::Dispatch { sm });
             sim.sms[sm as usize].dispatch_at = Some(0);
@@ -266,11 +286,15 @@ impl Simulator {
             None => {
                 // Far-fault: host-side service + page transfer.
                 self.metrics.far_faults += 1;
+                if self.evicted_pages.contains(&page) {
+                    self.metrics.refaults += 1;
+                }
                 let service_at = t_eff + self.far_fault_cycles;
                 let xfer = self.link.transfer(service_at, PAGE_SIZE, false);
                 for evicted in self.device.admit(page, xfer.arrival, false, t_eff) {
                     self.gmmu.shootdown(evicted);
                     self.prefetcher.on_evict(evicted);
+                    self.evicted_pages.insert(evicted);
                 }
                 self.device.touch(page, t_eff);
                 let fault = FaultInfo {
@@ -280,6 +304,7 @@ impl Simulator {
                     page,
                     origin,
                     array_id: op.access.array_id,
+                    mem: MemPressure::at(self.device.occupancy(), self.device.capacity()),
                 };
                 let decision = self.prefetcher.on_fault(&fault);
                 self.apply_prefetches(&decision.requests, t_eff);
@@ -319,6 +344,7 @@ impl Simulator {
             for evicted in self.device.admit(r.page, xfer.arrival, true, now) {
                 self.gmmu.shootdown(evicted);
                 self.prefetcher.on_evict(evicted);
+                self.evicted_pages.insert(evicted);
             }
             self.metrics.prefetch_transfers += 1;
         }

@@ -50,6 +50,15 @@ pub struct Metrics {
     // --- memory pressure ---
     pub evictions: u64,
     pub evicted_unused_prefetches: u64,
+    /// Far-faults on pages that had been resident and were evicted —
+    /// the thrash signal under oversubscription.
+    pub refaults: u64,
+    /// Device capacity in page frames the run actually used (after
+    /// `oversub_ratio` resolution against the workload footprint).
+    pub capacity_pages: u64,
+    /// Distinct pages the workload touches; only computed (non-zero)
+    /// for oversubscribed runs (`oversub_ratio` < 1.0).
+    pub footprint_pages: u64,
     // --- predictor telemetry (DL policy only) ---
     pub predictions: u64,
     pub prediction_batches: u64,
@@ -109,6 +118,17 @@ impl Metrics {
         self.bytes_demand + self.bytes_prefetch
     }
 
+    /// Fraction of far-faults that re-fetch a previously evicted page
+    /// (0 when the run never faults). 1.0 means the device is purely
+    /// cycling its own evictions — full thrash.
+    pub fn thrash_ratio(&self) -> f64 {
+        if self.far_faults == 0 {
+            0.0
+        } else {
+            self.refaults as f64 / self.far_faults as f64
+        }
+    }
+
     /// Average PCIe bandwidth in GB/s given the core clock.
     pub fn pcie_avg_gbps(&self, clock_mhz: u64) -> f64 {
         if self.cycles == 0 {
@@ -122,7 +142,7 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "inst={} cycles={} ipc={:.4} accesses={} hit={:.4} faults={} coalesced={} \
-             pf_xfers={} acc={:.4} cov={:.4} unity={:.4} bytes={} evict={}",
+             pf_xfers={} acc={:.4} cov={:.4} unity={:.4} bytes={} evict={} refault={} thrash={:.4}",
             self.instructions,
             self.cycles,
             self.ipc(),
@@ -136,6 +156,8 @@ impl Metrics {
             self.unity(),
             self.pcie_bytes(),
             self.evictions,
+            self.refaults,
+            self.thrash_ratio(),
         )
     }
 }
@@ -181,5 +203,12 @@ mod tests {
         assert_eq!(m.accuracy(), 1.0);
         assert_eq!(m.coverage(), 1.0);
         assert!(!m.unity().is_nan());
+        assert_eq!(m.thrash_ratio(), 0.0);
+    }
+
+    #[test]
+    fn thrash_ratio_is_refaults_over_faults() {
+        let m = Metrics { far_faults: 8, refaults: 2, ..Default::default() };
+        assert!((m.thrash_ratio() - 0.25).abs() < 1e-12);
     }
 }

@@ -4,6 +4,7 @@
 
 pub mod device_memory;
 pub mod engine;
+pub mod eviction;
 pub mod gmmu;
 pub mod interconnect;
 pub mod metrics;
@@ -11,5 +12,6 @@ pub mod sm;
 pub mod trace;
 
 pub use engine::Simulator;
+pub use eviction::{EvictionPolicy, ALL_EVICTION_POLICIES};
 pub use metrics::Metrics;
 pub use trace::{TraceWriter, TRACE_HEADER};

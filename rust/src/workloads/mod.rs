@@ -31,7 +31,7 @@ pub mod srad_v2;
 pub mod streamtriad;
 
 use crate::sim::sm::WarpOp;
-use crate::types::{SmId, WarpId};
+use crate::types::{page_of, SmId, WarpId};
 
 /// One warp's full instruction stream, placed on an (SM, warp) slot.
 #[derive(Debug)]
@@ -62,6 +62,20 @@ impl WorkloadInstance {
             .flat_map(|t| t.ops.iter())
             .map(|op| op.compute as u64 + 1)
             .sum()
+    }
+
+    /// Distinct 4 KB pages the workload touches — the footprint the
+    /// oversubscription ratio (`SimConfig::oversub_ratio`) is a
+    /// fraction of. One full pass over the op streams; only computed
+    /// for oversubscribed runs.
+    pub fn footprint_pages(&self) -> u64 {
+        let mut pages = std::collections::HashSet::new();
+        for t in &self.tasks {
+            for op in &t.ops {
+                pages.insert(page_of(op.access.vaddr));
+            }
+        }
+        pages.len() as u64
     }
 }
 
@@ -137,6 +151,15 @@ mod tests {
                 assert!(t.warp < cfg.warps_per_sm, "{name}");
             }
         }
+    }
+
+    #[test]
+    fn footprint_counts_distinct_pages() {
+        let cfg = SimConfig::default();
+        let wl = build("addvectors", &cfg, 1, 0.1).unwrap();
+        let fp = wl.footprint_pages();
+        assert!(fp > 0 && fp <= wl.n_accesses(), "footprint {fp} bounded by accesses");
+        assert_eq!(fp, wl.footprint_pages(), "pure function of the instance");
     }
 
     #[test]

@@ -1,0 +1,123 @@
+//! Oversubscription subsystem guarantees: ratio semantics (resident
+//! fraction of the workload footprint), per-eviction-policy
+//! determinism, and the byte-identity anchor — a ratio-1.0 LRU oversub
+//! cell is the *same simulation* as the plain `repro eval summary`
+//! cell, so the new axis cannot silently move the paper-regime
+//! numbers.
+
+use uvm_prefetch::eval::runner::{run_benchmark_with, RunOptions};
+use uvm_prefetch::eval::sweep::CellSpec;
+use uvm_prefetch::sim::{Metrics, ALL_EVICTION_POLICIES};
+
+fn tiny() -> RunOptions {
+    // To completion: every footprint page is touched, so a ratio < 1.0
+    // is guaranteed to evict.
+    RunOptions { scale: 0.1, max_instructions: 0, ..Default::default() }
+}
+
+fn oversub_run(benchmark: &str, prefetcher: &str, ratio: f64, eviction: &str) -> Metrics {
+    let ev = eviction.to_string();
+    run_benchmark_with(
+        benchmark,
+        prefetcher,
+        &tiny(),
+        move |mut e| {
+            e.sim.oversub_ratio = ratio;
+            e.sim.eviction_policy = ev;
+            e
+        },
+        None,
+    )
+    .unwrap()
+}
+
+#[test]
+fn same_seed_double_run_identical_per_eviction_policy() {
+    for ev in ALL_EVICTION_POLICIES {
+        let a = oversub_run("atax", "tree", 0.5, ev);
+        let b = oversub_run("atax", "tree", 0.5, ev);
+        assert_eq!(a, b, "{ev}: metrics differ across identical runs");
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "{ev}: byte-identical debug form");
+    }
+}
+
+#[test]
+fn ratio_one_lru_cell_is_byte_identical_to_plain_summary_cell() {
+    let opts = tiny();
+    for prefetcher in ["none", "tree", "dl"] {
+        let plain = CellSpec::new("atax", prefetcher, &opts).run().unwrap();
+        let anchored = CellSpec::new("atax", prefetcher, &opts).with_oversub(1.0, "lru").run().unwrap();
+        assert_eq!(plain, anchored, "{prefetcher}: ratio 1.0 must be the baseline run");
+        assert_eq!(format!("{plain:?}"), format!("{anchored:?}"), "{prefetcher}");
+    }
+}
+
+#[test]
+fn ratio_caps_capacity_to_footprint_fraction_and_evicts() {
+    let m = oversub_run("atax", "tree", 0.5, "lru");
+    assert!(m.footprint_pages > 1, "footprint computed for oversubscribed runs");
+    assert!(
+        m.capacity_pages <= m.footprint_pages / 2 + 1,
+        "capacity {} !≈ half of footprint {}",
+        m.capacity_pages,
+        m.footprint_pages
+    );
+    assert!(m.evictions > 0, "half-footprint residency must evict");
+    assert!(m.refaults <= m.far_faults, "refaults are a subset of faults");
+    let t = m.thrash_ratio();
+    assert!((0.0..=1.0).contains(&t), "thrash ratio {t}");
+
+    let full = run_benchmark_with("atax", "tree", &tiny(), |e| e, None).unwrap();
+    assert_eq!(full.evictions, 0, "baseline capacity fits the scaled working set");
+    assert!(
+        m.page_hit_rate() <= full.page_hit_rate() + 1e-12,
+        "pressure cannot improve the hit rate: {} > {}",
+        m.page_hit_rate(),
+        full.page_hit_rate()
+    );
+}
+
+#[test]
+fn every_eviction_policy_survives_pressure_on_every_prefetcher() {
+    for ev in ALL_EVICTION_POLICIES {
+        for pf in ["none", "tree", "uvmsmart", "dl"] {
+            let m = oversub_run("atax", pf, 0.5, ev);
+            assert!(m.instructions > 0, "{ev}/{pf}");
+            assert!(m.evictions > 0, "{ev}/{pf}: no evictions at half footprint");
+            assert_eq!(
+                m.page_hits + m.coalesced + m.far_faults,
+                m.mem_accesses,
+                "{ev}/{pf}: outcome partition broken under pressure"
+            );
+        }
+    }
+}
+
+#[test]
+fn invalid_ratio_and_eviction_are_rejected() {
+    for bad in [0.0, -0.5, 1.5] {
+        let err = run_benchmark_with(
+            "addvectors",
+            "tree",
+            &tiny(),
+            move |mut e| {
+                e.sim.oversub_ratio = bad;
+                e
+            },
+            None,
+        );
+        assert!(err.is_err(), "ratio {bad} accepted");
+    }
+    let err = run_benchmark_with(
+        "addvectors",
+        "tree",
+        &tiny(),
+        |mut e| {
+            e.sim.oversub_ratio = 0.5;
+            e.sim.eviction_policy = "bogus".to_string();
+            e
+        },
+        None,
+    );
+    assert!(err.is_err(), "unknown eviction policy accepted");
+}
