@@ -6,6 +6,9 @@
 #   make check         cargo check --all-targets --release (benches/examples)
 #   make eval-smoke    small parallel all-benchmark sweep → BENCH_eval.json
 #   make oversub-smoke small oversubscription sweep → BENCH_oversub.json
+#   make train         train the native backend (streamtriad → artifacts/)
+#   make model-smoke   tiny train + native-backend eval pairs (CI)
+#   make doc           cargo doc --no-deps with rustdoc warnings denied
 #   make golden-check  CI metrics-regression gate vs ci/golden_metrics.json
 #   make golden-update re-pin the goldens from a fresh run (commit the diff)
 #   make eval          full paper-regime sweep (scale 4.0, 2M instructions)
@@ -15,7 +18,7 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test lint fmt clippy check eval-smoke oversub-smoke golden-check golden-update eval oversub artifacts clean
+.PHONY: build test lint fmt clippy check doc eval-smoke oversub-smoke train model-smoke golden-check golden-update eval oversub artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -38,6 +41,11 @@ check:
 
 lint: fmt clippy check
 
+# Rustdoc gate (CI `docs` job): broken intra-doc links and other
+# rustdoc lints fail the build.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
 # Fast sweep for CI smoke: tiny scale + instruction cap, stride
 # fallback (no PJRT artifacts needed). Produces BENCH_eval.json.
 eval-smoke:
@@ -51,6 +59,23 @@ oversub-smoke:
 		--scale 0.25 --max-instructions 200000 --out results-smoke \
 		--ratios 1.0,0.5 \
 		--benchmarks addvectors --benchmarks atax --benchmarks pathfinder
+
+# Train the native (pure-Rust) predictor backend offline: access-stream
+# harvest → vocab → windows → SGD/Adam → artifacts/<wl>.native.params.bin
+# + vocab + manifest entry (arch=native). Add more workloads with
+# `--benchmarks a --benchmarks b`.
+train:
+	$(CARGO) run --release --bin repro -- train --workload streamtriad --out artifacts
+
+# CI model smoke: tiny offline train, then the U-vs-R pairs table served
+# by the freshly trained native backend (offline-clean, no pjrt feature).
+model-smoke:
+	$(CARGO) run --release --bin repro -- train --workload streamtriad \
+		--out results-smoke/models --history-len 8 --hidden 32 --epochs 2 \
+		--limit 20000 --scale 0.25 --max-instructions 200000
+	$(CARGO) run --release --bin repro -- eval pairs --backend native \
+		--artifacts results-smoke/models \
+		--scale 0.25 --max-instructions 200000 --out results-smoke
 
 # Metrics-regression gate (CI): fixed 3-workload grid vs committed
 # goldens, tolerances in the JSON. Update goldens deliberately with

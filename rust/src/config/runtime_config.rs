@@ -18,6 +18,18 @@ pub enum PredictorBackendKind {
         /// "shared" (the paper's pretrained-on-5-benchmarks corpus).
         model: String,
     },
+    /// Pure-Rust learned backend (the paper's §6 revised model,
+    /// trained offline by `repro train` — see DESIGN.md §6): embedding
+    /// tables + FC stack loaded from a `*.native.params.bin` tensor
+    /// store referenced by the artifacts manifest (`arch = "native"`).
+    Native {
+        /// Directory holding `manifest.json`, `*.native.params.bin`,
+        /// `*.vocab.json`.
+        artifacts: String,
+        /// Model key in the manifest; empty ⇒ per-benchmark, then
+        /// "shared".
+        model: String,
+    },
     /// Pure-Rust majority/stride fallback (no artifacts needed). Used
     /// by tests and as a degraded mode when artifacts are missing.
     Stride,
@@ -33,6 +45,11 @@ impl PredictorBackendKind {
                 ("artifacts", Json::str(artifacts)),
                 ("model", Json::str(model)),
             ]),
+            Self::Native { artifacts, model } => Json::obj(vec![
+                ("kind", Json::str("native")),
+                ("artifacts", Json::str(artifacts)),
+                ("model", Json::str(model)),
+            ]),
             Self::Stride => Json::obj(vec![("kind", Json::str("stride"))]),
             Self::Constant(d) => Json::obj(vec![
                 ("kind", Json::str("constant")),
@@ -44,6 +61,10 @@ impl PredictorBackendKind {
     fn from_json(j: &Json) -> Result<Self> {
         match j.req("kind")?.as_str() {
             Some("pjrt") => Ok(Self::Pjrt {
+                artifacts: j.get("artifacts").and_then(Json::as_str).unwrap_or("artifacts").into(),
+                model: j.get("model").and_then(Json::as_str).unwrap_or("").into(),
+            }),
+            Some("native") => Ok(Self::Native {
                 artifacts: j.get("artifacts").and_then(Json::as_str).unwrap_or("artifacts").into(),
                 model: j.get("model").and_then(Json::as_str).unwrap_or("").into(),
             }),
@@ -225,6 +246,20 @@ mod tests {
             RuntimeConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.backend, cfg.backend);
         assert_eq!(back.bypass, BypassMode::Always);
+    }
+
+    #[test]
+    fn native_backend_kind_json_roundtrip() {
+        let cfg = RuntimeConfig {
+            backend: PredictorBackendKind::Native {
+                artifacts: "models".into(),
+                model: "streamtriad".into(),
+            },
+            ..Default::default()
+        };
+        let back =
+            RuntimeConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.backend, cfg.backend);
     }
 
     #[test]

@@ -37,9 +37,17 @@ const DEFAULT_FLOAT_ABS_TOL: f64 = 0.005;
 const DEFAULT_INT_REL_TOL: f64 = 0.0;
 
 /// Fixed eval-smoke regime (mirrors `make eval-smoke`), independent of
-/// CLI defaults so the goldens never move with them silently.
+/// CLI defaults so the goldens never move with them silently. The
+/// predictor backend is pinned to `stride` explicitly: training a
+/// native model (or pointing `--artifacts` anywhere) must never move
+/// these cells — the gate stays backend-stable by construction.
 fn golden_opts() -> RunOptions {
-    RunOptions { scale: 0.25, max_instructions: 200_000, ..Default::default() }
+    RunOptions {
+        scale: 0.25,
+        max_instructions: 200_000,
+        backend: "stride".into(),
+        ..Default::default()
+    }
 }
 
 /// The gated cell grid, in a stable order.

@@ -127,6 +127,11 @@ pub fn bench_oversub_json(specs: &[CellSpec], o: &SweepOutcome) -> Json {
 /// Run the grid through the parallel sweep executor; write the
 /// per-cell CSV and `BENCH_oversub.json`; return the aggregate table.
 pub fn oversub(opts: &RunOptions, out: &Path, grid: &OversubGrid) -> anyhow::Result<Table> {
+    // The native backend only serves benchmarks with a trained model;
+    // narrow the grid (loudly) instead of failing mid-sweep.
+    let mut grid = grid.clone();
+    grid.benchmarks = crate::eval::runner::backend_benchmarks(opts, &grid.benchmarks)?;
+    let grid = &grid;
     let specs = grid.cells(opts);
     let threads = sweep::default_threads();
     eprintln!("eval oversub: running {} cells on {threads} threads…", specs.len());

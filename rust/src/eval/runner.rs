@@ -1,7 +1,7 @@
 //! Experiment runner: build a workload + prefetcher and simulate.
 
 use crate::config::{ExperimentConfig, PredictorBackendKind, RuntimeConfig};
-use crate::predictor::{DeltaVocab, PredictorEngine, StrideBackend};
+use crate::predictor::{DeltaVocab, NativeBackend, NativeConfig, PredictorEngine, StrideBackend};
 use crate::prefetch::dl::DlPrefetcher;
 use crate::prefetch::none::NonePrefetcher;
 use crate::prefetch::oracle::OraclePrefetcher;
@@ -23,11 +23,17 @@ pub struct RunOptions {
     pub scale: f64,
     /// Instruction cap per run (0 = to completion).
     pub max_instructions: u64,
-    /// Artifacts directory for the DL policy ("" = stride fallback).
+    /// Artifacts directory for the DL policy ("" = the backend's
+    /// default: none for stride, `artifacts/` for native/pjrt).
     pub artifacts: String,
     /// Model key override ("" = per-benchmark, then shared).
     pub model: String,
     pub seed: u64,
+    /// Predictor backend for the `dl` policy: `"stride"` | `"native"`
+    /// | `"pjrt"` | `""` (legacy auto: pjrt when `artifacts` is set,
+    /// stride otherwise). Unknown names are rejected by
+    /// [`RunOptions::backend_kind`].
+    pub backend: String,
 }
 
 impl Default for RunOptions {
@@ -43,6 +49,7 @@ impl Default for RunOptions {
             artifacts: String::new(),
             model: String::new(),
             seed: 0x5eed,
+            backend: String::new(),
         }
     }
 }
@@ -66,20 +73,103 @@ pub fn workload_seed(base: u64, benchmark: &str) -> u64 {
 }
 
 impl RunOptions {
-    pub fn experiment(&self, benchmark: &str, prefetcher: &str) -> ExperimentConfig {
+    /// Resolve the `--backend` axis to a [`PredictorBackendKind`];
+    /// unknown names are rejected (the CLI surfaces this error before
+    /// any cell runs).
+    pub fn backend_kind(&self) -> anyhow::Result<PredictorBackendKind> {
+        let dir = || {
+            if self.artifacts.is_empty() { "artifacts".to_string() } else { self.artifacts.clone() }
+        };
+        Ok(match self.backend.as_str() {
+            "" => {
+                if self.artifacts.is_empty() {
+                    PredictorBackendKind::Stride
+                } else {
+                    PredictorBackendKind::Pjrt {
+                        artifacts: self.artifacts.clone(),
+                        model: self.model.clone(),
+                    }
+                }
+            }
+            "stride" => PredictorBackendKind::Stride,
+            "native" => {
+                PredictorBackendKind::Native { artifacts: dir(), model: self.model.clone() }
+            }
+            "pjrt" => PredictorBackendKind::Pjrt { artifacts: dir(), model: self.model.clone() },
+            other => anyhow::bail!("unknown backend '{other}' (expected stride | native | pjrt)"),
+        })
+    }
+
+    /// Effective backend name (resolves the legacy `""` auto mode) —
+    /// the tag `BENCH_eval.json` records per cell.
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend.as_str() {
+            "stride" => "stride",
+            "native" => "native",
+            "pjrt" => "pjrt",
+            _ => {
+                if self.artifacts.is_empty() {
+                    "stride"
+                } else {
+                    "pjrt"
+                }
+            }
+        }
+    }
+
+    pub fn experiment(
+        &self,
+        benchmark: &str,
+        prefetcher: &str,
+    ) -> anyhow::Result<ExperimentConfig> {
         let mut exp = ExperimentConfig::default();
         exp.benchmark = benchmark.to_string();
         exp.max_instructions = self.max_instructions;
         exp.seed = workload_seed(self.seed, benchmark);
         exp.runtime.prefetcher = prefetcher.to_string();
-        if !self.artifacts.is_empty() {
-            exp.runtime.backend = PredictorBackendKind::Pjrt {
-                artifacts: self.artifacts.clone(),
-                model: self.model.clone(),
-            };
-        }
-        exp
+        exp.runtime.backend = self.backend_kind()?;
+        Ok(exp)
     }
+}
+
+/// Restrict `benchmarks` to the ones the configured backend can serve:
+/// the native backend needs a trained manifest entry per benchmark
+/// (or a "shared" model); every other backend covers the full suite.
+/// Skipped benchmarks are reported loudly rather than silently
+/// degraded — the failure mode this backend axis exists to kill.
+pub fn backend_benchmarks(
+    opts: &RunOptions,
+    benchmarks: &[String],
+) -> anyhow::Result<Vec<String>> {
+    let PredictorBackendKind::Native { artifacts, model } = opts.backend_kind()? else {
+        return Ok(benchmarks.to_vec());
+    };
+    let manifest = Manifest::load(Path::new(&artifacts)).map_err(|e| {
+        anyhow::anyhow!("--backend native: {e}; train a model first (`repro train --workload …`)")
+    })?;
+    // A benchmark is covered only when its resolved entry actually is
+    // a native model — a mixed-arch artifacts dir (e.g. a pjrt
+    // "shared" fallback) must not smuggle uncovered benchmarks past
+    // the filter only to fail mid-sweep.
+    let (keep, skip): (Vec<String>, Vec<String>) = benchmarks.iter().cloned().partition(|b| {
+        manifest.resolve(&model, b).map(|(_, e)| e.arch == "native").unwrap_or(false)
+    });
+    if keep.is_empty() {
+        anyhow::bail!(
+            "--backend native: no trained model covers any requested benchmark; available \
+             models: {:?}",
+            manifest.models.keys().collect::<Vec<_>>()
+        );
+    }
+    if !skip.is_empty() {
+        eprintln!(
+            "eval: native backend has no model for {} benchmark(s) [{}] — those cells are \
+             skipped; train them with `repro train --benchmarks <name> …`",
+            skip.len(),
+            skip.join(", ")
+        );
+    }
+    Ok(keep)
 }
 
 /// Records the far-fault page order (for the oracle's replay). The
@@ -110,6 +200,12 @@ pub fn build_dl_prefetcher(
             let dir = Path::new(artifacts);
             let manifest = Manifest::load(dir)?;
             let (key, entry) = manifest.resolve(model, benchmark)?;
+            if entry.arch == "native" {
+                anyhow::bail!(
+                    "model '{key}' is a native-backend artifact (arch=native) — run with \
+                     --backend native instead of pjrt"
+                );
+            }
             let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
             let exe = ModelExecutable::load(dir, entry)?;
             let backend = PjrtBackend::new(exe, entry.arch.clone());
@@ -121,6 +217,36 @@ pub fn build_dl_prefetcher(
                 PredictorEngine::new(Box::new(backend), vocab),
                 rcfg,
             ))
+        }
+        PredictorBackendKind::Native { artifacts, model } => {
+            let dir = Path::new(artifacts);
+            let manifest = Manifest::load(dir).map_err(|e| {
+                anyhow::anyhow!("native backend: {e} (train one with `repro train`)")
+            })?;
+            let (key, entry) = manifest.resolve(model, benchmark)?;
+            if entry.arch != "native" {
+                anyhow::bail!(
+                    "model '{key}' has arch '{}' — not a native model; use --backend pjrt for \
+                     AOT artifacts",
+                    entry.arch
+                );
+            }
+            let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
+            let backend =
+                NativeBackend::load(&dir.join(&entry.params), &NativeConfig::default())?;
+            anyhow::ensure!(
+                backend.n_classes() == vocab.n_classes(),
+                "model '{key}': params have {} classes but the vocab has {}",
+                backend.n_classes(),
+                vocab.n_classes()
+            );
+            eprintln!(
+                "dl: loaded native model '{key}' ({} params, seq={}, classes={})",
+                backend.n_params(),
+                backend.seq_len(),
+                backend.n_classes()
+            );
+            Ok(DlPrefetcher::new(PredictorEngine::new(Box::new(backend), vocab), rcfg))
         }
         PredictorBackendKind::Stride => {
             // Synthetic vocab covering small strides + common row
@@ -191,7 +317,7 @@ pub fn run_benchmark_with(
     tweak: impl FnOnce(ExperimentConfig) -> ExperimentConfig,
     trace: Option<TraceWriter>,
 ) -> anyhow::Result<Metrics> {
-    let exp = tweak(opts.experiment(benchmark, prefetcher));
+    let exp = tweak(opts.experiment(benchmark, prefetcher)?);
     exp.sim.validate()?;
     let wl = workloads::build(benchmark, &exp.sim, exp.seed, opts.scale)?;
     let pf = build_prefetcher(&exp, opts.scale)?;
@@ -265,5 +391,51 @@ mod tests {
     fn unknown_prefetcher_rejected() {
         let opts = quick();
         assert!(run_benchmark("addvectors", "bogus", &opts).is_err());
+    }
+
+    #[test]
+    fn backend_axis_resolves_and_rejects() {
+        let mut opts = quick();
+        assert_eq!(opts.backend_kind().unwrap(), PredictorBackendKind::Stride);
+        assert_eq!(opts.backend_name(), "stride");
+
+        opts.artifacts = "artifacts".into();
+        assert!(matches!(opts.backend_kind().unwrap(), PredictorBackendKind::Pjrt { .. }));
+        assert_eq!(opts.backend_name(), "pjrt", "legacy auto mode");
+
+        opts.backend = "stride".into();
+        assert_eq!(opts.backend_kind().unwrap(), PredictorBackendKind::Stride);
+
+        opts.backend = "native".into();
+        let PredictorBackendKind::Native { artifacts, .. } = opts.backend_kind().unwrap() else {
+            panic!("expected native kind");
+        };
+        assert_eq!(artifacts, "artifacts");
+        assert_eq!(opts.backend_name(), "native");
+
+        opts.backend = "bogus".into();
+        let err = opts.backend_kind().unwrap_err().to_string();
+        assert!(err.contains("stride | native | pjrt"), "{err}");
+        // The error reaches run_benchmark callers too.
+        assert!(run_benchmark("addvectors", "dl", &opts).is_err());
+    }
+
+    #[test]
+    fn native_backend_without_artifacts_fails_loudly() {
+        let dir = crate::util::TestDir::new();
+        let opts = RunOptions {
+            backend: "native".into(),
+            artifacts: dir.path().to_string_lossy().into_owned(),
+            ..quick()
+        };
+        let err = run_benchmark("addvectors", "dl", &opts).unwrap_err().to_string();
+        assert!(err.contains("repro train"), "{err}");
+    }
+
+    #[test]
+    fn backend_benchmarks_passes_through_for_stride() {
+        let opts = quick();
+        let benches = vec!["atax".to_string(), "nw".to_string()];
+        assert_eq!(backend_benchmarks(&opts, &benches).unwrap(), benches);
     }
 }

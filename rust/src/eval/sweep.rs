@@ -100,6 +100,10 @@ impl CellSpec {
 pub struct CellResult {
     pub benchmark: String,
     pub prefetcher: String,
+    /// Effective predictor backend of the cell's `dl` policy
+    /// ("stride" | "native" | "pjrt") — recorded even for cells whose
+    /// policy never consults a predictor, so grids stay homogeneous.
+    pub backend: String,
     pub metrics: Metrics,
     pub wall: Duration,
 }
@@ -156,9 +160,21 @@ pub fn default_threads() -> usize {
 /// the sweep, bounding peak memory at roughly one copy of each big
 /// workload instead of `threads` copies of the biggest.
 pub fn full_sweep_cells(opts: &RunOptions) -> Vec<CellSpec> {
-    SWEEP_PREFETCHERS
+    let benches: Vec<String> = ALL_BENCHMARKS.iter().map(|b| b.to_string()).collect();
+    sweep_cells(&benches, SWEEP_PREFETCHERS, opts)
+}
+
+/// Policy-major grid over an explicit benchmark list (the
+/// `--backend native` path restricts the list to trained models —
+/// see [`crate::eval::runner::backend_benchmarks`]).
+pub fn sweep_cells(
+    benchmarks: &[String],
+    prefetchers: &[&str],
+    opts: &RunOptions,
+) -> Vec<CellSpec> {
+    prefetchers
         .iter()
-        .flat_map(|p| ALL_BENCHMARKS.iter().map(move |b| CellSpec::new(b, p, opts)))
+        .flat_map(|p| benchmarks.iter().map(move |b| CellSpec::new(b, p, opts)))
         .collect()
 }
 
@@ -221,6 +237,7 @@ pub fn sweep(cells: &[CellSpec], threads: usize) -> anyhow::Result<SweepOutcome>
         out.push(CellResult {
             benchmark: spec.benchmark.clone(),
             prefetcher: spec.prefetcher.clone(),
+            backend: spec.opts.backend_name().to_string(),
             metrics,
             wall,
         });
@@ -237,6 +254,7 @@ pub fn bench_eval_json(o: &SweepOutcome) -> Json {
         Json::obj(vec![
             ("benchmark", Json::str(&c.benchmark)),
             ("prefetcher", Json::str(&c.prefetcher)),
+            ("backend", Json::str(&c.backend)),
             ("wall_ms", Json::Num(c.wall.as_secs_f64() * 1e3)),
             ("instructions", Json::Num(c.metrics.instructions as f64)),
             ("cycles", Json::Num(c.metrics.cycles as f64)),
@@ -318,5 +336,7 @@ mod tests {
         assert_eq!(j.get("schema").and_then(Json::as_str), Some("bench_eval/v1"));
         assert_eq!(j.get("cells").and_then(Json::as_arr).map(|a| a.len()), Some(1));
         assert!(j.get("speedup_vs_serial_estimate").and_then(Json::as_f64).is_some());
+        let cell = &j.get("cells").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(cell.get("backend").and_then(Json::as_str), Some("stride"));
     }
 }

@@ -5,21 +5,26 @@
 //! DESIGN.md §5 can record paper-vs-measured side by side.
 
 use crate::eval::report::{f, Table};
-use crate::eval::runner::{run_pair, BenchPair, RunOptions};
+use crate::eval::runner::{backend_benchmarks, run_pair, BenchPair, RunOptions};
 use crate::eval::sweep::{self, CellSpec};
 use crate::util::geomean;
 use crate::workloads::ALL_BENCHMARKS;
 use std::path::Path;
 
+/// The benchmark axis of a sweep: the full 11-workload suite, narrowed
+/// to the trained models when the native backend is selected.
+fn grid_benchmarks(opts: &RunOptions) -> anyhow::Result<Vec<String>> {
+    let all: Vec<String> = ALL_BENCHMARKS.iter().map(|b| b.to_string()).collect();
+    backend_benchmarks(opts, &all)
+}
+
 /// U-vs-R pairs for every benchmark, computed as one parallel sweep
 /// over the 11 × {uvmsmart, dl} cell grid. Policy-major cell order
 /// (all U cells, then all R cells) keeps concurrent workers on
 /// *different* benchmarks, bounding peak workload memory.
-fn pairs(opts: &RunOptions) -> anyhow::Result<Vec<BenchPair>> {
-    let cells: Vec<CellSpec> = ["uvmsmart", "dl"]
-        .into_iter()
-        .flat_map(|p| ALL_BENCHMARKS.iter().map(move |b| CellSpec::new(b, p, opts)))
-        .collect();
+fn bench_pairs(opts: &RunOptions) -> anyhow::Result<Vec<BenchPair>> {
+    let benches = grid_benchmarks(opts)?;
+    let cells = sweep::sweep_cells(&benches, &["uvmsmart", "dl"], opts);
     let threads = sweep::default_threads();
     eprintln!("eval: running {} cells on {threads} threads…", cells.len());
     let outcome = sweep::sweep(&cells, threads)?;
@@ -50,7 +55,7 @@ fn pairs_from(outcome: &sweep::SweepOutcome) -> Vec<BenchPair> {
 /// **Table 10** — page hit rate, UVMSmart (U) vs revised predictor
 /// (R). Paper: U mean 0.76, R mean 0.89; e.g. Pathfinder 0.588→0.995.
 pub fn table10(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
-    let pairs = pairs(opts)?;
+    let pairs = bench_pairs(opts)?;
     let mut t = Table::new(
         "Table 10 — page hit rate (U = UVMSmart, R = revised predictor)",
         &["benchmark", "hit_u", "hit_r", "simulated_inst"],
@@ -79,7 +84,7 @@ pub fn table10(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
 /// Paper: U avg unity 0.85, R avg 0.90 (ideal 1.0); U coverage 1.0
 /// everywhere, U accuracy avg 0.79, R accuracy avg 0.885.
 pub fn table11(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
-    let pairs = pairs(opts)?;
+    let pairs = bench_pairs(opts)?;
     let mut t = Table::new(
         "Table 11 — unity (cbrt(Acc × Cov × Hit))",
         &["benchmark", "prefetcher", "acc", "cov", "hit", "unity"],
@@ -127,24 +132,26 @@ pub fn fig10(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
         "Figure 10 — normalized IPC vs prediction overhead (R / U)",
         &["benchmark", "1us", "2us", "5us", "10us"],
     );
-    // One parallel sweep over (1 baseline + 4 latency points) × 11,
-    // in wave-major order (all baselines, then all 1 µs cells, …) so
-    // concurrent workers stay on different benchmarks (peak memory).
-    let n = ALL_BENCHMARKS.len();
-    let mut specs: Vec<CellSpec> = ALL_BENCHMARKS
+    // One parallel sweep over (1 baseline + 4 latency points) × the
+    // benchmark grid, in wave-major order (all baselines, then all
+    // 1 µs cells, …) so concurrent workers stay on different
+    // benchmarks (peak memory).
+    let benches = grid_benchmarks(opts)?;
+    let n = benches.len();
+    let mut specs: Vec<CellSpec> = benches
         .iter()
         .map(|b| CellSpec::new(b, "uvmsmart", opts))
         .collect();
     for &us in &latencies_us {
         specs.extend(
-            ALL_BENCHMARKS
+            benches
                 .iter()
                 .map(|b| CellSpec::new(b, "dl", opts).with_prediction_us(us)),
         );
     }
     let outcome = sweep::sweep(&specs, sweep::default_threads())?;
     let mut per_lat: Vec<Vec<f64>> = vec![Vec::new(); latencies_us.len()];
-    for (bi, b) in ALL_BENCHMARKS.iter().enumerate() {
+    for (bi, b) in benches.iter().enumerate() {
         let u = &outcome.cells[bi].metrics;
         let mut cells = vec![b.to_string()];
         for i in 0..latencies_us.len() {
@@ -169,6 +176,21 @@ pub fn fig10(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
 /// cycles for the 2 M-instruction slice; the revised predictor stays
 /// low and finishes in 392 k cycles.
 pub fn fig11(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
+    // This figure is pinned to BICG; under `--backend native` it can
+    // only run when a bicg (or shared) native model exists. Skip
+    // loudly instead of aborting `repro eval all` midway.
+    if !grid_benchmarks(opts)?.iter().any(|b| b == "bicg") {
+        eprintln!(
+            "fig11: skipped — the native backend has no model for 'bicg' \
+             (train one with `repro train --benchmarks bicg`)"
+        );
+        let t = Table::new(
+            "Figure 11 — skipped (no native model for bicg)",
+            &["bucket_start_cycle", "gbps_u", "gbps_r"],
+        );
+        t.write_csv(&out.join("fig11.csv"))?;
+        return Ok(t);
+    }
     let mut o = opts.clone();
     if o.max_instructions == 0 || o.max_instructions > 2_000_000 {
         o.max_instructions = 2_000_000; // the paper's slice
@@ -206,7 +228,7 @@ pub fn fig11(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
 /// **Figure 12** — normalized PCIe usage (R / U) per benchmark.
 /// Paper: geomean reduction 11.05 %.
 pub fn fig12(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
-    let pairs = pairs(opts)?;
+    let pairs = bench_pairs(opts)?;
     let mut t = Table::new(
         "Figure 12 — normalized PCIe traffic (R / U)",
         &["benchmark", "bytes_u", "bytes_r", "normalized"],
@@ -235,7 +257,8 @@ pub fn fig12(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
 /// speedup vs the serial estimate) next to the CSVs and at the
 /// workspace root, so the perf trajectory is tracked per PR.
 pub fn summary(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
-    let cells = sweep::full_sweep_cells(opts);
+    let benches = grid_benchmarks(opts)?;
+    let cells = sweep::sweep_cells(&benches, sweep::SWEEP_PREFETCHERS, opts);
     let threads = sweep::default_threads();
     eprintln!("eval summary: running {} cells on {threads} threads…", cells.len());
     let outcome = sweep::sweep(&cells, threads)?;
@@ -300,5 +323,54 @@ pub fn summary(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
         format!("{:.2}×", outcome.speedup_vs_serial()),
     ]);
     t.write_csv(&out.join("summary.csv"))?;
+    Ok(t)
+}
+
+/// **Backend pairs** — the U-vs-R comparison at a glance for the
+/// configured predictor backend (`repro eval pairs [--backend …]`):
+/// per-benchmark hit rate, accuracy, unity and the normalized IPC,
+/// tagged with the backend that produced the predictions. This is the
+/// quickest way to compare `--backend stride` against a freshly
+/// trained `--backend native` model (README "Training the native
+/// model").
+pub fn pairs(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
+    let pairs = bench_pairs(opts)?;
+    let mut t = Table::new(
+        &format!(
+            "U-vs-R pairs — dl backend '{}' ({} benchmark(s))",
+            opts.backend_name(),
+            pairs.len()
+        ),
+        &["benchmark", "hit_u", "hit_r", "acc_u", "acc_r", "unity_u", "unity_r", "ipc_r_over_u"],
+    );
+    let mut ipc_norms = Vec::with_capacity(pairs.len());
+    for p in &pairs {
+        let norm = p.r.ipc() / p.u.ipc();
+        ipc_norms.push(norm);
+        t.row(vec![
+            p.name.clone(),
+            f(p.u.page_hit_rate(), 4),
+            f(p.r.page_hit_rate(), 4),
+            f(p.u.accuracy(), 4),
+            f(p.r.accuracy(), 4),
+            f(p.u.unity(), 4),
+            f(p.r.unity(), 4),
+            f(norm, 3),
+        ]);
+    }
+    let mean = |sel: &dyn Fn(&BenchPair) -> f64| -> f64 {
+        pairs.iter().map(sel).sum::<f64>() / pairs.len() as f64
+    };
+    t.row(vec![
+        "MEAN".into(),
+        f(mean(&|p| p.u.page_hit_rate()), 4),
+        f(mean(&|p| p.r.page_hit_rate()), 4),
+        f(mean(&|p| p.u.accuracy()), 4),
+        f(mean(&|p| p.r.accuracy()), 4),
+        f(mean(&|p| p.u.unity()), 4),
+        f(mean(&|p| p.r.unity()), 4),
+        f(geomean(&ipc_norms), 3),
+    ]);
+    t.write_csv(&out.join("pairs.csv"))?;
     Ok(t)
 }

@@ -1,0 +1,474 @@
+//! `repro train` — offline training of the native predictor backend
+//! from simulator-generated access streams (no JAX, no PJRT).
+//!
+//! Pipeline, mirroring the paper's data flow (§4/§7.1) entirely in
+//! Rust: run the workload under demand paging and record every
+//! GMMU-visible access per (SM, warp) cluster; build the delta
+//! vocabulary and closed PC table from the observed stream (Hashemi's
+//! observation that unique deltas are few — §4); slide a
+//! `history_len`-token window over each cluster to harvest labelled
+//! examples (label = next delta's class); train the
+//! [`NativeBackend`] with mini-batch SGD/Adam; and write the weights,
+//! vocabulary and a manifest entry (`arch = "native"`) so
+//! `--backend native` serves the model on the eval path.
+//!
+//! Everything is seeded-deterministic: the workload seed comes from
+//! [`crate::eval::runner::workload_seed`] (the same function the eval
+//! sweep uses, so the model trains on exactly the distribution it is
+//! later evaluated on), cluster streams are iterated in sorted key
+//! order, and shuffling uses a seeded Fisher–Yates — training the same
+//! workload twice produces byte-identical artifacts.
+
+use crate::eval::runner::RunOptions;
+use crate::predictor::engine::featurize_window;
+use crate::predictor::vocab::VocabFile;
+use crate::predictor::{
+    ClusterBy, ClusterKey, DeltaVocab, HistoryToken, LabelledWindow, NativeBackend, NativeConfig,
+    PredictorBackend, StrideBackend, Window,
+};
+use crate::prefetch::{FaultInfo, PrefetchDecision, Prefetcher};
+use crate::runtime::{Manifest, ModelEntry};
+use crate::sim::Simulator;
+use crate::types::{AccessOrigin, Cycle, PageNum};
+use crate::util::XorShift64;
+use crate::workloads;
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Everything `repro train` can tune.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub benchmark: String,
+    /// Artifacts directory (params + vocab + manifest live here).
+    pub out: PathBuf,
+    pub epochs: usize,
+    /// Mini-batch size.
+    pub batch: usize,
+    /// Cap on harvested labelled windows (0 = unlimited); larger
+    /// corpora are subsampled deterministically with a fixed stride.
+    pub max_windows: usize,
+    /// Window length (the paper's 30).
+    pub history_len: usize,
+    /// Output classes including OOV (vocabulary = the most frequent
+    /// `classes − 1` deltas).
+    pub classes: usize,
+    /// Closed PC-table size (the encoder adds one OOV slot).
+    pub pcs: usize,
+    pub page_buckets: u32,
+    /// Store weights int4-packed (paper Table 7; lossy).
+    pub int4: bool,
+    pub native: NativeConfig,
+    /// Workload regime: `scale`, `max_instructions` and `seed` are
+    /// honoured; the backend/artifact fields are ignored.
+    pub run: RunOptions,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            benchmark: "streamtriad".to_string(),
+            out: PathBuf::from("artifacts"),
+            epochs: 3,
+            batch: 64,
+            max_windows: 40_000,
+            history_len: 30,
+            classes: 64,
+            pcs: 256,
+            page_buckets: 4096,
+            int4: false,
+            native: NativeConfig::default(),
+            run: RunOptions::default(),
+        }
+    }
+}
+
+/// What one training run measured (printed by `repro train`, asserted
+/// by tests).
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub benchmark: String,
+    pub n_train: usize,
+    pub n_eval: usize,
+    pub n_classes: usize,
+    pub n_params: usize,
+    /// Mean cross-entropy of the first / last epoch.
+    pub first_epoch_loss: f64,
+    pub last_epoch_loss: f64,
+    /// Held-out top-1 accuracy of the trained model…
+    pub native_top1: f64,
+    /// …versus the frequency-vote [`StrideBackend`] on the same split.
+    pub stride_top1: f64,
+    pub params_path: PathBuf,
+    pub vocab_path: PathBuf,
+}
+
+/// Records every GMMU access as a per-cluster (PC, page, Δ) token —
+/// demand paging only, so the harvested stream is the workload's own
+/// access order.
+struct AccessCollector {
+    streams: Arc<Mutex<BTreeMap<ClusterKey, Vec<HistoryToken>>>>,
+    last_page: HashMap<ClusterKey, PageNum>,
+    cluster_by: ClusterBy,
+}
+
+impl Prefetcher for AccessCollector {
+    fn name(&self) -> &'static str {
+        "train-collector"
+    }
+
+    fn on_fault(&mut self, _fault: &FaultInfo) -> PrefetchDecision {
+        PrefetchDecision::default()
+    }
+
+    fn on_access(&mut self, origin: AccessOrigin, pc: u64, page: PageNum, _hit: bool, _now: Cycle) {
+        let key = self.cluster_by.key(&origin, pc);
+        if let Some(prev) = self.last_page.insert(key, page) {
+            let delta = page as i64 - prev as i64;
+            self.streams
+                .lock()
+                .expect("train stream lock")
+                .entry(key)
+                .or_default()
+                .push(HistoryToken { pc, page, delta });
+        }
+    }
+}
+
+/// Run the benchmark once and return its per-cluster token streams in
+/// sorted cluster order (determinism).
+pub fn harvest_streams(opts: &TrainOptions) -> Result<BTreeMap<ClusterKey, Vec<HistoryToken>>> {
+    let exp = opts.run.experiment(&opts.benchmark, "none")?;
+    exp.sim.validate()?;
+    let wl = workloads::build(&opts.benchmark, &exp.sim, exp.seed, opts.run.scale)?;
+    let streams = Arc::new(Mutex::new(BTreeMap::new()));
+    let collector = AccessCollector {
+        streams: streams.clone(),
+        last_page: HashMap::new(),
+        cluster_by: ClusterBy::SmWarp,
+    };
+    let _ = Simulator::new(&exp, wl, Box::new(collector), None).run();
+    Ok(Arc::try_unwrap(streams)
+        .map_err(|_| anyhow::anyhow!("training stream still shared"))?
+        .into_inner()
+        .expect("train stream lock"))
+}
+
+/// Build the training vocabulary from the harvested streams: the most
+/// frequent `classes − 1` deltas (ties toward the smaller delta) and
+/// the most frequent `pcs` program counters.
+pub fn build_vocab(
+    streams: &BTreeMap<ClusterKey, Vec<HistoryToken>>,
+    opts: &TrainOptions,
+) -> VocabFile {
+    let mut delta_counts: HashMap<i64, u64> = HashMap::new();
+    let mut pc_counts: HashMap<u64, u64> = HashMap::new();
+    for toks in streams.values() {
+        for t in toks {
+            *delta_counts.entry(t.delta).or_insert(0) += 1;
+            *pc_counts.entry(t.pc).or_insert(0) += 1;
+        }
+    }
+    let total: u64 = delta_counts.values().sum();
+    let mut by_freq: Vec<(i64, u64)> = delta_counts.into_iter().collect();
+    by_freq.sort_by_key(|&(d, c)| (std::cmp::Reverse(c), d));
+    let dominant = by_freq.first().map(|&(d, _)| d).unwrap_or(1);
+    let convergence = by_freq
+        .first()
+        .map(|&(_, c)| if total == 0 { 0.0 } else { c as f64 / total as f64 })
+        .unwrap_or(0.0);
+    let deltas: Vec<i64> =
+        by_freq.iter().take(opts.classes.saturating_sub(1)).map(|&(d, _)| d).collect();
+    let mut pcs_by_freq: Vec<(u64, u64)> = pc_counts.into_iter().collect();
+    pcs_by_freq.sort_by_key(|&(p, c)| (std::cmp::Reverse(c), p));
+    let pcs: Vec<u64> = pcs_by_freq.iter().take(opts.pcs).map(|&(p, _)| p).collect();
+    VocabFile {
+        deltas,
+        pcs,
+        page_buckets: opts.page_buckets.max(1),
+        dominant_delta: dominant,
+        convergence,
+        history_len: opts.history_len,
+    }
+}
+
+/// Slide a `history_len` window over every cluster stream; the label
+/// is the class of the delta immediately after the window. Corpora
+/// larger than `max` are thinned with a fixed stride (deterministic).
+pub fn labelled_windows(
+    vocab: &DeltaVocab,
+    streams: &BTreeMap<ClusterKey, Vec<HistoryToken>>,
+    max: usize,
+) -> Vec<LabelledWindow> {
+    let s = vocab.history_len.max(1);
+    let total: usize = streams.values().map(|t| t.len().saturating_sub(s)).sum();
+    let stride = if max == 0 { 1 } else { total.div_ceil(max.max(1)).max(1) };
+    let mut out = Vec::with_capacity(total.div_ceil(stride));
+    let mut idx = 0usize;
+    for toks in streams.values() {
+        for i in 0..toks.len().saturating_sub(s) {
+            if idx % stride == 0 {
+                out.push(LabelledWindow {
+                    window: featurize_window(vocab, &toks[i..i + s]),
+                    label: vocab.encode_delta(toks[i + s].delta) as i32,
+                });
+            }
+            idx += 1;
+        }
+    }
+    out
+}
+
+/// The whole offline pipeline: harvest → vocab → windows → train →
+/// evaluate → save artifacts (params + vocab + manifest entry).
+pub fn train_native(opts: &TrainOptions) -> Result<TrainReport> {
+    anyhow::ensure!(opts.history_len > 0, "--history-len must be > 0");
+    anyhow::ensure!(opts.classes >= 2, "--classes must be >= 2 (one delta + OOV)");
+    anyhow::ensure!(opts.epochs > 0 && opts.batch > 0, "--epochs and --batch must be > 0");
+
+    let streams = harvest_streams(opts)?;
+    let file = build_vocab(&streams, opts);
+    anyhow::ensure!(
+        !file.deltas.is_empty(),
+        "benchmark '{}' produced no page deltas to learn from",
+        opts.benchmark
+    );
+    let vocab = DeltaVocab::from_parts(file.clone());
+    let all = labelled_windows(&vocab, &streams, opts.max_windows);
+    anyhow::ensure!(
+        !all.is_empty(),
+        "benchmark '{}' produced no full {}-token windows — lower --history-len or raise \
+         --max-instructions",
+        opts.benchmark,
+        opts.history_len
+    );
+
+    // Interleaved split: every 10th window held out, so the eval slice
+    // covers all program phases instead of only the tail.
+    let mut train: Vec<LabelledWindow> = Vec::with_capacity(all.len());
+    let mut eval: Vec<LabelledWindow> = Vec::with_capacity(all.len() / 10 + 1);
+    for (i, lw) in all.into_iter().enumerate() {
+        if i % 10 == 9 {
+            eval.push(lw);
+        } else {
+            train.push(lw);
+        }
+    }
+    if eval.is_empty() {
+        eval = train.clone(); // tiny corpora: report in-sample accuracy
+    }
+
+    let mut model = NativeBackend::init(&vocab, &opts.native);
+    let mut rng = XorShift64::new(opts.native.seed ^ 0x7452_4149); // ^"tRAI"
+    let mut order: Vec<usize> = (0..train.len()).collect();
+    let (mut first_loss, mut last_loss) = (0.0f64, 0.0f64);
+    for epoch in 0..opts.epochs {
+        for i in (1..order.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            order.swap(i, j);
+        }
+        let mut sum = 0.0f64;
+        let mut steps = 0u64;
+        let mut batch: Vec<LabelledWindow> = Vec::with_capacity(opts.batch);
+        for &i in &order {
+            batch.push(train[i].clone());
+            if batch.len() == opts.batch {
+                sum += model.train_batch(&batch) as f64;
+                steps += 1;
+                batch.clear();
+            }
+        }
+        if !batch.is_empty() {
+            sum += model.train_batch(&batch) as f64;
+            steps += 1;
+        }
+        let mean = sum / steps.max(1) as f64;
+        if epoch == 0 {
+            first_loss = mean;
+        }
+        last_loss = mean;
+        eprintln!(
+            "train[{}] epoch {}/{}: loss {mean:.4} ({} windows, {} classes)",
+            opts.benchmark,
+            epoch + 1,
+            opts.epochs,
+            train.len(),
+            vocab.n_classes()
+        );
+    }
+
+    let native_top1 = model.top1_accuracy(&eval);
+    let eval_windows: Vec<Window> = eval.iter().map(|lw| lw.window.clone()).collect();
+    let mut stride = StrideBackend::new(vocab.n_classes(), opts.history_len);
+    let stride_hits = stride
+        .predict(&eval_windows)
+        .iter()
+        .zip(&eval)
+        .filter(|(p, lw)| **p == lw.label.max(0) as u32)
+        .count();
+    let stride_top1 = stride_hits as f64 / eval.len() as f64;
+
+    std::fs::create_dir_all(&opts.out)?;
+    let params_rel = format!("{}.native.params.bin", opts.benchmark);
+    let vocab_rel = format!("{}.vocab.json", opts.benchmark);
+    let params_path = opts.out.join(&params_rel);
+    let vocab_path = opts.out.join(&vocab_rel);
+    model.save(&params_path, opts.int4)?;
+    file.to_json().write_file(&vocab_path)?;
+    let mut manifest =
+        Manifest::load(&opts.out).unwrap_or(Manifest { version: 1, models: BTreeMap::new() });
+    if let Some(old) = manifest.models.get(&opts.benchmark) {
+        if old.arch != "native" {
+            eprintln!(
+                "train[{}]: WARNING — replacing existing '{}' manifest entry (its files stay on \
+                 disk but are deregistered; --backend pjrt will no longer resolve this key)",
+                opts.benchmark, old.arch
+            );
+        }
+    }
+    manifest.models.insert(
+        opts.benchmark.clone(),
+        ModelEntry {
+            infer_hlo: String::new(),
+            train_hlo: None,
+            params: params_rel,
+            vocab: vocab_rel,
+            batch: opts.batch,
+            train_batch: opts.batch,
+            seq_len: opts.history_len,
+            n_features: 3,
+            n_classes: vocab.n_classes(),
+            n_params: model.n_params(),
+            arch: "native".to_string(),
+        },
+    );
+    manifest.save(&opts.out)?;
+
+    Ok(TrainReport {
+        benchmark: opts.benchmark.clone(),
+        n_train: train.len(),
+        n_eval: eval.len(),
+        n_classes: vocab.n_classes(),
+        n_params: model.n_params(),
+        first_epoch_loss: first_loss,
+        last_epoch_loss: last_loss,
+        native_top1,
+        stride_top1,
+        params_path,
+        vocab_path,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::runner::run_benchmark;
+
+    fn tiny_opts(out: PathBuf) -> TrainOptions {
+        TrainOptions {
+            benchmark: "streamtriad".into(),
+            out,
+            epochs: 4,
+            batch: 32,
+            max_windows: 2_000,
+            history_len: 6,
+            classes: 16,
+            pcs: 64,
+            page_buckets: 256,
+            int4: false,
+            native: NativeConfig {
+                d_pc: 2,
+                d_page: 2,
+                d_delta: 8,
+                hidden: 16,
+                lr: 0.01,
+                ..Default::default()
+            },
+            run: RunOptions { scale: 0.1, max_instructions: 0, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn end_to_end_train_writes_loadable_artifacts() {
+        let dir = crate::util::TestDir::new();
+        let opts = tiny_opts(dir.path().to_path_buf());
+        let r = train_native(&opts).unwrap();
+        assert!(r.n_train > 0 && r.n_eval > 0);
+        assert!(r.first_epoch_loss.is_finite() && r.last_epoch_loss.is_finite());
+        assert!(
+            r.last_epoch_loss <= r.first_epoch_loss + 1e-9,
+            "loss should not increase: {} → {}",
+            r.first_epoch_loss,
+            r.last_epoch_loss
+        );
+
+        let manifest = Manifest::load(dir.path()).unwrap();
+        let (key, entry) = manifest.resolve("", "streamtriad").unwrap();
+        assert_eq!(key, "streamtriad");
+        assert_eq!(entry.arch, "native");
+        assert_eq!(entry.seq_len, 6);
+        let m = NativeBackend::load(&dir.path().join(&entry.params), &NativeConfig::default())
+            .unwrap();
+        assert_eq!(m.n_params(), r.n_params);
+
+        // The trained artifact must serve end-to-end through the dl
+        // prefetcher (`--backend native` shape).
+        let run = RunOptions {
+            scale: 0.1,
+            max_instructions: 30_000,
+            artifacts: dir.path().to_string_lossy().into_owned(),
+            backend: "native".into(),
+            ..Default::default()
+        };
+        let metrics = run_benchmark("streamtriad", "dl", &run).unwrap();
+        assert!(metrics.mem_accesses > 0);
+    }
+
+    #[test]
+    fn same_seed_training_is_byte_deterministic() {
+        let dir_a = crate::util::TestDir::new();
+        let dir_b = crate::util::TestDir::new();
+        let mut a = tiny_opts(dir_a.path().to_path_buf());
+        let mut b = tiny_opts(dir_b.path().to_path_buf());
+        a.epochs = 2;
+        b.epochs = 2;
+        let ra = train_native(&a).unwrap();
+        let rb = train_native(&b).unwrap();
+        assert_eq!(ra.last_epoch_loss, rb.last_epoch_loss);
+        let bytes_a = std::fs::read(&ra.params_path).unwrap();
+        let bytes_b = std::fs::read(&rb.params_path).unwrap();
+        assert_eq!(bytes_a, bytes_b, "same seed must save identical weights");
+    }
+
+    #[test]
+    fn vocab_keeps_most_frequent_deltas() {
+        let mut streams: BTreeMap<ClusterKey, Vec<HistoryToken>> = BTreeMap::new();
+        let toks: Vec<HistoryToken> = [1i64, 1, 1, 2, 2, 7]
+            .iter()
+            .map(|&d| HistoryToken { pc: 0x10, page: 0, delta: d })
+            .collect();
+        streams.insert(ClusterKey(0), toks);
+        let mut opts = TrainOptions::default();
+        opts.classes = 3; // two deltas + OOV
+        let v = build_vocab(&streams, &opts);
+        assert_eq!(v.deltas, vec![1, 2], "7 falls out of the vocabulary");
+        assert_eq!(v.dominant_delta, 1);
+        assert!((v.convergence - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn windows_are_thinned_deterministically() {
+        let mut streams: BTreeMap<ClusterKey, Vec<HistoryToken>> = BTreeMap::new();
+        let toks: Vec<HistoryToken> =
+            (0..40).map(|i| HistoryToken { pc: 0, page: i, delta: 1 }).collect();
+        streams.insert(ClusterKey(0), toks);
+        let vocab = DeltaVocab::synthetic(vec![1], 4);
+        let all = labelled_windows(&vocab, &streams, 0);
+        assert_eq!(all.len(), 36);
+        let thinned = labelled_windows(&vocab, &streams, 10);
+        assert!(thinned.len() <= 10 && !thinned.is_empty(), "{}", thinned.len());
+        let again = labelled_windows(&vocab, &streams, 10);
+        assert_eq!(thinned.len(), again.len());
+    }
+}

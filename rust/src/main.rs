@@ -3,17 +3,26 @@
 //! ```text
 //! repro trace-gen  [--out traces] [--benchmarks a --benchmarks b]
 //!                  [--limit N] [--scale F] [--max-instructions N]
-//! repro simulate   [--benchmark B] [--prefetcher P] [--artifacts DIR]
-//!                  [--model M] [--scale F] [--max-instructions N]
-//!                  [--prediction-us F] [--config FILE]
-//!                  [--oversubscribe R] [--eviction P]
+//! repro simulate   [--benchmark B] [--prefetcher P] [--backend K]
+//!                  [--artifacts DIR] [--model M] [--scale F]
+//!                  [--max-instructions N] [--prediction-us F]
+//!                  [--config FILE] [--oversubscribe R] [--eviction P]
 //!                    --oversubscribe: resident fraction of the
 //!                    workload footprint, in (0, 1]; 1.0 (default) =
 //!                    no oversubscription. --eviction: lru | random |
 //!                    freq | prefetch-aware.
-//! repro eval       <table10|table11|fig10|fig11|fig12|summary|oversub|all>
-//!                  [--artifacts DIR] [--out results] [--scale F]
-//!                  [--max-instructions N] [--no-pjrt]
+//! repro train      [--workload B | --benchmarks a --benchmarks b]
+//!                  [--out artifacts] [--epochs N] [--batch N]
+//!                  [--limit N] [--history-len N] [--classes N]
+//!                  [--pcs N] [--page-buckets N] [--hidden N]
+//!                  [--embed-pc N] [--embed-page N] [--embed-delta N]
+//!                  [--lr F] [--optimizer adam|sgd] [--int4]
+//!                  [--scale F] [--max-instructions N] [--seed S]
+//!                    trains the pure-Rust native backend offline and
+//!                    writes params + vocab + manifest (arch=native).
+//! repro eval       <pairs|table10|table11|fig10|fig11|fig12|summary|oversub|all>
+//!                  [--backend K] [--artifacts DIR] [--out results]
+//!                  [--scale F] [--max-instructions N] [--no-pjrt]
 //!                  oversub only: [--ratios 1.0,0.75,0.5]
 //!                  [--evictions lru,random,freq,prefetch-aware]
 //!                  [--prefetchers none,tree,uvmsmart,dl]
@@ -22,9 +31,15 @@
 //!                  own axis and must be requested explicitly)
 //! repro golden     <check|update> [--path ci/golden_metrics.json]
 //! repro serve      [--artifacts DIR] [--benchmark B] [--model M]
-//!                  [--max-faults N] [--scale F]
+//!                  [--backend pjrt|native] [--max-faults N] [--scale F]
 //! repro info       [--artifacts DIR] [--dump-config]
 //! ```
+//!
+//! `--backend K` selects the `dl` policy's predictor: `stride`
+//! (pure-Rust frequency vote — the floor), `native` (pure-Rust learned
+//! model trained by `repro train`), or `pjrt` (AOT HLO, needs the
+//! `pjrt` cargo feature). Unset, the legacy auto rule applies: pjrt
+//! when `--artifacts` is given, stride otherwise. See DESIGN.md §6.
 
 use anyhow::Result;
 use std::path::{Path, PathBuf};
@@ -32,7 +47,7 @@ use uvm_prefetch::config::ExperimentConfig;
 use uvm_prefetch::coordinator::{CoordinatorService, FaultEvent, Router};
 use uvm_prefetch::eval::report::Table;
 use uvm_prefetch::eval::{self, runner::RunOptions};
-use uvm_prefetch::predictor::DeltaVocab;
+use uvm_prefetch::predictor::{DeltaVocab, NativeBackend, NativeConfig, PredictorBackend};
 use uvm_prefetch::runtime::{Manifest, ModelExecutable, PjrtBackend};
 use uvm_prefetch::sim::TraceWriter;
 use uvm_prefetch::types::AccessOrigin;
@@ -41,7 +56,7 @@ use uvm_prefetch::util::Json;
 use uvm_prefetch::workloads::{ALL_BENCHMARKS, MODEL_BENCHMARKS};
 
 const USAGE: &str =
-    "repro <trace-gen|simulate|eval|golden|serve|info> [flags] (see rust/src/main.rs header)";
+    "repro <trace-gen|simulate|train|eval|golden|serve|info> [flags] (see rust/src/main.rs header)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -50,6 +65,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "trace-gen" => trace_gen(&args),
         "simulate" => simulate(&args),
+        "train" => train(&args),
         "eval" => eval_cmd(&args),
         "golden" => golden(&args),
         "serve" => serve(&args),
@@ -59,13 +75,17 @@ fn main() -> Result<()> {
 }
 
 fn opts_from(args: &Args) -> Result<RunOptions> {
-    Ok(RunOptions {
+    let opts = RunOptions {
         scale: args.f64("scale", 4.0)?,
         max_instructions: args.u64("max-instructions", 2_000_000)?,
         artifacts: args.str("artifacts", ""),
         model: args.str("model", ""),
         seed: args.u64("seed", 0x5eed)?,
-    })
+        backend: args.str("backend", ""),
+    };
+    // Reject unknown --backend names before any cell runs.
+    opts.backend_kind()?;
+    Ok(opts)
 }
 
 fn trace_gen(args: &Args) -> Result<()> {
@@ -156,13 +176,77 @@ fn simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro train` — offline training of the native backend (one model
+/// per requested workload, all merged into one artifacts manifest).
+fn train(args: &Args) -> Result<()> {
+    use uvm_prefetch::eval::train::{train_native, TrainOptions};
+    use uvm_prefetch::predictor::nn::OptKind;
+
+    let names: Vec<String> = {
+        let given = args.get_all("benchmarks");
+        if given.is_empty() {
+            vec![args.str("workload", "streamtriad")]
+        } else {
+            given.into_iter().map(|s| s.to_string()).collect()
+        }
+    };
+    let defaults = TrainOptions::default();
+    let optimizer = {
+        let name = args.str("optimizer", defaults.native.optimizer.as_str());
+        OptKind::parse(&name)
+            .ok_or_else(|| anyhow::anyhow!("--optimizer '{name}' (expected adam | sgd)"))?
+    };
+    for name in names {
+        let t = TrainOptions {
+            benchmark: name,
+            out: PathBuf::from(args.str("out", "artifacts")),
+            epochs: args.usize("epochs", defaults.epochs)?,
+            batch: args.usize("batch", defaults.batch)?,
+            max_windows: args.usize("limit", defaults.max_windows)?,
+            history_len: args.usize("history-len", defaults.history_len)?,
+            classes: args.usize("classes", defaults.classes)?,
+            pcs: args.usize("pcs", defaults.pcs)?,
+            page_buckets: args.u64("page-buckets", defaults.page_buckets as u64)? as u32,
+            int4: args.bool("int4"),
+            native: NativeConfig {
+                hidden: args.usize("hidden", defaults.native.hidden)?,
+                d_pc: args.usize("embed-pc", defaults.native.d_pc)?,
+                d_page: args.usize("embed-page", defaults.native.d_page)?,
+                d_delta: args.usize("embed-delta", defaults.native.d_delta)?,
+                lr: args.f64("lr", defaults.native.lr as f64)? as f32,
+                optimizer,
+                seed: args.u64("seed", defaults.native.seed)?,
+            },
+            run: opts_from(args)?,
+        };
+        let r = train_native(&t)?;
+        println!(
+            "train[{}]: {} train / {} eval windows, {} classes, {} params — loss {:.4} → {:.4}, \
+             top-1 native {:.2}% vs stride {:.2}% — saved {}",
+            r.benchmark,
+            r.n_train,
+            r.n_eval,
+            r.n_classes,
+            r.n_params,
+            r.first_epoch_loss,
+            r.last_epoch_loss,
+            r.native_top1 * 100.0,
+            r.stride_top1 * 100.0,
+            r.params_path.display()
+        );
+    }
+    Ok(())
+}
+
 fn eval_cmd(args: &Args) -> Result<()> {
     let which = args
         .positional
         .get(1)
         .map(|s| s.as_str())
         .ok_or_else(|| {
-            anyhow::anyhow!("eval needs a target: table10|table11|fig10|fig11|fig12|summary|oversub|all")
+            anyhow::anyhow!(
+                "eval needs a target: pairs|table10|table11|fig10|fig11|fig12|summary|oversub|all"
+            )
         })?;
     let out = PathBuf::from(args.str("out", "results"));
     std::fs::create_dir_all(&out)?;
@@ -175,6 +259,7 @@ fn eval_cmd(args: &Args) -> Result<()> {
     }
     let run = |name: &str| -> Result<Table> {
         match name {
+            "pairs" => eval::pairs(&opts, &out),
             "table10" => eval::table10(&opts, &out),
             "table11" => eval::table11(&opts, &out),
             "fig10" => eval::fig10(&opts, &out),
@@ -281,8 +366,28 @@ fn serve(args: &Args) -> Result<()> {
     let (key, entry) = manifest.resolve(&model, &benchmark)?;
     println!("serve: model '{key}' for benchmark '{benchmark}'");
     let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
-    let exe = ModelExecutable::load(dir, entry)?;
-    let backend = Box::new(PjrtBackend::new(exe, entry.arch.clone()));
+    // Auto-select the execution path from the artifact kind; `--backend`
+    // overrides (native artifacts cannot run under PJRT and vice versa).
+    let default_backend = if entry.arch == "native" { "native" } else { "pjrt" };
+    let backend: Box<dyn PredictorBackend> = match args.str("backend", default_backend).as_str() {
+        "native" => {
+            anyhow::ensure!(
+                entry.arch == "native",
+                "serve: model '{key}' (arch '{}') is not a native artifact",
+                entry.arch
+            );
+            Box::new(NativeBackend::load(&dir.join(&entry.params), &NativeConfig::default())?)
+        }
+        "pjrt" => {
+            anyhow::ensure!(
+                entry.arch != "native",
+                "serve: model '{key}' is a native artifact — run with --backend native"
+            );
+            let exe = ModelExecutable::load(dir, entry)?;
+            Box::new(PjrtBackend::new(exe, entry.arch.clone()))
+        }
+        other => anyhow::bail!("serve: unknown --backend '{other}' (expected pjrt | native)"),
+    };
     let rcfg = RuntimeConfig::default();
 
     // Produce a fault stream by running the workload once under

@@ -13,6 +13,20 @@ pub fn featurize_window(vocab: &DeltaVocab, tokens: &[HistoryToken]) -> Window {
 }
 
 /// Engine = backend + vocab.
+///
+/// ```
+/// use uvm_prefetch::predictor::{
+///     DeltaVocab, FeatTok, Prediction, PredictorEngine, StrideBackend, Window,
+/// };
+///
+/// let vocab = DeltaVocab::synthetic(vec![2], 4);
+/// let backend = StrideBackend::new(vocab.n_classes(), 4);
+/// let mut engine = PredictorEngine::new(Box::new(backend), vocab);
+/// // Four tokens whose delta id 0 maps back to delta +2.
+/// let w = Window { tokens: vec![FeatTok { pc_id: 0, page_id: 0, delta_id: 0 }; 4] };
+/// assert_eq!(engine.predict(&[w]), vec![Prediction::Delta(2)]);
+/// assert_eq!(engine.backend_name(), "stride-backend");
+/// ```
 pub struct PredictorEngine {
     backend: Box<dyn PredictorBackend>,
     pub vocab: DeltaVocab,

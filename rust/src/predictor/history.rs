@@ -22,7 +22,7 @@ pub struct HistoryToken {
 pub struct ClusterHistory {
     /// Ring of the last `capacity` tokens. VecDeque: the push path
     /// runs once per GMMU access — `Vec::remove(0)` was the hottest
-    /// line of the coordinator benches (see DESIGN.md §6 Perf).
+    /// line of the coordinator benches (see DESIGN.md §7 Perf).
     window: VecDeque<HistoryToken>,
     capacity: usize,
     last_page: Option<PageNum>,

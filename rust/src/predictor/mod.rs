@@ -17,12 +17,15 @@ pub mod cluster;
 pub mod engine;
 pub mod finetune;
 pub mod history;
+pub mod native;
+pub mod nn;
 pub mod quant;
 pub mod vocab;
 
 pub use cluster::{ClusterBy, ClusterKey};
 pub use engine::{PredictorEngine, StrideBackend};
 pub use history::HistoryToken;
+pub use native::{NativeBackend, NativeConfig};
 pub use vocab::DeltaVocab;
 
 use crate::types::PageDelta;
@@ -56,8 +59,10 @@ pub struct LabelledWindow {
 pub type ClassId = u32;
 
 /// Inference/learning backend. Implementations: [`StrideBackend`]
-/// (pure Rust), `ConstantBackend` (tests), and
-/// [`crate::runtime::PjrtBackend`] (the real AOT model).
+/// (pure-Rust frequency vote, the floor), [`NativeBackend`] (pure-Rust
+/// revised model with real training — the `--backend native` path),
+/// `ConstantBackend` (tests), and [`crate::runtime::PjrtBackend`] (the
+/// AOT-compiled model, `--backend pjrt`).
 pub trait PredictorBackend: Send {
     fn name(&self) -> &'static str;
 

@@ -1,0 +1,558 @@
+//! Native pure-Rust learned backend — the paper's §6 *revised
+//! predictor* (attention-free distillation of the Transformer),
+//! trainable and servable without JAX, XLA or the `pjrt` feature.
+//!
+//! Architecture, matching `python/compile/model.py::RevisedPredictor`'s
+//! embedding+FC path: per-feature embedding tables over the window's
+//! (PC id, page bucket, Δ id) tokens, the per-token embeddings
+//! concatenated position-wise into one input vector, then two
+//! fully-connected layers with a ReLU between and a softmax over the
+//! delta vocabulary (the last class is OOV). Training is plain
+//! mini-batch SGD/Adam on cross-entropy — [`PredictorBackend::finetune`]
+//! runs one step and returns the real loss, so the online fine-tune
+//! path (`predictor::finetune`) finally learns in default builds.
+//!
+//! Weights round-trip through the same tensor-store container as the
+//! AOT artifacts ([`crate::runtime::params`]): `repro train` writes
+//! `<model>.native.params.bin` plus a manifest entry with
+//! `arch = "native"`, and `--backend native` loads it back on the
+//! eval/simulate path. All arithmetic is scalar `f32` in a fixed
+//! order, so same-seed training is byte-deterministic
+//! (`rust/tests/native_backend.rs` pins this).
+
+use crate::predictor::nn::{self, OptKind, Optimizer};
+use crate::predictor::{ClassId, DeltaVocab, LabelledWindow, PredictorBackend, Window};
+use crate::runtime::params::{write_store, TensorStore};
+use crate::util::XorShift64;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Hyper-parameters of the native model (shapes come from the
+/// [`DeltaVocab`] it is initialized against).
+#[derive(Debug, Clone)]
+pub struct NativeConfig {
+    /// PC-embedding width.
+    pub d_pc: usize,
+    /// Page-bucket-embedding width.
+    pub d_page: usize,
+    /// Delta-embedding width.
+    pub d_delta: usize,
+    /// Hidden FC width.
+    pub hidden: usize,
+    /// Learning rate.
+    pub lr: f32,
+    pub optimizer: OptKind,
+    /// Weight-init seed (same seed + same data ⇒ identical model).
+    pub seed: u64,
+}
+
+impl Default for NativeConfig {
+    fn default() -> Self {
+        Self {
+            d_pc: 8,
+            d_page: 8,
+            d_delta: 16,
+            hidden: 64,
+            lr: 1e-3,
+            optimizer: OptKind::Adam,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Canonical tensor names in the `*.native.params.bin` store, in flat
+/// parameter-vector order.
+const TENSOR_NAMES: [&str; 7] =
+    ["emb_pc", "emb_page", "emb_delta", "fc1_w", "fc1_b", "fc2_w", "fc2_b"];
+
+/// The paper's revised predictor as an in-process Rust model.
+///
+/// ```
+/// use uvm_prefetch::predictor::native::{NativeBackend, NativeConfig};
+/// use uvm_prefetch::predictor::{DeltaVocab, FeatTok, LabelledWindow, PredictorBackend, Window};
+///
+/// let vocab = DeltaVocab::synthetic(vec![1, 7], 4);
+/// let cfg = NativeConfig { d_pc: 2, d_page: 2, d_delta: 4, hidden: 8, lr: 0.05,
+///                          ..Default::default() };
+/// let mut model = NativeBackend::init(&vocab, &cfg);
+/// let window = |d: i32| Window { tokens: vec![FeatTok { pc_id: 0, page_id: 0, delta_id: d }; 4] };
+/// let batch: Vec<LabelledWindow> =
+///     (0..8).map(|_| LabelledWindow { window: window(1), label: 1 }).collect();
+/// for _ in 0..80 {
+///     model.finetune(&batch).expect("native backend returns a real loss");
+/// }
+/// assert_eq!(model.predict(&[window(1)]), vec![1]);
+/// ```
+#[derive(Debug)]
+pub struct NativeBackend {
+    // Shape.
+    seq_len: usize,
+    n_classes: usize,
+    pc_rows: usize,
+    page_rows: usize,
+    d_pc: usize,
+    d_page: usize,
+    d_delta: usize,
+    hidden: usize,
+    in_dim: usize,
+    // Flat parameter vector; tensor offsets derived from the shape.
+    params: Vec<f32>,
+    opt: Optimizer,
+    /// Total optimizer steps taken (offline + online).
+    pub train_steps: u64,
+}
+
+impl NativeBackend {
+    /// Fresh model with seeded-deterministic Xavier-uniform weights.
+    pub fn init(vocab: &DeltaVocab, cfg: &NativeConfig) -> Self {
+        Self::with_shape(
+            vocab.history_len.max(1),
+            vocab.n_classes(),
+            vocab.n_pc_slots(),
+            vocab.n_page_buckets(),
+            cfg,
+        )
+    }
+
+    /// Init from explicit table shapes (the load path and tests).
+    pub fn with_shape(
+        seq_len: usize,
+        n_classes: usize,
+        pc_rows: usize,
+        page_rows: usize,
+        cfg: &NativeConfig,
+    ) -> Self {
+        assert!(seq_len > 0 && n_classes > 0 && pc_rows > 0 && page_rows > 0);
+        assert!(cfg.d_pc > 0 && cfg.d_page > 0 && cfg.d_delta > 0 && cfg.hidden > 0);
+        let in_dim = seq_len * (cfg.d_pc + cfg.d_page + cfg.d_delta);
+        let mut rng = XorShift64::new(cfg.seed);
+        let xavier = |fan_in: usize, fan_out: usize| (6.0 / (fan_in + fan_out) as f32).sqrt();
+        let mut params = Vec::new();
+        params.extend(nn::init_uniform(&mut rng, pc_rows * cfg.d_pc, 0.1));
+        params.extend(nn::init_uniform(&mut rng, page_rows * cfg.d_page, 0.1));
+        params.extend(nn::init_uniform(&mut rng, n_classes * cfg.d_delta, 0.1));
+        params.extend(nn::init_uniform(&mut rng, cfg.hidden * in_dim, xavier(in_dim, cfg.hidden)));
+        params.extend(vec![0.0; cfg.hidden]);
+        params.extend(nn::init_uniform(
+            &mut rng,
+            n_classes * cfg.hidden,
+            xavier(cfg.hidden, n_classes),
+        ));
+        params.extend(vec![0.0; n_classes]);
+        let opt = Optimizer::new(cfg.optimizer, cfg.lr, params.len());
+        Self {
+            seq_len,
+            n_classes,
+            pc_rows,
+            page_rows,
+            d_pc: cfg.d_pc,
+            d_page: cfg.d_page,
+            d_delta: cfg.d_delta,
+            hidden: cfg.hidden,
+            in_dim,
+            params,
+            opt,
+            train_steps: 0,
+        }
+    }
+
+    /// Tensor `(offset, rows, cols)` triples in [`TENSOR_NAMES`] order.
+    fn layout(&self) -> [(usize, usize, usize); 7] {
+        let shapes = [
+            (self.pc_rows, self.d_pc),
+            (self.page_rows, self.d_page),
+            (self.n_classes, self.d_delta),
+            (self.hidden, self.in_dim),
+            (1, self.hidden),
+            (self.n_classes, self.hidden),
+            (1, self.n_classes),
+        ];
+        let mut out = [(0, 0, 0); 7];
+        let mut off = 0;
+        for (slot, (rows, cols)) in out.iter_mut().zip(shapes) {
+            *slot = (off, rows, cols);
+            off += rows * cols;
+        }
+        debug_assert_eq!(off, self.params.len());
+        out
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Output classes including OOV (also exposed through the
+    /// [`PredictorBackend`] trait; inherent so callers holding a
+    /// concrete model need no trait import).
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    /// The flat parameter vector (tests compare models through this).
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Gather the window's token embeddings into the input vector
+    /// (position-wise concatenation). Windows shorter than `seq_len`
+    /// are left-padded with zeros; longer ones keep the newest tokens.
+    fn gather(&self, window: &Window, x: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        x.fill(0.0);
+        let [(o_pc, ..), (o_page, ..), (o_delta, ..), ..] = self.layout();
+        let d_tok = self.d_pc + self.d_page + self.d_delta;
+        let toks = &window.tokens[window.tokens.len().saturating_sub(self.seq_len)..];
+        let pad = self.seq_len - toks.len();
+        for (pos, tok) in toks.iter().enumerate() {
+            let base = (pad + pos) * d_tok;
+            let pc = (tok.pc_id.max(0) as usize).min(self.pc_rows - 1);
+            let page = (tok.page_id.max(0) as usize).min(self.page_rows - 1);
+            let delta = (tok.delta_id.max(0) as usize).min(self.n_classes - 1);
+            x[base..base + self.d_pc]
+                .copy_from_slice(&self.params[o_pc + pc * self.d_pc..][..self.d_pc]);
+            x[base + self.d_pc..base + self.d_pc + self.d_page]
+                .copy_from_slice(&self.params[o_page + page * self.d_page..][..self.d_page]);
+            x[base + self.d_pc + self.d_page..base + d_tok]
+                .copy_from_slice(&self.params[o_delta + delta * self.d_delta..][..self.d_delta]);
+        }
+    }
+
+    /// Forward pass into caller-provided scratch; `z` ends as logits.
+    fn forward(&self, window: &Window, x: &mut [f32], h: &mut [f32], z: &mut [f32]) {
+        let [_, _, _, (o_w1, ..), (o_b1, ..), (o_w2, ..), (o_b2, ..)] = self.layout();
+        self.gather(window, x);
+        nn::linear_forward(
+            &self.params[o_w1..o_w1 + self.hidden * self.in_dim],
+            &self.params[o_b1..o_b1 + self.hidden],
+            x,
+            h,
+        );
+        nn::relu(h);
+        nn::linear_forward(
+            &self.params[o_w2..o_w2 + self.n_classes * self.hidden],
+            &self.params[o_b2..o_b2 + self.n_classes],
+            h,
+            z,
+        );
+    }
+
+    /// Top-1 class for one window.
+    pub fn predict_one(&self, window: &Window) -> ClassId {
+        let mut x = vec![0.0; self.in_dim];
+        let mut h = vec![0.0; self.hidden];
+        let mut z = vec![0.0; self.n_classes];
+        self.forward(window, &mut x, &mut h, &mut z);
+        let mut best = 0usize;
+        for (i, &v) in z.iter().enumerate() {
+            if v > z[best] {
+                best = i;
+            }
+        }
+        best as ClassId
+    }
+
+    /// One optimizer step over `batch`; returns the mean cross-entropy
+    /// loss *before* the update.
+    pub fn train_batch(&mut self, batch: &[LabelledWindow]) -> f32 {
+        if batch.is_empty() {
+            return 0.0;
+        }
+        let [(o_pc, ..), (o_page, ..), (o_delta, ..), (o_w1, ..), _, (o_w2, ..), _] =
+            self.layout();
+        let d_tok = self.d_pc + self.d_page + self.d_delta;
+        let mut grads = vec![0.0f32; self.params.len()];
+        let mut x = vec![0.0; self.in_dim];
+        let mut h = vec![0.0; self.hidden];
+        let mut z = vec![0.0; self.n_classes];
+        let mut dh = vec![0.0; self.hidden];
+        let mut dx = vec![0.0; self.in_dim];
+        let mut loss = 0.0f32;
+        for lw in batch {
+            self.forward(&lw.window, &mut x, &mut h, &mut z);
+            nn::softmax(&mut z);
+            let label = (lw.label.max(0) as usize).min(self.n_classes - 1);
+            loss += nn::cross_entropy_backward(&mut z, label);
+            // z now holds d(loss)/d(logits).
+            dh.fill(0.0);
+            dx.fill(0.0);
+            {
+                let (gw2, rest) = grads[o_w2..].split_at_mut(self.n_classes * self.hidden);
+                nn::linear_backward(
+                    &self.params[o_w2..o_w2 + self.n_classes * self.hidden],
+                    &h,
+                    &z,
+                    gw2,
+                    &mut rest[..self.n_classes],
+                    Some(&mut dh),
+                );
+            }
+            nn::relu_backward(&h, &mut dh);
+            {
+                let (gw1, rest) = grads[o_w1..].split_at_mut(self.hidden * self.in_dim);
+                nn::linear_backward(
+                    &self.params[o_w1..o_w1 + self.hidden * self.in_dim],
+                    &x,
+                    &dh,
+                    gw1,
+                    &mut rest[..self.hidden],
+                    Some(&mut dx),
+                );
+            }
+            // Scatter the input gradient back into the embedding rows
+            // the gather read (zero-padded positions carry none).
+            let toks = &lw.window.tokens[lw.window.tokens.len().saturating_sub(self.seq_len)..];
+            let pad = self.seq_len - toks.len();
+            for (pos, tok) in toks.iter().enumerate() {
+                let base = (pad + pos) * d_tok;
+                let pc = (tok.pc_id.max(0) as usize).min(self.pc_rows - 1);
+                let page = (tok.page_id.max(0) as usize).min(self.page_rows - 1);
+                let delta = (tok.delta_id.max(0) as usize).min(self.n_classes - 1);
+                let scatter = |g: &mut [f32], d: &[f32]| {
+                    for (gi, di) in g.iter_mut().zip(d) {
+                        *gi += di;
+                    }
+                };
+                scatter(
+                    &mut grads[o_pc + pc * self.d_pc..][..self.d_pc],
+                    &dx[base..base + self.d_pc],
+                );
+                scatter(
+                    &mut grads[o_page + page * self.d_page..][..self.d_page],
+                    &dx[base + self.d_pc..base + self.d_pc + self.d_page],
+                );
+                scatter(
+                    &mut grads[o_delta + delta * self.d_delta..][..self.d_delta],
+                    &dx[base + self.d_pc + self.d_page..base + d_tok],
+                );
+            }
+        }
+        let inv = 1.0 / batch.len() as f32;
+        for g in &mut grads {
+            *g *= inv;
+        }
+        self.opt.step(&mut self.params, &grads);
+        self.train_steps += 1;
+        loss * inv
+    }
+
+    /// Fraction of `data` whose top-1 prediction matches the label.
+    pub fn top1_accuracy(&self, data: &[LabelledWindow]) -> f64 {
+        if data.is_empty() {
+            return 0.0;
+        }
+        let hits = data
+            .iter()
+            .filter(|lw| self.predict_one(&lw.window) == lw.label.max(0) as ClassId)
+            .count();
+        hits as f64 / data.len() as f64
+    }
+
+    /// Write the weights as a tensor store (`dtype` f32, or int4 when
+    /// `int4` — the paper's Table 7 storage mode, lossy).
+    pub fn save(&self, path: &Path, int4: bool) -> Result<()> {
+        let dtype = if int4 { 2u8 } else { 0u8 };
+        let tensors: Vec<(String, Vec<usize>, Vec<f32>, u8)> = TENSOR_NAMES
+            .iter()
+            .zip(self.layout())
+            .map(|(name, (off, rows, cols))| {
+                let dims = if rows == 1 { vec![cols] } else { vec![rows, cols] };
+                (name.to_string(), dims, self.params[off..off + rows * cols].to_vec(), dtype)
+            })
+            .collect();
+        write_store(path, &tensors)
+    }
+
+    /// Load a model saved by [`NativeBackend::save`]; shapes are
+    /// recovered from the tensor dims, optimizer state starts fresh
+    /// from `cfg` (only its `optimizer`/`lr` fields are used).
+    pub fn load(path: &Path, cfg: &NativeConfig) -> Result<Self> {
+        let store = TensorStore::load(path)?;
+        let find = |name: &str| {
+            store
+                .tensors
+                .iter()
+                .find(|t| t.name == name)
+                .ok_or_else(|| anyhow::anyhow!("{}: missing tensor '{name}'", path.display()))
+        };
+        let emb_pc = find("emb_pc")?;
+        let emb_page = find("emb_page")?;
+        let emb_delta = find("emb_delta")?;
+        let fc1_w = find("fc1_w")?;
+        let fc1_b = find("fc1_b")?;
+        let fc2_w = find("fc2_w")?;
+        let fc2_b = find("fc2_b")?;
+        let dims2 = |t: &crate::runtime::params::NamedTensor| -> Result<(usize, usize)> {
+            match t.dims[..] {
+                [r, c] => Ok((r, c)),
+                _ => bail!("{}: tensor '{}' must be 2-D", path.display(), t.name),
+            }
+        };
+        let (pc_rows, d_pc) = dims2(emb_pc)?;
+        let (page_rows, d_page) = dims2(emb_page)?;
+        let (n_classes, d_delta) = dims2(emb_delta)?;
+        let (hidden, in_dim) = dims2(fc1_w)?;
+        let d_tok = d_pc + d_page + d_delta;
+        if d_tok == 0 || in_dim % d_tok != 0 {
+            bail!("{}: fc1_w dim {in_dim} not a multiple of token dim {d_tok}", path.display());
+        }
+        let seq_len = in_dim / d_tok;
+        let (c2, h2) = dims2(fc2_w)?;
+        let biases_ok = fc1_b.numel() == hidden && fc2_b.numel() == n_classes;
+        if c2 != n_classes || h2 != hidden || !biases_ok {
+            bail!("{}: inconsistent tensor shapes", path.display());
+        }
+        let total = emb_pc.numel()
+            + emb_page.numel()
+            + emb_delta.numel()
+            + fc1_w.numel()
+            + hidden
+            + fc2_w.numel()
+            + n_classes;
+        let mut params = Vec::with_capacity(total);
+        for t in [emb_pc, emb_page, emb_delta, fc1_w, fc1_b, fc2_w, fc2_b] {
+            params.extend_from_slice(&t.data);
+        }
+        let opt = Optimizer::new(cfg.optimizer, cfg.lr, params.len());
+        Ok(Self {
+            seq_len,
+            n_classes,
+            pc_rows,
+            page_rows,
+            d_pc,
+            d_page,
+            d_delta,
+            hidden,
+            in_dim,
+            params,
+            opt,
+            train_steps: 0,
+        })
+    }
+}
+
+impl PredictorBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn predict(&mut self, windows: &[Window]) -> Vec<ClassId> {
+        windows.iter().map(|w| self.predict_one(w)).collect()
+    }
+
+    fn finetune(&mut self, batch: &[LabelledWindow]) -> Option<f64> {
+        Some(self.train_batch(batch) as f64)
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::FeatTok;
+
+    fn tiny_cfg() -> NativeConfig {
+        NativeConfig { d_pc: 2, d_page: 2, d_delta: 4, hidden: 8, lr: 0.05, ..Default::default() }
+    }
+
+    fn window(deltas: &[i32]) -> Window {
+        Window {
+            tokens: deltas
+                .iter()
+                .map(|&d| FeatTok { pc_id: 0, page_id: 0, delta_id: d })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn shapes_and_param_count() {
+        let m = NativeBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        // 5*2 + 7*2 + 3*4 + 8*(4*8) + 8 + 3*8 + 3.
+        assert_eq!(m.n_params(), 10 + 14 + 12 + 256 + 8 + 24 + 3);
+        assert_eq!(m.seq_len(), 4);
+        assert_eq!(m.n_classes(), 3);
+    }
+
+    #[test]
+    fn same_seed_same_init() {
+        let a = NativeBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        let b = NativeBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        assert_eq!(a.params(), b.params());
+    }
+
+    #[test]
+    fn training_reduces_loss_on_constant_task() {
+        let mut m = NativeBackend::with_shape(4, 3, 2, 2, &tiny_cfg());
+        let batch: Vec<LabelledWindow> = (0..8)
+            .map(|_| LabelledWindow { window: window(&[1, 1, 1, 1]), label: 1 })
+            .collect();
+        let first = m.train_batch(&batch);
+        for _ in 0..80 {
+            m.train_batch(&batch);
+        }
+        let last = m.train_batch(&batch);
+        assert!(last < first, "loss {first} → {last}");
+        assert_eq!(m.predict_one(&window(&[1, 1, 1, 1])), 1);
+    }
+
+    #[test]
+    fn short_windows_are_left_padded() {
+        let m = NativeBackend::with_shape(4, 3, 2, 2, &tiny_cfg());
+        // Must not panic and must produce a valid class.
+        let c = m.predict_one(&window(&[1]));
+        assert!((c as usize) < 3);
+        // Over-long windows keep the newest tokens.
+        let c2 = m.predict_one(&window(&[0, 0, 0, 2, 2, 2, 2, 2]));
+        assert_eq!(c2, m.predict_one(&window(&[2, 2, 2, 2])));
+    }
+
+    #[test]
+    fn out_of_range_ids_are_clamped() {
+        let m = NativeBackend::with_shape(4, 3, 2, 2, &tiny_cfg());
+        let w = Window { tokens: vec![FeatTok { pc_id: -7, page_id: 9999, delta_id: 9999 }; 4] };
+        assert!((m.predict_one(&w) as usize) < 3);
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_params() {
+        let dir = crate::util::TestDir::new();
+        let p = dir.file("m.native.params.bin");
+        let mut m = NativeBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        let batch: Vec<LabelledWindow> =
+            (0..4).map(|i| LabelledWindow { window: window(&[i, 1, 2, 0]), label: 2 }).collect();
+        m.train_batch(&batch);
+        m.save(&p, false).unwrap();
+        let back = NativeBackend::load(&p, &tiny_cfg()).unwrap();
+        assert_eq!(back.params(), m.params());
+        assert_eq!(back.seq_len(), 4);
+        assert_eq!(back.n_classes(), 3);
+    }
+
+    #[test]
+    fn load_rejects_missing_tensor() {
+        let dir = crate::util::TestDir::new();
+        let p = dir.file("bad.bin");
+        write_store(&p, &[("emb_pc".into(), vec![2, 2], vec![0.0; 4], 0)]).unwrap();
+        let err = NativeBackend::load(&p, &tiny_cfg()).unwrap_err().to_string();
+        assert!(err.contains("emb_page"), "{err}");
+    }
+
+    #[test]
+    fn finetune_returns_real_loss() {
+        let mut m = NativeBackend::with_shape(4, 3, 2, 2, &tiny_cfg());
+        let batch = vec![LabelledWindow { window: window(&[0, 1, 2, 0]), label: 0 }];
+        let loss = m.finetune(&batch).expect("native supports learning");
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(m.train_steps, 1);
+    }
+}

@@ -1,0 +1,278 @@
+//! Dense neural-net primitives for the native (pure-Rust) predictor
+//! backend: deterministic weight init, linear/ReLU/softmax forward
+//! ops, their backward passes, and SGD / Adam parameter updates.
+//!
+//! Everything operates on flat `f32` slices (row-major matrices) so a
+//! whole model lives in one parameter vector — one optimizer state,
+//! one gradient buffer, one save/load path through
+//! [`crate::runtime::params`]. No SIMD, no threads, no `rand`:
+//! same-seed training must be byte-identical across runs (the
+//! `rust/tests/native_backend.rs` suite pins this), and the shapes
+//! involved (tens of thousands of parameters) keep scalar code fast
+//! enough for the simulator's hot path.
+
+use crate::util::XorShift64;
+
+/// Uniform init in `[-bound, bound]` — deterministic for a given RNG
+/// state, the standard fan-in-scaled scheme the callers pass in.
+pub fn init_uniform(rng: &mut XorShift64, n: usize, bound: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.unit() as f32 * 2.0 - 1.0) * bound).collect()
+}
+
+/// `out = W·x + b` for a row-major `[out.len() × x.len()]` matrix.
+pub fn linear_forward(w: &[f32], b: &[f32], x: &[f32], out: &mut [f32]) {
+    let cols = x.len();
+    debug_assert_eq!(w.len(), out.len() * cols);
+    debug_assert_eq!(b.len(), out.len());
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &w[r * cols..(r + 1) * cols];
+        let mut acc = b[r];
+        for (wi, xi) in row.iter().zip(x) {
+            acc += wi * xi;
+        }
+        *o = acc;
+    }
+}
+
+/// Backward of [`linear_forward`]: accumulates `dW += dy·xᵀ`,
+/// `db += dy`, and — when an input gradient is wanted — `dx += Wᵀ·dy`.
+pub fn linear_backward(
+    w: &[f32],
+    x: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx: Option<&mut [f32]>,
+) {
+    let cols = x.len();
+    debug_assert_eq!(w.len(), dy.len() * cols);
+    for (r, &g) in dy.iter().enumerate() {
+        db[r] += g;
+        let dw_row = &mut dw[r * cols..(r + 1) * cols];
+        for (dwi, xi) in dw_row.iter_mut().zip(x) {
+            *dwi += g * xi;
+        }
+    }
+    if let Some(dx) = dx {
+        for (r, &g) in dy.iter().enumerate() {
+            let row = &w[r * cols..(r + 1) * cols];
+            for (dxi, wi) in dx.iter_mut().zip(row) {
+                *dxi += g * wi;
+            }
+        }
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(h: &mut [f32]) {
+    for v in h {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Backward of ReLU given the *activated* output `h`: gradient is
+/// zeroed wherever the unit was clamped.
+pub fn relu_backward(h: &[f32], dh: &mut [f32]) {
+    for (d, &a) in dh.iter_mut().zip(h) {
+        if a <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Numerically stable softmax in place.
+pub fn softmax(z: &mut [f32]) {
+    let max = z.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in z.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    if sum > 0.0 {
+        for v in z.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Cross-entropy loss for `label` given softmax probabilities `p`;
+/// also turns `p` into the logits gradient `p - onehot(label)` in
+/// place (the usual fused softmax+CE backward).
+pub fn cross_entropy_backward(p: &mut [f32], label: usize) -> f32 {
+    debug_assert!(label < p.len());
+    let loss = -p[label].max(1e-12).ln();
+    p[label] -= 1.0;
+    loss
+}
+
+/// Optimizer family for the native backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptKind {
+    /// SGD with 0.9 momentum.
+    Sgd,
+    /// Adam (β₁ 0.9, β₂ 0.999, ε 1e-8) with bias correction.
+    Adam,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "sgd" => Self::Sgd,
+            "adam" => Self::Adam,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Sgd => "sgd",
+            Self::Adam => "adam",
+        }
+    }
+}
+
+const SGD_MOMENTUM: f32 = 0.9;
+const ADAM_BETA1: f32 = 0.9;
+const ADAM_BETA2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Dense first-order optimizer over one flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct Optimizer {
+    kind: OptKind,
+    pub lr: f32,
+    /// Momentum (SGD) / first-moment (Adam) buffer.
+    m: Vec<f32>,
+    /// Second-moment buffer (Adam only).
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptKind, lr: f32, n_params: usize) -> Self {
+        let v = match kind {
+            OptKind::Adam => vec![0.0; n_params],
+            OptKind::Sgd => Vec::new(),
+        };
+        Self { kind, lr, m: vec![0.0; n_params], v, t: 0 }
+    }
+
+    pub fn kind(&self) -> OptKind {
+        self.kind
+    }
+
+    /// One update step: `params -= lr · f(grads)`.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(params.len(), self.m.len());
+        debug_assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        match self.kind {
+            OptKind::Sgd => {
+                for ((p, m), &g) in params.iter_mut().zip(&mut self.m).zip(grads) {
+                    *m = SGD_MOMENTUM * *m + g;
+                    *p -= self.lr * *m;
+                }
+            }
+            OptKind::Adam => {
+                let bc1 = 1.0 - ADAM_BETA1.powi(self.t as i32);
+                let bc2 = 1.0 - ADAM_BETA2.powi(self.t as i32);
+                for (((p, m), v), &g) in
+                    params.iter_mut().zip(&mut self.m).zip(&mut self.v).zip(grads)
+                {
+                    *m = ADAM_BETA1 * *m + (1.0 - ADAM_BETA1) * g;
+                    *v = ADAM_BETA2 * *v + (1.0 - ADAM_BETA2) * g * g;
+                    let m_hat = *m / bc1;
+                    let v_hat = *v / bc2;
+                    *p -= self.lr * m_hat / (v_hat.sqrt() + ADAM_EPS);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_forward_matches_hand_computation() {
+        // W = [[1, 2], [3, 4]], b = [10, 20], x = [1, -1].
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let b = [10.0, 20.0];
+        let mut out = [0.0; 2];
+        linear_forward(&w, &b, &[1.0, -1.0], &mut out);
+        assert_eq!(out, [9.0, 19.0]);
+    }
+
+    #[test]
+    fn linear_backward_accumulates_all_three_grads() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let x = [1.0, -1.0];
+        let dy = [0.5, -0.25];
+        let mut dw = [0.0; 4];
+        let mut db = [0.0; 2];
+        let mut dx = [0.0; 2];
+        linear_backward(&w, &x, &dy, &mut dw, &mut db, Some(&mut dx));
+        assert_eq!(db, dy);
+        assert_eq!(dw, [0.5, -0.5, -0.25, 0.25]);
+        // dx = Wᵀ·dy = [1*0.5 + 3*-0.25, 2*0.5 + 4*-0.25].
+        assert_eq!(dx, [-0.25, 0.0]);
+    }
+
+    #[test]
+    fn softmax_ce_gradient_is_p_minus_onehot() {
+        let mut z = [1.0f32, 1.0, 1.0];
+        softmax(&mut z);
+        for v in z {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+        let mut p = [0.5f32, 0.25, 0.25];
+        let loss = cross_entropy_backward(&mut p, 0);
+        assert!((loss - 0.5f32.ln().abs()).abs() < 1e-6);
+        assert!((p[0] + 0.5).abs() < 1e-6);
+        assert!((p[1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relu_and_backward_mask_agree() {
+        let mut h = [-1.0f32, 0.0, 2.0];
+        relu(&mut h);
+        assert_eq!(h, [0.0, 0.0, 2.0]);
+        let mut dh = [1.0f32, 1.0, 1.0];
+        relu_backward(&h, &mut dh);
+        assert_eq!(dh, [0.0, 0.0, 1.0]);
+    }
+
+    /// Both optimizers must drive a 1-D quadratic toward its minimum.
+    #[test]
+    fn optimizers_descend_a_quadratic() {
+        for kind in [OptKind::Sgd, OptKind::Adam] {
+            let mut opt = Optimizer::new(kind, 0.05, 1);
+            let mut p = [4.0f32];
+            for _ in 0..200 {
+                let g = [2.0 * p[0]]; // d/dp of p².
+                opt.step(&mut p, &g);
+            }
+            assert!(p[0].abs() < 0.5, "{kind:?} ended at {}", p[0]);
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_bounded() {
+        let a = init_uniform(&mut XorShift64::new(7), 64, 0.1);
+        let b = init_uniform(&mut XorShift64::new(7), 64, 0.1);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.abs() <= 0.1));
+        assert!(a.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn optkind_parse_roundtrip() {
+        assert_eq!(OptKind::parse("adam"), Some(OptKind::Adam));
+        assert_eq!(OptKind::parse("sgd"), Some(OptKind::Sgd));
+        assert_eq!(OptKind::parse("rmsprop"), None);
+        assert_eq!(OptKind::Adam.as_str(), "adam");
+    }
+}

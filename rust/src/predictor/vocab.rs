@@ -53,6 +53,17 @@ impl VocabFile {
 }
 
 /// Runtime-side vocabulary with O(1) encode/decode.
+///
+/// ```
+/// use uvm_prefetch::predictor::{DeltaVocab, Prediction};
+///
+/// let v = DeltaVocab::synthetic(vec![1, 4], 30);
+/// assert_eq!(v.n_classes(), 3, "two deltas + the OOV class");
+/// assert_eq!(v.encode_delta(4), 1);
+/// assert_eq!(v.encode_delta(999), v.oov_class(), "unseen delta");
+/// assert_eq!(v.decode(1), Prediction::Delta(4));
+/// assert_eq!(v.decode(2), Prediction::Oov);
+/// ```
 #[derive(Debug, Clone)]
 pub struct DeltaVocab {
     deltas: Vec<i64>,
@@ -108,6 +119,17 @@ impl DeltaVocab {
             Some(&d) => Prediction::Delta(d),
             None => Prediction::Oov,
         }
+    }
+
+    /// Rows a PC embedding table must have: the closed PC table plus
+    /// its OOV slot (the largest id [`DeltaVocab::encode_pc`] emits).
+    pub fn n_pc_slots(&self) -> usize {
+        self.n_pcs as usize + 1
+    }
+
+    /// Rows a page embedding table must have (the modulo-bucket count).
+    pub fn n_page_buckets(&self) -> usize {
+        self.page_buckets as usize
     }
 
     /// Encode a PC (last table slot is the PC-OOV bucket).

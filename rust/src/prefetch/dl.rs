@@ -9,11 +9,15 @@
 //!    `fault_page + delta`.
 //!
 //! Predictions cost `prediction_latency_cycles` (§7.3, default 1 µs ≈
-//! 1500 cycles) and are dynamically batched for the fixed-shape PJRT
-//! executable. Clusters whose delta distribution has converged bypass
-//! the model entirely and emit the dominant delta (§6 item 5). Online
-//! fine-tuning replays recent labelled windows through the AOT
-//! train-step every N instructions (§7.1).
+//! 1500 cycles) and are dynamically batched. Which model answers is
+//! the `--backend` axis ([`crate::config::PredictorBackendKind`], see
+//! DESIGN.md §6): the stride frequency vote, the native in-process
+//! learned model (`repro train`), or the AOT PJRT executable. Clusters
+//! whose delta distribution has converged bypass the model entirely
+//! and emit the dominant delta (§6 item 5). Online fine-tuning replays
+//! recent labelled windows through the backend's train step every N
+//! instructions (§7.1) — a real gradient step (with a real loss) on
+//! the native backend.
 
 use super::{FaultInfo, PrefetchDecision, Prefetcher, PrefetchRequest, PrefetchTelemetry};
 use crate::config::{BypassMode, RuntimeConfig};
@@ -49,8 +53,6 @@ pub struct DlPrefetcher {
     /// quarter block (the learned prediction still issues — it is the
     /// high-value transfer worth an eviction).
     pressure_threshold: f64,
-    #[allow(dead_code)]
-    history_len: usize,
     /// Prediction prefetches waiting to be drained by the simulator.
     matured: Vec<PrefetchRequest>,
     telemetry: PrefetchTelemetry,
@@ -75,7 +77,6 @@ impl DlPrefetcher {
             bypass_mode: rcfg.bypass,
             bypass_convergence: rcfg.bypass_convergence,
             pressure_threshold: rcfg.pressure_threshold,
-            history_len,
             matured: Vec::new(),
             telemetry: PrefetchTelemetry::default(),
             finetune_losses: Vec::new(),

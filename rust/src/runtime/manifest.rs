@@ -9,6 +9,9 @@ use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
+    /// HLO-text inference module (PJRT models). Empty for native
+    /// artifacts (`arch = "native"`), whose weights in `params` are
+    /// executed in-process by `predictor::native`.
     pub infer_hlo: String,
     pub train_hlo: Option<String>,
     pub params: String,
@@ -31,7 +34,6 @@ pub struct ModelEntry {
 impl ModelEntry {
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
-            ("infer_hlo", Json::str(&self.infer_hlo)),
             ("params", Json::str(&self.params)),
             ("vocab", Json::str(&self.vocab)),
             ("batch", Json::Num(self.batch as f64)),
@@ -42,6 +44,9 @@ impl ModelEntry {
             ("n_params", Json::Num(self.n_params as f64)),
             ("arch", Json::str(&self.arch)),
         ];
+        if !self.infer_hlo.is_empty() {
+            pairs.push(("infer_hlo", Json::str(&self.infer_hlo)));
+        }
         if let Some(t) = &self.train_hlo {
             pairs.push(("train_hlo", Json::str(t)));
         }
@@ -56,7 +61,8 @@ impl ModelEntry {
             j.req(k)?.as_usize().ok_or_else(|| anyhow::anyhow!("{k}: not a number"))
         };
         Ok(Self {
-            infer_hlo: s("infer_hlo")?,
+            // Optional: native entries carry no HLO.
+            infer_hlo: j.get("infer_hlo").and_then(Json::as_str).unwrap_or("").to_string(),
             train_hlo: j.get("train_hlo").and_then(Json::as_str).map(|v| v.to_string()),
             params: s("params")?,
             vocab: s("vocab")?,
@@ -178,6 +184,37 @@ mod tests {
         assert_eq!(e.train_hlo.as_deref(), Some("shared.train.hlo.txt"));
         assert_eq!(e.n_classes, 12);
         assert_eq!(e.arch, "revised");
+    }
+
+    #[test]
+    fn native_entry_roundtrips_without_hlo() {
+        let dir = crate::util::TestDir::new();
+        let mut models = BTreeMap::new();
+        models.insert(
+            "streamtriad".to_string(),
+            ModelEntry {
+                infer_hlo: String::new(),
+                train_hlo: None,
+                params: "streamtriad.native.params.bin".into(),
+                vocab: "streamtriad.vocab.json".into(),
+                batch: 64,
+                train_batch: 64,
+                seq_len: 30,
+                n_features: 3,
+                n_classes: 64,
+                n_params: 96_000,
+                arch: "native".into(),
+            },
+        );
+        let m = Manifest { version: 1, models };
+        m.save(dir.path()).unwrap();
+        let text = std::fs::read_to_string(dir.path().join("manifest.json")).unwrap();
+        assert!(!text.contains("infer_hlo"), "empty HLO field omitted: {text}");
+        let back = Manifest::load(dir.path()).unwrap();
+        let e = &back.models["streamtriad"];
+        assert_eq!(e.arch, "native");
+        assert!(e.infer_hlo.is_empty() && e.train_hlo.is_none());
+        assert_eq!(e.n_classes, 64);
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //!   <model>.params.bin       — tensor store (f32 or int4-packed)
 //!   <model>.vocab.json       — delta vocabulary + feature encoders
 //! ```
+//!
+//! The same manifest + tensor-store machinery also registers the
+//! pure-Rust native backend's artifacts (`repro train` →
+//! `<model>.native.params.bin`, manifest `arch = "native"`, no HLO
+//! files); see DESIGN.md §6 for the backend matrix.
 
 pub mod manifest;
 pub mod params;

@@ -1,6 +1,8 @@
 //! PJRT execution: compile HLO text once, keep parameters
 //! device-resident, and serve batched inference / fine-tune steps to
-//! the coordinator.
+//! the coordinator. Selected at runtime by `--backend pjrt`
+//! (DESIGN.md §6); the offline-clean alternative with real learning is
+//! the native backend in `predictor/native.rs` (`--backend native`).
 
 use crate::predictor::{ClassId, LabelledWindow, PredictorBackend, Window};
 use crate::runtime::manifest::ModelEntry;

@@ -5,8 +5,12 @@
 //! The stub mirrors the public API of the real module exactly, so
 //! every caller (the `repro` binary, the eval runner, benches, tests)
 //! compiles unchanged; any attempt to actually load or execute a model
-//! fails with a descriptive error, and the eval paths fall back to the
-//! pure-Rust stride backend (`--no-pjrt`).
+//! fails with a descriptive error. Backend selection is explicit
+//! (`--backend stride|native|pjrt`, DESIGN.md §6): only
+//! `--backend pjrt` ever reaches this module, and default builds get
+//! learned predictions from the pure-Rust native backend
+//! ([`crate::predictor::native`], trained by `repro train`) — the
+//! stride frequency vote remains the artifact-free floor.
 
 use crate::predictor::{ClassId, LabelledWindow, PredictorBackend, Window};
 use crate::runtime::manifest::ModelEntry;
@@ -15,8 +19,9 @@ use std::path::Path;
 
 const UNAVAILABLE: &str =
     "built without the `pjrt` feature — PJRT execution unavailable; \
-     rebuild with `--features pjrt` (needs the xla crate, see DESIGN.md §4) \
-     or run with `--no-pjrt` for the stride fallback";
+     rebuild with `--features pjrt` (needs the xla crate, see DESIGN.md §4), \
+     or use `--backend native` (offline-clean learned model, `repro train`) \
+     or `--backend stride` (frequency-vote floor) — DESIGN.md §6";
 
 /// Stand-in for the PJRT CPU client wrapper.
 pub struct PjrtRuntime {
