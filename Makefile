@@ -6,6 +6,7 @@
 #   make check         cargo check --all-targets --release (benches/examples)
 #   make eval-smoke    small parallel all-benchmark sweep → BENCH_eval.json
 #   make oversub-smoke small oversubscription sweep → BENCH_oversub.json
+#   make serve-smoke   tiny multi-tenant serving run → BENCH_serve.json
 #   make train         train the native backend (streamtriad → artifacts/)
 #   make model-smoke   tiny train + native-backend eval pairs (CI)
 #   make doc           cargo doc --no-deps with rustdoc warnings denied
@@ -18,7 +19,7 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test lint fmt clippy check doc eval-smoke oversub-smoke train model-smoke golden-check golden-update eval oversub artifacts clean
+.PHONY: build test lint fmt clippy check doc eval-smoke oversub-smoke serve-smoke train model-smoke golden-check golden-update eval oversub artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -59,6 +60,14 @@ oversub-smoke:
 		--scale 0.25 --max-instructions 200000 --out results-smoke \
 		--ratios 1.0,0.5 \
 		--benchmarks addvectors --benchmarks atax --benchmarks pathfinder
+
+# Serving smoke (CI): two tenant streams through two router shards on
+# the stride backend — exercises the sharded coordinator, the shared
+# batcher, and the BENCH_serve.json telemetry path.
+serve-smoke:
+	$(CARGO) run --release --bin repro -- serve --backend stride \
+		--streams 2 --shards 2 --max-faults 500 --scale 0.1 \
+		--out results-smoke
 
 # Train the native (pure-Rust) predictor backend offline: access-stream
 # harvest → vocab → windows → SGD/Adam → artifacts/<wl>.native.params.bin
@@ -102,4 +111,5 @@ artifacts:
 
 clean:
 	$(CARGO) clean
-	rm -rf results results-smoke results-nightly traces BENCH_eval.json BENCH_oversub.json
+	rm -rf results results-smoke results-nightly traces \
+		BENCH_eval.json BENCH_oversub.json BENCH_serve.json

@@ -4,7 +4,7 @@
 
 use std::time::Duration;
 use uvm_prefetch::config::{BypassMode, RuntimeConfig};
-use uvm_prefetch::coordinator::{CoordinatorService, FaultEvent, Router};
+use uvm_prefetch::coordinator::{CoordinatorService, FaultEvent, Router, SpawnOptions};
 use uvm_prefetch::predictor::batcher::{Batcher, PendingRequest};
 use uvm_prefetch::predictor::history::HistoryTable;
 use uvm_prefetch::predictor::{ConstantBackend, DeltaVocab, FeatTok, Window};
@@ -19,6 +19,7 @@ fn event(page: u64, warp: u16, at: u64, miss: bool) -> FaultEvent {
         page,
         origin: AccessOrigin { sm: warp % 28, warp, cta: 0, tpc: 0, kernel_id: 0 },
         miss,
+        tenant: (warp % 2) as u32,
     }
 }
 
@@ -77,25 +78,27 @@ fn main() {
         black_box(Json::parse(&vocab_json).unwrap())
     });
 
-    // Threaded pipeline end to end (constant backend).
-    b.case("pipeline: 2k accesses through service", 2_000, || {
-        let vocab = DeltaVocab::synthetic(vec![1, 2, 4], 30);
-        let rcfg = RuntimeConfig {
-            history_len: 30,
-            batch_size: 8,
-            bypass: BypassMode::Never,
-            ..Default::default()
-        };
-        let router = Router::new(vocab.clone(), &rcfg);
-        let backend = Box::new(ConstantBackend { class: 0, n_classes: vocab.n_classes() });
-        let handle = CoordinatorService::spawn(router, backend, &rcfg);
-        for i in 0..2_000u64 {
-            let warp = (i % 8) as u16;
-            handle
-                .faults_tx
-                .send(event(1000 * warp as u64 + i / 8, warp, i, i % 4 == 0))
-                .unwrap();
-        }
-        handle.shutdown().len()
-    });
+    // Threaded pipeline end to end (constant backend), single shard
+    // vs sharded: the shard axis is the serving-throughput knob.
+    for shards in [1usize, 4] {
+        b.case(&format!("pipeline: 2k accesses through service ({shards} shard)"), 2_000, || {
+            let vocab = DeltaVocab::synthetic(vec![1, 2, 4], 30);
+            let rcfg = RuntimeConfig {
+                history_len: 30,
+                batch_size: 8,
+                bypass: BypassMode::Never,
+                ..Default::default()
+            };
+            let backend = Box::new(ConstantBackend { class: 0, n_classes: vocab.n_classes() });
+            let sopts = SpawnOptions { shards, max_tenants: 2, ..Default::default() };
+            let handle = CoordinatorService::spawn(vocab, backend, &rcfg, &sopts);
+            for i in 0..2_000u64 {
+                let warp = (i % 8) as u16;
+                handle
+                    .send(event(1000 * warp as u64 + i / 8, warp, i, i % 4 == 0))
+                    .unwrap();
+            }
+            handle.shutdown().commands.len()
+        });
+    }
 }

@@ -1,17 +1,23 @@
-//! Async serving front (vLLM-router-style): a tokio service that
-//! consumes a stream of far-fault events, routes them through the
-//! clustering/history/batching pipeline, runs PJRT inference on a
-//! blocking worker, and emits prefetch commands plus live telemetry.
+//! Sharded multi-tenant serving front (vLLM-router-style): a stream
+//! of tenant-tagged far-fault events is hashed by (tenant, cluster)
+//! onto N router shards — each shard owning its own history tables —
+//! which feed one shared size/deadline batcher so windows from
+//! different tenants and shards coalesce into real inference batches;
+//! prefetch commands come back tenant-tagged, with lock-free
+//! end-to-end latency telemetry per tenant and aggregate.
 //!
 //! The simulator uses the synchronous path in [`crate::prefetch::dl`]
 //! directly (deterministic simulated time); this module is the
-//! *deployment* shape — `repro serve` replays a trace file through it
-//! and the `e2e_prefetch` example drives it end-to-end.
+//! *deployment* shape — `repro serve --streams N --shards K` replays
+//! interleaved tenant fault streams through it (see
+//! [`crate::eval::serve`]).
 
 pub mod router;
 pub mod service;
 pub mod stats;
 
-pub use router::{FaultEvent, PrefetchCommand, Router};
-pub use service::{CoordinatorHandle, CoordinatorService};
-pub use stats::CoordinatorStats;
+pub use router::{shard_of, tenant_cluster_key, FaultEvent, PrefetchCommand, Router};
+pub use service::{
+    CoordinatorHandle, CoordinatorService, FaultSender, ShutdownReport, SpawnOptions,
+};
+pub use stats::{CoordinatorStats, TenantStats};

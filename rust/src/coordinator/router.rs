@@ -2,12 +2,20 @@
 //! extraction, bypass decision — the synchronous brain shared by the
 //! async service. (The sim-side `DlPrefetcher` embeds the same
 //! pipeline; the router exposes it for streaming deployments.)
+//!
+//! Multi-tenancy: every [`FaultEvent`] carries a [`TenantId`]. The
+//! router mixes the tenant into the cluster key
+//! ([`tenant_cluster_key`]) so two tenants replaying identical
+//! workloads never share a history, and the sharded service uses the
+//! same mixed key to pick a shard ([`shard_of`]) — a cluster therefore
+//! lives wholly on one shard and its history stays coherent no matter
+//! how tenant streams interleave.
 
 use crate::config::{BypassMode, RuntimeConfig};
 use crate::predictor::engine::featurize_window;
 use crate::predictor::history::HistoryTable;
 use crate::predictor::{ClusterBy, ClusterKey, DeltaVocab, Window};
-use crate::types::{bb_base, AccessOrigin, Cycle, PageNum, PAGES_PER_BB};
+use crate::types::{bb_base, AccessOrigin, Cycle, PageNum, TenantId, PAGES_PER_BB};
 
 /// A GMMU access delivered to the coordinator. Every access extends
 /// the cluster history (the predictor windows over the full access
@@ -20,15 +28,52 @@ pub struct FaultEvent {
     pub page: PageNum,
     pub origin: AccessOrigin,
     pub miss: bool,
+    /// Which client stream this access belongs to (0 in single-tenant
+    /// deployments — the simulator path and the old `serve` shape).
+    pub tenant: TenantId,
 }
 
-/// What the coordinator tells the migration engine to do.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// What the coordinator tells the migration engine to do. Commands are
+/// tenant-tagged and fully ordered (`Ord`) so per-tenant multisets can
+/// be compared across shard counts — the content, per tenant, is
+/// deterministic for a given input stream; only cross-tenant order may
+/// vary with thread scheduling.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub enum PrefetchCommand {
     /// Migrate these pages now (basic-block floor).
-    Migrate(Vec<PageNum>),
+    Migrate { tenant: TenantId, pages: Vec<PageNum> },
     /// Migrate one predicted page (model answer).
-    Predicted { page: PageNum, batched: usize },
+    Predicted { tenant: TenantId, page: PageNum },
+}
+
+impl PrefetchCommand {
+    pub fn tenant(&self) -> TenantId {
+        match self {
+            PrefetchCommand::Migrate { tenant, .. } => *tenant,
+            PrefetchCommand::Predicted { tenant, .. } => *tenant,
+        }
+    }
+}
+
+/// Fold a tenant id into a cluster key (splitmix64-style finalizer) so
+/// per-tenant clusters occupy disjoint key ranges regardless of the
+/// underlying [`ClusterBy`] mode. Deterministic: same (tenant, key) ⇒
+/// same mixed key on every run and platform.
+pub fn tenant_cluster_key(tenant: TenantId, key: ClusterKey) -> ClusterKey {
+    let mut z = key.0 ^ (tenant as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    ClusterKey(z ^ (z >> 31))
+}
+
+/// Which router shard owns this event's cluster. Uses the same
+/// (SM, warp) clustering + tenant mixing as [`Router::route`], so
+/// every event of a cluster lands on the same shard and the shard's
+/// `HistoryTable` sees the full per-cluster stream.
+pub fn shard_of(ev: &FaultEvent, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    let key = tenant_cluster_key(ev.tenant, ClusterBy::SmWarp.key(&ev.origin, ev.pc));
+    (key.0 % shards.max(1) as u64) as usize
 }
 
 /// Result of routing one fault.
@@ -73,7 +118,7 @@ impl Router {
     }
 
     pub fn route(&mut self, ev: &FaultEvent) -> RouteOutcome {
-        let key = self.cluster_by.key(&ev.origin, ev.pc);
+        let key = tenant_cluster_key(ev.tenant, self.cluster_by.key(&ev.origin, ev.pc));
         self.history.push(key, ev.pc, ev.page, ev.at);
         if !ev.miss {
             // Hits only feed the history.
@@ -127,6 +172,7 @@ mod tests {
             page,
             origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
             miss: true,
+            tenant: 0,
         }
     }
 
@@ -171,5 +217,47 @@ mod tests {
         ev.origin.warp = 9;
         let out = r.route(&ev);
         assert!(out.window.is_none(), "fresh cluster has no history");
+    }
+
+    #[test]
+    fn separate_tenants_route_to_separate_clusters() {
+        let mut r = router(BypassMode::Never);
+        // Tenant 0 fills its cluster history.
+        for i in 0..4u64 {
+            r.route(&event(i, i));
+        }
+        assert!(r.route(&event(4, 4)).window.is_some());
+        // Same (sm, warp, pc) under a different tenant starts cold.
+        let mut ev = event(100, 10);
+        ev.tenant = 1;
+        let out = r.route(&ev);
+        assert!(out.window.is_none(), "tenant 1 has no history yet");
+    }
+
+    #[test]
+    fn tenant_key_mixing_is_deterministic_and_disjoint() {
+        let base = ClusterKey(0x42);
+        assert_eq!(tenant_cluster_key(3, base), tenant_cluster_key(3, base));
+        assert_ne!(tenant_cluster_key(0, base), tenant_cluster_key(1, base));
+    }
+
+    #[test]
+    fn shard_assignment_is_stable_per_cluster() {
+        let ev = event(7, 0);
+        let s = shard_of(&ev, 4);
+        assert!(s < 4);
+        // Same cluster (tenant, sm, warp) ⇒ same shard, whatever the page.
+        let ev2 = event(9_999, 5);
+        assert_eq!(shard_of(&ev2, 4), s);
+        // One shard ⇒ everything maps to 0.
+        assert_eq!(shard_of(&ev, 1), 0);
+    }
+
+    #[test]
+    fn command_tenant_accessor() {
+        let m = PrefetchCommand::Migrate { tenant: 7, pages: vec![1] };
+        let p = PrefetchCommand::Predicted { tenant: 9, page: 4 };
+        assert_eq!(m.tenant(), 7);
+        assert_eq!(p.tenant(), 9);
     }
 }

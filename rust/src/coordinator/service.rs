@@ -1,113 +1,277 @@
-//! The serving pipeline: fault events in, prefetch commands out.
+//! The serving pipeline: fault events in, prefetch commands out —
+//! sharded and multi-tenant.
 //!
-//! Topology (one OS thread per stage, bounded sync channels —
-//! backpressure propagates to the fault producer):
+//! Topology (one OS thread per router shard plus one batch/infer
+//! thread, bounded sync channels — backpressure propagates to the
+//! fault producers):
 //!
 //! ```text
-//! faults ─► router thread ─► batch+infer thread (size/deadline
-//!              │               batching, synchronous PJRT)
-//!              └── block prefetches ──► commands ◄── predicted pages
+//!                ┌─► router shard 0 ─┐
+//! FaultSender ───┼─► router shard 1 ─┼─► shared batch+infer thread
+//!  (hash of      │        …          │   (size/deadline batching,
+//!   tenant+      └─► router shard K ─┘    one batched forward per
+//!   cluster key)        │                 flush, windows from all
+//!                       │                 shards/tenants coalesce)
+//!                       └── block prefetches ──► commands ◄── predictions
 //! ```
+//!
+//! Every fault is timestamped on entry ([`FaultSender::send`]); the
+//! instant a command is handed to the command channel the end-to-end
+//! latency is recorded per tenant and aggregate
+//! ([`CoordinatorStats`]). Per-tenant command *content* is
+//! deterministic for a given input stream and independent of the shard
+//! count: a cluster (tenant + SM + warp) lives wholly on one shard, and
+//! the predictor backends answer each window statelessly, so only the
+//! cross-tenant interleaving varies with scheduling.
 //!
 //! The simulator uses the synchronous path in [`crate::prefetch::dl`]
 //! directly (deterministic simulated time); this service is the
-//! *deployment* shape — `repro serve` replays a fault stream through
-//! it and the `e2e_prefetch` example drives it end to end.
+//! *deployment* shape — `repro serve --streams N --shards K` replays
+//! interleaved tenant fault streams through it and
+//! [`crate::eval::serve`] reports the telemetry as `BENCH_serve.json`.
 
 use crate::config::RuntimeConfig;
-use crate::coordinator::router::{FaultEvent, PrefetchCommand, Router};
+use crate::coordinator::router::{shard_of, FaultEvent, PrefetchCommand, Router};
 use crate::coordinator::stats::CoordinatorStats;
-use crate::predictor::{DeltaVocab, PredictorBackend, Prediction, Window};
-use crate::types::PageNum;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use crate::predictor::{DeltaVocab, Prediction, PredictorBackend, Window};
+use crate::types::{PageNum, TenantId};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SendError, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// Deployment knobs for [`CoordinatorService::spawn`] (channel bounds
+/// are per instance so tests can shrink them to force backpressure).
+#[derive(Debug, Clone)]
+pub struct SpawnOptions {
+    /// Number of router shards (≥ 1).
+    pub shards: usize,
+    /// Telemetry slots for per-tenant stats (ids beyond this clamp to
+    /// the last slot).
+    pub max_tenants: usize,
+    /// Per-shard fault queue bound (producers block when full).
+    pub fault_queue: usize,
+    /// Shared inference queue bound.
+    pub infer_queue: usize,
+    /// Command queue bound.
+    pub command_queue: usize,
+    /// Flush a partial inference batch once its oldest window waited
+    /// this long.
+    pub flush_after: Duration,
+}
+
+impl Default for SpawnOptions {
+    fn default() -> Self {
+        Self {
+            shards: 1,
+            max_tenants: 1,
+            fault_queue: 1024,
+            infer_queue: 1024,
+            command_queue: 65536,
+            flush_after: Duration::from_micros(200),
+        }
+    }
+}
+
+/// A fault event plus its coordinator-entry timestamp (the zero point
+/// of the end-to-end latency measurement).
+struct TimedFault {
+    ev: FaultEvent,
+    enqueued: Instant,
+}
+
+/// Cloneable fault-ingress handle: hashes each event's (tenant,
+/// cluster) to its owning shard and sends on that shard's bounded
+/// channel (blocking when full — backpressure reaches the producer).
+/// Load generators hold one clone per producer thread.
+#[derive(Clone)]
+pub struct FaultSender {
+    shards: Vec<SyncSender<TimedFault>>,
+}
+
+impl FaultSender {
+    /// Deliver one event to its shard. Errors only when the service
+    /// has shut down (the event is handed back).
+    pub fn send(&self, ev: FaultEvent) -> Result<(), SendError<FaultEvent>> {
+        let shard = shard_of(&ev, self.shards.len());
+        self.shards[shard]
+            .send(TimedFault { ev, enqueued: Instant::now() })
+            .map_err(|e| SendError(e.0.ev))
+    }
+}
+
+/// What [`CoordinatorHandle::shutdown`] returns: the drained commands
+/// plus the backpressure/drop counters that used to vanish into
+/// `let _ = send(…)` discards.
+pub struct ShutdownReport {
+    /// Commands still in flight at shutdown, drained in channel order.
+    pub commands: Vec<PrefetchCommand>,
+    /// Commands that were produced but could not be delivered
+    /// (receiver gone / channel closed). Every command of the work in
+    /// flight when the channel died is counted; the pipeline then
+    /// stops routing, so queued *events* that never became commands
+    /// are not — nonzero means the consumer lost at least this much
+    /// work silently.
+    pub dropped_commands: u64,
+    /// Full telemetry (latency histograms, per-tenant counters).
+    pub stats: Arc<CoordinatorStats>,
+}
+
 /// Handle returned by [`CoordinatorService::spawn`].
 pub struct CoordinatorHandle {
-    pub faults_tx: SyncSender<FaultEvent>,
+    sender: FaultSender,
     pub commands_rx: Receiver<PrefetchCommand>,
     pub stats: Arc<CoordinatorStats>,
     tasks: Vec<JoinHandle<()>>,
 }
 
 impl CoordinatorHandle {
+    /// A cloneable ingress handle (one per producer thread).
+    pub fn sender(&self) -> FaultSender {
+        self.sender.clone()
+    }
+
+    /// Send one event from the owning thread (see [`FaultSender`]).
+    pub fn send(&self, ev: FaultEvent) -> Result<(), SendError<FaultEvent>> {
+        self.sender.send(ev)
+    }
+
+    /// Drop the command receiver (tests: force subsequent sends to
+    /// fail so the drop accounting is observable).
+    pub fn close_commands(&mut self) {
+        let (_tx, rx) = std::sync::mpsc::sync_channel(1);
+        self.commands_rx = rx;
+    }
+
     /// Close the input, drain remaining commands, and join the
-    /// pipeline threads. Returns the drained commands.
-    pub fn shutdown(self) -> Vec<PrefetchCommand> {
-        let CoordinatorHandle { faults_tx, commands_rx, stats: _, tasks } = self;
-        drop(faults_tx);
-        let mut rest = Vec::new();
+    /// pipeline threads. Producers holding [`FaultSender`] clones keep
+    /// the input open until they drop them; the drain loop keeps the
+    /// command channel moving meanwhile, so shutdown cannot deadlock
+    /// against a blocked producer.
+    pub fn shutdown(self) -> ShutdownReport {
+        let CoordinatorHandle { sender, commands_rx, stats, tasks } = self;
+        drop(sender);
+        let mut commands = Vec::new();
         while let Ok(c) = commands_rx.recv() {
-            rest.push(c);
+            commands.push(c);
         }
         for t in tasks {
             let _ = t.join();
         }
-        rest
+        let dropped = stats.dropped_commands.load(std::sync::atomic::Ordering::Relaxed);
+        ShutdownReport { commands, dropped_commands: dropped, stats }
     }
 }
 
-/// One inference request flowing router → infer.
+/// One inference request flowing a router shard → infer.
 struct InferReq {
     window: Window,
     anchor: PageNum,
+    tenant: TenantId,
+    enqueued: Instant,
+}
+
+fn us_since(t: Instant) -> u64 {
+    t.elapsed().as_micros().min(u64::MAX as u128) as u64
 }
 
 pub struct CoordinatorService;
 
 impl CoordinatorService {
-    /// Spawn the two-stage pipeline.
+    /// Spawn the sharded pipeline: `sopts.shards` router shards (each
+    /// owning its own [`Router`] and therefore its own history tables)
+    /// feeding one shared batch+infer thread.
     pub fn spawn(
-        mut router: Router,
+        vocab: DeltaVocab,
         mut backend: Box<dyn PredictorBackend>,
         rcfg: &RuntimeConfig,
+        sopts: &SpawnOptions,
     ) -> CoordinatorHandle {
-        let stats = Arc::new(CoordinatorStats::default());
-        let vocab: DeltaVocab = router.vocab().clone();
-        let (faults_tx, faults_rx) = std::sync::mpsc::sync_channel::<FaultEvent>(1024);
-        let (infer_tx, infer_rx) = std::sync::mpsc::sync_channel::<InferReq>(1024);
-        let (cmd_tx, commands_rx) = std::sync::mpsc::sync_channel::<PrefetchCommand>(65536);
+        let shards = sopts.shards.max(1);
+        let stats = Arc::new(CoordinatorStats::with_tenants(sopts.max_tenants.max(1)));
+        let (infer_tx, infer_rx) = std::sync::mpsc::sync_channel::<InferReq>(sopts.infer_queue);
+        let (cmd_tx, commands_rx) =
+            std::sync::mpsc::sync_channel::<PrefetchCommand>(sopts.command_queue);
         let batch_size = rcfg.batch_size.max(1);
-        let flush_after = Duration::from_micros(200);
+        let flush_after = sopts.flush_after;
 
-        // Router thread.
-        let st = stats.clone();
-        let cmd = cmd_tx.clone();
-        let route_task = std::thread::Builder::new()
-            .name("uvm-router".into())
-            .spawn(move || {
-                while let Ok(ev) = faults_rx.recv() {
-                    CoordinatorStats::inc(&st.faults, 1);
-                    let out = router.route(&ev);
-                    CoordinatorStats::inc(&st.block_prefetches, out.block.len() as u64);
-                    // Hits only feed the history — no migration command.
-                    if !out.block.is_empty()
-                        && cmd.send(PrefetchCommand::Migrate(out.block)).is_err()
-                    {
-                        break;
-                    }
-                    if let Some(page) = out.bypass_page {
-                        CoordinatorStats::inc(&st.bypasses, 1);
-                        let _ = cmd.send(PrefetchCommand::Predicted { page, batched: 1 });
-                    }
-                    if let Some((_key, window)) = out.window {
-                        if infer_tx.send(InferReq { window, anchor: ev.page }).is_err() {
+        let mut senders = Vec::with_capacity(shards);
+        let mut tasks = Vec::with_capacity(shards + 1);
+
+        // Router shards.
+        for shard in 0..shards {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<TimedFault>(sopts.fault_queue);
+            senders.push(tx);
+            let mut router = Router::new(vocab.clone(), rcfg);
+            let st = stats.clone();
+            let cmd = cmd_tx.clone();
+            let inf = infer_tx.clone();
+            let task = std::thread::Builder::new()
+                .name(format!("uvm-router-{shard}"))
+                .spawn(move || {
+                    while let Ok(TimedFault { ev, enqueued }) = rx.recv() {
+                        CoordinatorStats::inc(&st.faults, 1);
+                        let out = router.route(&ev);
+                        CoordinatorStats::inc(&st.block_prefetches, out.block.len() as u64);
+                        // A dead command channel ends the shard, but
+                        // every command this event produced is counted
+                        // as dropped first — the counter must not
+                        // understate the loss for the work in hand.
+                        let mut dead = false;
+                        // Hits only feed the history — no migration command.
+                        if !out.block.is_empty() {
+                            let c =
+                                PrefetchCommand::Migrate { tenant: ev.tenant, pages: out.block };
+                            if cmd.send(c).is_ok() {
+                                st.record_command(ev.tenant, false, us_since(enqueued));
+                            } else {
+                                CoordinatorStats::inc(&st.dropped_commands, 1);
+                                dead = true;
+                            }
+                        }
+                        if let Some(page) = out.bypass_page {
+                            CoordinatorStats::inc(&st.bypasses, 1);
+                            let c = PrefetchCommand::Predicted { tenant: ev.tenant, page };
+                            if !dead && cmd.send(c).is_ok() {
+                                st.record_command(ev.tenant, true, us_since(enqueued));
+                            } else {
+                                CoordinatorStats::inc(&st.dropped_commands, 1);
+                                dead = true;
+                            }
+                        }
+                        if dead {
                             break;
                         }
+                        if let Some((_key, window)) = out.window {
+                            let req = InferReq {
+                                window,
+                                anchor: ev.page,
+                                tenant: ev.tenant,
+                                enqueued,
+                            };
+                            if inf.send(req).is_err() {
+                                break;
+                            }
+                        }
                     }
-                }
-            })
-            .expect("spawn router thread");
+                })
+                .expect("spawn router shard thread");
+            tasks.push(task);
+        }
+        // Only the shard clones keep the infer channel open; likewise
+        // the command channel is held by the shards + infer thread.
+        drop(infer_tx);
 
-        // Batch + infer thread.
+        // Shared batch + infer thread: windows from every shard and
+        // tenant coalesce into one size/deadline batch, answered by a
+        // single batched forward.
         let st = stats.clone();
+        let vocab_infer = vocab;
         let infer_task = std::thread::Builder::new()
             .name("uvm-infer".into())
             .spawn(move || {
                 let mut pending: Vec<InferReq> = Vec::with_capacity(batch_size);
-                'outer: while let Ok(first) = infer_rx.recv() {
+                while let Ok(first) = infer_rx.recv() {
                     pending.push(first);
                     let deadline = Instant::now() + flush_after;
                     while pending.len() < batch_size {
@@ -115,46 +279,56 @@ impl CoordinatorService {
                         match infer_rx.recv_timeout(left) {
                             Ok(r) => pending.push(r),
                             Err(RecvTimeoutError::Timeout) => break,
-                            Err(RecvTimeoutError::Disconnected) => {
-                                if pending.is_empty() {
-                                    break 'outer;
-                                }
-                                break;
-                            }
+                            // `pending` holds at least `first`; flush
+                            // it, then the outer recv() observes the
+                            // closed channel and ends the loop.
+                            Err(RecvTimeoutError::Disconnected) => break,
                         }
                     }
                     let batch: Vec<InferReq> = pending.drain(..).collect();
                     let windows: Vec<Window> = batch.iter().map(|r| r.window.clone()).collect();
-                    let n = batch.len();
                     let t0 = Instant::now();
                     let classes = backend.predict(&windows);
-                    st.record_batch_latency(t0.elapsed().as_secs_f64() * 1e6);
-                    CoordinatorStats::inc(&st.batches, 1);
+                    st.record_batch(us_since(t0), batch.len());
                     CoordinatorStats::inc(&st.predictions, classes.len() as u64);
+                    // A dead command channel ends the thread — after
+                    // every command of this batch has been counted as
+                    // dropped (the counter must cover the whole batch,
+                    // not just the first failure).
+                    let mut dead = false;
                     for (class, req) in classes.into_iter().zip(batch) {
-                        match vocab.decode(class) {
+                        match vocab_infer.decode(class) {
                             Prediction::Delta(d) => {
                                 let target = req.anchor as i64 + d;
                                 if target >= 0 && d != 0 {
-                                    if cmd_tx
-                                        .send(PrefetchCommand::Predicted {
-                                            page: target as PageNum,
-                                            batched: n,
-                                        })
-                                        .is_err()
-                                    {
-                                        return;
+                                    let c = PrefetchCommand::Predicted {
+                                        tenant: req.tenant,
+                                        page: target as PageNum,
+                                    };
+                                    if !dead && cmd_tx.send(c).is_ok() {
+                                        st.record_command(
+                                            req.tenant,
+                                            true,
+                                            us_since(req.enqueued),
+                                        );
+                                    } else {
+                                        CoordinatorStats::inc(&st.dropped_commands, 1);
+                                        dead = true;
                                     }
                                 }
                             }
                             Prediction::Oov => CoordinatorStats::inc(&st.oov, 1),
                         }
                     }
+                    if dead {
+                        return;
+                    }
                 }
             })
             .expect("spawn infer thread");
+        tasks.push(infer_task);
 
-        CoordinatorHandle { faults_tx, commands_rx, stats, tasks: vec![route_task, infer_task] }
+        CoordinatorHandle { sender: FaultSender { shards: senders }, commands_rx, stats, tasks }
     }
 }
 
@@ -172,7 +346,12 @@ mod tests {
             page,
             origin: AccessOrigin { sm: 0, warp: 0, cta: 0, tpc: 0, kernel_id: 0 },
             miss: true,
+            tenant: 0,
         }
+    }
+
+    fn migrates(cmds: &[PrefetchCommand]) -> usize {
+        cmds.iter().filter(|c| matches!(c, PrefetchCommand::Migrate { .. })).count()
     }
 
     #[test]
@@ -184,18 +363,19 @@ mod tests {
             bypass: BypassMode::Never,
             ..Default::default()
         };
-        let router = Router::new(vocab.clone(), &rcfg);
         // Always class 1 → delta 9.
         let backend = Box::new(ConstantBackend { class: 1, n_classes: vocab.n_classes() });
-        let handle = CoordinatorService::spawn(router, backend, &rcfg);
+        let handle =
+            CoordinatorService::spawn(vocab, backend, &rcfg, &SpawnOptions::default());
 
         for (i, page) in [100u64, 101, 102, 103].iter().enumerate() {
-            handle.faults_tx.send(event(*page, i as u64)).unwrap();
+            handle.send(event(*page, i as u64)).unwrap();
         }
-        let cmds = handle.shutdown();
+        let report = handle.shutdown();
+        let cmds = report.commands;
 
-        let migrates = cmds.iter().filter(|c| matches!(c, PrefetchCommand::Migrate(_))).count();
-        assert_eq!(migrates, 4, "one block migration per fault");
+        assert_eq!(migrates(&cmds), 4, "one block migration per fault");
+        assert_eq!(report.dropped_commands, 0);
         let mut predicted: Vec<u64> = cmds
             .iter()
             .filter_map(|c| match c {
@@ -207,6 +387,8 @@ mod tests {
         // Windows full from fault #3 onward (history_len=2): anchors
         // 102 and 103 each get +9.
         assert_eq!(predicted, vec![111, 112]);
+        // Latency was recorded for every delivered command.
+        assert_eq!(report.stats.latency_summary().n, cmds.len() as u64);
     }
 
     #[test]
@@ -218,15 +400,16 @@ mod tests {
             bypass: BypassMode::Never,
             ..Default::default()
         };
-        let router = Router::new(vocab.clone(), &rcfg);
-        let backend = Box::new(ConstantBackend { class: 1, n_classes: vocab.n_classes() }); // OOV
-        let handle = CoordinatorService::spawn(router, backend, &rcfg);
+        let n_classes = vocab.n_classes();
+        let backend = Box::new(ConstantBackend { class: 1, n_classes }); // OOV
+        let handle =
+            CoordinatorService::spawn(vocab, backend, &rcfg, &SpawnOptions::default());
         for (i, page) in [1u64, 2, 3, 4].iter().enumerate() {
-            handle.faults_tx.send(event(*page, i as u64)).unwrap();
+            handle.send(event(*page, i as u64)).unwrap();
         }
         let stats = handle.stats.clone();
-        let cmds = handle.shutdown();
-        assert!(cmds.iter().all(|c| matches!(c, PrefetchCommand::Migrate(_))));
+        let cmds = handle.shutdown().commands;
+        assert!(cmds.iter().all(|c| matches!(c, PrefetchCommand::Migrate { .. })));
         assert!(stats.oov.load(std::sync::atomic::Ordering::Relaxed) >= 1);
     }
 
@@ -239,14 +422,14 @@ mod tests {
             bypass: BypassMode::Always,
             ..Default::default()
         };
-        let router = Router::new(vocab.clone(), &rcfg);
         let backend = Box::new(ConstantBackend { class: 0, n_classes: 2 });
-        let handle = CoordinatorService::spawn(router, backend, &rcfg);
+        let handle =
+            CoordinatorService::spawn(vocab, backend, &rcfg, &SpawnOptions::default());
         for (i, page) in [10u64, 11, 12, 13].iter().enumerate() {
-            handle.faults_tx.send(event(*page, i as u64)).unwrap();
+            handle.send(event(*page, i as u64)).unwrap();
         }
         let stats = handle.stats.clone();
-        let cmds = handle.shutdown();
+        let cmds = handle.shutdown().commands;
         let predicted = cmds
             .iter()
             .filter(|c| matches!(c, PrefetchCommand::Predicted { .. }))
@@ -258,5 +441,60 @@ mod tests {
             0,
             "model never invoked under Always bypass"
         );
+    }
+
+    #[test]
+    fn sharded_spawn_preserves_per_fault_migrations() {
+        let vocab = DeltaVocab::synthetic(vec![1, 2], 3);
+        let rcfg = RuntimeConfig {
+            history_len: 3,
+            batch_size: 4,
+            bypass: BypassMode::Never,
+            ..Default::default()
+        };
+        let n_classes = vocab.n_classes();
+        let backend = Box::new(ConstantBackend { class: 0, n_classes });
+        let sopts = SpawnOptions { shards: 4, max_tenants: 2, ..Default::default() };
+        let handle = CoordinatorService::spawn(vocab, backend, &rcfg, &sopts);
+        // Two tenants × two warps ⇒ four clusters spread over shards.
+        let mut sent = 0usize;
+        for i in 0..40u64 {
+            let mut ev = event(100 + i, i);
+            ev.origin.warp = (i % 2) as u16;
+            ev.tenant = (i % 4 > 1) as u32;
+            handle.send(ev).unwrap();
+            sent += 1;
+        }
+        let report = handle.shutdown();
+        assert_eq!(migrates(&report.commands), sent, "one Migrate per miss across shards");
+        assert_eq!(report.dropped_commands, 0);
+        // Both tenants got commands, and the tags partition them.
+        let t0 = report.commands.iter().filter(|c| c.tenant() == 0).count();
+        let t1 = report.commands.iter().filter(|c| c.tenant() == 1).count();
+        assert!(t0 > 0 && t1 > 0);
+        assert_eq!(t0 + t1, report.commands.len());
+    }
+
+    #[test]
+    fn dropped_commands_are_counted_when_receiver_goes_away() {
+        let vocab = DeltaVocab::synthetic(vec![1], 2);
+        let rcfg = RuntimeConfig {
+            history_len: 2,
+            batch_size: 1,
+            bypass: BypassMode::Never,
+            ..Default::default()
+        };
+        let backend = Box::new(ConstantBackend { class: 0, n_classes: 2 });
+        let mut handle =
+            CoordinatorService::spawn(vocab, backend, &rcfg, &SpawnOptions::default());
+        handle.close_commands();
+        // Sends may start failing once the shard notices the closed
+        // command channel and exits — ignore those errors.
+        for i in 0..50u64 {
+            let _ = handle.send(event(i, i));
+        }
+        let report = handle.shutdown();
+        assert!(report.dropped_commands >= 1, "drop went unnoticed");
+        assert!(report.commands.is_empty(), "receiver was replaced before draining");
     }
 }

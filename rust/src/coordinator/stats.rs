@@ -1,46 +1,151 @@
-//! Live coordinator telemetry (shared across the async tasks).
+//! Live coordinator telemetry, shared by every shard and the infer
+//! thread. Entirely lock-free: counters are relaxed `AtomicU64`s and
+//! the latency/batch distributions are [`AtomicHistogram`]s, so a
+//! shard never blocks a sibling to record a sample (the old
+//! `Mutex<OnlineStats>` serialized the whole pipeline on one lock).
+//!
+//! Latency is measured end to end — from the instant a fault enters
+//! the coordinator ([`crate::coordinator::FaultSender::send`]) to the
+//! instant its command is handed to the command channel — and recorded
+//! both aggregate and per tenant.
 
-use crate::util::OnlineStats;
+use crate::types::TenantId;
+use crate::util::{AtomicHistogram, HistSummary};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
+/// Per-tenant slice of the telemetry.
 #[derive(Debug, Default)]
+pub struct TenantStats {
+    /// Commands emitted for this tenant (migrates + predicted).
+    pub commands: AtomicU64,
+    pub migrates: AtomicU64,
+    pub predicted: AtomicU64,
+    /// End-to-end fault→command latency, microseconds.
+    pub latency_us: AtomicHistogram,
+}
+
+#[derive(Debug)]
 pub struct CoordinatorStats {
     pub faults: AtomicU64,
     pub block_prefetches: AtomicU64,
     pub predictions: AtomicU64,
     pub batches: AtomicU64,
+    /// Sum of inference batch sizes (mean batch = this / `batches`).
+    pub batched_windows: AtomicU64,
     pub bypasses: AtomicU64,
     pub oov: AtomicU64,
-    /// Wall-clock batch latency in microseconds.
-    pub batch_latency_us: Mutex<OnlineStats>,
+    /// Commands that could not be delivered (command channel gone) —
+    /// the silent `let _ = send(…)` failure mode, now counted and
+    /// surfaced through `CoordinatorHandle::shutdown`.
+    pub dropped_commands: AtomicU64,
+    /// Wall-clock model batch latency, microseconds.
+    pub batch_latency_us: AtomicHistogram,
+    /// Inference batch size distribution.
+    pub batch_sizes: AtomicHistogram,
+    /// Aggregate end-to-end fault→command latency, microseconds.
+    pub fault_to_cmd_us: AtomicHistogram,
+    tenants: Vec<TenantStats>,
 }
 
 impl CoordinatorStats {
+    /// Telemetry sized for `n` tenants (ids ≥ `n` clamp to the last
+    /// slot rather than panic — an unknown tenant must not take the
+    /// pipeline down).
+    pub fn with_tenants(n: usize) -> Self {
+        Self {
+            faults: AtomicU64::new(0),
+            block_prefetches: AtomicU64::new(0),
+            predictions: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_windows: AtomicU64::new(0),
+            bypasses: AtomicU64::new(0),
+            oov: AtomicU64::new(0),
+            dropped_commands: AtomicU64::new(0),
+            batch_latency_us: AtomicHistogram::new(),
+            batch_sizes: AtomicHistogram::new(),
+            fault_to_cmd_us: AtomicHistogram::new(),
+            tenants: (0..n.max(1)).map(|_| TenantStats::default()).collect(),
+        }
+    }
+
     pub fn inc(counter: &AtomicU64, by: u64) {
         counter.fetch_add(by, Ordering::Relaxed);
     }
 
-    pub fn record_batch_latency(&self, us: f64) {
-        self.batch_latency_us.lock().unwrap().push(us);
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// The tenant's telemetry slot (ids beyond capacity share the last
+    /// slot).
+    pub fn tenant(&self, t: TenantId) -> &TenantStats {
+        &self.tenants[(t as usize).min(self.tenants.len() - 1)]
+    }
+
+    /// Record one delivered command: aggregate + per-tenant counters
+    /// and the end-to-end latency sample.
+    pub fn record_command(&self, tenant: TenantId, predicted: bool, latency_us: u64) {
+        self.fault_to_cmd_us.record(latency_us);
+        let t = self.tenant(tenant);
+        t.commands.fetch_add(1, Ordering::Relaxed);
+        if predicted {
+            t.predicted.fetch_add(1, Ordering::Relaxed);
+        } else {
+            t.migrates.fetch_add(1, Ordering::Relaxed);
+        }
+        t.latency_us.record(latency_us);
+    }
+
+    /// Record one model batch: wall latency (µs) and size.
+    pub fn record_batch(&self, latency_us: u64, size: usize) {
+        self.batch_latency_us.record(latency_us);
+        self.batch_sizes.record(size as u64);
+        Self::inc(&self.batches, 1);
+        Self::inc(&self.batched_windows, size as u64);
+    }
+
+    /// Mean inference batch size so far (0 when no batch ran).
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_windows.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn latency_summary(&self) -> HistSummary {
+        self.fault_to_cmd_us.summary()
     }
 
     pub fn snapshot(&self) -> String {
-        let lat = self.batch_latency_us.lock().unwrap();
+        let lat = self.fault_to_cmd_us.summary();
+        let bat = self.batch_latency_us.summary();
         format!(
-            "faults={} block_pf={} predictions={} batches={} bypass={} oov={} \
-             batch_lat_us(mean={:.1} min={:.1} max={:.1} n={})",
+            "faults={} block_pf={} predictions={} batches={} mean_batch={:.2} bypass={} oov={} \
+             dropped={} batch_lat_us(mean={:.1} p95={} n={}) e2e_us(p50={} p95={} p99={} n={})",
             self.faults.load(Ordering::Relaxed),
             self.block_prefetches.load(Ordering::Relaxed),
             self.predictions.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
+            self.mean_batch(),
             self.bypasses.load(Ordering::Relaxed),
             self.oov.load(Ordering::Relaxed),
-            lat.mean(),
-            lat.min,
-            lat.max,
+            self.dropped_commands.load(Ordering::Relaxed),
+            bat.mean,
+            bat.p95,
+            bat.n,
+            lat.p50,
+            lat.p95,
+            lat.p99,
             lat.n,
         )
+    }
+}
+
+impl Default for CoordinatorStats {
+    fn default() -> Self {
+        Self::with_tenants(1)
     }
 }
 
@@ -52,10 +157,33 @@ mod tests {
     fn counters_and_snapshot() {
         let s = CoordinatorStats::default();
         CoordinatorStats::inc(&s.faults, 3);
-        s.record_batch_latency(120.0);
-        s.record_batch_latency(80.0);
+        s.record_batch(120, 4);
+        s.record_batch(80, 2);
+        assert_eq!(s.mean_batch(), 3.0);
         let snap = s.snapshot();
         assert!(snap.contains("faults=3"), "{snap}");
         assert!(snap.contains("mean=100.0"), "{snap}");
+        assert!(snap.contains("mean_batch=3.00"), "{snap}");
+    }
+
+    #[test]
+    fn per_tenant_commands_and_clamping() {
+        let s = CoordinatorStats::with_tenants(2);
+        s.record_command(0, false, 10);
+        s.record_command(1, true, 20);
+        s.record_command(99, true, 30); // clamps to the last slot
+        assert_eq!(s.tenant(0).migrates.load(Ordering::Relaxed), 1);
+        assert_eq!(s.tenant(1).predicted.load(Ordering::Relaxed), 2);
+        assert_eq!(s.tenant(1).commands.load(Ordering::Relaxed), 2);
+        assert_eq!(s.fault_to_cmd_us.count(), 3);
+        assert_eq!(s.latency_summary().n, 3);
+    }
+
+    #[test]
+    fn default_is_single_tenant() {
+        let s = CoordinatorStats::default();
+        assert_eq!(s.n_tenants(), 1);
+        s.record_command(5, false, 1); // must not panic
+        assert_eq!(s.tenant(0).commands.load(Ordering::Relaxed), 1);
     }
 }

@@ -249,12 +249,9 @@ pub fn build_dl_prefetcher(
             Ok(DlPrefetcher::new(PredictorEngine::new(Box::new(backend), vocab), rcfg))
         }
         PredictorBackendKind::Stride => {
-            // Synthetic vocab covering small strides + common row
-            // strides; the stride backend only votes over observed ids.
-            let deltas: Vec<i64> =
-                (-8i64..=8).filter(|&d| d != 0).chain([16, 32, 64, 128, 256, 512, 1024]).collect();
-            let vocab = DeltaVocab::synthetic(deltas, rcfg.history_len);
-            let backend = StrideBackend::new(vocab.n_classes(), rcfg.history_len);
+            // The shared artifact-free vocab + vote backend (the
+            // stride backend only votes over observed ids).
+            let (vocab, backend) = StrideBackend::with_default_vocab(rcfg.history_len);
             Ok(DlPrefetcher::new(PredictorEngine::new(Box::new(backend), vocab), rcfg))
         }
         PredictorBackendKind::Constant(d) => {

@@ -1,0 +1,493 @@
+//! `repro serve` — the serving load generator: replay N interleaved
+//! per-benchmark fault streams (one tenant each) through the sharded
+//! coordinator ([`crate::coordinator`]) and report serving telemetry
+//! as `BENCH_serve.json` (schema `bench_serve/v1`).
+//!
+//! Each tenant's stream is harvested deterministically by running its
+//! benchmark once under demand paging with a trace writer, then
+//! replaying the trace as [`FaultEvent`]s from a dedicated producer
+//! thread — so `--streams 4` really is four concurrent clients
+//! hammering the same pipeline, the shape the ROADMAP's
+//! production-service north star cares about. Per-tenant command
+//! *content* is deterministic for a given seed and independent of
+//! `--shards` (the shard-determinism test in `rust/tests/serve.rs`
+//! pins this); throughput, batch sizes and latency percentiles are the
+//! run's measurement.
+
+use crate::config::{BypassMode, ExperimentConfig, RuntimeConfig};
+use crate::coordinator::{CoordinatorService, FaultEvent, PrefetchCommand, SpawnOptions};
+use crate::eval::runner::{workload_seed, RunOptions};
+use crate::predictor::{
+    ConstantBackend, DeltaVocab, NativeBackend, NativeConfig, PredictorBackend, StrideBackend,
+};
+use crate::prefetch::none::NonePrefetcher;
+use crate::runtime::{Manifest, ModelExecutable, PjrtBackend};
+use crate::sim::{Simulator, TraceWriter, TRACE_HEADER};
+use crate::types::{AccessOrigin, TenantId};
+use crate::util::{HistSummary, Json};
+use crate::workloads;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Knobs for one load-generator run.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Benchmarks to replay; tenant `i` replays `benchmarks[i % len]`.
+    pub benchmarks: Vec<String>,
+    /// Number of concurrent tenant streams (≥ 1).
+    pub streams: usize,
+    /// Number of router shards (≥ 1).
+    pub shards: usize,
+    /// Cap on replayed misses per stream (0 = no cap).
+    pub max_faults: usize,
+    /// Bypass policy for the serving pipeline. Defaults to `Never` so
+    /// the load generator actually measures the batched model path
+    /// (under `Auto`, regular streams converge and skip the model).
+    pub bypass: BypassMode,
+    /// Backend/artifacts/seed/scale axes (shared with the eval CLI).
+    pub run: RunOptions,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            benchmarks: vec!["addvectors".to_string()],
+            streams: 1,
+            shards: 1,
+            max_faults: 20_000,
+            bypass: BypassMode::Never,
+            run: RunOptions { scale: 0.1, ..Default::default() },
+        }
+    }
+}
+
+/// Per-tenant slice of the serving report.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub tenant: TenantId,
+    pub benchmark: String,
+    pub accesses: usize,
+    pub misses: usize,
+    pub commands: u64,
+    pub migrates: u64,
+    pub predicted: u64,
+    pub latency_us: HistSummary,
+}
+
+/// What one load-generator run measured (`BENCH_serve.json` body).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub backend: String,
+    pub streams: usize,
+    pub shards: usize,
+    pub benchmarks: Vec<String>,
+    pub accesses: usize,
+    pub misses: usize,
+    pub commands: usize,
+    pub dropped_commands: u64,
+    pub wall_ms: f64,
+    /// Replayed misses per wall millisecond — the headline throughput.
+    pub faults_per_ms: f64,
+    pub accesses_per_ms: f64,
+    pub batches: u64,
+    /// Mean inference batch size (windows per model call).
+    pub mean_batch: f64,
+    pub batch_sizes: HistSummary,
+    pub batch_latency_us: HistSummary,
+    /// Aggregate end-to-end fault→command latency.
+    pub latency_us: HistSummary,
+    pub tenants: Vec<TenantReport>,
+}
+
+/// Resolve the `--backend` axis to a servable (vocab, backend) pair.
+/// `benchmark` picks the model for artifact-backed kinds (the first
+/// replayed benchmark — multi-benchmark runs share one model, like the
+/// paper's pretrained "shared" deployment).
+pub fn build_serve_backend(
+    run: &RunOptions,
+    benchmark: &str,
+    rcfg: &RuntimeConfig,
+) -> Result<(DeltaVocab, Box<dyn PredictorBackend>, &'static str)> {
+    use crate::config::PredictorBackendKind as K;
+    Ok(match run.backend_kind()? {
+        K::Stride => {
+            let (vocab, backend) = StrideBackend::with_default_vocab(rcfg.history_len);
+            (vocab, Box::new(backend), "stride")
+        }
+        K::Native { artifacts, model } => {
+            let dir = Path::new(&artifacts);
+            let manifest = Manifest::load(dir).map_err(|e| {
+                anyhow!("serve --backend native: {e}; train a model first (`repro train`)")
+            })?;
+            let (key, entry) = manifest.resolve(&model, benchmark)?;
+            anyhow::ensure!(
+                entry.arch == "native",
+                "serve: model '{key}' (arch '{}') is not a native artifact",
+                entry.arch
+            );
+            let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
+            let backend = NativeBackend::load(&dir.join(&entry.params), &NativeConfig::default())?;
+            anyhow::ensure!(
+                backend.n_classes() == vocab.n_classes(),
+                "serve: model '{key}' params have {} classes but the vocab has {}",
+                backend.n_classes(),
+                vocab.n_classes()
+            );
+            eprintln!(
+                "serve: native model '{key}' ({} params, seq={}, classes={})",
+                backend.n_params(),
+                backend.seq_len(),
+                backend.n_classes()
+            );
+            (vocab, Box::new(backend), "native")
+        }
+        K::Pjrt { artifacts, model } => {
+            let dir = Path::new(&artifacts);
+            let manifest = Manifest::load(dir)?;
+            let (key, entry) = manifest.resolve(&model, benchmark)?;
+            anyhow::ensure!(
+                entry.arch != "native",
+                "serve: model '{key}' is a native artifact — run with --backend native"
+            );
+            let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
+            let exe = ModelExecutable::load(dir, entry)?;
+            (vocab, Box::new(PjrtBackend::new(exe, entry.arch.clone())), "pjrt")
+        }
+        K::Constant(d) => {
+            let vocab = DeltaVocab::synthetic(vec![d], rcfg.history_len);
+            (vocab, Box::new(ConstantBackend { class: 0, n_classes: 2 }), "constant")
+        }
+    })
+}
+
+/// Removes the file on drop — the trace temp file must not outlive the
+/// run even when reading or parsing fails mid-way.
+struct TempFile(PathBuf);
+
+impl Drop for TempFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+/// Parse one trace-CSV data row into a tenant-tagged [`FaultEvent`].
+/// Every column access is bounds-checked; errors name the column.
+fn parse_trace_line(line: &str, tenant: TenantId) -> Result<FaultEvent> {
+    let cols: Vec<&str> = line.split(',').collect();
+    if cols.len() < 10 {
+        bail!("expected 10 columns (\"{TRACE_HEADER}\"), got {}", cols.len());
+    }
+    let num = |i: usize, name: &str| -> Result<u64> {
+        cols[i]
+            .trim()
+            .parse::<u64>()
+            .map_err(|e| anyhow!("column {i} ({name}) '{}': {e}", cols[i]))
+    };
+    let miss = match cols[9].trim() {
+        "1" => true,
+        "0" => false,
+        other => bail!("column 9 (miss) must be 0 or 1, got '{other}'"),
+    };
+    Ok(FaultEvent {
+        at: num(0, "cycle")?,
+        pc: num(1, "pc")?,
+        page: num(2, "page")?,
+        origin: AccessOrigin {
+            sm: num(3, "sm")? as u16,
+            warp: num(4, "warp")? as u16,
+            cta: num(5, "cta")? as u32,
+            tpc: num(6, "tpc")? as u16,
+            kernel_id: num(7, "kernel_id")? as u16,
+        },
+        miss,
+        tenant,
+    })
+}
+
+/// Read a trace CSV back as a tenant's replayable event stream,
+/// stopping after `max_faults` misses (0 = unlimited). Parse errors
+/// carry the file path and 1-based line number.
+pub fn replay_trace_csv(
+    path: &Path,
+    tenant: TenantId,
+    max_faults: usize,
+) -> Result<(Vec<FaultEvent>, usize)> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let mut lines = text.lines().enumerate();
+    match lines.next() {
+        Some((_, header)) if header == TRACE_HEADER => {}
+        Some((_, header)) => bail!(
+            "{} line 1: expected trace header \"{TRACE_HEADER}\", got \"{header}\"",
+            path.display()
+        ),
+        None => bail!("{}: empty trace file", path.display()),
+    }
+    let mut events = Vec::new();
+    let mut misses = 0usize;
+    for (idx, line) in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let ev = parse_trace_line(line, tenant)
+            .map_err(|e| anyhow!("{} line {}: {e}", path.display(), idx + 1))?;
+        misses += ev.miss as usize;
+        events.push(ev);
+        if max_faults > 0 && misses >= max_faults {
+            break;
+        }
+    }
+    Ok((events, misses))
+}
+
+/// Harvest tenant `i`'s fault stream: run its benchmark once under
+/// demand paging with a trace writer, replay the CSV, and clean the
+/// temp file up whatever happens.
+fn tenant_stream(
+    opts: &ServeOptions,
+    tenant: usize,
+    benchmark: &str,
+) -> Result<(Vec<FaultEvent>, usize)> {
+    let exp = ExperimentConfig {
+        benchmark: benchmark.to_string(),
+        max_instructions: opts.run.max_instructions,
+        // Distinct tenants replaying the same benchmark draw
+        // independent workload instances (same-tenant reruns stay
+        // byte-identical).
+        seed: workload_seed(opts.run.seed.wrapping_add(tenant as u64), benchmark),
+        ..Default::default()
+    };
+    let wl = workloads::build(benchmark, &exp.sim, exp.seed, opts.run.scale)?;
+    // (pid, sequence, tenant) triple: concurrent `run()` calls in one
+    // process (parallel tests) must not collide on a temp path.
+    static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = TempFile(
+        std::env::temp_dir()
+            .join(format!("uvm-serve-{}-{seq}-{tenant}.csv", std::process::id())),
+    );
+    let limit = if opts.max_faults == 0 { 0 } else { opts.max_faults as u64 * 8 };
+    let writer = TraceWriter::create(&tmp.0, limit)?;
+    let _ = Simulator::new(&exp, wl, Box::new(NonePrefetcher), Some(writer)).run();
+    replay_trace_csv(&tmp.0, tenant as TenantId, opts.max_faults)
+        .with_context(|| format!("tenant {tenant} ({benchmark})"))
+}
+
+/// Run the load generator: harvest every tenant's stream, replay them
+/// concurrently through the sharded coordinator, and measure.
+pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
+    anyhow::ensure!(opts.streams >= 1, "serve: --streams must be ≥ 1");
+    anyhow::ensure!(opts.shards >= 1, "serve: --shards must be ≥ 1");
+    anyhow::ensure!(!opts.benchmarks.is_empty(), "serve: need at least one benchmark");
+    let rcfg = RuntimeConfig { bypass: opts.bypass, ..Default::default() };
+    let (vocab, backend, backend_name) =
+        build_serve_backend(&opts.run, &opts.benchmarks[0], &rcfg)?;
+
+    // Harvest each tenant's stream up front so the measured window
+    // contains only serving work.
+    let mut streams: Vec<(String, Vec<FaultEvent>, usize)> = Vec::with_capacity(opts.streams);
+    for tenant in 0..opts.streams {
+        let benchmark = &opts.benchmarks[tenant % opts.benchmarks.len()];
+        let (events, misses) = tenant_stream(opts, tenant, benchmark)?;
+        eprintln!(
+            "serve: tenant {tenant} ({benchmark}): {} accesses, {misses} misses",
+            events.len()
+        );
+        streams.push((benchmark.clone(), events, misses));
+    }
+    let per_tenant: Vec<(String, usize, usize)> =
+        streams.iter().map(|(b, e, m)| (b.clone(), e.len(), *m)).collect();
+    let accesses: usize = streams.iter().map(|(_, e, _)| e.len()).sum();
+    let misses: usize = streams.iter().map(|(_, _, m)| m).sum();
+
+    let sopts = SpawnOptions {
+        shards: opts.shards,
+        max_tenants: opts.streams,
+        ..Default::default()
+    };
+    let mut handle = CoordinatorService::spawn(vocab, backend, &rcfg, &sopts);
+
+    // Drain commands concurrently — a run can emit far more commands
+    // than the channel bound, and nothing else consumes them.
+    let (dummy_tx, dummy_rx) = std::sync::mpsc::sync_channel(1);
+    drop(dummy_tx);
+    let commands_rx = std::mem::replace(&mut handle.commands_rx, dummy_rx);
+    let drainer = std::thread::spawn(move || {
+        let mut cmds: Vec<PrefetchCommand> = Vec::new();
+        while let Ok(c) = commands_rx.recv() {
+            cmds.push(c);
+        }
+        cmds
+    });
+
+    // One producer thread per tenant, all replaying concurrently.
+    let t0 = std::time::Instant::now();
+    let mut producers = Vec::with_capacity(opts.streams);
+    for (_, events, _) in std::mem::take(&mut streams) {
+        let sender = handle.sender();
+        producers.push(std::thread::spawn(move || {
+            for ev in events {
+                if sender.send(ev).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+    for p in producers {
+        p.join().map_err(|_| anyhow!("serve: producer thread panicked"))?;
+    }
+    let shutdown = handle.shutdown();
+    let commands = drainer.join().map_err(|_| anyhow!("serve: drainer thread panicked"))?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let stats = &shutdown.stats;
+    let mut tenants = Vec::with_capacity(opts.streams);
+    for (t, (benchmark, t_accesses, t_misses)) in per_tenant.into_iter().enumerate() {
+        let ts = stats.tenant(t as TenantId);
+        tenants.push(TenantReport {
+            tenant: t as TenantId,
+            benchmark,
+            accesses: t_accesses,
+            misses: t_misses,
+            commands: ts.commands.load(Ordering::Relaxed),
+            migrates: ts.migrates.load(Ordering::Relaxed),
+            predicted: ts.predicted.load(Ordering::Relaxed),
+            latency_us: ts.latency_us.summary(),
+        });
+    }
+
+    Ok(ServeReport {
+        backend: backend_name.to_string(),
+        streams: opts.streams,
+        shards: opts.shards,
+        benchmarks: opts.benchmarks.clone(),
+        accesses,
+        misses,
+        commands: commands.len(),
+        dropped_commands: shutdown.dropped_commands,
+        wall_ms,
+        faults_per_ms: misses as f64 / wall_ms.max(1e-9),
+        accesses_per_ms: accesses as f64 / wall_ms.max(1e-9),
+        batches: stats.batches.load(Ordering::Relaxed),
+        mean_batch: stats.mean_batch(),
+        batch_sizes: stats.batch_sizes.summary(),
+        batch_latency_us: stats.batch_latency_us.summary(),
+        latency_us: stats.latency_summary(),
+        tenants,
+    })
+}
+
+/// `BENCH_serve.json` (schema `bench_serve/v1`).
+pub fn bench_serve_json(r: &ServeReport) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str("bench_serve/v1")),
+        ("backend", Json::str(&r.backend)),
+        ("streams", Json::Num(r.streams as f64)),
+        ("shards", Json::Num(r.shards as f64)),
+        ("benchmarks", Json::arr(r.benchmarks.iter().map(|b| Json::str(b)))),
+        ("accesses", Json::Num(r.accesses as f64)),
+        ("misses", Json::Num(r.misses as f64)),
+        ("commands", Json::Num(r.commands as f64)),
+        ("dropped_commands", Json::Num(r.dropped_commands as f64)),
+        ("wall_ms", Json::Num(r.wall_ms)),
+        ("faults_per_ms", Json::Num(r.faults_per_ms)),
+        ("accesses_per_ms", Json::Num(r.accesses_per_ms)),
+        ("batches", Json::Num(r.batches as f64)),
+        ("mean_batch", Json::Num(r.mean_batch)),
+        ("batch_sizes", r.batch_sizes.to_json()),
+        ("batch_latency_us", r.batch_latency_us.to_json()),
+        ("latency_us", r.latency_us.to_json()),
+        (
+            "tenants",
+            Json::arr(r.tenants.iter().map(|t| {
+                Json::obj(vec![
+                    ("tenant", Json::Num(t.tenant as f64)),
+                    ("benchmark", Json::str(&t.benchmark)),
+                    ("accesses", Json::Num(t.accesses as f64)),
+                    ("misses", Json::Num(t.misses as f64)),
+                    ("commands", Json::Num(t.commands as f64)),
+                    ("migrates", Json::Num(t.migrates as f64)),
+                    ("predicted", Json::Num(t.predicted as f64)),
+                    ("latency_us", t.latency_us.to_json()),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// Write `BENCH_serve.json` for a finished run.
+pub fn write_bench_serve(r: &ServeReport, path: &Path) -> Result<()> {
+    bench_serve_json(r).write_file(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TestDir;
+
+    #[test]
+    fn parse_trace_line_roundtrips_a_writer_row() {
+        let ev = parse_trace_line("12,32,7,1,2,3,0,0,1,1", 5).unwrap();
+        assert_eq!(ev.at, 12);
+        assert_eq!(ev.pc, 32);
+        assert_eq!(ev.page, 7);
+        assert_eq!(ev.origin.sm, 1);
+        assert_eq!(ev.origin.warp, 2);
+        assert!(ev.miss);
+        assert_eq!(ev.tenant, 5);
+    }
+
+    #[test]
+    fn short_line_errors_instead_of_panicking() {
+        let err = parse_trace_line("1,2,3", 0).unwrap_err().to_string();
+        assert!(err.contains("expected 10 columns"), "{err}");
+        let err = parse_trace_line("", 0).unwrap_err().to_string();
+        assert!(err.contains("got 1"), "{err}");
+    }
+
+    #[test]
+    fn bad_miss_flag_and_bad_numbers_name_the_column() {
+        let err = parse_trace_line("1,2,3,4,5,6,7,8,9,maybe", 0).unwrap_err().to_string();
+        assert!(err.contains("column 9 (miss)"), "{err}");
+        let err = parse_trace_line("x,2,3,4,5,6,7,8,9,1", 0).unwrap_err().to_string();
+        assert!(err.contains("column 0 (cycle)"), "{err}");
+    }
+
+    #[test]
+    fn replay_attaches_line_numbers_and_caps_misses() {
+        let dir = TestDir::new();
+        let p = dir.file("t.csv");
+        std::fs::write(
+            &p,
+            format!("{TRACE_HEADER}\n1,2,3,4,5,6,7,8,9,1\n2,2,4,4,5,6,7,8,9,0\ncorrupt\n"),
+        )
+        .unwrap();
+        let err = replay_trace_csv(&p, 0, 0).unwrap_err().to_string();
+        assert!(err.contains("line 4"), "{err}");
+
+        // A miss cap stops before the corrupt tail is ever read.
+        let (events, misses) = replay_trace_csv(&p, 3, 1).unwrap();
+        assert_eq!(misses, 1);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].tenant, 3);
+    }
+
+    #[test]
+    fn replay_rejects_missing_header_and_missing_file() {
+        let dir = TestDir::new();
+        let p = dir.file("bad.csv");
+        std::fs::write(&p, "1,2,3,4,5,6,7,8,9,1\n").unwrap();
+        let err = replay_trace_csv(&p, 0, 0).unwrap_err().to_string();
+        assert!(err.contains("expected trace header"), "{err}");
+        let err = replay_trace_csv(&dir.file("absent.csv"), 0, 0).unwrap_err().to_string();
+        assert!(err.contains("absent.csv"), "{err}");
+    }
+
+    #[test]
+    fn serve_options_validate() {
+        let bad = ServeOptions { streams: 0, ..Default::default() };
+        assert!(run(&bad).is_err());
+        let bad = ServeOptions { benchmarks: vec![], ..Default::default() };
+        assert!(run(&bad).is_err());
+    }
+}

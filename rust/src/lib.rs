@@ -10,8 +10,8 @@
 //!   UVMSmart baselines and the DL-driven prefetcher ([`prefetch`]),
 //!   the deployment path for the learned predictor — clustering,
 //!   history windows, dynamic batching, vocab mapping, online
-//!   fine-tuning ([`predictor`]) — and an async serving front
-//!   ([`coordinator`]).
+//!   fine-tuning ([`predictor`]) — and a sharded multi-tenant serving
+//!   front with cross-stream batched inference ([`coordinator`]).
 //! * **Layer 2 (python/compile/model.py)** — the JAX predictor zoo
 //!   (full Transformer, revised HLSH predictor, MLP/LSTM/CNN/FC
 //!   baselines), AOT-lowered to HLO text.

@@ -30,8 +30,14 @@
 //!                  ("all" covers the paper artifacts; oversub is its
 //!                  own axis and must be requested explicitly)
 //! repro golden     <check|update> [--path ci/golden_metrics.json]
-//! repro serve      [--artifacts DIR] [--benchmark B] [--model M]
-//!                  [--backend pjrt|native] [--max-faults N] [--scale F]
+//! repro serve      [--streams N] [--shards K] [--benchmark B]
+//!                  [--benchmarks a --benchmarks b] [--backend K]
+//!                  [--artifacts DIR] [--model M] [--max-faults N]
+//!                  [--scale F] [--bypass never|auto|always]
+//!                  [--seed S] [--out results]
+//!                    load generator: N tenant fault streams replayed
+//!                    concurrently through K router shards + one
+//!                    shared batcher; writes BENCH_serve.json.
 //! repro info       [--artifacts DIR] [--dump-config]
 //! ```
 //!
@@ -44,13 +50,11 @@
 use anyhow::Result;
 use std::path::{Path, PathBuf};
 use uvm_prefetch::config::ExperimentConfig;
-use uvm_prefetch::coordinator::{CoordinatorService, FaultEvent, Router};
 use uvm_prefetch::eval::report::Table;
 use uvm_prefetch::eval::{self, runner::RunOptions};
-use uvm_prefetch::predictor::{DeltaVocab, NativeBackend, NativeConfig, PredictorBackend};
-use uvm_prefetch::runtime::{Manifest, ModelExecutable, PjrtBackend};
+use uvm_prefetch::predictor::NativeConfig;
+use uvm_prefetch::runtime::Manifest;
 use uvm_prefetch::sim::TraceWriter;
-use uvm_prefetch::types::AccessOrigin;
 use uvm_prefetch::util::cli::Args;
 use uvm_prefetch::util::Json;
 use uvm_prefetch::workloads::{ALL_BENCHMARKS, MODEL_BENCHMARKS};
@@ -347,107 +351,91 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Replay a benchmark's far-fault stream through the threaded
-/// coordinator with the real PJRT backend — the serving deployment
-/// shape.
+/// `repro serve` — the serving load generator: replay N interleaved
+/// tenant fault streams through the sharded multi-tenant coordinator
+/// and record serving telemetry as `BENCH_serve.json` (see
+/// `eval/serve.rs`).
 fn serve(args: &Args) -> Result<()> {
-    use uvm_prefetch::config::RuntimeConfig;
-    use uvm_prefetch::prefetch::none::NonePrefetcher;
-    use uvm_prefetch::sim::Simulator;
+    use uvm_prefetch::config::BypassMode;
+    use uvm_prefetch::eval::serve as srv;
 
-    let artifacts = args.str("artifacts", "artifacts");
-    let benchmark = args.str("benchmark", "addvectors");
-    let model = args.str("model", "");
-    let max_faults = args.usize("max-faults", 20_000)?;
-    let scale = args.f64("scale", 0.1)?;
-
-    let dir = Path::new(&artifacts);
-    let manifest = Manifest::load(dir)?;
-    let (key, entry) = manifest.resolve(&model, &benchmark)?;
-    println!("serve: model '{key}' for benchmark '{benchmark}'");
-    let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
-    // Auto-select the execution path from the artifact kind; `--backend`
-    // overrides (native artifacts cannot run under PJRT and vice versa).
-    let default_backend = if entry.arch == "native" { "native" } else { "pjrt" };
-    let backend: Box<dyn PredictorBackend> = match args.str("backend", default_backend).as_str() {
-        "native" => {
-            anyhow::ensure!(
-                entry.arch == "native",
-                "serve: model '{key}' (arch '{}') is not a native artifact",
-                entry.arch
-            );
-            Box::new(NativeBackend::load(&dir.join(&entry.params), &NativeConfig::default())?)
+    let defaults = srv::ServeOptions::default();
+    let benchmarks: Vec<String> = {
+        let given = args.get_all("benchmarks");
+        if given.is_empty() {
+            vec![args.str("benchmark", "addvectors")]
+        } else {
+            given.into_iter().map(|s| s.to_string()).collect()
         }
-        "pjrt" => {
-            anyhow::ensure!(
-                entry.arch != "native",
-                "serve: model '{key}' is a native artifact — run with --backend native"
-            );
-            let exe = ModelExecutable::load(dir, entry)?;
-            Box::new(PjrtBackend::new(exe, entry.arch.clone()))
-        }
-        other => anyhow::bail!("serve: unknown --backend '{other}' (expected pjrt | native)"),
     };
-    let rcfg = RuntimeConfig::default();
-
-    // Produce a fault stream by running the workload once under
-    // demand paging with a trace.
-    let exp = ExperimentConfig {
-        benchmark: benchmark.clone(),
-        max_instructions: 2_000_000,
-        ..Default::default()
+    let bypass = {
+        let name = args.str("bypass", defaults.bypass.as_str());
+        BypassMode::parse(&name)
+            .ok_or_else(|| anyhow::anyhow!("--bypass '{name}' (expected never | auto | always)"))?
     };
-    let wl = uvm_prefetch::workloads::build(&benchmark, &exp.sim, exp.seed, scale)?;
-    let tmp = std::env::temp_dir().join(format!("uvm-serve-{}.csv", std::process::id()));
-    let writer = TraceWriter::create(&tmp, max_faults as u64 * 8)?;
-    let _ = Simulator::new(&exp, wl, Box::new(NonePrefetcher), Some(writer)).run();
+    let opts = srv::ServeOptions {
+        benchmarks,
+        streams: args.usize("streams", defaults.streams)?,
+        shards: args.usize("shards", defaults.shards)?,
+        max_faults: args.usize("max-faults", defaults.max_faults)?,
+        bypass,
+        run: RunOptions {
+            scale: args.f64("scale", 0.1)?,
+            artifacts: args.str("artifacts", ""),
+            model: args.str("model", ""),
+            seed: args.u64("seed", 0x5eed)?,
+            backend: args.str("backend", ""),
+            max_instructions: args.u64("max-instructions", 2_000_000)?,
+        },
+    };
+    opts.run.backend_kind()?; // reject unknown --backend before any work
 
-    // Replay every access record: hits extend the predictor history,
-    // misses trigger migration + prediction (capped at `max_faults`
-    // misses).
-    let text = std::fs::read_to_string(&tmp)?;
-    let _ = std::fs::remove_file(&tmp);
-    let mut events = Vec::new();
-    let mut misses = 0usize;
-    for line in text.lines().skip(1) {
-        let cols: Vec<&str> = line.split(',').collect();
-        let miss = cols[9] == "1";
-        events.push(FaultEvent {
-            at: cols[0].parse()?,
-            pc: cols[1].parse()?,
-            page: cols[2].parse()?,
-            origin: AccessOrigin {
-                sm: cols[3].parse()?,
-                warp: cols[4].parse()?,
-                cta: cols[5].parse()?,
-                tpc: cols[6].parse()?,
-                kernel_id: cols[7].parse()?,
-            },
-            miss,
-        });
-        misses += miss as usize;
-        if misses >= max_faults {
-            break;
-        }
+    let r = srv::run(&opts)?;
+    let out = PathBuf::from(args.str("out", "results"));
+    srv::write_bench_serve(&r, &out.join("BENCH_serve.json"))?;
+    // CWD copy, like BENCH_eval.json — the per-PR serving perf record.
+    if let Err(e) = srv::write_bench_serve(&r, Path::new("BENCH_serve.json")) {
+        eprintln!("serve: could not write ./BENCH_serve.json: {e}");
     }
-    println!("serve: replaying {} accesses ({} misses)", events.len(), misses);
 
-    let router = Router::new(vocab, &rcfg);
-    let handle = CoordinatorService::spawn(router, backend, &rcfg);
-    let t0 = std::time::Instant::now();
-    let stats = handle.stats.clone();
-    let n = events.len();
-    for ev in events {
-        handle.faults_tx.send(ev)?;
-    }
-    let cmds = handle.shutdown();
-    let dt = t0.elapsed();
     println!(
-        "serve: {} commands in {:.1} ms ({:.1} faults/ms)",
-        cmds.len(),
-        dt.as_secs_f64() * 1e3,
-        n as f64 / dt.as_secs_f64() / 1e3
+        "serve[{}]: {} streams × {} shard(s) — {} accesses ({} misses) → {} commands in \
+         {:.1} ms ({:.1} faults/ms, {:.1} accesses/ms)",
+        r.backend,
+        r.streams,
+        r.shards,
+        r.accesses,
+        r.misses,
+        r.commands,
+        r.wall_ms,
+        r.faults_per_ms,
+        r.accesses_per_ms,
     );
-    println!("serve: {}", stats.snapshot());
+    println!(
+        "serve: {} batches, mean batch {:.2}, batch p95 {} — e2e latency µs p50={} p95={} \
+         p99={} (n={}), dropped={}",
+        r.batches,
+        r.mean_batch,
+        r.batch_sizes.p95,
+        r.latency_us.p50,
+        r.latency_us.p95,
+        r.latency_us.p99,
+        r.latency_us.n,
+        r.dropped_commands,
+    );
+    for t in &r.tenants {
+        println!(
+            "serve:   tenant {} [{}]: {} accesses ({} misses) → {} commands ({} migrate, \
+             {} predicted), p99 {} µs",
+            t.tenant,
+            t.benchmark,
+            t.accesses,
+            t.misses,
+            t.commands,
+            t.migrates,
+            t.predicted,
+            t.latency_us.p99,
+        );
+    }
     Ok(())
 }

@@ -73,6 +73,19 @@ impl StrideBackend {
         assert!(lookback > 0);
         Self { n_classes, lookback }
     }
+
+    /// The default artifact-free serving pair: a synthetic vocabulary
+    /// covering small strides (±1..±8) plus common row strides, and a
+    /// stride backend voting over it. The single source of truth for
+    /// `--backend stride` — the eval runner and `repro serve` must
+    /// measure the same vocabulary.
+    pub fn with_default_vocab(history_len: usize) -> (DeltaVocab, StrideBackend) {
+        let deltas: Vec<i64> =
+            (-8i64..=8).filter(|&d| d != 0).chain([16, 32, 64, 128, 256, 512, 1024]).collect();
+        let vocab = DeltaVocab::synthetic(deltas, history_len);
+        let backend = StrideBackend::new(vocab.n_classes(), history_len);
+        (vocab, backend)
+    }
 }
 
 impl PredictorBackend for StrideBackend {

@@ -250,6 +250,12 @@ impl NativeBackend {
         let mut h = vec![0.0; self.hidden];
         let mut z = vec![0.0; self.n_classes];
         self.forward(window, &mut x, &mut h, &mut z);
+        Self::argmax(&z)
+    }
+
+    /// First maximum wins — the tie-break both the sequential and the
+    /// batched paths share.
+    fn argmax(z: &[f32]) -> ClassId {
         let mut best = 0usize;
         for (i, &v) in z.iter().enumerate() {
             if v > z[best] {
@@ -257,6 +263,58 @@ impl NativeBackend {
             }
         }
         best as ClassId
+    }
+
+    /// Logits for one window (sequential reference path; the batched
+    /// path is pinned against this bit-for-bit).
+    pub fn logits_one(&self, window: &Window) -> Vec<f32> {
+        let mut x = vec![0.0; self.in_dim];
+        let mut h = vec![0.0; self.hidden];
+        let mut z = vec![0.0; self.n_classes];
+        self.forward(window, &mut x, &mut h, &mut z);
+        z
+    }
+
+    /// Batched forward: gathers every window into one `[n × in_dim]`
+    /// input matrix and runs each FC layer as a single batched GEMM
+    /// ([`nn::linear_forward_batch`]) — no per-window scratch
+    /// allocations, no per-window dispatch. Returns the flat
+    /// `[n × n_classes]` logits, **bit-identical** to concatenating
+    /// [`NativeBackend::logits_one`] over the batch (pinned by
+    /// `batched_forward_bit_identical_to_sequential`).
+    pub fn logits_batch(&self, windows: &[Window]) -> Vec<f32> {
+        let n = windows.len();
+        let [_, _, _, (o_w1, ..), (o_b1, ..), (o_w2, ..), (o_b2, ..)] = self.layout();
+        let mut xs = vec![0.0f32; n * self.in_dim];
+        for (w, x) in windows.iter().zip(xs.chunks_exact_mut(self.in_dim)) {
+            self.gather(w, x);
+        }
+        let mut hs = vec![0.0f32; n * self.hidden];
+        nn::linear_forward_batch(
+            &self.params[o_w1..o_w1 + self.hidden * self.in_dim],
+            &self.params[o_b1..o_b1 + self.hidden],
+            &xs,
+            &mut hs,
+            self.in_dim,
+            self.hidden,
+        );
+        nn::relu(&mut hs);
+        let mut zs = vec![0.0f32; n * self.n_classes];
+        nn::linear_forward_batch(
+            &self.params[o_w2..o_w2 + self.n_classes * self.hidden],
+            &self.params[o_b2..o_b2 + self.n_classes],
+            &hs,
+            &mut zs,
+            self.hidden,
+            self.n_classes,
+        );
+        zs
+    }
+
+    /// Top-1 class per window through the batched forward.
+    pub fn predict_batch(&self, windows: &[Window]) -> Vec<ClassId> {
+        let zs = self.logits_batch(windows);
+        zs.chunks_exact(self.n_classes).map(Self::argmax).collect()
     }
 
     /// One optimizer step over `batch`; returns the mean cross-entropy
@@ -444,7 +502,7 @@ impl PredictorBackend for NativeBackend {
     }
 
     fn predict(&mut self, windows: &[Window]) -> Vec<ClassId> {
-        windows.iter().map(|w| self.predict_one(w)).collect()
+        self.predict_batch(windows)
     }
 
     fn finetune(&mut self, batch: &[LabelledWindow]) -> Option<f64> {
@@ -545,6 +603,35 @@ mod tests {
         write_store(&p, &[("emb_pc".into(), vec![2, 2], vec![0.0; 4], 0)]).unwrap();
         let err = NativeBackend::load(&p, &tiny_cfg()).unwrap_err().to_string();
         assert!(err.contains("emb_page"), "{err}");
+    }
+
+    #[test]
+    fn batched_forward_bit_identical_to_sequential() {
+        // Trained (non-symmetric) weights + a batch mixing full,
+        // short (padded) and out-of-range windows: the batched GEMM
+        // must reproduce the sequential logits exactly, bit for bit.
+        let mut m = NativeBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        let batch: Vec<LabelledWindow> = (0..6)
+            .map(|i| LabelledWindow { window: window(&[i % 3, 1, 2, 0]), label: i % 3 })
+            .collect();
+        for _ in 0..10 {
+            m.train_batch(&batch);
+        }
+        let windows = vec![
+            window(&[1, 1, 1, 1]),
+            window(&[2]),
+            window(&[0, 1, 2, 0, 1, 2]),
+            Window { tokens: vec![FeatTok { pc_id: -3, page_id: 999, delta_id: 999 }; 4] },
+        ];
+        let batched = m.logits_batch(&windows);
+        assert_eq!(batched.len(), windows.len() * 3);
+        let sequential: Vec<f32> =
+            windows.iter().flat_map(|w| m.logits_one(w)).collect();
+        assert_eq!(batched, sequential, "batched forward diverged from sequential");
+        let classes = m.predict_batch(&windows);
+        let one_by_one: Vec<ClassId> = windows.iter().map(|w| m.predict_one(w)).collect();
+        assert_eq!(classes, one_by_one);
+        assert!(m.logits_batch(&[]).is_empty());
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! Dense neural-net primitives for the native (pure-Rust) predictor
 //! backend: deterministic weight init, linear/ReLU/softmax forward
-//! ops, their backward passes, and SGD / Adam parameter updates.
+//! ops (per-sample and batched — [`linear_forward_batch`] answers a
+//! whole serving batch in one GEMM-shaped pass, bit-identical to the
+//! per-row path), their backward passes, and SGD / Adam parameter
+//! updates.
 //!
 //! Everything operates on flat `f32` slices (row-major matrices) so a
 //! whole model lives in one parameter vector — one optimizer state,
@@ -31,6 +34,39 @@ pub fn linear_forward(w: &[f32], b: &[f32], x: &[f32], out: &mut [f32]) {
             acc += wi * xi;
         }
         *o = acc;
+    }
+}
+
+/// Batched `Out = X·Wᵀ + b`: `xs` is a row-major `[n × in_dim]` input
+/// matrix, `out` a row-major `[n × out_dim]` output — one GEMM-shaped
+/// pass over the whole batch instead of `n` separate
+/// [`linear_forward`] calls. Each output element accumulates its dot
+/// product in the same order as [`linear_forward`], so the batched
+/// path is **bit-identical** to the per-row path (the serving
+/// coordinator relies on this: batching must never change a
+/// prediction).
+pub fn linear_forward_batch(
+    w: &[f32],
+    b: &[f32],
+    xs: &[f32],
+    out: &mut [f32],
+    in_dim: usize,
+    out_dim: usize,
+) {
+    debug_assert!(in_dim > 0 && out_dim > 0);
+    debug_assert_eq!(w.len(), out_dim * in_dim);
+    debug_assert_eq!(b.len(), out_dim);
+    debug_assert_eq!(xs.len() % in_dim, 0);
+    debug_assert_eq!(out.len(), (xs.len() / in_dim) * out_dim);
+    for (x, o) in xs.chunks_exact(in_dim).zip(out.chunks_exact_mut(out_dim)) {
+        for (r, or) in o.iter_mut().enumerate() {
+            let row = &w[r * in_dim..(r + 1) * in_dim];
+            let mut acc = b[r];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            *or = acc;
+        }
     }
 }
 
@@ -204,6 +240,30 @@ mod tests {
         let mut out = [0.0; 2];
         linear_forward(&w, &b, &[1.0, -1.0], &mut out);
         assert_eq!(out, [9.0, 19.0]);
+    }
+
+    #[test]
+    fn batched_linear_bit_identical_to_per_row() {
+        // Awkward values (no nice binary representations) so any
+        // accumulation-order change would show up in the bits.
+        let w: Vec<f32> = (0..6).map(|i| (i as f32 * 0.37 - 1.1) / 3.0).collect();
+        let b = [0.123f32, -4.56];
+        let xs: Vec<f32> = (0..9).map(|i| (i as f32 * 1.7 - 3.3) / 7.0).collect();
+        let mut batched = [0.0f32; 6];
+        linear_forward_batch(&w, &b, &xs, &mut batched, 3, 2);
+        for i in 0..3 {
+            let mut one = [0.0f32; 2];
+            linear_forward(&w, &b, &xs[i * 3..(i + 1) * 3], &mut one);
+            assert_eq!(one[..], batched[i * 2..(i + 1) * 2], "row {i}");
+        }
+    }
+
+    #[test]
+    fn batched_linear_empty_batch_is_noop() {
+        let w = [1.0f32; 4];
+        let b = [0.0f32; 2];
+        let mut out: [f32; 0] = [];
+        linear_forward_batch(&w, &b, &[], &mut out, 2, 2);
     }
 
     #[test]

@@ -8,6 +8,12 @@
 
 /// Simulated GPU core cycles.
 pub type Cycle = u64;
+/// Logical client of the serving coordinator: one per replayed fault
+/// stream (`repro serve --streams N`). The simulator side is
+/// single-tenant (tenant 0); the coordinator threads the id through
+/// every `FaultEvent`/`PrefetchCommand` so per-tenant state and
+/// telemetry never mix.
+pub type TenantId = u32;
 /// Virtual byte address.
 pub type VAddr = u64;
 /// 4 KB virtual page number (`vaddr >> 12`).

@@ -1,0 +1,241 @@
+//! Lock-free bucketed latency histogram.
+//!
+//! The coordinator's hot paths (router shards, the batch/infer thread)
+//! record one latency sample per command; a `Mutex<OnlineStats>` there
+//! serializes every shard on one lock. This histogram is a fixed array
+//! of `AtomicU64` power-of-two buckets — `record` is two relaxed
+//! fetch-adds plus a fetch-max, writers never wait, and readers compute
+//! approximate percentiles (p50/p95/p99) from the cumulative bucket
+//! counts. A percentile answer is the *upper bound* of the bucket the
+//! rank falls in, so it over-reports by at most 2× — fine for
+//! microsecond-scale serving telemetry where the magnitude matters,
+//! not the third digit.
+//!
+//! Reads concurrent with writes are racy-but-safe: each counter is
+//! individually atomic, so a snapshot may miss in-flight samples but
+//! never tears.
+
+use crate::util::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One bucket per power of two: bucket 0 holds the value 0, bucket
+/// `i ≥ 1` holds values in `[2^(i-1), 2^i - 1]`; bucket 64 tops out at
+/// `u64::MAX`.
+const N_BUCKETS: usize = 65;
+
+/// Lock-free histogram over `u64` samples (microseconds, batch sizes —
+/// any non-negative magnitude).
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+/// One read-side snapshot of an [`AtomicHistogram`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistSummary {
+    pub n: u64,
+    pub mean: f64,
+    pub max: u64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+}
+
+impl HistSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("mean", Json::Num(self.mean)),
+            ("max", Json::Num(self.max as f64)),
+            ("p50", Json::Num(self.p50 as f64)),
+            ("p95", Json::Num(self.p95 as f64)),
+            ("p99", Json::Num(self.p99 as f64)),
+        ])
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    /// Largest value bucket `i` can hold.
+    #[inline]
+    fn bucket_hi(i: usize) -> u64 {
+        if i >= 64 {
+            u64::MAX
+        } else if i == 0 {
+            0
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Record one sample. Wait-free: relaxed atomics only.
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile (`p` in `[0, 1]`): the upper bound of the
+    /// first bucket whose cumulative count reaches `ceil(p · n)`.
+    /// Returns 0 for an empty histogram.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                // Never report past the observed max (the top occupied
+                // bucket's upper bound can exceed it).
+                return Self::bucket_hi(i).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            n: self.count(),
+            mean: self.mean(),
+            max: self.max(),
+            p50: self.percentile(0.50),
+            p95: self.percentile(0.95),
+            p99: self.percentile(0.99),
+        }
+    }
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = AtomicHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+        let s = h.summary();
+        assert_eq!((s.n, s.max, s.p50), (0, 0, 0));
+    }
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(AtomicHistogram::bucket(0), 0);
+        assert_eq!(AtomicHistogram::bucket(1), 1);
+        assert_eq!(AtomicHistogram::bucket(2), 2);
+        assert_eq!(AtomicHistogram::bucket(3), 2);
+        assert_eq!(AtomicHistogram::bucket(4), 3);
+        assert_eq!(AtomicHistogram::bucket(u64::MAX), 64);
+        assert_eq!(AtomicHistogram::bucket_hi(0), 0);
+        assert_eq!(AtomicHistogram::bucket_hi(2), 3);
+        assert_eq!(AtomicHistogram::bucket_hi(64), u64::MAX);
+    }
+
+    #[test]
+    fn percentiles_are_ordered_and_bounded() {
+        let h = AtomicHistogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.max(), 1000);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+        let (p50, p95, p99) = (h.percentile(0.5), h.percentile(0.95), h.percentile(0.99));
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= h.max());
+        // p50 of 1..=1000 lands in the [512, 1023] bucket, clamped to max.
+        assert!(p50 >= 500, "p50 {p50}");
+    }
+
+    #[test]
+    fn single_value_percentiles_are_exactish() {
+        let h = AtomicHistogram::new();
+        for _ in 0..100 {
+            h.record(64);
+        }
+        // 64 lives in bucket [64, 127]; clamped to the observed max.
+        assert_eq!(h.percentile(0.5), 64);
+        assert_eq!(h.percentile(0.99), 64);
+        assert_eq!(h.max(), 64);
+    }
+
+    #[test]
+    fn concurrent_writers_lose_nothing() {
+        use std::sync::Arc;
+        let h = Arc::new(AtomicHistogram::new());
+        let mut tasks = Vec::new();
+        for t in 0..4u64 {
+            let h = h.clone();
+            tasks.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    h.record(t * 1000 + (i % 17));
+                }
+            }));
+        }
+        for t in tasks {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn summary_json_has_all_fields() {
+        let h = AtomicHistogram::new();
+        h.record(10);
+        let j = h.summary().to_json();
+        for k in ["n", "mean", "max", "p50", "p95", "p99"] {
+            assert!(j.get(k).is_some(), "{k}");
+        }
+    }
+}

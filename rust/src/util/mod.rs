@@ -1,15 +1,18 @@
 //! Small shared utilities, all implemented in-tree for the offline
-//! build: deterministic RNG, aggregate statistics, a JSON
-//! parser/serializer, a CLI argument parser, a micro-benchmark
-//! harness, and an RAII temp dir for tests.
+//! build: deterministic RNG, aggregate statistics, a lock-free
+//! bucketed latency histogram, a JSON parser/serializer, a CLI
+//! argument parser, a micro-benchmark harness, and an RAII temp dir
+//! for tests.
 
 pub mod bench;
 pub mod cli;
+pub mod hist;
 pub mod json;
 mod rng;
 mod stats;
 pub mod testdir;
 
+pub use hist::{AtomicHistogram, HistSummary};
 pub use json::Json;
 pub use rng::XorShift64;
 pub use stats::{geomean, mean, OnlineStats};

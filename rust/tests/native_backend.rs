@@ -88,6 +88,22 @@ fn native_learns_periodic_stride_past_the_frequency_vote() {
     assert!(native > stride, "native {native} must beat stride {stride}");
 }
 
+/// Acceptance (ISSUE 4): the batched forward used by the serving
+/// coordinator is bit-identical to the sequential path on a *trained*
+/// model over a real corpus — batching must never change an answer.
+#[test]
+fn batched_predict_matches_sequential_on_trained_model() {
+    let (vocab, windows) = periodic_stride_corpus(300);
+    let model = trained_model(&windows, &vocab);
+    let ws: Vec<Window> = windows.iter().map(|lw| lw.window.clone()).collect();
+    let batched = model.logits_batch(&ws);
+    let sequential: Vec<f32> = ws.iter().flat_map(|w| model.logits_one(w)).collect();
+    assert_eq!(batched, sequential, "batched logits diverged from sequential");
+    let classes = model.predict_batch(&ws);
+    let one_by_one: Vec<u32> = ws.iter().map(|w| model.predict_one(w)).collect();
+    assert_eq!(classes, one_by_one);
+}
+
 #[test]
 fn same_seed_training_is_byte_deterministic() {
     let (vocab, windows) = periodic_stride_corpus(120);

@@ -24,6 +24,7 @@ fn random_event(rng: &mut XorShift64, at: u64) -> FaultEvent {
             kernel_id: rng.below(2) as u16,
         },
         miss: rng.unit() < 0.3,
+        tenant: rng.below(3) as u32,
     }
 }
 
@@ -127,35 +128,41 @@ fn prop_history_bounds() {
     }
 }
 
-/// End-to-end service conservation: one Migrate command per miss, and
-/// predicted pages only after windows fill; nothing is emitted for
-/// hit-only streams.
+/// End-to-end service conservation: one Migrate command per miss
+/// (whatever the shard count), and predicted pages only after windows
+/// fill; nothing is emitted for hit-only streams.
 #[test]
 fn prop_service_migrates_once_per_miss() {
-    use uvm_prefetch::coordinator::CoordinatorService;
+    use uvm_prefetch::coordinator::{CoordinatorService, SpawnOptions};
     use uvm_prefetch::predictor::ConstantBackend;
 
     for seed in 0..5u64 {
-        let mut rng = XorShift64::new(seed ^ 0x5e2);
-        let vocab = DeltaVocab::synthetic(vec![1, 2], 5);
-        let rcfg = RuntimeConfig {
-            history_len: 5,
-            batch_size: 4,
-            bypass: BypassMode::Never,
-            ..Default::default()
-        };
-        let router = Router::new(vocab.clone(), &rcfg);
-        let backend = Box::new(ConstantBackend { class: 0, n_classes: vocab.n_classes() });
-        let handle = CoordinatorService::spawn(router, backend, &rcfg);
-        let mut misses = 0u64;
-        for i in 0..500u64 {
-            let ev = random_event(&mut rng, i);
-            misses += ev.miss as u64;
-            handle.faults_tx.send(ev).unwrap();
+        for shards in [1usize, 3] {
+            let mut rng = XorShift64::new(seed ^ 0x5e2);
+            let vocab = DeltaVocab::synthetic(vec![1, 2], 5);
+            let rcfg = RuntimeConfig {
+                history_len: 5,
+                batch_size: 4,
+                bypass: BypassMode::Never,
+                ..Default::default()
+            };
+            let backend = Box::new(ConstantBackend { class: 0, n_classes: vocab.n_classes() });
+            let sopts = SpawnOptions { shards, max_tenants: 3, ..Default::default() };
+            let handle = CoordinatorService::spawn(vocab, backend, &rcfg, &sopts);
+            let mut misses = 0u64;
+            for i in 0..500u64 {
+                let ev = random_event(&mut rng, i);
+                misses += ev.miss as u64;
+                handle.send(ev).unwrap();
+            }
+            let report = handle.shutdown();
+            let migrates = report
+                .commands
+                .iter()
+                .filter(|c| matches!(c, PrefetchCommand::Migrate { .. }))
+                .count() as u64;
+            assert_eq!(migrates, misses, "seed {seed} shards {shards}");
+            assert_eq!(report.dropped_commands, 0, "seed {seed} shards {shards}");
         }
-        let cmds = handle.shutdown();
-        let migrates =
-            cmds.iter().filter(|c| matches!(c, PrefetchCommand::Migrate(_))).count() as u64;
-        assert_eq!(migrates, misses, "seed {seed}");
     }
 }
