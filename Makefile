@@ -8,6 +8,9 @@
 #   make oversub-smoke small oversubscription sweep → BENCH_oversub.json
 #   make serve-smoke   tiny multi-tenant serving run → BENCH_serve.json
 #   make train         train the native backend (streamtriad → artifacts/)
+#   make train-transformer  train the Transformer reference backend
+#   make analyze       transformer-vs-native attention analysis → BENCH_compare.json
+#   make analyze-smoke tiny analyze run (CI) → BENCH_compare.json
 #   make model-smoke   tiny train + native-backend eval pairs (CI)
 #   make doc           cargo doc --no-deps with rustdoc warnings denied
 #   make golden-check  CI metrics-regression gate vs ci/golden_metrics.json
@@ -19,7 +22,7 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test lint fmt clippy check doc eval-smoke oversub-smoke serve-smoke train model-smoke golden-check golden-update eval oversub artifacts clean
+.PHONY: build test lint fmt clippy check doc eval-smoke oversub-smoke serve-smoke train train-transformer analyze analyze-smoke model-smoke golden-check golden-update eval oversub artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -76,6 +79,29 @@ serve-smoke:
 train:
 	$(CARGO) run --release --bin repro -- train --workload streamtriad --out artifacts
 
+# Train the Transformer reference backend (the paper's unconstrained
+# model — the accuracy ceiling) into the same artifacts manifest
+# (arch=transformer); serve it with `--backend transformer`.
+train-transformer:
+	$(CARGO) run --release --bin repro -- train --arch transformer \
+		--workload streamtriad --out artifacts
+
+# Attention-interpretability analysis: train BOTH archs on the same
+# corpus/seed, profile per-head attention entropy + slot locality over
+# held-out windows, and write the transformer-vs-native cost table
+# (top-1, params, FLOPs/inference, wall times, int4 quant error) as
+# BENCH_compare.json (schema bench_compare/v1).
+analyze:
+	$(CARGO) run --release --bin repro -- analyze --workload streamtriad \
+		--out results
+
+# CI-sized analyze: tiny transformer, one workload, few steps.
+analyze-smoke:
+	$(CARGO) run --release --bin repro -- analyze --workload streamtriad \
+		--out results-smoke --history-len 8 --epochs 2 --limit 20000 \
+		--hidden 32 --d-model 16 --heads 2 --layers 1 --d-ff 32 \
+		--max-maps 128 --scale 0.25 --max-instructions 200000
+
 # CI model smoke: tiny offline train, then the U-vs-R pairs table served
 # by the freshly trained native backend (offline-clean, no pjrt feature).
 model-smoke:
@@ -112,4 +138,5 @@ artifacts:
 clean:
 	$(CARGO) clean
 	rm -rf results results-smoke results-nightly traces \
-		BENCH_eval.json BENCH_oversub.json BENCH_serve.json
+		BENCH_eval.json BENCH_oversub.json BENCH_serve.json \
+		BENCH_compare.json

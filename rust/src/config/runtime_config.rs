@@ -30,6 +30,20 @@ pub enum PredictorBackendKind {
         /// "shared".
         model: String,
     },
+    /// Pure-Rust Transformer reference model (the paper's §5
+    /// unconstrained predictor, trained offline by
+    /// `repro train --arch transformer`): embedding + positional
+    /// tables and encoder blocks loaded from a
+    /// `*.transformer.params.bin` tensor store referenced by the
+    /// artifacts manifest (`arch = "transformer"`).
+    Transformer {
+        /// Directory holding `manifest.json`,
+        /// `*.transformer.params.bin`, `*.vocab.json`.
+        artifacts: String,
+        /// Model key in the manifest; empty ⇒ per-benchmark, then
+        /// "shared".
+        model: String,
+    },
     /// Pure-Rust majority/stride fallback (no artifacts needed). Used
     /// by tests and as a degraded mode when artifacts are missing.
     Stride,
@@ -50,6 +64,11 @@ impl PredictorBackendKind {
                 ("artifacts", Json::str(artifacts)),
                 ("model", Json::str(model)),
             ]),
+            Self::Transformer { artifacts, model } => Json::obj(vec![
+                ("kind", Json::str("transformer")),
+                ("artifacts", Json::str(artifacts)),
+                ("model", Json::str(model)),
+            ]),
             Self::Stride => Json::obj(vec![("kind", Json::str("stride"))]),
             Self::Constant(d) => Json::obj(vec![
                 ("kind", Json::str("constant")),
@@ -65,6 +84,10 @@ impl PredictorBackendKind {
                 model: j.get("model").and_then(Json::as_str).unwrap_or("").into(),
             }),
             Some("native") => Ok(Self::Native {
+                artifacts: j.get("artifacts").and_then(Json::as_str).unwrap_or("artifacts").into(),
+                model: j.get("model").and_then(Json::as_str).unwrap_or("").into(),
+            }),
+            Some("transformer") => Ok(Self::Transformer {
                 artifacts: j.get("artifacts").and_then(Json::as_str).unwrap_or("artifacts").into(),
                 model: j.get("model").and_then(Json::as_str).unwrap_or("").into(),
             }),
@@ -252,6 +275,20 @@ mod tests {
     fn native_backend_kind_json_roundtrip() {
         let cfg = RuntimeConfig {
             backend: PredictorBackendKind::Native {
+                artifacts: "models".into(),
+                model: "streamtriad".into(),
+            },
+            ..Default::default()
+        };
+        let back =
+            RuntimeConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.backend, cfg.backend);
+    }
+
+    #[test]
+    fn transformer_backend_kind_json_roundtrip() {
+        let cfg = RuntimeConfig {
+            backend: PredictorBackendKind::Transformer {
                 artifacts: "models".into(),
                 model: "streamtriad".into(),
             },

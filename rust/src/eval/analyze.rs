@@ -1,0 +1,495 @@
+//! `repro analyze` — the model-introspection subsystem: reproduce the
+//! paper's act-two argument *as a measurement*.
+//!
+//! The paper first shows an unconstrained Transformer reaches high
+//! prefetch accuracy, then inspects its attention to learn that each
+//! head concentrates on a few fixed history slots — the insight that
+//! justifies replacing attention with the far cheaper revised model.
+//! This module executes that comparison end to end on one benchmark's
+//! harvested corpus: train **both** archs on the *same*
+//! deterministically-split corpus and seed, extract per-head attention
+//! maps over held-out windows, reduce them to per-head **entropy** and
+//! **positional-locality profiles** (mean attention mass per history
+//! slot from the prediction-feeding query), and emit a
+//! transformer-vs-native comparison table — held-out top-1, parameter
+//! count, analytic FLOPs per inference, train/infer wall time, and the
+//! per-tensor int4 quantization error (the Table 7 storage story) — as
+//! `BENCH_compare.json` (schema `bench_compare/v1`).
+//!
+//! For a fixed seed the accuracy numbers, FLOPs/params ratios and
+//! head profiles are deterministic; only the wall-clock fields vary
+//! run to run (`rust/tests/transformer_backend.rs` pins this).
+
+use crate::eval::report::Table;
+use crate::eval::train::{self, ModelArch, TrainOptions, TrainedModel};
+use crate::predictor::{DeltaVocab, LabelledWindow, TransformerBackend, Window};
+use crate::runtime::params::TensorStore;
+use crate::util::Json;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Everything `repro analyze` can tune.
+#[derive(Debug, Clone)]
+pub struct AnalyzeOptions {
+    /// Corpus + training regime shared by both arms (`arch` inside is
+    /// overridden per arm — both get trained).
+    pub train: TrainOptions,
+    /// Output directory: `BENCH_compare.json` plus both arms' f32 and
+    /// int4 checkpoints (`<bench>.analyze.<arch>[.int4].params.bin`).
+    pub out: PathBuf,
+    /// Cap on held-out windows sampled for the attention statistics
+    /// (the first N of the deterministic split — no RNG involved).
+    pub max_maps: usize,
+}
+
+impl Default for AnalyzeOptions {
+    fn default() -> Self {
+        Self { train: TrainOptions::default(), out: PathBuf::from("results"), max_maps: 256 }
+    }
+}
+
+/// Per-tensor int4 reconstruction error, measured through the real
+/// tensor-store round trip (write f32 + write int4 → load both →
+/// diff), not a formula.
+#[derive(Debug, Clone)]
+pub struct QuantError {
+    pub tensor: String,
+    pub max_err: f64,
+    pub mean_err: f64,
+}
+
+/// One arm (arch) of the comparison.
+#[derive(Debug, Clone)]
+pub struct ModelArm {
+    pub arch: String,
+    /// Held-out top-1 accuracy.
+    pub top1: f64,
+    pub n_params: usize,
+    pub flops_per_inference: u64,
+    pub first_epoch_loss: f64,
+    pub last_epoch_loss: f64,
+    /// Offline training wall time (non-deterministic run to run).
+    pub train_ms: f64,
+    /// Batched inference wall per held-out window (non-deterministic).
+    pub infer_us_per_window: f64,
+    pub quant: Vec<QuantError>,
+}
+
+/// One attention head's profile over the held-out sample: how spread
+/// its attention is (entropy, in nats — `ln(seq_len)` = uniform) and
+/// where it looks (mean attention mass per history slot from the
+/// newest-slot query; slot `seq_len − 1` is the most recent token).
+#[derive(Debug, Clone)]
+pub struct HeadProfile {
+    pub layer: usize,
+    pub head: usize,
+    pub entropy: f64,
+    /// Slot receiving the largest mean attention mass.
+    pub top_slot: usize,
+    pub locality: Vec<f64>,
+}
+
+/// What one `repro analyze` run measured.
+#[derive(Debug, Clone)]
+pub struct AnalyzeReport {
+    pub benchmark: String,
+    pub seed: u64,
+    pub history_len: usize,
+    pub n_train: usize,
+    pub n_eval: usize,
+    pub n_classes: usize,
+    /// Frequency-vote floor on the same held-out split.
+    pub stride_top1: f64,
+    pub native: ModelArm,
+    pub transformer: ModelArm,
+    /// transformer ÷ native — the paper's cost-gap headline numbers.
+    pub params_ratio: f64,
+    pub flops_ratio: f64,
+    pub heads: Vec<HeadProfile>,
+    /// Held-out windows the attention statistics averaged over.
+    pub maps_windows: usize,
+}
+
+/// Train both archs on one benchmark's corpus and compare them; write
+/// checkpoints + `BENCH_compare.json` under `opts.out` (and a CWD
+/// copy, like the other `BENCH_*.json` telemetry files).
+pub fn analyze(opts: &AnalyzeOptions) -> Result<AnalyzeReport> {
+    let t = &opts.train;
+    let (_file, vocab, all) = train::prepare_corpus(t)?;
+    let (train_set, eval_set) = train::split_windows(all);
+    let stride_top1 = train::stride_top1(&vocab, t.history_len, &eval_set);
+    std::fs::create_dir_all(&opts.out)?;
+
+    let (native_model, native) = fit_arm(opts, &vocab, &train_set, &eval_set, ModelArch::Native)?;
+    drop(native_model);
+    let (trans_model, transformer) =
+        fit_arm(opts, &vocab, &train_set, &eval_set, ModelArch::Transformer)?;
+    let tm = trans_model.as_transformer().expect("transformer arm yields a transformer");
+    let (heads, maps_windows) = attention_profiles(tm, &eval_set, opts.max_maps);
+
+    let report = AnalyzeReport {
+        benchmark: t.benchmark.clone(),
+        seed: t.run.seed,
+        history_len: t.history_len,
+        n_train: train_set.len(),
+        n_eval: eval_set.len(),
+        n_classes: vocab.n_classes(),
+        stride_top1,
+        params_ratio: transformer.n_params as f64 / native.n_params.max(1) as f64,
+        flops_ratio: transformer.flops_per_inference as f64
+            / native.flops_per_inference.max(1) as f64,
+        native,
+        transformer,
+        heads,
+        maps_windows,
+    };
+    write_bench_compare(&report, &opts.out.join("BENCH_compare.json"))?;
+    // CWD copy, like BENCH_eval.json — the per-PR model-cost record.
+    if let Err(e) = write_bench_compare(&report, Path::new("BENCH_compare.json")) {
+        eprintln!("analyze: could not write ./BENCH_compare.json: {e}");
+    }
+    Ok(report)
+}
+
+/// Train one arm on the shared split, measure it, and round-trip its
+/// checkpoint through the tensor store in both f32 and int4.
+fn fit_arm(
+    opts: &AnalyzeOptions,
+    vocab: &DeltaVocab,
+    train_set: &[LabelledWindow],
+    eval_set: &[LabelledWindow],
+    arch: ModelArch,
+) -> Result<(TrainedModel, ModelArm)> {
+    let mut topts = opts.train.clone();
+    topts.arch = arch;
+    let t0 = Instant::now();
+    let (model, first_epoch_loss, last_epoch_loss) = train::fit_model(&topts, vocab, train_set);
+    let train_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let ws: Vec<Window> = eval_set.iter().map(|lw| lw.window.clone()).collect();
+    let t1 = Instant::now();
+    let preds = model.predict_batch(&ws);
+    let infer_us_per_window = t1.elapsed().as_secs_f64() * 1e6 / ws.len().max(1) as f64;
+    let hits = preds
+        .iter()
+        .zip(eval_set)
+        .filter(|(p, lw)| **p == lw.label.max(0) as u32)
+        .count();
+    let top1 = hits as f64 / eval_set.len().max(1) as f64;
+
+    let name = arch.as_str();
+    let p32 = opts.out.join(format!("{}.analyze.{name}.params.bin", topts.benchmark));
+    let p4 = opts.out.join(format!("{}.analyze.{name}.int4.params.bin", topts.benchmark));
+    model.save(&p32, false)?;
+    model.save(&p4, true)?;
+    let quant = quant_errors(&p32, &p4)?;
+
+    let arm = ModelArm {
+        arch: name.to_string(),
+        top1,
+        n_params: model.n_params(),
+        flops_per_inference: model.flops_per_inference(),
+        first_epoch_loss,
+        last_epoch_loss,
+        train_ms,
+        infer_us_per_window,
+        quant,
+    };
+    Ok((model, arm))
+}
+
+/// Per-tensor |f32 − dequant(int4)| statistics between the two saved
+/// checkpoints of one model.
+fn quant_errors(p32: &Path, p4: &Path) -> Result<Vec<QuantError>> {
+    let full = TensorStore::load(p32)?;
+    let quantized = TensorStore::load(p4)?;
+    let mut out = Vec::with_capacity(full.tensors.len());
+    for t in &full.tensors {
+        let Some(q) = quantized.tensors.iter().find(|q| q.name == t.name) else {
+            anyhow::bail!("{}: tensor '{}' missing from int4 store", p4.display(), t.name);
+        };
+        anyhow::ensure!(q.numel() == t.numel(), "tensor '{}' shape mismatch", t.name);
+        let (mut max_err, mut sum) = (0.0f64, 0.0f64);
+        for (a, b) in t.data.iter().zip(&q.data) {
+            let e = (a - b).abs() as f64;
+            max_err = max_err.max(e);
+            sum += e;
+        }
+        out.push(QuantError {
+            tensor: t.name.clone(),
+            max_err,
+            mean_err: sum / t.numel().max(1) as f64,
+        });
+    }
+    Ok(out)
+}
+
+/// Reduce the transformer's attention maps over (up to `cap`) held-out
+/// windows to per-head mean entropy and a positional-locality profile,
+/// both taken from the newest-slot query row — the one whose output
+/// feeds the prediction.
+fn attention_profiles(
+    m: &TransformerBackend,
+    eval_set: &[LabelledWindow],
+    cap: usize,
+) -> (Vec<HeadProfile>, usize) {
+    let s = m.seq_len();
+    let heads_per = m.n_heads();
+    let layers = m.n_layers();
+    let n = eval_set.len().min(cap.max(1));
+    let mut loc = vec![0.0f64; layers * heads_per * s];
+    let mut ent = vec![0.0f64; layers * heads_per];
+    for lw in &eval_set[..n] {
+        let (_, maps) = m.attention_one(&lw.window);
+        for l in 0..layers {
+            for h in 0..heads_per {
+                let row = &maps[((l * heads_per + h) * s + (s - 1)) * s..][..s];
+                let mut e = 0.0f64;
+                for (j, &w) in row.iter().enumerate() {
+                    let w = w as f64;
+                    loc[(l * heads_per + h) * s + j] += w;
+                    if w > 0.0 {
+                        e -= w * w.ln();
+                    }
+                }
+                ent[l * heads_per + h] += e;
+            }
+        }
+    }
+    let mut heads = Vec::with_capacity(layers * heads_per);
+    for l in 0..layers {
+        for h in 0..heads_per {
+            let locality: Vec<f64> =
+                (0..s).map(|j| loc[(l * heads_per + h) * s + j] / n as f64).collect();
+            let mut top_slot = 0usize;
+            for (j, &v) in locality.iter().enumerate() {
+                if v > locality[top_slot] {
+                    top_slot = j;
+                }
+            }
+            heads.push(HeadProfile {
+                layer: l,
+                head: h,
+                entropy: ent[l * heads_per + h] / n as f64,
+                top_slot,
+                locality,
+            });
+        }
+    }
+    (heads, n)
+}
+
+fn arm_json(a: &ModelArm) -> Json {
+    Json::obj(vec![
+        ("arch", Json::str(&a.arch)),
+        ("top1", Json::Num(a.top1)),
+        ("n_params", Json::Num(a.n_params as f64)),
+        ("flops_per_inference", Json::Num(a.flops_per_inference as f64)),
+        ("first_epoch_loss", Json::Num(a.first_epoch_loss)),
+        ("last_epoch_loss", Json::Num(a.last_epoch_loss)),
+        ("train_ms", Json::Num(a.train_ms)),
+        ("infer_us_per_window", Json::Num(a.infer_us_per_window)),
+        (
+            "quant_int4",
+            Json::arr(a.quant.iter().map(|q| {
+                Json::obj(vec![
+                    ("tensor", Json::str(&q.tensor)),
+                    ("max_err", Json::Num(q.max_err)),
+                    ("mean_err", Json::Num(q.mean_err)),
+                ])
+            })),
+        ),
+    ])
+}
+
+impl AnalyzeReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("bench_compare/v1")),
+            ("benchmark", Json::str(&self.benchmark)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("history_len", Json::Num(self.history_len as f64)),
+            ("n_train", Json::Num(self.n_train as f64)),
+            ("n_eval", Json::Num(self.n_eval as f64)),
+            ("n_classes", Json::Num(self.n_classes as f64)),
+            ("stride_top1", Json::Num(self.stride_top1)),
+            ("native", arm_json(&self.native)),
+            ("transformer", arm_json(&self.transformer)),
+            ("params_ratio", Json::Num(self.params_ratio)),
+            ("flops_ratio", Json::Num(self.flops_ratio)),
+            ("maps_windows", Json::Num(self.maps_windows as f64)),
+            (
+                "heads",
+                Json::arr(self.heads.iter().map(|hp| {
+                    Json::obj(vec![
+                        ("layer", Json::Num(hp.layer as f64)),
+                        ("head", Json::Num(hp.head as f64)),
+                        ("entropy", Json::Num(hp.entropy)),
+                        ("top_slot", Json::Num(hp.top_slot as f64)),
+                        ("locality", Json::arr(hp.locality.iter().map(|&v| Json::Num(v)))),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// The stdout comparison table (`repro analyze`).
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Transformer vs native — {} ({} held-out windows, stride floor {:.2}%)",
+                self.benchmark,
+                self.n_eval,
+                self.stride_top1 * 100.0
+            ),
+            &["arch", "top-1 %", "params", "FLOPs/inf", "train ms", "infer µs/win", "loss"],
+        );
+        for a in [&self.native, &self.transformer] {
+            t.row(vec![
+                a.arch.clone(),
+                format!("{:.2}", a.top1 * 100.0),
+                a.n_params.to_string(),
+                a.flops_per_inference.to_string(),
+                format!("{:.1}", a.train_ms),
+                format!("{:.2}", a.infer_us_per_window),
+                format!("{:.3}→{:.3}", a.first_epoch_loss, a.last_epoch_loss),
+            ]);
+        }
+        t.row(vec![
+            "t/n ratio".into(),
+            String::new(),
+            format!("{:.1}×", self.params_ratio),
+            format!("{:.1}×", self.flops_ratio),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
+        t
+    }
+
+    /// The per-head interpretability table (`repro analyze`).
+    pub fn heads_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Attention locality — {} ({} windows; slot {} = newest; uniform entropy {:.2})",
+                self.benchmark,
+                self.maps_windows,
+                self.history_len.saturating_sub(1),
+                (self.history_len.max(1) as f64).ln()
+            ),
+            &["layer", "head", "entropy", "top slot", "top-3 slots (mass)"],
+        );
+        for hp in &self.heads {
+            let mut ranked: Vec<(usize, f64)> =
+                hp.locality.iter().copied().enumerate().collect();
+            ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+            let top3: Vec<String> =
+                ranked.iter().take(3).map(|(j, m)| format!("{j}({m:.2})")).collect();
+            t.row(vec![
+                hp.layer.to_string(),
+                hp.head.to_string(),
+                format!("{:.3}", hp.entropy),
+                hp.top_slot.to_string(),
+                top3.join(" "),
+            ]);
+        }
+        t
+    }
+}
+
+/// Write `BENCH_compare.json` (schema `bench_compare/v1`).
+pub fn write_bench_compare(r: &AnalyzeReport, path: &Path) -> Result<()> {
+    r.to_json().write_file(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::runner::RunOptions;
+    use crate::predictor::{NativeConfig, TransformerConfig};
+
+    fn tiny_opts(out: PathBuf) -> AnalyzeOptions {
+        AnalyzeOptions {
+            train: TrainOptions {
+                benchmark: "streamtriad".into(),
+                out: out.clone(),
+                epochs: 2,
+                batch: 32,
+                max_windows: 600,
+                history_len: 6,
+                classes: 16,
+                pcs: 64,
+                page_buckets: 256,
+                native: NativeConfig {
+                    d_pc: 2,
+                    d_page: 2,
+                    d_delta: 8,
+                    hidden: 16,
+                    lr: 0.01,
+                    ..Default::default()
+                },
+                transformer: TransformerConfig {
+                    d_model: 8,
+                    n_heads: 2,
+                    n_layers: 1,
+                    d_ff: 16,
+                    lr: 0.01,
+                    ..Default::default()
+                },
+                run: RunOptions { scale: 0.1, max_instructions: 0, ..Default::default() },
+                ..Default::default()
+            },
+            out,
+            max_maps: 64,
+        }
+    }
+
+    #[test]
+    fn analyze_writes_populated_bench_compare() {
+        let dir = crate::util::TestDir::new();
+        let opts = tiny_opts(dir.path().to_path_buf());
+        let r = analyze(&opts).unwrap();
+        assert!(r.n_eval > 0 && r.maps_windows > 0);
+        assert!(r.flops_ratio > 1.0, "transformer must cost more FLOPs: {}", r.flops_ratio);
+        assert_eq!(r.heads.len(), 2, "1 layer × 2 heads");
+        for hp in &r.heads {
+            let mass: f64 = hp.locality.iter().sum();
+            assert!((mass - 1.0).abs() < 1e-3, "locality sums to 1, got {mass}");
+            assert!(hp.entropy >= 0.0 && hp.entropy <= (6f64).ln() + 1e-4);
+            assert!(hp.top_slot < 6);
+        }
+        // Both arms carry per-tensor int4 quant errors within the
+        // scheme's half-step bound.
+        for arm in [&r.native, &r.transformer] {
+            assert!(!arm.quant.is_empty());
+            for q in &arm.quant {
+                assert!(q.max_err <= crate::predictor::quant::max_quant_error() as f64 + 1e-5);
+            }
+        }
+        let j = Json::parse_file(&dir.path().join("BENCH_compare.json")).unwrap();
+        assert_eq!(j.req("schema").unwrap().as_str(), Some("bench_compare/v1"));
+        assert!(j.req("flops_ratio").unwrap().as_f64().unwrap() > 1.0);
+        let heads = j.req("heads").unwrap().as_arr().unwrap();
+        assert_eq!(heads.len(), 2);
+        // Tables render without panicking and carry both arch rows.
+        let table = r.to_table().to_markdown();
+        assert!(table.contains("native") && table.contains("transformer"));
+        assert!(!r.heads_table().to_markdown().is_empty());
+    }
+
+    #[test]
+    fn analyze_is_deterministic_for_fixed_seed() {
+        let dir_a = crate::util::TestDir::new();
+        let dir_b = crate::util::TestDir::new();
+        let ra = analyze(&tiny_opts(dir_a.path().to_path_buf())).unwrap();
+        let rb = analyze(&tiny_opts(dir_b.path().to_path_buf())).unwrap();
+        assert_eq!(ra.native.top1, rb.native.top1);
+        assert_eq!(ra.transformer.top1, rb.transformer.top1);
+        assert_eq!(ra.flops_ratio, rb.flops_ratio);
+        for (a, b) in ra.heads.iter().zip(&rb.heads) {
+            assert_eq!(a.entropy, b.entropy, "head entropy must be deterministic");
+            assert_eq!(a.locality, b.locality, "locality profile must be deterministic");
+            assert_eq!(a.top_slot, b.top_slot);
+        }
+    }
+}

@@ -1,7 +1,10 @@
 //! Experiment runner: build a workload + prefetcher and simulate.
 
 use crate::config::{ExperimentConfig, PredictorBackendKind, RuntimeConfig};
-use crate::predictor::{DeltaVocab, NativeBackend, NativeConfig, PredictorEngine, StrideBackend};
+use crate::predictor::{
+    DeltaVocab, NativeBackend, NativeConfig, PredictorEngine, StrideBackend, TransformerBackend,
+    TransformerConfig,
+};
 use crate::prefetch::dl::DlPrefetcher;
 use crate::prefetch::none::NonePrefetcher;
 use crate::prefetch::oracle::OraclePrefetcher;
@@ -30,9 +33,9 @@ pub struct RunOptions {
     pub model: String,
     pub seed: u64,
     /// Predictor backend for the `dl` policy: `"stride"` | `"native"`
-    /// | `"pjrt"` | `""` (legacy auto: pjrt when `artifacts` is set,
-    /// stride otherwise). Unknown names are rejected by
-    /// [`RunOptions::backend_kind`].
+    /// | `"transformer"` | `"pjrt"` | `""` (legacy auto: pjrt when
+    /// `artifacts` is set, stride otherwise). Unknown names are
+    /// rejected by [`RunOptions::backend_kind`].
     pub backend: String,
 }
 
@@ -95,8 +98,13 @@ impl RunOptions {
             "native" => {
                 PredictorBackendKind::Native { artifacts: dir(), model: self.model.clone() }
             }
+            "transformer" => {
+                PredictorBackendKind::Transformer { artifacts: dir(), model: self.model.clone() }
+            }
             "pjrt" => PredictorBackendKind::Pjrt { artifacts: dir(), model: self.model.clone() },
-            other => anyhow::bail!("unknown backend '{other}' (expected stride | native | pjrt)"),
+            other => anyhow::bail!(
+                "unknown backend '{other}' (expected stride | native | transformer | pjrt)"
+            ),
         })
     }
 
@@ -106,6 +114,7 @@ impl RunOptions {
         match self.backend.as_str() {
             "stride" => "stride",
             "native" => "native",
+            "transformer" => "transformer",
             "pjrt" => "pjrt",
             _ => {
                 if self.artifacts.is_empty() {
@@ -133,38 +142,45 @@ impl RunOptions {
 }
 
 /// Restrict `benchmarks` to the ones the configured backend can serve:
-/// the native backend needs a trained manifest entry per benchmark
-/// (or a "shared" model); every other backend covers the full suite.
+/// the in-process learned backends (native, transformer) need a
+/// trained manifest entry of the matching arch per benchmark (or a
+/// "shared" model); every other backend covers the full suite.
 /// Skipped benchmarks are reported loudly rather than silently
 /// degraded — the failure mode this backend axis exists to kill.
 pub fn backend_benchmarks(
     opts: &RunOptions,
     benchmarks: &[String],
 ) -> anyhow::Result<Vec<String>> {
-    let PredictorBackendKind::Native { artifacts, model } = opts.backend_kind()? else {
-        return Ok(benchmarks.to_vec());
+    let (artifacts, model, arch) = match opts.backend_kind()? {
+        PredictorBackendKind::Native { artifacts, model } => (artifacts, model, "native"),
+        PredictorBackendKind::Transformer { artifacts, model } => {
+            (artifacts, model, "transformer")
+        }
+        _ => return Ok(benchmarks.to_vec()),
     };
     let manifest = Manifest::load(Path::new(&artifacts)).map_err(|e| {
-        anyhow::anyhow!("--backend native: {e}; train a model first (`repro train --workload …`)")
+        anyhow::anyhow!(
+            "--backend {arch}: {e}; train a model first (`repro train --arch {arch} --workload …`)"
+        )
     })?;
-    // A benchmark is covered only when its resolved entry actually is
-    // a native model — a mixed-arch artifacts dir (e.g. a pjrt
+    // A benchmark is covered only when its resolved entry actually has
+    // the requested arch — a mixed-arch artifacts dir (e.g. a pjrt
     // "shared" fallback) must not smuggle uncovered benchmarks past
     // the filter only to fail mid-sweep.
     let (keep, skip): (Vec<String>, Vec<String>) = benchmarks.iter().cloned().partition(|b| {
-        manifest.resolve(&model, b).map(|(_, e)| e.arch == "native").unwrap_or(false)
+        manifest.resolve(&model, b).map(|(_, e)| e.arch == arch).unwrap_or(false)
     });
     if keep.is_empty() {
         anyhow::bail!(
-            "--backend native: no trained model covers any requested benchmark; available \
+            "--backend {arch}: no trained model covers any requested benchmark; available \
              models: {:?}",
             manifest.models.keys().collect::<Vec<_>>()
         );
     }
     if !skip.is_empty() {
         eprintln!(
-            "eval: native backend has no model for {} benchmark(s) [{}] — those cells are \
-             skipped; train them with `repro train --benchmarks <name> …`",
+            "eval: {arch} backend has no model for {} benchmark(s) [{}] — those cells are \
+             skipped; train them with `repro train --arch {arch} --benchmarks <name> …`",
             skip.len(),
             skip.join(", ")
         );
@@ -190,6 +206,76 @@ impl Prefetcher for RecordingPrefetcher {
     }
 }
 
+/// Load an in-process learned backend (`arch` = "native" |
+/// "transformer") from an artifacts manifest: resolve the model key,
+/// guard the arch both directions, load the weights and validate the
+/// class count against the vocabulary. Shared by
+/// [`build_dl_prefetcher`] and `repro serve`
+/// (`eval/serve.rs::build_serve_backend`) so the two paths cannot
+/// drift. `who` prefixes the log/error lines ("dl", "serve").
+pub fn load_model_backend(
+    artifacts: &str,
+    model: &str,
+    benchmark: &str,
+    arch: &str,
+    who: &str,
+) -> anyhow::Result<(DeltaVocab, Box<dyn crate::predictor::PredictorBackend>)> {
+    let dir = Path::new(artifacts);
+    let manifest = Manifest::load(dir).map_err(|e| {
+        anyhow::anyhow!(
+            "{who} --backend {arch}: {e}; train a model first \
+             (`repro train --arch {arch} --workload …`)"
+        )
+    })?;
+    let (key, entry) = manifest.resolve(model, benchmark)?;
+    if entry.arch != arch {
+        anyhow::bail!(
+            "model '{key}' has arch '{}' — not a {arch} model; use --backend {} for these \
+             artifacts",
+            entry.arch,
+            match entry.arch.as_str() {
+                "native" | "transformer" => entry.arch.as_str(),
+                _ => "pjrt",
+            }
+        );
+    }
+    let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
+    let backend: Box<dyn crate::predictor::PredictorBackend> = match arch {
+        "native" => {
+            let m = NativeBackend::load(&dir.join(&entry.params), &NativeConfig::default())?;
+            eprintln!(
+                "{who}: loaded native model '{key}' ({} params, seq={}, classes={})",
+                m.n_params(),
+                m.seq_len(),
+                m.n_classes()
+            );
+            Box::new(m)
+        }
+        "transformer" => {
+            let m =
+                TransformerBackend::load(&dir.join(&entry.params), &TransformerConfig::default())?;
+            eprintln!(
+                "{who}: loaded transformer model '{key}' ({} params, seq={}, {} layer(s) × {} \
+                 head(s), classes={})",
+                m.n_params(),
+                m.seq_len(),
+                m.n_layers(),
+                m.n_heads(),
+                m.n_classes()
+            );
+            Box::new(m)
+        }
+        other => anyhow::bail!("load_model_backend: unsupported arch '{other}'"),
+    };
+    anyhow::ensure!(
+        backend.n_classes() == vocab.n_classes(),
+        "model '{key}': params have {} classes but the vocab has {}",
+        backend.n_classes(),
+        vocab.n_classes()
+    );
+    Ok((vocab, backend))
+}
+
 /// Build the DL prefetcher per the configured backend.
 pub fn build_dl_prefetcher(
     rcfg: &RuntimeConfig,
@@ -200,10 +286,12 @@ pub fn build_dl_prefetcher(
             let dir = Path::new(artifacts);
             let manifest = Manifest::load(dir)?;
             let (key, entry) = manifest.resolve(model, benchmark)?;
-            if entry.arch == "native" {
+            if entry.arch == "native" || entry.arch == "transformer" {
                 anyhow::bail!(
-                    "model '{key}' is a native-backend artifact (arch=native) — run with \
-                     --backend native instead of pjrt"
+                    "model '{key}' is an in-process artifact (arch={}) — run with --backend {} \
+                     instead of pjrt",
+                    entry.arch,
+                    entry.arch
                 );
             }
             let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
@@ -219,34 +307,13 @@ pub fn build_dl_prefetcher(
             ))
         }
         PredictorBackendKind::Native { artifacts, model } => {
-            let dir = Path::new(artifacts);
-            let manifest = Manifest::load(dir).map_err(|e| {
-                anyhow::anyhow!("native backend: {e} (train one with `repro train`)")
-            })?;
-            let (key, entry) = manifest.resolve(model, benchmark)?;
-            if entry.arch != "native" {
-                anyhow::bail!(
-                    "model '{key}' has arch '{}' — not a native model; use --backend pjrt for \
-                     AOT artifacts",
-                    entry.arch
-                );
-            }
-            let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
-            let backend =
-                NativeBackend::load(&dir.join(&entry.params), &NativeConfig::default())?;
-            anyhow::ensure!(
-                backend.n_classes() == vocab.n_classes(),
-                "model '{key}': params have {} classes but the vocab has {}",
-                backend.n_classes(),
-                vocab.n_classes()
-            );
-            eprintln!(
-                "dl: loaded native model '{key}' ({} params, seq={}, classes={})",
-                backend.n_params(),
-                backend.seq_len(),
-                backend.n_classes()
-            );
-            Ok(DlPrefetcher::new(PredictorEngine::new(Box::new(backend), vocab), rcfg))
+            let (vocab, backend) = load_model_backend(artifacts, model, benchmark, "native", "dl")?;
+            Ok(DlPrefetcher::new(PredictorEngine::new(backend, vocab), rcfg))
+        }
+        PredictorBackendKind::Transformer { artifacts, model } => {
+            let (vocab, backend) =
+                load_model_backend(artifacts, model, benchmark, "transformer", "dl")?;
+            Ok(DlPrefetcher::new(PredictorEngine::new(backend, vocab), rcfg))
         }
         PredictorBackendKind::Stride => {
             // The shared artifact-free vocab + vote backend (the
@@ -410,9 +477,17 @@ mod tests {
         assert_eq!(artifacts, "artifacts");
         assert_eq!(opts.backend_name(), "native");
 
+        opts.backend = "transformer".into();
+        let PredictorBackendKind::Transformer { artifacts, .. } = opts.backend_kind().unwrap()
+        else {
+            panic!("expected transformer kind");
+        };
+        assert_eq!(artifacts, "artifacts");
+        assert_eq!(opts.backend_name(), "transformer");
+
         opts.backend = "bogus".into();
         let err = opts.backend_kind().unwrap_err().to_string();
-        assert!(err.contains("stride | native | pjrt"), "{err}");
+        assert!(err.contains("stride | native | transformer | pjrt"), "{err}");
         // The error reaches run_benchmark callers too.
         assert!(run_benchmark("addvectors", "dl", &opts).is_err());
     }
@@ -427,6 +502,18 @@ mod tests {
         };
         let err = run_benchmark("addvectors", "dl", &opts).unwrap_err().to_string();
         assert!(err.contains("repro train"), "{err}");
+    }
+
+    #[test]
+    fn transformer_backend_without_artifacts_fails_loudly() {
+        let dir = crate::util::TestDir::new();
+        let opts = RunOptions {
+            backend: "transformer".into(),
+            artifacts: dir.path().to_string_lossy().into_owned(),
+            ..quick()
+        };
+        let err = run_benchmark("addvectors", "dl", &opts).unwrap_err().to_string();
+        assert!(err.contains("repro train --arch transformer"), "{err}");
     }
 
     #[test]

@@ -17,9 +17,7 @@
 use crate::config::{BypassMode, ExperimentConfig, RuntimeConfig};
 use crate::coordinator::{CoordinatorService, FaultEvent, PrefetchCommand, SpawnOptions};
 use crate::eval::runner::{workload_seed, RunOptions};
-use crate::predictor::{
-    ConstantBackend, DeltaVocab, NativeBackend, NativeConfig, PredictorBackend, StrideBackend,
-};
+use crate::predictor::{ConstantBackend, DeltaVocab, PredictorBackend, StrideBackend};
 use crate::prefetch::none::NonePrefetcher;
 use crate::runtime::{Manifest, ModelExecutable, PjrtBackend};
 use crate::sim::{Simulator, TraceWriter, TRACE_HEADER};
@@ -116,39 +114,29 @@ pub fn build_serve_backend(
             (vocab, Box::new(backend), "stride")
         }
         K::Native { artifacts, model } => {
-            let dir = Path::new(&artifacts);
-            let manifest = Manifest::load(dir).map_err(|e| {
-                anyhow!("serve --backend native: {e}; train a model first (`repro train`)")
-            })?;
-            let (key, entry) = manifest.resolve(&model, benchmark)?;
-            anyhow::ensure!(
-                entry.arch == "native",
-                "serve: model '{key}' (arch '{}') is not a native artifact",
-                entry.arch
-            );
-            let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
-            let backend = NativeBackend::load(&dir.join(&entry.params), &NativeConfig::default())?;
-            anyhow::ensure!(
-                backend.n_classes() == vocab.n_classes(),
-                "serve: model '{key}' params have {} classes but the vocab has {}",
-                backend.n_classes(),
-                vocab.n_classes()
-            );
-            eprintln!(
-                "serve: native model '{key}' ({} params, seq={}, classes={})",
-                backend.n_params(),
-                backend.seq_len(),
-                backend.n_classes()
-            );
-            (vocab, Box::new(backend), "native")
+            let (vocab, backend) =
+                crate::eval::runner::load_model_backend(&artifacts, &model, benchmark, "native", "serve")?;
+            (vocab, backend, "native")
+        }
+        K::Transformer { artifacts, model } => {
+            let (vocab, backend) = crate::eval::runner::load_model_backend(
+                &artifacts,
+                &model,
+                benchmark,
+                "transformer",
+                "serve",
+            )?;
+            (vocab, backend, "transformer")
         }
         K::Pjrt { artifacts, model } => {
             let dir = Path::new(&artifacts);
             let manifest = Manifest::load(dir)?;
             let (key, entry) = manifest.resolve(&model, benchmark)?;
             anyhow::ensure!(
-                entry.arch != "native",
-                "serve: model '{key}' is a native artifact — run with --backend native"
+                entry.arch != "native" && entry.arch != "transformer",
+                "serve: model '{key}' is an in-process artifact (arch={}) — run with --backend {}",
+                entry.arch,
+                entry.arch
             );
             let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
             let exe = ModelExecutable::load(dir, entry)?;

@@ -1,5 +1,5 @@
-//! `repro train` — offline training of the native predictor backend
-//! from simulator-generated access streams (no JAX, no PJRT).
+//! `repro train` — offline training of the pure-Rust predictor
+//! backends from simulator-generated access streams (no JAX, no PJRT).
 //!
 //! Pipeline, mirroring the paper's data flow (§4/§7.1) entirely in
 //! Rust: run the workload under demand paging and record every
@@ -7,10 +7,15 @@
 //! vocabulary and closed PC table from the observed stream (Hashemi's
 //! observation that unique deltas are few — §4); slide a
 //! `history_len`-token window over each cluster to harvest labelled
-//! examples (label = next delta's class); train the
-//! [`NativeBackend`] with mini-batch SGD/Adam; and write the weights,
-//! vocabulary and a manifest entry (`arch = "native"`) so
-//! `--backend native` serves the model on the eval path.
+//! examples (label = next delta's class); train the selected
+//! architecture (`--arch native` → [`NativeBackend`], the paper's
+//! revised model; `--arch transformer` → [`TransformerBackend`], the
+//! unconstrained reference model) with mini-batch SGD/Adam; and write
+//! the weights, vocabulary and a manifest entry (`arch = "native"` or
+//! `"transformer"`) so the matching `--backend` serves the model on
+//! the eval path. The held-out report carries parameter-count and
+//! FLOPs-per-inference columns for every arch, so the paper's
+//! "orders of magnitude lower cost" claim is a measured number.
 //!
 //! Everything is seeded-deterministic: the workload seed comes from
 //! [`crate::eval::runner::workload_seed`] (the same function the eval
@@ -24,7 +29,7 @@ use crate::predictor::engine::featurize_window;
 use crate::predictor::vocab::VocabFile;
 use crate::predictor::{
     ClusterBy, ClusterKey, DeltaVocab, HistoryToken, LabelledWindow, NativeBackend, NativeConfig,
-    PredictorBackend, StrideBackend, Window,
+    PredictorBackend, StrideBackend, TransformerBackend, TransformerConfig, Window,
 };
 use crate::prefetch::{FaultInfo, PrefetchDecision, Prefetcher};
 use crate::runtime::{Manifest, ModelEntry};
@@ -36,6 +41,105 @@ use anyhow::Result;
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
+
+/// Offline-trainable model architecture (`repro train --arch …`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelArch {
+    /// The paper's §6 revised (attention-free) model.
+    Native,
+    /// The paper's §5 unconstrained Transformer reference model.
+    Transformer,
+}
+
+impl ModelArch {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "native" => Self::Native,
+            "transformer" => Self::Transformer,
+            _ => return None,
+        })
+    }
+
+    /// The manifest `arch` tag / `--backend` name for this arch.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Native => "native",
+            Self::Transformer => "transformer",
+        }
+    }
+}
+
+/// A trained offline model of either architecture behind one
+/// interface — what [`train_model`] produces and `repro analyze`
+/// compares.
+#[derive(Debug)]
+pub enum TrainedModel {
+    Native(NativeBackend),
+    Transformer(TransformerBackend),
+}
+
+impl TrainedModel {
+    pub fn arch(&self) -> ModelArch {
+        match self {
+            Self::Native(_) => ModelArch::Native,
+            Self::Transformer(_) => ModelArch::Transformer,
+        }
+    }
+
+    /// One optimizer step; returns the mean cross-entropy before it.
+    pub fn train_batch(&mut self, batch: &[LabelledWindow]) -> f32 {
+        match self {
+            Self::Native(m) => m.train_batch(batch),
+            Self::Transformer(m) => m.train_batch(batch),
+        }
+    }
+
+    pub fn top1_accuracy(&self, data: &[LabelledWindow]) -> f64 {
+        match self {
+            Self::Native(m) => m.top1_accuracy(data),
+            Self::Transformer(m) => m.top1_accuracy(data),
+        }
+    }
+
+    /// Batched top-1 predictions (the serving-shaped path).
+    pub fn predict_batch(&self, windows: &[Window]) -> Vec<crate::predictor::ClassId> {
+        match self {
+            Self::Native(m) => m.predict_batch(windows),
+            Self::Transformer(m) => m.predict_batch(windows),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        match self {
+            Self::Native(m) => m.n_params(),
+            Self::Transformer(m) => m.n_params(),
+        }
+    }
+
+    pub fn flops_per_inference(&self) -> u64 {
+        match self {
+            Self::Native(m) => m.flops_per_inference(),
+            Self::Transformer(m) => m.flops_per_inference(),
+        }
+    }
+
+    /// Write the weights as a tensor store (f32, or int4 when `int4`).
+    pub fn save(&self, path: &std::path::Path, int4: bool) -> Result<()> {
+        match self {
+            Self::Native(m) => m.save(path, int4),
+            Self::Transformer(m) => m.save(path, int4),
+        }
+    }
+
+    /// The transformer inside, when this is one (`repro analyze`'s
+    /// attention-introspection hook).
+    pub fn as_transformer(&self) -> Option<&TransformerBackend> {
+        match self {
+            Self::Transformer(m) => Some(m),
+            Self::Native(_) => None,
+        }
+    }
+}
 
 /// Everything `repro train` can tune.
 #[derive(Debug, Clone)]
@@ -59,7 +163,10 @@ pub struct TrainOptions {
     pub page_buckets: u32,
     /// Store weights int4-packed (paper Table 7; lossy).
     pub int4: bool,
+    /// Which architecture to train.
+    pub arch: ModelArch,
     pub native: NativeConfig,
+    pub transformer: TransformerConfig,
     /// Workload regime: `scale`, `max_instructions` and `seed` are
     /// honoured; the backend/artifact fields are ignored.
     pub run: RunOptions,
@@ -78,7 +185,9 @@ impl Default for TrainOptions {
             pcs: 256,
             page_buckets: 4096,
             int4: false,
+            arch: ModelArch::Native,
             native: NativeConfig::default(),
+            transformer: TransformerConfig::default(),
             run: RunOptions::default(),
         }
     }
@@ -89,15 +198,21 @@ impl Default for TrainOptions {
 #[derive(Debug, Clone)]
 pub struct TrainReport {
     pub benchmark: String,
+    /// The trained architecture's manifest tag ("native" |
+    /// "transformer").
+    pub arch: String,
     pub n_train: usize,
     pub n_eval: usize,
     pub n_classes: usize,
     pub n_params: usize,
+    /// Analytic FLOPs for one window's forward pass — the measured
+    /// side of the paper's "orders of magnitude lower cost" claim.
+    pub flops_per_inference: u64,
     /// Mean cross-entropy of the first / last epoch.
     pub first_epoch_loss: f64,
     pub last_epoch_loss: f64,
     /// Held-out top-1 accuracy of the trained model…
-    pub native_top1: f64,
+    pub model_top1: f64,
     /// …versus the frequency-vote [`StrideBackend`] on the same split.
     pub stride_top1: f64,
     pub params_path: PathBuf,
@@ -220,13 +335,16 @@ pub fn labelled_windows(
     out
 }
 
-/// The whole offline pipeline: harvest → vocab → windows → train →
-/// evaluate → save artifacts (params + vocab + manifest entry).
-pub fn train_native(opts: &TrainOptions) -> Result<TrainReport> {
+/// Validate the corpus options, harvest the benchmark's access
+/// streams and build the (vocab file, runtime vocab, labelled
+/// windows) corpus — the shared front half of [`train_model`] and
+/// `repro analyze` (`eval/analyze.rs`).
+pub fn prepare_corpus(
+    opts: &TrainOptions,
+) -> Result<(VocabFile, DeltaVocab, Vec<LabelledWindow>)> {
     anyhow::ensure!(opts.history_len > 0, "--history-len must be > 0");
     anyhow::ensure!(opts.classes >= 2, "--classes must be >= 2 (one delta + OOV)");
     anyhow::ensure!(opts.epochs > 0 && opts.batch > 0, "--epochs and --batch must be > 0");
-
     let streams = harvest_streams(opts)?;
     let file = build_vocab(&streams, opts);
     anyhow::ensure!(
@@ -243,9 +361,13 @@ pub fn train_native(opts: &TrainOptions) -> Result<TrainReport> {
         opts.benchmark,
         opts.history_len
     );
+    Ok((file, vocab, all))
+}
 
-    // Interleaved split: every 10th window held out, so the eval slice
-    // covers all program phases instead of only the tail.
+/// Interleaved train/held-out split: every 10th window held out, so
+/// the eval slice covers all program phases instead of only the tail.
+/// Tiny corpora fall back to in-sample evaluation.
+pub fn split_windows(all: Vec<LabelledWindow>) -> (Vec<LabelledWindow>, Vec<LabelledWindow>) {
     let mut train: Vec<LabelledWindow> = Vec::with_capacity(all.len());
     let mut eval: Vec<LabelledWindow> = Vec::with_capacity(all.len() / 10 + 1);
     for (i, lw) in all.into_iter().enumerate() {
@@ -258,9 +380,46 @@ pub fn train_native(opts: &TrainOptions) -> Result<TrainReport> {
     if eval.is_empty() {
         eval = train.clone(); // tiny corpora: report in-sample accuracy
     }
+    (train, eval)
+}
 
-    let mut model = NativeBackend::init(&vocab, &opts.native);
-    let mut rng = XorShift64::new(opts.native.seed ^ 0x7452_4149); // ^"tRAI"
+/// Held-out top-1 of the frequency-vote [`StrideBackend`] — the floor
+/// every learned arch is compared against.
+pub fn stride_top1(vocab: &DeltaVocab, history_len: usize, eval: &[LabelledWindow]) -> f64 {
+    if eval.is_empty() {
+        return 0.0;
+    }
+    let eval_windows: Vec<Window> = eval.iter().map(|lw| lw.window.clone()).collect();
+    let mut stride = StrideBackend::new(vocab.n_classes(), history_len);
+    let hits = stride
+        .predict(&eval_windows)
+        .iter()
+        .zip(eval)
+        .filter(|(p, lw)| **p == lw.label.max(0) as u32)
+        .count();
+    hits as f64 / eval.len() as f64
+}
+
+/// Seeded-deterministic mini-batch fit of `opts.arch` on an
+/// already-split corpus; returns the model and the (first, last)
+/// epoch mean losses. Shared by [`train_model`] and
+/// `repro analyze` (which fits both archs on the *same* corpus).
+pub fn fit_model(
+    opts: &TrainOptions,
+    vocab: &DeltaVocab,
+    train: &[LabelledWindow],
+) -> (TrainedModel, f64, f64) {
+    let mut model = match opts.arch {
+        ModelArch::Native => TrainedModel::Native(NativeBackend::init(vocab, &opts.native)),
+        ModelArch::Transformer => {
+            TrainedModel::Transformer(TransformerBackend::init(vocab, &opts.transformer))
+        }
+    };
+    let seed = match opts.arch {
+        ModelArch::Native => opts.native.seed,
+        ModelArch::Transformer => opts.transformer.seed,
+    };
+    let mut rng = XorShift64::new(seed ^ 0x7452_4149); // ^"tRAI"
     let mut order: Vec<usize> = (0..train.len()).collect();
     let (mut first_loss, mut last_loss) = (0.0f64, 0.0f64);
     for epoch in 0..opts.epochs {
@@ -289,28 +448,32 @@ pub fn train_native(opts: &TrainOptions) -> Result<TrainReport> {
         }
         last_loss = mean;
         eprintln!(
-            "train[{}] epoch {}/{}: loss {mean:.4} ({} windows, {} classes)",
+            "train[{}/{}] epoch {}/{}: loss {mean:.4} ({} windows, {} classes)",
             opts.benchmark,
+            opts.arch.as_str(),
             epoch + 1,
             opts.epochs,
             train.len(),
             vocab.n_classes()
         );
     }
+    (model, first_loss, last_loss)
+}
 
-    let native_top1 = model.top1_accuracy(&eval);
-    let eval_windows: Vec<Window> = eval.iter().map(|lw| lw.window.clone()).collect();
-    let mut stride = StrideBackend::new(vocab.n_classes(), opts.history_len);
-    let stride_hits = stride
-        .predict(&eval_windows)
-        .iter()
-        .zip(&eval)
-        .filter(|(p, lw)| **p == lw.label.max(0) as u32)
-        .count();
-    let stride_top1 = stride_hits as f64 / eval.len() as f64;
+/// The whole offline pipeline for `opts.arch`: harvest → vocab →
+/// windows → train → evaluate → save artifacts (params + vocab +
+/// manifest entry with the matching `arch` tag).
+pub fn train_model(opts: &TrainOptions) -> Result<TrainReport> {
+    let (file, vocab, all) = prepare_corpus(opts)?;
+    let (train, eval) = split_windows(all);
+    let (model, first_loss, last_loss) = fit_model(opts, &vocab, &train);
+
+    let model_top1 = model.top1_accuracy(&eval);
+    let stride_top1 = stride_top1(&vocab, opts.history_len, &eval);
+    let arch = opts.arch.as_str();
 
     std::fs::create_dir_all(&opts.out)?;
-    let params_rel = format!("{}.native.params.bin", opts.benchmark);
+    let params_rel = format!("{}.{arch}.params.bin", opts.benchmark);
     let vocab_rel = format!("{}.vocab.json", opts.benchmark);
     let params_path = opts.out.join(&params_rel);
     let vocab_path = opts.out.join(&vocab_rel);
@@ -319,10 +482,17 @@ pub fn train_native(opts: &TrainOptions) -> Result<TrainReport> {
     let mut manifest =
         Manifest::load(&opts.out).unwrap_or(Manifest { version: 1, models: BTreeMap::new() });
     if let Some(old) = manifest.models.get(&opts.benchmark) {
-        if old.arch != "native" {
+        if old.arch != arch {
+            // Anything that is not an in-process arch (e.g. the python
+            // AOT's "revised") is served by --backend pjrt.
+            let gone = match old.arch.as_str() {
+                "native" | "transformer" => old.arch.as_str(),
+                _ => "pjrt",
+            };
             eprintln!(
-                "train[{}]: WARNING — replacing existing '{}' manifest entry (its files stay on \
-                 disk but are deregistered; --backend pjrt will no longer resolve this key)",
+                "train[{}]: WARNING — replacing existing '{}' manifest entry with arch={arch} \
+                 (its files stay on disk but are deregistered; --backend {gone} will no longer \
+                 resolve this key)",
                 opts.benchmark, old.arch
             );
         }
@@ -340,20 +510,22 @@ pub fn train_native(opts: &TrainOptions) -> Result<TrainReport> {
             n_features: 3,
             n_classes: vocab.n_classes(),
             n_params: model.n_params(),
-            arch: "native".to_string(),
+            arch: arch.to_string(),
         },
     );
     manifest.save(&opts.out)?;
 
     Ok(TrainReport {
         benchmark: opts.benchmark.clone(),
+        arch: arch.to_string(),
         n_train: train.len(),
         n_eval: eval.len(),
         n_classes: vocab.n_classes(),
         n_params: model.n_params(),
+        flops_per_inference: model.flops_per_inference(),
         first_epoch_loss: first_loss,
         last_epoch_loss: last_loss,
-        native_top1,
+        model_top1,
         stride_top1,
         params_path,
         vocab_path,
@@ -376,7 +548,6 @@ mod tests {
             classes: 16,
             pcs: 64,
             page_buckets: 256,
-            int4: false,
             native: NativeConfig {
                 d_pc: 2,
                 d_page: 2,
@@ -385,7 +556,16 @@ mod tests {
                 lr: 0.01,
                 ..Default::default()
             },
+            transformer: TransformerConfig {
+                d_model: 8,
+                n_heads: 2,
+                n_layers: 1,
+                d_ff: 16,
+                lr: 0.01,
+                ..Default::default()
+            },
             run: RunOptions { scale: 0.1, max_instructions: 0, ..Default::default() },
+            ..Default::default()
         }
     }
 
@@ -393,7 +573,7 @@ mod tests {
     fn end_to_end_train_writes_loadable_artifacts() {
         let dir = crate::util::TestDir::new();
         let opts = tiny_opts(dir.path().to_path_buf());
-        let r = train_native(&opts).unwrap();
+        let r = train_model(&opts).unwrap();
         assert!(r.n_train > 0 && r.n_eval > 0);
         assert!(r.first_epoch_loss.is_finite() && r.last_epoch_loss.is_finite());
         assert!(
@@ -433,12 +613,52 @@ mod tests {
         let mut b = tiny_opts(dir_b.path().to_path_buf());
         a.epochs = 2;
         b.epochs = 2;
-        let ra = train_native(&a).unwrap();
-        let rb = train_native(&b).unwrap();
+        let ra = train_model(&a).unwrap();
+        let rb = train_model(&b).unwrap();
         assert_eq!(ra.last_epoch_loss, rb.last_epoch_loss);
         let bytes_a = std::fs::read(&ra.params_path).unwrap();
         let bytes_b = std::fs::read(&rb.params_path).unwrap();
         assert_eq!(bytes_a, bytes_b, "same seed must save identical weights");
+    }
+
+    #[test]
+    fn transformer_arch_trains_and_registers_in_manifest() {
+        let dir = crate::util::TestDir::new();
+        let mut opts = tiny_opts(dir.path().to_path_buf());
+        opts.arch = ModelArch::Transformer;
+        opts.epochs = 2;
+        opts.max_windows = 600;
+        let r = train_model(&opts).unwrap();
+        assert_eq!(r.arch, "transformer");
+        assert!(r.n_params > 0 && r.flops_per_inference > 0);
+        assert!(
+            r.params_path.to_string_lossy().contains(".transformer.params.bin"),
+            "{}",
+            r.params_path.display()
+        );
+
+        let manifest = Manifest::load(dir.path()).unwrap();
+        let (_, entry) = manifest.resolve("", "streamtriad").unwrap();
+        assert_eq!(entry.arch, "transformer");
+        assert_eq!(entry.n_params, r.n_params);
+        let m = TransformerBackend::load(
+            &dir.path().join(&entry.params),
+            &TransformerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(m.n_params(), r.n_params);
+
+        // The artifact serves end-to-end through the dl prefetcher
+        // (`--backend transformer` shape).
+        let run = RunOptions {
+            scale: 0.1,
+            max_instructions: 30_000,
+            artifacts: dir.path().to_string_lossy().into_owned(),
+            backend: "transformer".into(),
+            ..Default::default()
+        };
+        let metrics = run_benchmark("streamtriad", "dl", &run).unwrap();
+        assert!(metrics.mem_accesses > 0);
     }
 
     #[test]

@@ -11,15 +11,26 @@
 //!                    workload footprint, in (0, 1]; 1.0 (default) =
 //!                    no oversubscription. --eviction: lru | random |
 //!                    freq | prefetch-aware.
-//! repro train      [--workload B | --benchmarks a --benchmarks b]
+//! repro train      [--arch native|transformer]
+//!                  [--workload B | --benchmarks a --benchmarks b]
 //!                  [--out artifacts] [--epochs N] [--batch N]
 //!                  [--limit N] [--history-len N] [--classes N]
 //!                  [--pcs N] [--page-buckets N] [--hidden N]
 //!                  [--embed-pc N] [--embed-page N] [--embed-delta N]
+//!                  [--d-model N] [--heads N] [--layers N] [--d-ff N]
 //!                  [--lr F] [--optimizer adam|sgd] [--int4]
 //!                  [--scale F] [--max-instructions N] [--seed S]
-//!                    trains the pure-Rust native backend offline and
-//!                    writes params + vocab + manifest (arch=native).
+//!                    trains a pure-Rust backend offline and writes
+//!                    params + vocab + manifest (arch as selected);
+//!                    the report includes params + FLOPs/inference.
+//! repro analyze    [--workload B] [--out results] [--max-maps N]
+//!                  [+ the train corpus/model flags above]
+//!                    trains BOTH archs on the same corpus/seed,
+//!                    extracts per-head attention entropy/locality
+//!                    profiles over held-out windows, reports the
+//!                    transformer-vs-native cost table and per-tensor
+//!                    int4 quantization error; writes
+//!                    BENCH_compare.json (schema bench_compare/v1).
 //! repro eval       <pairs|table10|table11|fig10|fig11|fig12|summary|oversub|all>
 //!                  [--backend K] [--artifacts DIR] [--out results]
 //!                  [--scale F] [--max-instructions N] [--no-pjrt]
@@ -42,10 +53,12 @@
 //! ```
 //!
 //! `--backend K` selects the `dl` policy's predictor: `stride`
-//! (pure-Rust frequency vote — the floor), `native` (pure-Rust learned
-//! model trained by `repro train`), or `pjrt` (AOT HLO, needs the
+//! (pure-Rust frequency vote — the floor), `native` (pure-Rust revised
+//! model trained by `repro train`), `transformer` (pure-Rust
+//! Transformer reference model trained by
+//! `repro train --arch transformer`), or `pjrt` (AOT HLO, needs the
 //! `pjrt` cargo feature). Unset, the legacy auto rule applies: pjrt
-//! when `--artifacts` is given, stride otherwise. See DESIGN.md §6.
+//! when `--artifacts` is given, stride otherwise. See DESIGN.md §6/§9.
 
 use anyhow::Result;
 use std::path::{Path, PathBuf};
@@ -59,8 +72,8 @@ use uvm_prefetch::util::cli::Args;
 use uvm_prefetch::util::Json;
 use uvm_prefetch::workloads::{ALL_BENCHMARKS, MODEL_BENCHMARKS};
 
-const USAGE: &str =
-    "repro <trace-gen|simulate|train|eval|golden|serve|info> [flags] (see rust/src/main.rs header)";
+const USAGE: &str = "repro <trace-gen|simulate|train|analyze|eval|golden|serve|info> [flags] \
+                     (see rust/src/main.rs header)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -70,6 +83,7 @@ fn main() -> Result<()> {
         "trace-gen" => trace_gen(&args),
         "simulate" => simulate(&args),
         "train" => train(&args),
+        "analyze" => analyze(&args),
         "eval" => eval_cmd(&args),
         "golden" => golden(&args),
         "serve" => serve(&args),
@@ -180,11 +194,73 @@ fn simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `repro train` — offline training of the native backend (one model
+/// Shared corpus + model flags for `repro train` and `repro analyze`.
+fn train_opts_from(
+    args: &Args,
+    benchmark: String,
+    default_out: &str,
+) -> Result<uvm_prefetch::eval::train::TrainOptions> {
+    use uvm_prefetch::eval::train::{ModelArch, TrainOptions};
+    use uvm_prefetch::predictor::nn::OptKind;
+    use uvm_prefetch::predictor::TransformerConfig;
+
+    let defaults = TrainOptions::default();
+    let arch = {
+        let name = args.str("arch", defaults.arch.as_str());
+        ModelArch::parse(&name)
+            .ok_or_else(|| anyhow::anyhow!("--arch '{name}' (expected native | transformer)"))?
+    };
+    let optimizer = {
+        let name = args.str("optimizer", defaults.native.optimizer.as_str());
+        OptKind::parse(&name)
+            .ok_or_else(|| anyhow::anyhow!("--optimizer '{name}' (expected adam | sgd)"))?
+    };
+    let lr = args.f64("lr", defaults.native.lr as f64)? as f32;
+    let seed = args.u64("seed", defaults.native.seed)?;
+    let d_model = args.usize("d-model", defaults.transformer.d_model)?;
+    let n_heads = args.usize("heads", defaults.transformer.n_heads)?;
+    let n_layers = args.usize("layers", defaults.transformer.n_layers)?;
+    let d_ff = args.usize("d-ff", defaults.transformer.d_ff)?;
+    // Validate here so bad flags fail with a CLI error, not the model
+    // constructor's assert.
+    anyhow::ensure!(
+        d_model > 0 && n_heads > 0 && n_layers > 0 && d_ff > 0,
+        "--d-model/--heads/--layers/--d-ff must all be > 0"
+    );
+    anyhow::ensure!(
+        d_model % n_heads == 0,
+        "--d-model {d_model} must be divisible by --heads {n_heads}"
+    );
+    Ok(TrainOptions {
+        benchmark,
+        out: PathBuf::from(args.str("out", default_out)),
+        epochs: args.usize("epochs", defaults.epochs)?,
+        batch: args.usize("batch", defaults.batch)?,
+        max_windows: args.usize("limit", defaults.max_windows)?,
+        history_len: args.usize("history-len", defaults.history_len)?,
+        classes: args.usize("classes", defaults.classes)?,
+        pcs: args.usize("pcs", defaults.pcs)?,
+        page_buckets: args.u64("page-buckets", defaults.page_buckets as u64)? as u32,
+        int4: args.bool("int4"),
+        arch,
+        native: NativeConfig {
+            hidden: args.usize("hidden", defaults.native.hidden)?,
+            d_pc: args.usize("embed-pc", defaults.native.d_pc)?,
+            d_page: args.usize("embed-page", defaults.native.d_page)?,
+            d_delta: args.usize("embed-delta", defaults.native.d_delta)?,
+            lr,
+            optimizer,
+            seed,
+        },
+        transformer: TransformerConfig { d_model, n_heads, n_layers, d_ff, lr, optimizer, seed },
+        run: opts_from(args)?,
+    })
+}
+
+/// `repro train` — offline training of a pure-Rust backend (one model
 /// per requested workload, all merged into one artifacts manifest).
 fn train(args: &Args) -> Result<()> {
-    use uvm_prefetch::eval::train::{train_native, TrainOptions};
-    use uvm_prefetch::predictor::nn::OptKind;
+    use uvm_prefetch::eval::train::train_model;
 
     let names: Vec<String> = {
         let given = args.get_all("benchmarks");
@@ -194,51 +270,61 @@ fn train(args: &Args) -> Result<()> {
             given.into_iter().map(|s| s.to_string()).collect()
         }
     };
-    let defaults = TrainOptions::default();
-    let optimizer = {
-        let name = args.str("optimizer", defaults.native.optimizer.as_str());
-        OptKind::parse(&name)
-            .ok_or_else(|| anyhow::anyhow!("--optimizer '{name}' (expected adam | sgd)"))?
-    };
     for name in names {
-        let t = TrainOptions {
-            benchmark: name,
-            out: PathBuf::from(args.str("out", "artifacts")),
-            epochs: args.usize("epochs", defaults.epochs)?,
-            batch: args.usize("batch", defaults.batch)?,
-            max_windows: args.usize("limit", defaults.max_windows)?,
-            history_len: args.usize("history-len", defaults.history_len)?,
-            classes: args.usize("classes", defaults.classes)?,
-            pcs: args.usize("pcs", defaults.pcs)?,
-            page_buckets: args.u64("page-buckets", defaults.page_buckets as u64)? as u32,
-            int4: args.bool("int4"),
-            native: NativeConfig {
-                hidden: args.usize("hidden", defaults.native.hidden)?,
-                d_pc: args.usize("embed-pc", defaults.native.d_pc)?,
-                d_page: args.usize("embed-page", defaults.native.d_page)?,
-                d_delta: args.usize("embed-delta", defaults.native.d_delta)?,
-                lr: args.f64("lr", defaults.native.lr as f64)? as f32,
-                optimizer,
-                seed: args.u64("seed", defaults.native.seed)?,
-            },
-            run: opts_from(args)?,
-        };
-        let r = train_native(&t)?;
+        let t = train_opts_from(args, name, "artifacts")?;
+        let r = train_model(&t)?;
         println!(
-            "train[{}]: {} train / {} eval windows, {} classes, {} params — loss {:.4} → {:.4}, \
-             top-1 native {:.2}% vs stride {:.2}% — saved {}",
+            "train[{}/{}]: {} train / {} eval windows, {} classes — {} params, {} FLOPs/inf — \
+             loss {:.4} → {:.4}, top-1 {} {:.2}% vs stride {:.2}% — saved {}",
             r.benchmark,
+            r.arch,
             r.n_train,
             r.n_eval,
             r.n_classes,
             r.n_params,
+            r.flops_per_inference,
             r.first_epoch_loss,
             r.last_epoch_loss,
-            r.native_top1 * 100.0,
+            r.arch,
+            r.model_top1 * 100.0,
             r.stride_top1 * 100.0,
             r.params_path.display()
         );
     }
+    Ok(())
+}
+
+/// `repro analyze` — the attention-interpretability subsystem: train
+/// the Transformer reference model AND the native model on the same
+/// corpus/seed, profile the attention heads over held-out windows,
+/// and write the comparison record (`BENCH_compare.json`). See
+/// `eval/analyze.rs` and DESIGN.md §9.
+fn analyze(args: &Args) -> Result<()> {
+    use uvm_prefetch::eval::analyze::{analyze as run_analyze, AnalyzeOptions};
+
+    let defaults = AnalyzeOptions::default();
+    let out = PathBuf::from(args.str("out", "results"));
+    let mut train = train_opts_from(args, args.str("workload", "streamtriad"), "results")?;
+    train.out = out.clone();
+    let opts = AnalyzeOptions {
+        train,
+        out: out.clone(),
+        max_maps: args.usize("max-maps", defaults.max_maps)?,
+    };
+    let r = run_analyze(&opts)?;
+    println!("{}", r.to_table().to_markdown());
+    println!("{}", r.heads_table().to_markdown());
+    println!(
+        "analyze[{}]: transformer top-1 {:.2}% vs native {:.2}% (stride floor {:.2}%) — cost \
+         ratio {:.1}× params, {:.1}× FLOPs — {}",
+        r.benchmark,
+        r.transformer.top1 * 100.0,
+        r.native.top1 * 100.0,
+        r.stride_top1 * 100.0,
+        r.params_ratio,
+        r.flops_ratio,
+        out.join("BENCH_compare.json").display()
+    );
     Ok(())
 }
 

@@ -20,12 +20,14 @@ pub mod history;
 pub mod native;
 pub mod nn;
 pub mod quant;
+pub mod transformer;
 pub mod vocab;
 
 pub use cluster::{ClusterBy, ClusterKey};
 pub use engine::{PredictorEngine, StrideBackend};
 pub use history::HistoryToken;
 pub use native::{NativeBackend, NativeConfig};
+pub use transformer::{TransformerBackend, TransformerConfig};
 pub use vocab::DeltaVocab;
 
 use crate::types::PageDelta;
@@ -61,8 +63,10 @@ pub type ClassId = u32;
 /// Inference/learning backend. Implementations: [`StrideBackend`]
 /// (pure-Rust frequency vote, the floor), [`NativeBackend`] (pure-Rust
 /// revised model with real training — the `--backend native` path),
-/// `ConstantBackend` (tests), and [`crate::runtime::PjrtBackend`] (the
-/// AOT-compiled model, `--backend pjrt`).
+/// [`TransformerBackend`] (the pure-Rust Transformer reference model —
+/// `--backend transformer`), `ConstantBackend` (tests), and
+/// [`crate::runtime::PjrtBackend`] (the AOT-compiled model,
+/// `--backend pjrt`).
 pub trait PredictorBackend: Send {
     fn name(&self) -> &'static str;
 

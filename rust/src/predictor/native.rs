@@ -201,6 +201,15 @@ impl NativeBackend {
         &self.params
     }
 
+    /// Analytic FLOPs for one window's forward pass (MAC = 2 flops):
+    /// the two FC layers plus the ReLU — the embedding gather is
+    /// copies, not arithmetic. The denominator of `repro analyze`'s
+    /// transformer-vs-native cost ratio (the paper's
+    /// "orders-of-magnitude cheaper" claim, measured).
+    pub fn flops_per_inference(&self) -> u64 {
+        (2 * self.in_dim * self.hidden + self.hidden + 2 * self.hidden * self.n_classes) as u64
+    }
+
     /// Gather the window's token embeddings into the input vector
     /// (position-wise concatenation). Windows shorter than `seq_len`
     /// are left-padded with zeros; longer ones keep the newest tokens.
@@ -414,9 +423,11 @@ impl NativeBackend {
     }
 
     /// Write the weights as a tensor store (`dtype` f32, or int4 when
-    /// `int4` — the paper's Table 7 storage mode, lossy).
+    /// `int4` — the paper's Table 7 storage mode, lossy; stored as
+    /// per-tensor power-of-two-scaled int4 (dtype 3) so zero-centred
+    /// trained weights survive — see [`crate::predictor::quant`]).
     pub fn save(&self, path: &Path, int4: bool) -> Result<()> {
-        let dtype = if int4 { 2u8 } else { 0u8 };
+        let dtype = if int4 { 3u8 } else { 0u8 };
         let tensors: Vec<(String, Vec<usize>, Vec<f32>, u8)> = TENSOR_NAMES
             .iter()
             .zip(self.layout())

@@ -1,9 +1,13 @@
-//! Dense neural-net primitives for the native (pure-Rust) predictor
-//! backend: deterministic weight init, linear/ReLU/softmax forward
-//! ops (per-sample and batched — [`linear_forward_batch`] answers a
-//! whole serving batch in one GEMM-shaped pass, bit-identical to the
-//! per-row path), their backward passes, and SGD / Adam parameter
-//! updates.
+//! Dense neural-net primitives for the pure-Rust predictor backends:
+//! deterministic weight init, linear/ReLU/softmax forward ops
+//! (per-sample and batched — [`linear_forward_batch`] answers a whole
+//! serving batch in one GEMM-shaped pass, bit-identical to the per-row
+//! path), layer normalization, tanh-GELU and scaled-dot-product
+//! multi-head self-attention (the Transformer reference backend's
+//! building blocks, `predictor/transformer.rs`), their backward
+//! passes, and SGD / Adam parameter updates. Every backward here is
+//! pinned numerically by the central-difference suite in
+//! `rust/tests/grad_check.rs`.
 //!
 //! Everything operates on flat `f32` slices (row-major matrices) so a
 //! whole model lives in one parameter vector — one optimizer state,
@@ -141,6 +145,237 @@ pub fn cross_entropy_backward(p: &mut [f32], label: usize) -> f32 {
     let loss = -p[label].max(1e-12).ln();
     p[label] -= 1.0;
     loss
+}
+
+/// Layer-norm variance epsilon (shared by forward and backward).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Layer normalization over one row: `out = γ·x̂ + β` with
+/// `x̂ = (x − mean) · rstd`. Writes the normalized row into `xhat`
+/// (the backward pass needs it) and returns `rstd`.
+pub fn layer_norm_forward(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    xhat: &mut [f32],
+    out: &mut [f32],
+) -> f32 {
+    let n = x.len();
+    debug_assert!(n > 0);
+    debug_assert_eq!(gamma.len(), n);
+    debug_assert_eq!(beta.len(), n);
+    debug_assert_eq!(xhat.len(), n);
+    debug_assert_eq!(out.len(), n);
+    let mut mean = 0.0f32;
+    for &v in x {
+        mean += v;
+    }
+    mean /= n as f32;
+    let mut var = 0.0f32;
+    for &v in x {
+        let d = v - mean;
+        var += d * d;
+    }
+    var /= n as f32;
+    let rstd = 1.0 / (var + LN_EPS).sqrt();
+    for i in 0..n {
+        xhat[i] = (x[i] - mean) * rstd;
+        out[i] = gamma[i] * xhat[i] + beta[i];
+    }
+    rstd
+}
+
+/// Backward of [`layer_norm_forward`]: accumulates `dγ += dy·x̂`,
+/// `dβ += dy` and, with `dx̂ = dy·γ`,
+/// `dx += rstd · (dx̂ − mean(dx̂) − x̂ · mean(dx̂ ⊙ x̂))`.
+#[allow(clippy::too_many_arguments)]
+pub fn layer_norm_backward(
+    dy: &[f32],
+    gamma: &[f32],
+    xhat: &[f32],
+    rstd: f32,
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+    dx: &mut [f32],
+) {
+    let n = dy.len();
+    debug_assert!(n > 0);
+    debug_assert_eq!(gamma.len(), n);
+    debug_assert_eq!(xhat.len(), n);
+    debug_assert_eq!(dgamma.len(), n);
+    debug_assert_eq!(dbeta.len(), n);
+    debug_assert_eq!(dx.len(), n);
+    let inv = 1.0 / n as f32;
+    let mut s1 = 0.0f32; // Σ dx̂
+    let mut s2 = 0.0f32; // Σ dx̂ ⊙ x̂
+    for i in 0..n {
+        let dxh = dy[i] * gamma[i];
+        s1 += dxh;
+        s2 += dxh * xhat[i];
+        dgamma[i] += dy[i] * xhat[i];
+        dbeta[i] += dy[i];
+    }
+    for i in 0..n {
+        let dxh = dy[i] * gamma[i];
+        dx[i] += rstd * (dxh - inv * s1 - xhat[i] * inv * s2);
+    }
+}
+
+/// `√(2/π)` — the tanh-GELU constant.
+const GELU_C: f32 = 0.797_884_56;
+const GELU_A: f32 = 0.044_715;
+
+/// Tanh-approximation GELU:
+/// `gelu(x) = 0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`.
+pub fn gelu_forward(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        let u = GELU_C * (v + GELU_A * v * v * v);
+        *o = 0.5 * v * (1.0 + u.tanh());
+    }
+}
+
+/// Backward of [`gelu_forward`] given the *pre-activation* input `x`
+/// (unlike ReLU, the GELU derivative is not recoverable from the
+/// output alone): accumulates `dx += dy · gelu'(x)`.
+pub fn gelu_backward(x: &[f32], dy: &[f32], dx: &mut [f32]) {
+    debug_assert_eq!(x.len(), dy.len());
+    debug_assert_eq!(x.len(), dx.len());
+    for i in 0..x.len() {
+        let v = x[i];
+        let u = GELU_C * (v + GELU_A * v * v * v);
+        let t = u.tanh();
+        let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+        dx[i] += dy[i] * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du);
+    }
+}
+
+/// Scaled-dot-product multi-head self-attention over one window.
+///
+/// `q`, `k`, `v` are row-major `[seq × (n_heads·d_head)]` with head
+/// `h` owning columns `h·d_head .. (h+1)·d_head`. Writes the softmaxed
+/// attention weights into `attn` (`[n_heads × seq × seq]`, row
+/// `(h·seq + i)·seq ..` = query `i`'s distribution over key slots —
+/// the map `repro analyze` reads) and the per-head context vectors
+/// into `ctx` (`[seq × (n_heads·d_head)]`). Full bidirectional
+/// attention: a prefetch history window is an encoder input, not an
+/// autoregressive stream, so no causal mask. Scalar, fixed iteration
+/// order — bit-deterministic.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    seq: usize,
+    n_heads: usize,
+    d_head: usize,
+    attn: &mut [f32],
+    ctx: &mut [f32],
+) {
+    let d = n_heads * d_head;
+    debug_assert!(seq > 0 && n_heads > 0 && d_head > 0);
+    debug_assert_eq!(q.len(), seq * d);
+    debug_assert_eq!(k.len(), seq * d);
+    debug_assert_eq!(v.len(), seq * d);
+    debug_assert_eq!(attn.len(), n_heads * seq * seq);
+    debug_assert_eq!(ctx.len(), seq * d);
+    let scale = 1.0 / (d_head as f32).sqrt();
+    ctx.fill(0.0);
+    for h in 0..n_heads {
+        let off = h * d_head;
+        for i in 0..seq {
+            let row = &mut attn[(h * seq + i) * seq..(h * seq + i + 1) * seq];
+            let qi = &q[i * d + off..i * d + off + d_head];
+            for (j, r) in row.iter_mut().enumerate() {
+                let kj = &k[j * d + off..j * d + off + d_head];
+                let mut acc = 0.0f32;
+                for (a, b) in qi.iter().zip(kj) {
+                    acc += a * b;
+                }
+                *r = acc * scale;
+            }
+            softmax(row);
+            let ci = &mut ctx[i * d + off..i * d + off + d_head];
+            for (j, &w) in row.iter().enumerate() {
+                let vj = &v[j * d + off..j * d + off + d_head];
+                for (c, &vv) in ci.iter_mut().zip(vj) {
+                    *c += w * vv;
+                }
+            }
+        }
+    }
+}
+
+/// Backward of [`attention_forward`]: given the cached attention
+/// weights `attn` and the context gradient `dctx`, accumulates `dq`,
+/// `dk`, `dv`. `da_row` is caller-provided scratch of length `seq`.
+///
+/// Per head `h`, query `i`: `dA_j = dctxᵢ·v_j`, the softmax backward
+/// `dl_j = A_j·(dA_j − Σₖ dA_k·A_k)`, then (folding in the `1/√d`
+/// score scale) `dqᵢ += Σ_j dl_j·scale·k_j`, `dk_j += dl_j·scale·qᵢ`,
+/// `dv_j += A_j·dctxᵢ`.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    attn: &[f32],
+    dctx: &[f32],
+    seq: usize,
+    n_heads: usize,
+    d_head: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    da_row: &mut [f32],
+) {
+    let d = n_heads * d_head;
+    debug_assert_eq!(attn.len(), n_heads * seq * seq);
+    debug_assert_eq!(dctx.len(), seq * d);
+    debug_assert_eq!(dq.len(), seq * d);
+    debug_assert_eq!(dk.len(), seq * d);
+    debug_assert_eq!(dv.len(), seq * d);
+    debug_assert_eq!(da_row.len(), seq);
+    let scale = 1.0 / (d_head as f32).sqrt();
+    for h in 0..n_heads {
+        let off = h * d_head;
+        for i in 0..seq {
+            let a_row = &attn[(h * seq + i) * seq..(h * seq + i + 1) * seq];
+            let dc = &dctx[i * d + off..i * d + off + d_head];
+            for (j, da) in da_row.iter_mut().enumerate() {
+                let vj = &v[j * d + off..j * d + off + d_head];
+                let mut acc = 0.0f32;
+                for (a, b) in dc.iter().zip(vj) {
+                    acc += a * b;
+                }
+                *da = acc;
+                let dvj = &mut dv[j * d + off..j * d + off + d_head];
+                let w = a_row[j];
+                for (x, &y) in dvj.iter_mut().zip(dc) {
+                    *x += w * y;
+                }
+            }
+            let mut dot = 0.0f32;
+            for j in 0..seq {
+                dot += da_row[j] * a_row[j];
+            }
+            for j in 0..seq {
+                da_row[j] = a_row[j] * (da_row[j] - dot) * scale;
+            }
+            for (j, &s) in da_row.iter().enumerate() {
+                let kj = &k[j * d + off..j * d + off + d_head];
+                let dqi = &mut dq[i * d + off..i * d + off + d_head];
+                for (x, &y) in dqi.iter_mut().zip(kj) {
+                    *x += s * y;
+                }
+                let qi = &q[i * d + off..i * d + off + d_head];
+                let dkj = &mut dk[j * d + off..j * d + off + d_head];
+                for (x, &y) in dkj.iter_mut().zip(qi) {
+                    *x += s * y;
+                }
+            }
+        }
+    }
 }
 
 /// Optimizer family for the native backend.
@@ -326,6 +561,120 @@ mod tests {
         assert_eq!(a, b);
         assert!(a.iter().all(|v| v.abs() <= 0.1));
         assert!(a.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn layer_norm_normalizes_and_applies_affine() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let gamma = [2.0f32; 4];
+        let beta = [1.0f32; 4];
+        let mut xhat = [0.0f32; 4];
+        let mut out = [0.0f32; 4];
+        let rstd = layer_norm_forward(&x, &gamma, &beta, &mut xhat, &mut out);
+        // x̂ has zero mean and (near-)unit variance.
+        let mean: f32 = xhat.iter().sum::<f32>() / 4.0;
+        let var: f32 = xhat.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6, "xhat mean {mean}");
+        assert!((var - 1.0).abs() < 1e-3, "xhat var {var}");
+        assert!(rstd > 0.0);
+        for i in 0..4 {
+            assert!((out[i] - (2.0 * xhat[i] + 1.0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn layer_norm_backward_translation_invariant() {
+        // d(loss)/dx must sum to ~0 when gamma is uniform: shifting
+        // every input by a constant cannot change the normalized row.
+        let x = [0.3f32, -1.2, 2.0, 0.7];
+        let gamma = [1.5f32; 4];
+        let beta = [0.0f32; 4];
+        let mut xhat = [0.0f32; 4];
+        let mut out = [0.0f32; 4];
+        let rstd = layer_norm_forward(&x, &gamma, &beta, &mut xhat, &mut out);
+        let dy = [0.5f32, -0.25, 1.0, 0.1];
+        let mut dg = [0.0f32; 4];
+        let mut db = [0.0f32; 4];
+        let mut dx = [0.0f32; 4];
+        layer_norm_backward(&dy, &gamma, &xhat, rstd, &mut dg, &mut db, &mut dx);
+        assert_eq!(db, dy);
+        let s: f32 = dx.iter().sum();
+        assert!(s.abs() < 1e-5, "dx sum {s}");
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        let x = [0.0f32, 1.0, -1.0, 3.0];
+        let mut y = [0.0f32; 4];
+        gelu_forward(&x, &mut y);
+        assert_eq!(y[0], 0.0);
+        assert!((y[1] - 0.8412).abs() < 1e-3, "gelu(1) = {}", y[1]);
+        assert!((y[2] + 0.1588).abs() < 1e-3, "gelu(-1) = {}", y[2]);
+        assert!((y[3] - 2.9964).abs() < 1e-3, "gelu(3) = {}", y[3]);
+        // Monotone for large |x|: acts like identity / zero.
+        let mut dx = [0.0f32; 4];
+        gelu_backward(&x, &[1.0; 4], &mut dx);
+        assert!((dx[0] - 0.5).abs() < 1e-6, "gelu'(0) = {}", dx[0]);
+        assert!(dx[3] > 0.99, "gelu'(3) = {}", dx[3]);
+    }
+
+    #[test]
+    fn attention_uniform_queries_average_values() {
+        // q = 0 ⇒ every score is 0 ⇒ softmax is uniform ⇒ the context
+        // is the mean of the values, per head.
+        let (seq, heads, dh) = (3usize, 2usize, 2usize);
+        let d = heads * dh;
+        let q = vec![0.0f32; seq * d];
+        let k: Vec<f32> = (0..seq * d).map(|i| i as f32 * 0.1).collect();
+        let v: Vec<f32> = (0..seq * d).map(|i| i as f32).collect();
+        let mut attn = vec![0.0f32; heads * seq * seq];
+        let mut ctx = vec![0.0f32; seq * d];
+        attention_forward(&q, &k, &v, seq, heads, dh, &mut attn, &mut ctx);
+        for row in attn.chunks_exact(seq) {
+            for &w in row {
+                assert!((w - 1.0 / seq as f32).abs() < 1e-6, "uniform attention, got {w}");
+            }
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+        for c in 0..d {
+            let mean: f32 = (0..seq).map(|j| v[j * d + c]).sum::<f32>() / seq as f32;
+            for i in 0..seq {
+                assert!((ctx[i * d + c] - mean).abs() < 1e-4, "col {c} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn attention_rows_are_distributions() {
+        let (seq, heads, dh) = (4usize, 2usize, 3usize);
+        let d = heads * dh;
+        let mk = |seed: u64| {
+            let mut r = XorShift64::new(seed);
+            init_uniform(&mut r, seq * d, 1.0)
+        };
+        let (q, k, v) = (mk(1), mk(2), mk(3));
+        let mut attn = vec![0.0f32; heads * seq * seq];
+        let mut ctx = vec![0.0f32; seq * d];
+        attention_forward(&q, &k, &v, seq, heads, dh, &mut attn, &mut ctx);
+        for row in attn.chunks_exact(seq) {
+            assert!(row.iter().all(|&w| (0.0..=1.0).contains(&w)));
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+        // dv for a uniform upstream gradient distributes each query's
+        // weight once: Σⱼ dvⱼ per head column equals seq (Σᵢ Σⱼ A[i][j]
+        // = seq because every row sums to 1).
+        let dctx = vec![1.0f32; seq * d];
+        let mut dq = vec![0.0f32; seq * d];
+        let mut dk = vec![0.0f32; seq * d];
+        let mut dv = vec![0.0f32; seq * d];
+        let mut scratch = vec![0.0f32; seq];
+        attention_backward(
+            &q, &k, &v, &attn, &dctx, seq, heads, dh, &mut dq, &mut dk, &mut dv, &mut scratch,
+        );
+        for c in 0..d {
+            let s: f32 = (0..seq).map(|j| dv[j * d + c]).sum();
+            assert!((s - seq as f32).abs() < 1e-4, "col {c}: Σdv = {s}");
+        }
     }
 
     #[test]

@@ -8,8 +8,21 @@
 //! this module is the Rust decode path plus the footprint accounting
 //! used to regenerate Table 7.
 //!
-//! Scheme: symmetric uniform quantization over [-8, 8] with 16 levels,
-//! step = 16/15; two codes per byte, low nibble first.
+//! Two schemes:
+//!
+//! * **Fixed grid** (store dtype 2, the python/aot format): symmetric
+//!   uniform over [-8, 8] with 16 levels, step = 16/15; two codes per
+//!   byte, low nibble first. The grid has **no representable zero**
+//!   (nearest levels ±0.533) — fine for the paper's clamp-trained
+//!   weights, destructive for small zero-centred ones.
+//! * **Per-tensor scaled** (store dtype 3, what the Rust backends'
+//!   `save(int4)` writes): signed codes −8..7 times a per-tensor
+//!   **power-of-two** scale (smallest `2^m` with `7·2^m ≥ absmax`).
+//!   Zero is exact (code 8), error ≤ scale/2 ≤ absmax/7, and because
+//!   the scale is a power of two every dequantized value is exactly
+//!   representable — quantization is a *projection*, so
+//!   save→load→save round trips are bit-idempotent (the transformer /
+//!   native int4 tests pin this).
 
 pub const QUANT_LO: f32 = -8.0;
 pub const QUANT_HI: f32 = 8.0;
@@ -59,6 +72,66 @@ pub fn max_quant_error() -> f32 {
     QUANT_STEP / 2.0
 }
 
+/// Per-tensor power-of-two scale for the dtype-3 scheme: the smallest
+/// `2^m` with `7·2^m ≥ absmax` (0.0 for an all-zero tensor). A
+/// power of two keeps `code·scale` exact in f32, which is what makes
+/// requantization idempotent.
+pub fn pow2_scale(values: &[f32]) -> f32 {
+    let absmax = values.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if absmax == 0.0 || !absmax.is_finite() {
+        return 0.0;
+    }
+    let mut s = 1.0f32;
+    while 7.0 * s < absmax {
+        s *= 2.0;
+    }
+    while s * 0.5 >= f32::MIN_POSITIVE && 7.0 * (s * 0.5) >= absmax {
+        s *= 0.5;
+    }
+    s
+}
+
+/// Quantize one value to a scaled-int4 code (0..15; 8 = exact zero).
+#[inline]
+pub fn quantize_scaled(x: f32, scale: f32) -> u8 {
+    if scale <= 0.0 {
+        return 8;
+    }
+    (((x / scale).round() as i32).clamp(-7, 7) + 8) as u8
+}
+
+/// Dequantize a scaled-int4 code.
+#[inline]
+pub fn dequantize_scaled(code: u8, scale: f32) -> f32 {
+    ((code & 0x0F) as i32 - 8) as f32 * scale
+}
+
+/// Pack a float slice under the per-tensor scaled scheme; returns the
+/// scale and the nibble buffer (low nibble first; odd lengths pad the
+/// final high nibble with the zero code 8).
+pub fn pack_scaled(values: &[f32]) -> (f32, Vec<u8>) {
+    let scale = pow2_scale(values);
+    let mut out = Vec::with_capacity(values.len().div_ceil(2));
+    for pair in values.chunks(2) {
+        let lo = quantize_scaled(pair[0], scale);
+        let hi = pair.get(1).map(|&v| quantize_scaled(v, scale)).unwrap_or(8);
+        out.push(lo | (hi << 4));
+    }
+    (scale, out)
+}
+
+/// Unpack `n` values from a scaled-int4 nibble buffer.
+pub fn unpack_scaled(bytes: &[u8], scale: f32, n: usize) -> Vec<f32> {
+    assert!(bytes.len() * 2 >= n, "buffer too short: {} nibbles < {n}", bytes.len() * 2);
+    (0..n)
+        .map(|i| {
+            let b = bytes[i / 2];
+            let code = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+            dequantize_scaled(code, scale)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +167,38 @@ mod tests {
     fn endpoints_are_exact() {
         assert_eq!(dequantize(quantize(-8.0)), -8.0);
         assert_eq!(dequantize(quantize(8.0)), 8.0);
+    }
+
+    #[test]
+    fn scaled_scheme_represents_zero_and_small_weights() {
+        // The fixed grid's fatal flaw for trained weights: no zero.
+        assert!(dequantize(quantize(0.0)).abs() > 0.5);
+        // The scaled scheme keeps zero exact and small weights alive.
+        let vals = [0.0f32, 0.05, -0.05, 0.1, -0.02, 0.531];
+        let (scale, packed) = pack_scaled(&vals);
+        let back = unpack_scaled(&packed, scale, vals.len());
+        assert_eq!(back[0], 0.0, "zero must be exact");
+        for (a, b) in vals.iter().zip(&back) {
+            assert!((a - b).abs() <= scale / 2.0 + 1e-9, "v={a} back={b} scale={scale}");
+        }
+        // Error bound: scale/2 ≤ absmax/7.
+        assert!(scale <= 2.0 * 0.531 / 7.0, "scale {scale} too coarse");
+    }
+
+    #[test]
+    fn scaled_roundtrip_is_idempotent() {
+        let vals: Vec<f32> = (0..101).map(|i| ((i as f32) * 0.731).sin() * 1.3).collect();
+        let (s1, p1) = pack_scaled(&vals);
+        let q1 = unpack_scaled(&p1, s1, vals.len());
+        let (s2, p2) = pack_scaled(&q1);
+        let q2 = unpack_scaled(&p2, s2, q1.len());
+        assert_eq!(q1, q2, "requantization must be a fixed point");
+    }
+
+    #[test]
+    fn scaled_all_zero_tensor() {
+        let (scale, packed) = pack_scaled(&[0.0f32; 5]);
+        assert_eq!(scale, 0.0);
+        assert_eq!(unpack_scaled(&packed, scale, 5), vec![0.0; 5]);
     }
 }

@@ -1,0 +1,1255 @@
+//! Transformer reference backend — the paper's §5 *unconstrained*
+//! predictor, in pure Rust (train + infer, no JAX/XLA).
+//!
+//! The paper's narrative is two-act: first a full Transformer shows
+//! that high prefetch accuracy is reachable at all, then its attention
+//! maps are *interpreted* (which history slots do the heads actually
+//! look at?) to justify the orders-of-magnitude-cheaper revised model
+//! that [`crate::predictor::native`] implements. This module is act
+//! one: a pre-LN encoder stack over the same (PC, page bucket, Δ)
+//! token windows, serving as the accuracy ceiling every cheaper model
+//! is measured against (`repro analyze`, `eval/analyze.rs`).
+//!
+//! Architecture: per-feature embedding tables (PC / page bucket / Δ)
+//! *summed* per position with a learned positional embedding, then
+//! `n_layers` pre-LN encoder blocks (LN → multi-head self-attention →
+//! residual; LN → FFN with GELU → residual), a final LN on the last
+//! slot and a linear head over the delta vocabulary (last class OOV).
+//!
+//! Everything lives in one flat `f32` parameter vector so the
+//! [`Optimizer`] and the [`crate::runtime::params`] tensor store work
+//! unchanged; all arithmetic is scalar in a fixed order, so same-seed
+//! training is byte-deterministic and batched inference is
+//! bit-identical to sequential (`rust/tests/transformer_backend.rs`
+//! pins both, `rust/tests/grad_check.rs` pins every backward against
+//! central differences).
+
+use crate::predictor::nn::{self, OptKind, Optimizer};
+use crate::predictor::{ClassId, DeltaVocab, LabelledWindow, PredictorBackend, Window};
+use crate::runtime::params::{write_store, TensorStore};
+use crate::util::XorShift64;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Hyper-parameters of the Transformer reference model (vocabulary
+/// shapes come from the [`DeltaVocab`] it is initialized against).
+#[derive(Debug, Clone)]
+pub struct TransformerConfig {
+    /// Model width (must be divisible by `n_heads`).
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// Encoder blocks.
+    pub n_layers: usize,
+    /// FFN hidden width.
+    pub d_ff: usize,
+    pub lr: f32,
+    pub optimizer: OptKind,
+    /// Weight-init seed (same seed + same data ⇒ identical model).
+    pub seed: u64,
+}
+
+impl Default for TransformerConfig {
+    fn default() -> Self {
+        Self {
+            d_model: 32,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 64,
+            lr: 1e-3,
+            optimizer: OptKind::Adam,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Offsets of one encoder block's tensors inside the flat parameter
+/// vector. Weight/bias pairs are contiguous (`wq` then `bq`, …) — the
+/// backward pass splits one mutable gradient slice per pair.
+#[derive(Debug, Clone, Copy)]
+struct LayerOff {
+    ln1_g: usize,
+    ln1_b: usize,
+    wq: usize,
+    wk: usize,
+    wv: usize,
+    wo: usize,
+    ln2_g: usize,
+    ln2_b: usize,
+    w1: usize,
+    w2: usize,
+}
+
+/// Forward caches for one window — everything the backward pass and
+/// the attention-introspection path (`repro analyze`) need.
+#[derive(Debug, Clone)]
+struct LayerCache {
+    /// LN1 normalized input `[S×D]` + per-row 1/σ.
+    xhat1: Vec<f32>,
+    rstd1: Vec<f32>,
+    /// LN1 output (the QKV projections' input) `[S×D]`.
+    y1: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Softmaxed attention weights `[H×S×S]`.
+    attn: Vec<f32>,
+    /// Per-head context vectors `[S×D]`.
+    ctx: Vec<f32>,
+    xhat2: Vec<f32>,
+    rstd2: Vec<f32>,
+    /// LN2 output (the FFN's input) `[S×D]`.
+    y2: Vec<f32>,
+    /// FFN pre-activation `[S×F]` (GELU backward needs it).
+    f1: Vec<f32>,
+    /// FFN post-GELU `[S×F]`.
+    g: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+struct Fwd {
+    layers: Vec<LayerCache>,
+    /// Running activation `[S×D]`; starts as the embedded input and
+    /// holds the encoder output after `forward`.
+    x: Vec<f32>,
+    /// Shared projection scratch `[S×D]`.
+    t: Vec<f32>,
+    /// Final-LN caches (last slot only).
+    xhat_f: Vec<f32>,
+    rstd_f: f32,
+    yf: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+/// Backward scratch (reused across the samples of a batch).
+#[derive(Debug, Clone)]
+struct Bwd {
+    dx: Vec<f32>,
+    dy: Vec<f32>,
+    dyf: Vec<f32>,
+    dq: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+    dctx: Vec<f32>,
+    df1: Vec<f32>,
+    dg: Vec<f32>,
+    da_row: Vec<f32>,
+}
+
+/// Values of the `meta` side tensor: shape facts the weight dims alone
+/// cannot recover (head count) or that we pin for validation.
+const META_LEN: usize = 4;
+
+/// The Transformer reference model.
+///
+/// ```
+/// use uvm_prefetch::predictor::transformer::{TransformerBackend, TransformerConfig};
+/// use uvm_prefetch::predictor::{DeltaVocab, FeatTok, LabelledWindow, PredictorBackend, Window};
+///
+/// let vocab = DeltaVocab::synthetic(vec![1, 7], 4);
+/// let cfg = TransformerConfig { d_model: 8, n_heads: 2, n_layers: 1, d_ff: 16, lr: 0.02,
+///                               ..Default::default() };
+/// let mut model = TransformerBackend::init(&vocab, &cfg);
+/// let window = |d: i32| Window { tokens: vec![FeatTok { pc_id: 0, page_id: 0, delta_id: d }; 4] };
+/// let batch: Vec<LabelledWindow> =
+///     (0..8).map(|_| LabelledWindow { window: window(1), label: 1 }).collect();
+/// for _ in 0..60 {
+///     model.finetune(&batch).expect("transformer returns a real loss");
+/// }
+/// assert_eq!(model.predict(&[window(1)]), vec![1]);
+/// ```
+#[derive(Debug)]
+pub struct TransformerBackend {
+    // Shape.
+    seq_len: usize,
+    n_classes: usize,
+    pc_rows: usize,
+    page_rows: usize,
+    d_model: usize,
+    n_heads: usize,
+    n_layers: usize,
+    d_ff: usize,
+    // Flat parameter vector; tensor offsets derived from the shape.
+    params: Vec<f32>,
+    opt: Optimizer,
+    /// Total optimizer steps taken (offline + online).
+    pub train_steps: u64,
+}
+
+impl TransformerBackend {
+    /// Fresh model with seeded-deterministic weights.
+    pub fn init(vocab: &DeltaVocab, cfg: &TransformerConfig) -> Self {
+        Self::with_shape(
+            vocab.history_len.max(1),
+            vocab.n_classes(),
+            vocab.n_pc_slots(),
+            vocab.n_page_buckets(),
+            cfg,
+        )
+    }
+
+    /// Init from explicit table shapes (the load path and tests).
+    pub fn with_shape(
+        seq_len: usize,
+        n_classes: usize,
+        pc_rows: usize,
+        page_rows: usize,
+        cfg: &TransformerConfig,
+    ) -> Self {
+        assert!(seq_len > 0 && n_classes > 0 && pc_rows > 0 && page_rows > 0);
+        assert!(cfg.d_model > 0 && cfg.n_heads > 0 && cfg.n_layers > 0 && cfg.d_ff > 0);
+        assert!(
+            cfg.d_model % cfg.n_heads == 0,
+            "d_model {} not divisible by n_heads {}",
+            cfg.d_model,
+            cfg.n_heads
+        );
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        let mut rng = XorShift64::new(cfg.seed);
+        let xavier = |fan_in: usize, fan_out: usize| (6.0 / (fan_in + fan_out) as f32).sqrt();
+        let mut params = Vec::new();
+        // Embeddings + positional table, in layout order.
+        params.extend(nn::init_uniform(&mut rng, pc_rows * d, 0.1));
+        params.extend(nn::init_uniform(&mut rng, page_rows * d, 0.1));
+        params.extend(nn::init_uniform(&mut rng, n_classes * d, 0.1));
+        params.extend(nn::init_uniform(&mut rng, seq_len * d, 0.1));
+        for _ in 0..cfg.n_layers {
+            params.extend(vec![1.0; d]); // ln1_g
+            params.extend(vec![0.0; d]); // ln1_b
+            for _ in 0..3 {
+                // wq, wk, wv (each directly followed by its bias).
+                params.extend(nn::init_uniform(&mut rng, d * d, xavier(d, d)));
+                params.extend(vec![0.0; d]);
+            }
+            params.extend(nn::init_uniform(&mut rng, d * d, xavier(d, d))); // wo
+            params.extend(vec![0.0; d]); // bo
+            params.extend(vec![1.0; d]); // ln2_g
+            params.extend(vec![0.0; d]); // ln2_b
+            params.extend(nn::init_uniform(&mut rng, f * d, xavier(d, f))); // w1
+            params.extend(vec![0.0; f]); // b1
+            params.extend(nn::init_uniform(&mut rng, d * f, xavier(f, d))); // w2
+            params.extend(vec![0.0; d]); // b2
+        }
+        params.extend(vec![1.0; d]); // lnf_g
+        params.extend(vec![0.0; d]); // lnf_b
+        params.extend(nn::init_uniform(&mut rng, n_classes * d, xavier(d, n_classes))); // out_w
+        params.extend(vec![0.0; n_classes]); // out_b
+        let opt = Optimizer::new(cfg.optimizer, cfg.lr, params.len());
+        let me = Self {
+            seq_len,
+            n_classes,
+            pc_rows,
+            page_rows,
+            d_model: d,
+            n_heads: cfg.n_heads,
+            n_layers: cfg.n_layers,
+            d_ff: f,
+            params,
+            opt,
+            train_steps: 0,
+        };
+        debug_assert_eq!(me.params.len(), me.total_len());
+        me
+    }
+
+    // ---- layout -----------------------------------------------------
+
+    fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// `(emb_pc, emb_page, emb_delta, pos)` offsets.
+    fn emb_off(&self) -> (usize, usize, usize, usize) {
+        let d = self.d_model;
+        let o_pc = 0;
+        let o_page = o_pc + self.pc_rows * d;
+        let o_delta = o_page + self.page_rows * d;
+        let o_pos = o_delta + self.n_classes * d;
+        (o_pc, o_page, o_delta, o_pos)
+    }
+
+    fn emb_len(&self) -> usize {
+        (self.pc_rows + self.page_rows + self.n_classes + self.seq_len) * self.d_model
+    }
+
+    /// Flat length of one encoder block.
+    fn layer_len(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ff;
+        // ln1(2d) + 4 × (d² weight + d bias) + ln2(2d) + w1/b1 + w2/b2.
+        2 * d + 4 * (d * d + d) + 2 * d + (f * d + f) + (d * f + d)
+    }
+
+    fn layer_off(&self, layer: usize) -> LayerOff {
+        let d = self.d_model;
+        let f = self.d_ff;
+        let mut o = self.emb_len() + layer * self.layer_len();
+        let mut take = |n: usize| {
+            let r = o;
+            o += n;
+            r
+        };
+        let ln1_g = take(d);
+        let ln1_b = take(d);
+        let wq = take(d * d + d); // weight + bias
+        let wk = take(d * d + d);
+        let wv = take(d * d + d);
+        let wo = take(d * d + d);
+        let ln2_g = take(d);
+        let ln2_b = take(d);
+        let w1 = take(f * d + f);
+        let w2 = take(d * f + d);
+        LayerOff { ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, w2 }
+    }
+
+    /// `(lnf_g, lnf_b, out_w, out_b)` offsets.
+    fn tail_off(&self) -> (usize, usize, usize, usize) {
+        let d = self.d_model;
+        let o = self.emb_len() + self.n_layers * self.layer_len();
+        (o, o + d, o + 2 * d, o + 2 * d + self.n_classes * d)
+    }
+
+    fn total_len(&self) -> usize {
+        let (.., o_out_b) = self.tail_off();
+        o_out_b + self.n_classes
+    }
+
+    // ---- accessors --------------------------------------------------
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Output classes including OOV (inherent mirror of the trait
+    /// method, so concrete callers need no trait import).
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    /// The flat parameter vector (tests compare models through this).
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Mutable parameter access — the finite-difference gradient
+    /// checks (`rust/tests/grad_check.rs`) perturb single weights
+    /// through this; it is not part of the serving surface.
+    pub fn params_mut(&mut self) -> &mut [f32] {
+        &mut self.params
+    }
+
+    /// Analytic FLOPs for one window's forward pass (MAC = 2 flops):
+    /// embedding sums, then per block two layer-norms (≈8·D/row), the
+    /// four D×D projections, score+context matmuls (2·S²·D each over
+    /// all heads), softmax (≈5 flops/weight) and the two FFN matmuls
+    /// with tanh-GELU (≈12 flops/unit); finally one layer-norm and the
+    /// class head. The `repro analyze` cost table divides this by the
+    /// native backend's count to measure the paper's
+    /// "orders-of-magnitude cheaper" claim.
+    pub fn flops_per_inference(&self) -> u64 {
+        let s = self.seq_len as u64;
+        let d = self.d_model as u64;
+        let f = self.d_ff as u64;
+        let c = self.n_classes as u64;
+        let h = self.n_heads as u64;
+        let ln_row = 8 * d;
+        let per_layer = 2 * s * ln_row      // LN1 + LN2
+            + 4 * 2 * s * d * d             // q/k/v/o projections
+            + 2 * 2 * s * s * d             // scores + context, all heads
+            + 5 * h * s * s                 // softmax
+            + 2 * 2 * s * d * f             // FFN matmuls
+            + 12 * s * f; // GELU
+        4 * s * d + self.n_layers as u64 * per_layer + ln_row + 2 * c * d
+    }
+
+    // ---- forward ----------------------------------------------------
+
+    fn new_fwd(&self) -> Fwd {
+        let (s, d, f) = (self.seq_len, self.d_model, self.d_ff);
+        let layer = LayerCache {
+            xhat1: vec![0.0; s * d],
+            rstd1: vec![0.0; s],
+            y1: vec![0.0; s * d],
+            q: vec![0.0; s * d],
+            k: vec![0.0; s * d],
+            v: vec![0.0; s * d],
+            attn: vec![0.0; self.n_heads * s * s],
+            ctx: vec![0.0; s * d],
+            xhat2: vec![0.0; s * d],
+            rstd2: vec![0.0; s],
+            y2: vec![0.0; s * d],
+            f1: vec![0.0; s * f],
+            g: vec![0.0; s * f],
+        };
+        Fwd {
+            layers: vec![layer; self.n_layers],
+            x: vec![0.0; s * d],
+            t: vec![0.0; s * d],
+            xhat_f: vec![0.0; d],
+            rstd_f: 0.0,
+            yf: vec![0.0; d],
+            logits: vec![0.0; self.n_classes],
+        }
+    }
+
+    fn new_bwd(&self) -> Bwd {
+        let (s, d, f) = (self.seq_len, self.d_model, self.d_ff);
+        Bwd {
+            dx: vec![0.0; s * d],
+            dy: vec![0.0; s * d],
+            dyf: vec![0.0; d],
+            dq: vec![0.0; s * d],
+            dk: vec![0.0; s * d],
+            dv: vec![0.0; s * d],
+            dctx: vec![0.0; s * d],
+            df1: vec![0.0; s * f],
+            dg: vec![0.0; s * f],
+            da_row: vec![0.0; s],
+        }
+    }
+
+    /// Sum the window's token embeddings and the positional table into
+    /// the `[S×D]` input. Windows shorter than `seq_len` are
+    /// left-padded (pad slots carry only the positional embedding —
+    /// the learned "empty slot" marker); longer ones keep the newest
+    /// tokens, matching the native backend's rule.
+    fn gather(&self, window: &Window, x: &mut [f32]) {
+        let d = self.d_model;
+        debug_assert_eq!(x.len(), self.seq_len * d);
+        x.fill(0.0);
+        let (o_pc, o_page, o_delta, o_pos) = self.emb_off();
+        for r in 0..self.seq_len {
+            let row = &mut x[r * d..(r + 1) * d];
+            for (xv, &e) in row.iter_mut().zip(&self.params[o_pos + r * d..o_pos + (r + 1) * d]) {
+                *xv += e;
+            }
+        }
+        let toks = &window.tokens[window.tokens.len().saturating_sub(self.seq_len)..];
+        let pad = self.seq_len - toks.len();
+        for (i, tok) in toks.iter().enumerate() {
+            let row = &mut x[(pad + i) * d..(pad + i + 1) * d];
+            let pc = (tok.pc_id.max(0) as usize).min(self.pc_rows - 1);
+            let page = (tok.page_id.max(0) as usize).min(self.page_rows - 1);
+            let delta = (tok.delta_id.max(0) as usize).min(self.n_classes - 1);
+            for (xv, &e) in row.iter_mut().zip(&self.params[o_pc + pc * d..][..d]) {
+                *xv += e;
+            }
+            for (xv, &e) in row.iter_mut().zip(&self.params[o_page + page * d..][..d]) {
+                *xv += e;
+            }
+            for (xv, &e) in row.iter_mut().zip(&self.params[o_delta + delta * d..][..d]) {
+                *xv += e;
+            }
+        }
+    }
+
+    /// Full cached forward for one window; `fwd.logits` ends as the
+    /// class logits and every intermediate the backward pass needs is
+    /// cached. Row-local op order is identical to the batched
+    /// inference path, so the two are bit-identical.
+    fn forward(&self, window: &Window, fwd: &mut Fwd) {
+        let (s, d, f) = (self.seq_len, self.d_model, self.d_ff);
+        let hd = self.head_dim();
+        let p = &self.params;
+        self.gather(window, &mut fwd.x);
+        for l in 0..self.n_layers {
+            let o = self.layer_off(l);
+            let c = &mut fwd.layers[l];
+            for r in 0..s {
+                c.rstd1[r] = nn::layer_norm_forward(
+                    &fwd.x[r * d..(r + 1) * d],
+                    &p[o.ln1_g..o.ln1_g + d],
+                    &p[o.ln1_b..o.ln1_b + d],
+                    &mut c.xhat1[r * d..(r + 1) * d],
+                    &mut c.y1[r * d..(r + 1) * d],
+                );
+            }
+            nn::linear_forward_batch(&p[o.wq..][..d * d], &p[o.wq + d * d..][..d], &c.y1, &mut c.q, d, d);
+            nn::linear_forward_batch(&p[o.wk..][..d * d], &p[o.wk + d * d..][..d], &c.y1, &mut c.k, d, d);
+            nn::linear_forward_batch(&p[o.wv..][..d * d], &p[o.wv + d * d..][..d], &c.y1, &mut c.v, d, d);
+            nn::attention_forward(&c.q, &c.k, &c.v, s, self.n_heads, hd, &mut c.attn, &mut c.ctx);
+            nn::linear_forward_batch(
+                &p[o.wo..][..d * d],
+                &p[o.wo + d * d..][..d],
+                &c.ctx,
+                &mut fwd.t,
+                d,
+                d,
+            );
+            for (xv, &tv) in fwd.x.iter_mut().zip(fwd.t.iter()) {
+                *xv += tv;
+            }
+            for r in 0..s {
+                c.rstd2[r] = nn::layer_norm_forward(
+                    &fwd.x[r * d..(r + 1) * d],
+                    &p[o.ln2_g..o.ln2_g + d],
+                    &p[o.ln2_b..o.ln2_b + d],
+                    &mut c.xhat2[r * d..(r + 1) * d],
+                    &mut c.y2[r * d..(r + 1) * d],
+                );
+            }
+            nn::linear_forward_batch(&p[o.w1..][..f * d], &p[o.w1 + f * d..][..f], &c.y2, &mut c.f1, d, f);
+            nn::gelu_forward(&c.f1, &mut c.g);
+            nn::linear_forward_batch(&p[o.w2..][..d * f], &p[o.w2 + d * f..][..d], &c.g, &mut fwd.t, f, d);
+            for (xv, &tv) in fwd.x.iter_mut().zip(fwd.t.iter()) {
+                *xv += tv;
+            }
+        }
+        let (o_lnf_g, o_lnf_b, o_out_w, o_out_b) = self.tail_off();
+        fwd.rstd_f = nn::layer_norm_forward(
+            &fwd.x[(s - 1) * d..s * d],
+            &p[o_lnf_g..o_lnf_g + d],
+            &p[o_lnf_b..o_lnf_b + d],
+            &mut fwd.xhat_f,
+            &mut fwd.yf,
+        );
+        nn::linear_forward(
+            &p[o_out_w..o_out_w + self.n_classes * d],
+            &p[o_out_b..o_out_b + self.n_classes],
+            &fwd.yf,
+            &mut fwd.logits,
+        );
+    }
+
+    /// Logits for one window (sequential reference path; the batched
+    /// path is pinned against this bit-for-bit).
+    pub fn logits_one(&self, window: &Window) -> Vec<f32> {
+        let mut fwd = self.new_fwd();
+        self.forward(window, &mut fwd);
+        fwd.logits
+    }
+
+    /// Forward one window and also return its attention maps,
+    /// flattened `[n_layers × n_heads × seq × seq]` with row
+    /// `((l·H + h)·S + i)·S ..` = query slot `i`'s distribution over
+    /// key slots. The introspection hook `repro analyze` builds its
+    /// per-head entropy and positional-locality profiles from.
+    pub fn attention_one(&self, window: &Window) -> (Vec<f32>, Vec<f32>) {
+        let mut fwd = self.new_fwd();
+        self.forward(window, &mut fwd);
+        let mut maps = Vec::with_capacity(self.n_layers * self.n_heads * self.seq_len * self.seq_len);
+        for c in &fwd.layers {
+            maps.extend_from_slice(&c.attn);
+        }
+        (fwd.logits, maps)
+    }
+
+    /// Batched inference: gathers every window into one `[n·S × D]`
+    /// activation matrix and runs each projection/FFN layer as a
+    /// single batched pass over all windows
+    /// ([`nn::linear_forward_batch`]); attention stays window-local by
+    /// construction. Every op is row-local with the same accumulation
+    /// order as the sequential path, so the flat `[n × n_classes]`
+    /// result is **bit-identical** to concatenating
+    /// [`TransformerBackend::logits_one`] over the batch (pinned in
+    /// `rust/tests/transformer_backend.rs`).
+    pub fn logits_batch(&self, windows: &[Window]) -> Vec<f32> {
+        let n = windows.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let (s, d, f) = (self.seq_len, self.d_model, self.d_ff);
+        let hd = self.head_dim();
+        let rows = n * s;
+        let p = &self.params;
+        let mut x = vec![0.0f32; rows * d];
+        for (w, xw) in windows.iter().zip(x.chunks_exact_mut(s * d)) {
+            self.gather(w, xw);
+        }
+        let mut xhat = vec![0.0f32; d];
+        let mut y = vec![0.0f32; rows * d];
+        let mut q = vec![0.0f32; rows * d];
+        let mut k = vec![0.0f32; rows * d];
+        let mut v = vec![0.0f32; rows * d];
+        let mut attn = vec![0.0f32; self.n_heads * s * s];
+        let mut ctx = vec![0.0f32; rows * d];
+        let mut t = vec![0.0f32; rows * d];
+        let mut f1 = vec![0.0f32; rows * f];
+        let mut g = vec![0.0f32; rows * f];
+        for l in 0..self.n_layers {
+            let o = self.layer_off(l);
+            for r in 0..rows {
+                nn::layer_norm_forward(
+                    &x[r * d..(r + 1) * d],
+                    &p[o.ln1_g..o.ln1_g + d],
+                    &p[o.ln1_b..o.ln1_b + d],
+                    &mut xhat,
+                    &mut y[r * d..(r + 1) * d],
+                );
+            }
+            nn::linear_forward_batch(&p[o.wq..][..d * d], &p[o.wq + d * d..][..d], &y, &mut q, d, d);
+            nn::linear_forward_batch(&p[o.wk..][..d * d], &p[o.wk + d * d..][..d], &y, &mut k, d, d);
+            nn::linear_forward_batch(&p[o.wv..][..d * d], &p[o.wv + d * d..][..d], &y, &mut v, d, d);
+            for wi in 0..n {
+                let span = wi * s * d..(wi + 1) * s * d;
+                nn::attention_forward(
+                    &q[span.clone()],
+                    &k[span.clone()],
+                    &v[span.clone()],
+                    s,
+                    self.n_heads,
+                    hd,
+                    &mut attn,
+                    &mut ctx[span],
+                );
+            }
+            nn::linear_forward_batch(&p[o.wo..][..d * d], &p[o.wo + d * d..][..d], &ctx, &mut t, d, d);
+            for (xv, &tv) in x.iter_mut().zip(t.iter()) {
+                *xv += tv;
+            }
+            for r in 0..rows {
+                nn::layer_norm_forward(
+                    &x[r * d..(r + 1) * d],
+                    &p[o.ln2_g..o.ln2_g + d],
+                    &p[o.ln2_b..o.ln2_b + d],
+                    &mut xhat,
+                    &mut y[r * d..(r + 1) * d],
+                );
+            }
+            nn::linear_forward_batch(&p[o.w1..][..f * d], &p[o.w1 + f * d..][..f], &y, &mut f1, d, f);
+            nn::gelu_forward(&f1, &mut g);
+            nn::linear_forward_batch(&p[o.w2..][..d * f], &p[o.w2 + d * f..][..d], &g, &mut t, f, d);
+            for (xv, &tv) in x.iter_mut().zip(t.iter()) {
+                *xv += tv;
+            }
+        }
+        let (o_lnf_g, o_lnf_b, o_out_w, o_out_b) = self.tail_off();
+        let c_out = self.n_classes;
+        let mut yf = vec![0.0f32; d];
+        let mut logits = vec![0.0f32; n * c_out];
+        for wi in 0..n {
+            let last = &x[(wi * s + s - 1) * d..(wi * s + s) * d];
+            nn::layer_norm_forward(
+                last,
+                &p[o_lnf_g..o_lnf_g + d],
+                &p[o_lnf_b..o_lnf_b + d],
+                &mut xhat,
+                &mut yf,
+            );
+            nn::linear_forward(
+                &p[o_out_w..o_out_w + c_out * d],
+                &p[o_out_b..o_out_b + c_out],
+                &yf,
+                &mut logits[wi * c_out..(wi + 1) * c_out],
+            );
+        }
+        logits
+    }
+
+    /// First maximum wins — the tie-break shared with the native
+    /// backend, identical on sequential and batched paths.
+    fn argmax(z: &[f32]) -> ClassId {
+        let mut best = 0usize;
+        for (i, &v) in z.iter().enumerate() {
+            if v > z[best] {
+                best = i;
+            }
+        }
+        best as ClassId
+    }
+
+    /// Top-1 class for one window.
+    pub fn predict_one(&self, window: &Window) -> ClassId {
+        Self::argmax(&self.logits_one(window))
+    }
+
+    /// Top-1 class per window through the batched forward.
+    pub fn predict_batch(&self, windows: &[Window]) -> Vec<ClassId> {
+        let zs = self.logits_batch(windows);
+        zs.chunks_exact(self.n_classes).map(Self::argmax).collect()
+    }
+
+    /// Fraction of `data` whose top-1 prediction matches the label.
+    pub fn top1_accuracy(&self, data: &[LabelledWindow]) -> f64 {
+        if data.is_empty() {
+            return 0.0;
+        }
+        let ws: Vec<Window> = data.iter().map(|lw| lw.window.clone()).collect();
+        let hits = self
+            .predict_batch(&ws)
+            .iter()
+            .zip(data)
+            .filter(|(p, lw)| **p == lw.label.max(0) as ClassId)
+            .count();
+        hits as f64 / data.len() as f64
+    }
+
+    // ---- backward / training ---------------------------------------
+
+    /// Mean cross-entropy over `batch` and the full flat gradient —
+    /// the quantity `rust/tests/grad_check.rs` pins against central
+    /// differences. Does **not** update parameters.
+    pub fn loss_and_grad(&self, batch: &[LabelledWindow]) -> (f32, Vec<f32>) {
+        let mut grads = vec![0.0f32; self.params.len()];
+        if batch.is_empty() {
+            return (0.0, grads);
+        }
+        let mut fwd = self.new_fwd();
+        let mut bwd = self.new_bwd();
+        let mut loss = 0.0f32;
+        let mut dlogits = vec![0.0f32; self.n_classes];
+        for lw in batch {
+            self.forward(&lw.window, &mut fwd);
+            dlogits.copy_from_slice(&fwd.logits);
+            nn::softmax(&mut dlogits);
+            let label = (lw.label.max(0) as usize).min(self.n_classes - 1);
+            loss += nn::cross_entropy_backward(&mut dlogits, label);
+            self.backward(&lw.window, &fwd, &dlogits, &mut bwd, &mut grads);
+        }
+        let inv = 1.0 / batch.len() as f32;
+        for g in &mut grads {
+            *g *= inv;
+        }
+        (loss * inv, grads)
+    }
+
+    /// One optimizer step over `batch`; returns the mean cross-entropy
+    /// loss *before* the update.
+    pub fn train_batch(&mut self, batch: &[LabelledWindow]) -> f32 {
+        if batch.is_empty() {
+            return 0.0;
+        }
+        let (loss, grads) = self.loss_and_grad(batch);
+        self.opt.step(&mut self.params, &grads);
+        self.train_steps += 1;
+        loss
+    }
+
+    /// Accumulate one sample's parameter gradients given the cached
+    /// forward (`fwd`) and the logits gradient `p − onehot(label)`.
+    fn backward(&self, window: &Window, fwd: &Fwd, dlogits: &[f32], bwd: &mut Bwd, grads: &mut [f32]) {
+        let (s, d, f) = (self.seq_len, self.d_model, self.d_ff);
+        let hd = self.head_dim();
+        let c_out = self.n_classes;
+        let p = &self.params;
+        let (o_lnf_g, _, o_out_w, _) = self.tail_off();
+        bwd.dx.fill(0.0);
+        bwd.dyf.fill(0.0);
+        // Class head.
+        {
+            let (gw, rest) = grads[o_out_w..].split_at_mut(c_out * d);
+            nn::linear_backward(
+                &p[o_out_w..o_out_w + c_out * d],
+                &fwd.yf,
+                dlogits,
+                gw,
+                &mut rest[..c_out],
+                Some(&mut bwd.dyf),
+            );
+        }
+        // Final LN feeds only the last slot.
+        {
+            let (gg, rest) = grads[o_lnf_g..].split_at_mut(d);
+            nn::layer_norm_backward(
+                &bwd.dyf,
+                &p[o_lnf_g..o_lnf_g + d],
+                &fwd.xhat_f,
+                fwd.rstd_f,
+                gg,
+                &mut rest[..d],
+                &mut bwd.dx[(s - 1) * d..s * d],
+            );
+        }
+        for l in (0..self.n_layers).rev() {
+            let o = self.layer_off(l);
+            let c = &fwd.layers[l];
+            // FFN half: x_out = x_in + W2·gelu(W1·LN2(x_in)+b1)+b2 —
+            // the residual passes dx through; the FFN path adds to it.
+            bwd.dg.fill(0.0);
+            {
+                let (gw, rest) = grads[o.w2..].split_at_mut(d * f);
+                for r in 0..s {
+                    nn::linear_backward(
+                        &p[o.w2..][..d * f],
+                        &c.g[r * f..(r + 1) * f],
+                        &bwd.dx[r * d..(r + 1) * d],
+                        gw,
+                        &mut rest[..d],
+                        Some(&mut bwd.dg[r * f..(r + 1) * f]),
+                    );
+                }
+            }
+            bwd.df1.fill(0.0);
+            nn::gelu_backward(&c.f1, &bwd.dg, &mut bwd.df1);
+            bwd.dy.fill(0.0);
+            {
+                let (gw, rest) = grads[o.w1..].split_at_mut(f * d);
+                for r in 0..s {
+                    nn::linear_backward(
+                        &p[o.w1..][..f * d],
+                        &c.y2[r * d..(r + 1) * d],
+                        &bwd.df1[r * f..(r + 1) * f],
+                        gw,
+                        &mut rest[..f],
+                        Some(&mut bwd.dy[r * d..(r + 1) * d]),
+                    );
+                }
+            }
+            {
+                let (gg, rest) = grads[o.ln2_g..].split_at_mut(d);
+                for r in 0..s {
+                    nn::layer_norm_backward(
+                        &bwd.dy[r * d..(r + 1) * d],
+                        &p[o.ln2_g..o.ln2_g + d],
+                        &c.xhat2[r * d..(r + 1) * d],
+                        c.rstd2[r],
+                        gg,
+                        &mut rest[..d],
+                        &mut bwd.dx[r * d..(r + 1) * d],
+                    );
+                }
+            }
+            // Attention half: x_out = x_in + Wo·ctx + bo.
+            bwd.dctx.fill(0.0);
+            {
+                let (gw, rest) = grads[o.wo..].split_at_mut(d * d);
+                for r in 0..s {
+                    nn::linear_backward(
+                        &p[o.wo..][..d * d],
+                        &c.ctx[r * d..(r + 1) * d],
+                        &bwd.dx[r * d..(r + 1) * d],
+                        gw,
+                        &mut rest[..d],
+                        Some(&mut bwd.dctx[r * d..(r + 1) * d]),
+                    );
+                }
+            }
+            bwd.dq.fill(0.0);
+            bwd.dk.fill(0.0);
+            bwd.dv.fill(0.0);
+            nn::attention_backward(
+                &c.q,
+                &c.k,
+                &c.v,
+                &c.attn,
+                &bwd.dctx,
+                s,
+                self.n_heads,
+                hd,
+                &mut bwd.dq,
+                &mut bwd.dk,
+                &mut bwd.dv,
+                &mut bwd.da_row,
+            );
+            bwd.dy.fill(0.0);
+            for which in 0..3 {
+                let w_off = match which {
+                    0 => o.wq,
+                    1 => o.wk,
+                    _ => o.wv,
+                };
+                let (gw, rest) = grads[w_off..].split_at_mut(d * d);
+                for r in 0..s {
+                    let dsrc = match which {
+                        0 => &bwd.dq[r * d..(r + 1) * d],
+                        1 => &bwd.dk[r * d..(r + 1) * d],
+                        _ => &bwd.dv[r * d..(r + 1) * d],
+                    };
+                    nn::linear_backward(
+                        &p[w_off..][..d * d],
+                        &c.y1[r * d..(r + 1) * d],
+                        dsrc,
+                        gw,
+                        &mut rest[..d],
+                        Some(&mut bwd.dy[r * d..(r + 1) * d]),
+                    );
+                }
+            }
+            {
+                let (gg, rest) = grads[o.ln1_g..].split_at_mut(d);
+                for r in 0..s {
+                    nn::layer_norm_backward(
+                        &bwd.dy[r * d..(r + 1) * d],
+                        &p[o.ln1_g..o.ln1_g + d],
+                        &c.xhat1[r * d..(r + 1) * d],
+                        c.rstd1[r],
+                        gg,
+                        &mut rest[..d],
+                        &mut bwd.dx[r * d..(r + 1) * d],
+                    );
+                }
+            }
+        }
+        // Scatter into the embedding tables and the positional table
+        // (every slot carries the positional embedding; only real
+        // tokens carry table rows — mirroring `gather`).
+        let (o_pc, o_page, o_delta, o_pos) = self.emb_off();
+        for r in 0..s {
+            let dxr = &bwd.dx[r * d..(r + 1) * d];
+            for (g, &x) in grads[o_pos + r * d..o_pos + (r + 1) * d].iter_mut().zip(dxr) {
+                *g += x;
+            }
+        }
+        let toks = &window.tokens[window.tokens.len().saturating_sub(s)..];
+        let pad = s - toks.len();
+        for (i, tok) in toks.iter().enumerate() {
+            let dxr = &bwd.dx[(pad + i) * d..(pad + i + 1) * d];
+            let pc = (tok.pc_id.max(0) as usize).min(self.pc_rows - 1);
+            let page = (tok.page_id.max(0) as usize).min(self.page_rows - 1);
+            let delta = (tok.delta_id.max(0) as usize).min(self.n_classes - 1);
+            for (g, &x) in grads[o_pc + pc * d..][..d].iter_mut().zip(dxr) {
+                *g += x;
+            }
+            for (g, &x) in grads[o_page + page * d..][..d].iter_mut().zip(dxr) {
+                *g += x;
+            }
+            for (g, &x) in grads[o_delta + delta * d..][..d].iter_mut().zip(dxr) {
+                *g += x;
+            }
+        }
+    }
+
+    // ---- save / load ------------------------------------------------
+
+    /// `(name, rows, cols, offset)` for every trainable tensor, in
+    /// flat-vector order. 1-D tensors use `rows == 1`.
+    fn tensor_layout(&self) -> Vec<(String, usize, usize, usize)> {
+        let d = self.d_model;
+        let f = self.d_ff;
+        let (o_pc, o_page, o_delta, o_pos) = self.emb_off();
+        let mut out = vec![
+            ("emb_pc".to_string(), self.pc_rows, d, o_pc),
+            ("emb_page".to_string(), self.page_rows, d, o_page),
+            ("emb_delta".to_string(), self.n_classes, d, o_delta),
+            ("pos".to_string(), self.seq_len, d, o_pos),
+        ];
+        for l in 0..self.n_layers {
+            let o = self.layer_off(l);
+            let pre = format!("l{l}.");
+            out.push((format!("{pre}ln1_g"), 1, d, o.ln1_g));
+            out.push((format!("{pre}ln1_b"), 1, d, o.ln1_b));
+            for (name, off, rows, cols) in [
+                ("wq", o.wq, d, d),
+                ("wk", o.wk, d, d),
+                ("wv", o.wv, d, d),
+                ("wo", o.wo, d, d),
+            ] {
+                out.push((format!("{pre}{name}"), rows, cols, off));
+                out.push((format!("{pre}b{}", &name[1..]), 1, d, off + rows * cols));
+            }
+            out.push((format!("{pre}ln2_g"), 1, d, o.ln2_g));
+            out.push((format!("{pre}ln2_b"), 1, d, o.ln2_b));
+            out.push((format!("{pre}w1"), f, d, o.w1));
+            out.push((format!("{pre}b1"), 1, f, o.w1 + f * d));
+            out.push((format!("{pre}w2"), d, f, o.w2));
+            out.push((format!("{pre}b2"), 1, d, o.w2 + d * f));
+        }
+        let (o_lnf_g, o_lnf_b, o_out_w, o_out_b) = self.tail_off();
+        out.push(("lnf_g".to_string(), 1, d, o_lnf_g));
+        out.push(("lnf_b".to_string(), 1, d, o_lnf_b));
+        out.push(("out_w".to_string(), self.n_classes, d, o_out_w));
+        out.push(("out_b".to_string(), 1, self.n_classes, o_out_b));
+        out
+    }
+
+    /// Write the weights as a tensor store (`dtype` f32, or int4 when
+    /// `int4` — the paper's Table 7 storage mode, lossy; stored as
+    /// per-tensor power-of-two-scaled int4 (dtype 3) so zero-centred
+    /// trained weights survive — see [`crate::predictor::quant`]). A
+    /// small f32 `meta` tensor records
+    /// `[n_heads, n_layers, d_ff, seq_len]` — the facts weight dims
+    /// alone can't recover — and is never quantized.
+    pub fn save(&self, path: &Path, int4: bool) -> Result<()> {
+        let dtype = if int4 { 3u8 } else { 0u8 };
+        let mut tensors: Vec<(String, Vec<usize>, Vec<f32>, u8)> = self
+            .tensor_layout()
+            .into_iter()
+            .map(|(name, rows, cols, off)| {
+                let dims = if rows == 1 { vec![cols] } else { vec![rows, cols] };
+                (name, dims, self.params[off..off + rows * cols].to_vec(), dtype)
+            })
+            .collect();
+        tensors.push((
+            "meta".to_string(),
+            vec![META_LEN],
+            vec![
+                self.n_heads as f32,
+                self.n_layers as f32,
+                self.d_ff as f32,
+                self.seq_len as f32,
+            ],
+            0,
+        ));
+        write_store(path, &tensors)
+    }
+
+    /// Load a model saved by [`TransformerBackend::save`]; shapes come
+    /// from the tensor dims plus the `meta` tensor, optimizer state
+    /// starts fresh from `cfg` (only `optimizer`/`lr` are used).
+    pub fn load(path: &Path, cfg: &TransformerConfig) -> Result<Self> {
+        let store = TensorStore::load(path)?;
+        let find = |name: &str| {
+            store
+                .tensors
+                .iter()
+                .find(|t| t.name == name)
+                .ok_or_else(|| anyhow::anyhow!("{}: missing tensor '{name}'", path.display()))
+        };
+        let meta = find("meta")?;
+        if meta.numel() != META_LEN {
+            bail!("{}: meta tensor must have {META_LEN} entries", path.display());
+        }
+        let n_heads = meta.data[0] as usize;
+        let n_layers = meta.data[1] as usize;
+        let d_ff = meta.data[2] as usize;
+        let seq_len = meta.data[3] as usize;
+        let emb_pc = find("emb_pc")?;
+        let emb_page = find("emb_page")?;
+        let emb_delta = find("emb_delta")?;
+        let dims2 = |t: &crate::runtime::params::NamedTensor| -> Result<(usize, usize)> {
+            match t.dims[..] {
+                [r, c] => Ok((r, c)),
+                _ => bail!("{}: tensor '{}' must be 2-D", path.display(), t.name),
+            }
+        };
+        let (pc_rows, d_model) = dims2(emb_pc)?;
+        let (page_rows, d2) = dims2(emb_page)?;
+        let (n_classes, d3) = dims2(emb_delta)?;
+        if d2 != d_model || d3 != d_model {
+            bail!("{}: embedding widths disagree", path.display());
+        }
+        if n_heads == 0 || n_layers == 0 || d_ff == 0 || seq_len == 0 {
+            bail!("{}: corrupt meta tensor {:?}", path.display(), meta.data);
+        }
+        if d_model % n_heads != 0 {
+            bail!("{}: d_model {d_model} not divisible by n_heads {n_heads}", path.display());
+        }
+        let shape_cfg = TransformerConfig {
+            d_model,
+            n_heads,
+            n_layers,
+            d_ff,
+            lr: cfg.lr,
+            optimizer: cfg.optimizer,
+            seed: cfg.seed,
+        };
+        let mut me = Self::with_shape(seq_len, n_classes, pc_rows, page_rows, &shape_cfg);
+        for (name, rows, cols, off) in me.tensor_layout() {
+            let t = find(&name)?;
+            if t.numel() != rows * cols {
+                bail!(
+                    "{}: tensor '{name}' has {} values, expected {}",
+                    path.display(),
+                    t.numel(),
+                    rows * cols
+                );
+            }
+            me.params[off..off + rows * cols].copy_from_slice(&t.data);
+        }
+        Ok(me)
+    }
+}
+
+impl PredictorBackend for TransformerBackend {
+    fn name(&self) -> &'static str {
+        "transformer"
+    }
+
+    fn predict(&mut self, windows: &[Window]) -> Vec<ClassId> {
+        self.predict_batch(windows)
+    }
+
+    fn finetune(&mut self, batch: &[LabelledWindow]) -> Option<f64> {
+        Some(self.train_batch(batch) as f64)
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::FeatTok;
+
+    fn tiny_cfg() -> TransformerConfig {
+        TransformerConfig {
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 16,
+            lr: 0.02,
+            ..Default::default()
+        }
+    }
+
+    fn window(deltas: &[i32]) -> Window {
+        Window {
+            tokens: deltas
+                .iter()
+                .map(|&d| FeatTok { pc_id: 0, page_id: 0, delta_id: d })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn shapes_and_param_count() {
+        let m = TransformerBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        let d = 8;
+        let f = 16;
+        let emb = (5 + 7 + 3 + 4) * d;
+        let layer = 2 * d + 4 * (d * d + d) + 2 * d + (f * d + f) + (d * f + d);
+        let tail = 2 * d + 3 * d + 3;
+        assert_eq!(m.n_params(), emb + 2 * layer + tail);
+        assert_eq!(m.seq_len(), 4);
+        assert_eq!(m.n_classes(), 3);
+        assert_eq!(m.n_heads(), 2);
+        // Layout tensors tile the whole vector exactly once.
+        let total: usize = m.tensor_layout().iter().map(|(_, r, c, _)| r * c).sum();
+        assert_eq!(total, m.n_params());
+        let mut offs: Vec<(usize, usize)> =
+            m.tensor_layout().iter().map(|&(_, r, c, o)| (o, r * c)).collect();
+        offs.sort();
+        let mut cursor = 0;
+        for (o, len) in offs {
+            assert_eq!(o, cursor, "layout must be gap-free");
+            cursor += len;
+        }
+        assert_eq!(cursor, m.n_params());
+    }
+
+    #[test]
+    fn same_seed_same_init() {
+        let a = TransformerBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        let b = TransformerBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        assert_eq!(a.params(), b.params());
+    }
+
+    #[test]
+    fn training_reduces_loss_on_constant_task() {
+        let mut m = TransformerBackend::with_shape(4, 3, 2, 2, &tiny_cfg());
+        let batch: Vec<LabelledWindow> = (0..8)
+            .map(|_| LabelledWindow { window: window(&[1, 1, 1, 1]), label: 1 })
+            .collect();
+        let first = m.train_batch(&batch);
+        for _ in 0..60 {
+            m.train_batch(&batch);
+        }
+        let last = m.train_batch(&batch);
+        assert!(last < first, "loss {first} → {last}");
+        assert_eq!(m.predict_one(&window(&[1, 1, 1, 1])), 1);
+        assert_eq!(m.train_steps, 62);
+    }
+
+    #[test]
+    fn short_and_long_windows_handled() {
+        let m = TransformerBackend::with_shape(4, 3, 2, 2, &tiny_cfg());
+        let c = m.predict_one(&window(&[1]));
+        assert!((c as usize) < 3);
+        // Over-long windows keep the newest tokens.
+        let c2 = m.predict_one(&window(&[0, 0, 0, 2, 2, 2, 2, 2]));
+        assert_eq!(c2, m.predict_one(&window(&[2, 2, 2, 2])));
+    }
+
+    #[test]
+    fn out_of_range_ids_are_clamped() {
+        let m = TransformerBackend::with_shape(4, 3, 2, 2, &tiny_cfg());
+        let w = Window { tokens: vec![FeatTok { pc_id: -7, page_id: 9999, delta_id: 9999 }; 4] };
+        assert!((m.predict_one(&w) as usize) < 3);
+    }
+
+    #[test]
+    fn batched_forward_bit_identical_to_sequential() {
+        let mut m = TransformerBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        let batch: Vec<LabelledWindow> = (0..6)
+            .map(|i| LabelledWindow { window: window(&[i % 3, 1, 2, 0]), label: i % 3 })
+            .collect();
+        for _ in 0..5 {
+            m.train_batch(&batch);
+        }
+        let windows = vec![
+            window(&[1, 1, 1, 1]),
+            window(&[2]),
+            window(&[0, 1, 2, 0, 1, 2]),
+            Window { tokens: vec![FeatTok { pc_id: -3, page_id: 999, delta_id: 999 }; 4] },
+        ];
+        let batched = m.logits_batch(&windows);
+        let sequential: Vec<f32> = windows.iter().flat_map(|w| m.logits_one(w)).collect();
+        assert_eq!(batched, sequential, "batched forward diverged from sequential");
+        let classes = m.predict_batch(&windows);
+        let one_by_one: Vec<ClassId> = windows.iter().map(|w| m.predict_one(w)).collect();
+        assert_eq!(classes, one_by_one);
+        assert!(m.logits_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn attention_maps_are_distributions() {
+        let m = TransformerBackend::with_shape(4, 3, 2, 2, &tiny_cfg());
+        let (logits, maps) = m.attention_one(&window(&[1, 2, 0, 1]));
+        assert_eq!(logits.len(), 3);
+        assert_eq!(maps.len(), m.n_layers() * m.n_heads() * 4 * 4);
+        for row in maps.chunks_exact(4) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-4, "rows sum to 1: {row:?}");
+            assert!(row.iter().all(|&w| (0.0..=1.0).contains(&w)));
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_params() {
+        let dir = crate::util::TestDir::new();
+        let p = dir.file("m.transformer.params.bin");
+        let mut m = TransformerBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        let batch: Vec<LabelledWindow> =
+            (0..4).map(|i| LabelledWindow { window: window(&[i, 1, 2, 0]), label: 2 }).collect();
+        m.train_batch(&batch);
+        m.save(&p, false).unwrap();
+        let back = TransformerBackend::load(&p, &tiny_cfg()).unwrap();
+        assert_eq!(back.params(), m.params());
+        assert_eq!(back.seq_len(), 4);
+        assert_eq!(back.n_heads(), 2);
+        assert_eq!(back.n_layers(), 2);
+    }
+
+    #[test]
+    fn load_rejects_missing_tensor() {
+        let dir = crate::util::TestDir::new();
+        let p = dir.file("bad.bin");
+        write_store(
+            &p,
+            &[("meta".into(), vec![4], vec![2.0, 2.0, 16.0, 4.0], 0)],
+        )
+        .unwrap();
+        let err = TransformerBackend::load(&p, &tiny_cfg()).unwrap_err().to_string();
+        assert!(err.contains("emb_pc"), "{err}");
+    }
+
+    #[test]
+    fn flops_count_is_positive_and_scales_with_layers() {
+        let one = TransformerBackend::with_shape(
+            6,
+            4,
+            2,
+            2,
+            &TransformerConfig { n_layers: 1, ..tiny_cfg() },
+        );
+        let two = TransformerBackend::with_shape(6, 4, 2, 2, &tiny_cfg());
+        assert!(one.flops_per_inference() > 0);
+        assert!(two.flops_per_inference() > one.flops_per_inference());
+    }
+
+    #[test]
+    fn finetune_returns_real_loss() {
+        let mut m = TransformerBackend::with_shape(4, 3, 2, 2, &tiny_cfg());
+        let batch = vec![LabelledWindow { window: window(&[0, 1, 2, 0]), label: 0 }];
+        let loss = m.finetune(&batch).expect("transformer supports learning");
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(m.train_steps, 1);
+    }
+}

@@ -8,16 +8,20 @@
 //! count   u32 le
 //! per tensor:
 //!   name_len u16 le, name bytes (utf-8)
-//!   dtype    u8   (0 = f32, 1 = i32, 2 = int4-packed-f32)
+//!   dtype    u8   (0 = f32, 1 = i32, 2 = int4-packed-f32,
+//!                  3 = scaled-int4: f32 le scale, then nibbles)
 //!   ndim     u8
 //!   dims     u32 le × ndim
 //!   nbytes   u64 le
 //!   data     nbytes
 //! ```
 //!
-//! int4 tensors (dtype 2) store two 4-bit codes per byte over the
-//! paper's [-8, 8] clamp range and are dequantized to f32 at load —
-//! the Table 7 storage story, executed for real.
+//! int4 tensors store two 4-bit codes per byte and are dequantized to
+//! f32 at load — the Table 7 storage story, executed for real. dtype 2
+//! is the python/aot fixed [-8, 8] grid; dtype 3 (what the Rust
+//! backends' `save(int4)` writes) prefixes a per-tensor power-of-two
+//! scale so zero-centred trained weights survive — see
+//! [`crate::predictor::quant`].
 
 use crate::predictor::quant;
 use anyhow::{bail, Result};
@@ -111,6 +115,13 @@ impl TensorStore {
                     }
                     quant::unpack(&raw, numel)
                 }
+                3 => {
+                    if raw.len() < 4 + numel.div_ceil(2) {
+                        bail!("{name}: scaled-int4 buffer too small");
+                    }
+                    let scale = f32::from_le_bytes(raw[0..4].try_into().unwrap());
+                    quant::unpack_scaled(&raw[4..], scale, numel)
+                }
                 d => bail!("{name}: unknown dtype {d}"),
             };
             tensors.push(NamedTensor { name, dims, data, stored_dtype: dtype, stored_bytes: nbytes });
@@ -146,6 +157,10 @@ pub fn write_store(path: &Path, tensors: &[(String, Vec<usize>, Vec<f32>, u8)]) 
         let raw: Vec<u8> = match dtype {
             0 => data.iter().flat_map(|v| v.to_le_bytes()).collect(),
             2 => quant::pack(data),
+            3 => {
+                let (scale, packed) = quant::pack_scaled(data);
+                scale.to_le_bytes().into_iter().chain(packed).collect()
+            }
             d => bail!("writer: unsupported dtype {d}"),
         };
         f.write_all(&(raw.len() as u64).to_le_bytes())?;
@@ -182,6 +197,23 @@ mod tests {
         assert_eq!(t.stored_bytes, 3, "5 nibbles → 3 bytes");
         for (a, b) in data.iter().zip(&t.data) {
             assert!((a - b).abs() <= quant::max_quant_error() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn scaled_int4_preserves_zero_and_small_weights() {
+        let dir = crate::util::TestDir::new();
+        let p = dir.file("q3.bin");
+        // Zero-centred trained-weight shapes the fixed grid destroys.
+        let data = vec![0.0f32, 0.07, -0.03, 1.0, -0.52];
+        write_store(&p, &[("q".into(), vec![5], data.clone(), 3)]).unwrap();
+        let s = TensorStore::load(&p).unwrap();
+        let t = &s.tensors[0];
+        assert_eq!(t.stored_dtype, 3);
+        assert_eq!(t.stored_bytes, 4 + 3, "f32 scale + 5 nibbles → 7 bytes");
+        assert_eq!(t.data[0], 0.0, "zero must survive scaled int4");
+        for (a, b) in data.iter().zip(&t.data) {
+            assert!((a - b).abs() <= 1.0 / 7.0 + 1e-6, "v={a} back={b}");
         }
     }
 

@@ -135,16 +135,49 @@ fn save_load_roundtrip_predicts_identically() {
     assert_eq!(back.predict(&ws), model.predict(&ws), "loaded model must predict identically");
 }
 
+/// ISSUE 5 satellite: the int4 path is wired into real use. Saving a
+/// trained native model quantized, loading it back, and re-saving must
+/// be *idempotent* (quantization is a projection), and the quantized
+/// model still answers with valid classes.
+#[test]
+fn int4_save_load_roundtrip_is_idempotent() {
+    let (vocab, windows) = periodic_stride_corpus(150);
+    let model = trained_model(&windows, &vocab);
+    let dir = uvm_prefetch::util::TestDir::new();
+    let (p1, p2) = (dir.file("m.int4.bin"), dir.file("m2.int4.bin"));
+    model.save(&p1, true).unwrap();
+    let q1 = NativeBackend::load(&p1, &NativeConfig::default()).unwrap();
+    q1.save(&p2, true).unwrap();
+    let q2 = NativeBackend::load(&p2, &NativeConfig::default()).unwrap();
+    assert_eq!(q1.params(), q2.params(), "int4 round trip must be idempotent");
+    let ws: Vec<Window> = windows.iter().map(|lw| lw.window.clone()).collect();
+    assert_eq!(q1.predict_batch(&ws), q2.predict_batch(&ws));
+    // Per-tensor scaled int4: zero stays exact and the error is
+    // bounded by absmax/7 over the whole vector (a fortiori per
+    // tensor, whose absmax is no larger).
+    let absmax = model.params().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    for (a, b) in model.params().iter().zip(q1.params()) {
+        assert!(
+            (a - b).abs() <= absmax / 7.0 + 1e-6,
+            "quant error {} for weight {a} (absmax {absmax})",
+            (a - b).abs()
+        );
+        if *a == 0.0 {
+            assert_eq!(*b, 0.0, "zero weights must survive quantization");
+        }
+    }
+}
+
 #[test]
 fn backend_cli_axis_validates_names() {
     let mut opts = RunOptions::default();
-    for ok in ["", "stride", "native", "pjrt"] {
+    for ok in ["", "stride", "native", "transformer", "pjrt"] {
         opts.backend = ok.to_string();
         assert!(opts.backend_kind().is_ok(), "'{ok}' must parse");
     }
-    opts.backend = "transformer".to_string();
+    opts.backend = "lstm".to_string();
     let err = opts.backend_kind().unwrap_err().to_string();
-    assert!(err.contains("stride | native | pjrt"), "{err}");
+    assert!(err.contains("stride | native | transformer | pjrt"), "{err}");
 
     // The kind also round-trips through the runtime-config JSON.
     let kind = PredictorBackendKind::Native { artifacts: "m".into(), model: "x".into() };

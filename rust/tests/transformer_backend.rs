@@ -1,0 +1,217 @@
+//! Integration suite for the Transformer reference backend (ISSUE 5
+//! acceptance): the transformer reaches held-out top-1 ≥ the native
+//! backend's on the periodic-stride corpus, same-seed training is
+//! byte-deterministic, batched inference is bit-identical to
+//! sequential, and checkpoints round-trip through the tensor store —
+//! f32 bit-exact, int4 idempotent.
+
+use uvm_prefetch::predictor::engine::featurize_window;
+use uvm_prefetch::predictor::nn::OptKind;
+use uvm_prefetch::predictor::{
+    DeltaVocab, HistoryToken, LabelledWindow, NativeBackend, NativeConfig, TransformerBackend,
+    TransformerConfig, Window,
+};
+
+const HIST: usize = 6;
+
+/// Same corpus as `rust/tests/native_backend.rs`: a page walk whose
+/// delta sequence cycles `1, 1, 3` — fully predictable from the window
+/// tail, but capped at 2/3 top-1 for the frequency vote.
+fn periodic_stride_corpus(n_tokens: usize) -> (DeltaVocab, Vec<LabelledWindow>) {
+    let vocab = DeltaVocab::synthetic(vec![1, 3], HIST);
+    let pattern = [1i64, 1, 3];
+    let mut page = 0u64;
+    let mut toks = Vec::with_capacity(n_tokens);
+    for i in 0..n_tokens {
+        let delta = pattern[i % pattern.len()];
+        page = (page as i64 + delta) as u64;
+        toks.push(HistoryToken { pc: 0x40, page, delta });
+    }
+    let mut windows = Vec::new();
+    for i in 0..toks.len() - HIST {
+        windows.push(LabelledWindow {
+            window: featurize_window(&vocab, &toks[i..i + HIST]),
+            label: vocab.encode_delta(toks[i + HIST].delta) as i32,
+        });
+    }
+    (vocab, windows)
+}
+
+fn transformer_cfg() -> TransformerConfig {
+    TransformerConfig {
+        d_model: 16,
+        n_heads: 4,
+        n_layers: 1,
+        d_ff: 32,
+        lr: 0.01,
+        optimizer: OptKind::Adam,
+        seed: 0x5eed,
+    }
+}
+
+/// Train for `epochs` passes of 16-window mini-batches.
+fn train_transformer(
+    windows: &[LabelledWindow],
+    vocab: &DeltaVocab,
+    epochs: usize,
+) -> TransformerBackend {
+    let mut model = TransformerBackend::init(vocab, &transformer_cfg());
+    for _ in 0..epochs {
+        for chunk in windows.chunks(16) {
+            model.train_batch(chunk);
+        }
+    }
+    model
+}
+
+fn trained_native(windows: &[LabelledWindow], vocab: &DeltaVocab) -> NativeBackend {
+    let cfg = NativeConfig {
+        d_pc: 2,
+        d_page: 4,
+        d_delta: 8,
+        hidden: 16,
+        lr: 0.01,
+        optimizer: OptKind::Adam,
+        seed: 0x5eed,
+    };
+    let mut model = NativeBackend::init(vocab, &cfg);
+    for _ in 0..40 {
+        for chunk in windows.chunks(16) {
+            model.train_batch(chunk);
+        }
+    }
+    model
+}
+
+/// ISSUE 5 acceptance: on the periodic-stride corpus with the same
+/// seed, the Transformer reference model reaches top-1 ≥ the native
+/// backend (the ceiling must not sit below the distilled model).
+#[test]
+fn transformer_matches_or_beats_native_on_periodic_stride() {
+    let (vocab, windows) = periodic_stride_corpus(320);
+    let native = trained_native(&windows, &vocab).top1_accuracy(&windows);
+    let mut model = TransformerBackend::init(&vocab, &transformer_cfg());
+    let mut transformer = 0.0f64;
+    // Train in rounds; the pattern is deterministic, so the model
+    // converges well before the cap — the loop bounds runtime, not
+    // accuracy.
+    for _round in 0..6 {
+        for _ in 0..20 {
+            for chunk in windows.chunks(16) {
+                model.train_batch(chunk);
+            }
+        }
+        transformer = model.top1_accuracy(&windows);
+        if transformer >= native.max(0.99) {
+            break;
+        }
+    }
+    assert!(transformer >= 0.99, "transformer top-1 {transformer} < 0.99");
+    assert!(
+        transformer >= native,
+        "transformer {transformer} must reach the native backend's {native}"
+    );
+}
+
+#[test]
+fn same_seed_training_is_byte_deterministic() {
+    let (vocab, windows) = periodic_stride_corpus(120);
+    let a = train_transformer(&windows, &vocab, 4);
+    let b = train_transformer(&windows, &vocab, 4);
+    assert_eq!(a.params(), b.params(), "identical seed + data ⇒ identical weights");
+
+    let dir = uvm_prefetch::util::TestDir::new();
+    let (pa, pb) = (dir.file("a.bin"), dir.file("b.bin"));
+    a.save(&pa, false).unwrap();
+    b.save(&pb, false).unwrap();
+    assert_eq!(
+        std::fs::read(&pa).unwrap(),
+        std::fs::read(&pb).unwrap(),
+        "saved artifacts must be byte-identical"
+    );
+}
+
+/// The PR 4 guarantee, extended to the transformer: batching must
+/// never change an answer — bit for bit, on a trained model.
+#[test]
+fn batched_predict_matches_sequential_on_trained_model() {
+    let (vocab, windows) = periodic_stride_corpus(200);
+    let model = train_transformer(&windows, &vocab, 6);
+    let ws: Vec<Window> = windows.iter().map(|lw| lw.window.clone()).collect();
+    let batched = model.logits_batch(&ws);
+    let sequential: Vec<f32> = ws.iter().flat_map(|w| model.logits_one(w)).collect();
+    assert_eq!(batched, sequential, "batched logits diverged from sequential");
+    let classes = model.predict_batch(&ws);
+    let one_by_one: Vec<u32> = ws.iter().map(|w| model.predict_one(w)).collect();
+    assert_eq!(classes, one_by_one);
+}
+
+#[test]
+fn save_load_roundtrip_predicts_identically() {
+    let (vocab, windows) = periodic_stride_corpus(150);
+    let model = train_transformer(&windows, &vocab, 4);
+    let dir = uvm_prefetch::util::TestDir::new();
+    let path = dir.file("m.transformer.params.bin");
+    model.save(&path, false).unwrap();
+    let back = TransformerBackend::load(&path, &TransformerConfig::default()).unwrap();
+    assert_eq!(back.params(), model.params(), "f32 round trip must be bit-exact");
+    let ws: Vec<Window> = windows.iter().map(|lw| lw.window.clone()).collect();
+    assert_eq!(
+        back.predict_batch(&ws),
+        model.predict_batch(&ws),
+        "loaded model must predict identically"
+    );
+}
+
+/// ISSUE 5 acceptance: the int4-quantized path round-trips too —
+/// quantization is a projection, so save→load→save→load is a fixed
+/// point and predictions are bit-identical from there on.
+#[test]
+fn int4_save_load_roundtrip_is_idempotent() {
+    let (vocab, windows) = periodic_stride_corpus(150);
+    let model = train_transformer(&windows, &vocab, 4);
+    let dir = uvm_prefetch::util::TestDir::new();
+    let (p1, p2) = (dir.file("m.int4.bin"), dir.file("m2.int4.bin"));
+    model.save(&p1, true).unwrap();
+    let q1 = TransformerBackend::load(&p1, &TransformerConfig::default()).unwrap();
+    q1.save(&p2, true).unwrap();
+    let q2 = TransformerBackend::load(&p2, &TransformerConfig::default()).unwrap();
+    assert_eq!(q1.params(), q2.params(), "int4 round trip must be idempotent");
+    let ws: Vec<Window> = windows.iter().map(|lw| lw.window.clone()).collect();
+    assert_eq!(q1.predict_batch(&ws), q2.predict_batch(&ws));
+    // The shape survives quantization exactly (meta stays f32).
+    assert_eq!(q1.seq_len(), model.seq_len());
+    assert_eq!(q1.n_heads(), model.n_heads());
+    assert_eq!(q1.n_layers(), model.n_layers());
+    // Per-tensor scaled int4: the error is bounded by absmax/7 over
+    // the whole vector (a fortiori per tensor, whose absmax is no
+    // larger), and exact zeros survive.
+    let absmax = model.params().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    for (a, b) in model.params().iter().zip(q1.params()) {
+        assert!(
+            (a - b).abs() <= absmax / 7.0 + 1e-6,
+            "quant error {} for weight {a} (absmax {absmax})",
+            (a - b).abs()
+        );
+        if *a == 0.0 {
+            assert_eq!(*b, 0.0, "zero weights must survive quantization");
+        }
+    }
+}
+
+/// Attention introspection surface: maps are proper distributions and
+/// deterministic for a fixed seed (the `repro analyze` contract).
+#[test]
+fn attention_maps_deterministic_and_normalized() {
+    let (vocab, windows) = periodic_stride_corpus(120);
+    let a = train_transformer(&windows, &vocab, 3);
+    let b = train_transformer(&windows, &vocab, 3);
+    let (la, ma) = a.attention_one(&windows[0].window);
+    let (lb, mb) = b.attention_one(&windows[0].window);
+    assert_eq!(la, lb);
+    assert_eq!(ma, mb, "attention maps must be deterministic");
+    assert_eq!(ma.len(), a.n_layers() * a.n_heads() * HIST * HIST);
+    for row in ma.chunks_exact(HIST) {
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+}
