@@ -7,6 +7,9 @@
 #   make eval-smoke    small parallel all-benchmark sweep → BENCH_eval.json
 #   make oversub-smoke small oversubscription sweep → BENCH_oversub.json
 #   make serve-smoke   tiny multi-tenant serving run → BENCH_serve.json
+#   make serve-smoke-fast  serve the trained native model on the fast
+#                      kernel tier (runs model-smoke first)
+#   make kernel-bench  GEMM kernel tiers at serving shapes → BENCH_gemm.json
 #   make train         train the native backend (streamtriad → artifacts/)
 #   make train-transformer  train the Transformer reference backend
 #   make analyze       transformer-vs-native attention analysis → BENCH_compare.json
@@ -22,7 +25,7 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test lint fmt clippy check doc eval-smoke oversub-smoke serve-smoke train train-transformer analyze analyze-smoke model-smoke golden-check golden-update eval oversub artifacts clean
+.PHONY: build test lint fmt clippy check doc eval-smoke oversub-smoke serve-smoke serve-smoke-fast kernel-bench train train-transformer analyze analyze-smoke model-smoke golden-check golden-update eval oversub artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -71,6 +74,23 @@ serve-smoke:
 	$(CARGO) run --release --bin repro -- serve --backend stride \
 		--streams 2 --shards 2 --max-faults 500 --scale 0.1 \
 		--out results-smoke
+
+# Precision-tier serving smoke (CI): serve the model model-smoke just
+# trained on the fast (blocked f32) kernel tier. The golden gate and
+# every training path stay on --precision exact; this exercises the
+# quantized/fast serving plane end to end.
+serve-smoke-fast: model-smoke
+	$(CARGO) run --release --bin repro -- serve --backend native \
+		--artifacts results-smoke/models --benchmark streamtriad \
+		--precision fast \
+		--streams 2 --shards 2 --max-faults 500 --scale 0.1 \
+		--out results-smoke
+
+# Kernel microbenches: every --precision tier (exact/fast/int8/int4) at
+# the native model's serving GEMM shapes → BENCH_gemm.json at the repo
+# root (schema bench_gemm/v1).
+kernel-bench:
+	$(CARGO) bench --bench gemm
 
 # Train the native (pure-Rust) predictor backend offline: access-stream
 # harvest → vocab → windows → SGD/Adam → artifacts/<wl>.native.params.bin
@@ -139,4 +159,4 @@ clean:
 	$(CARGO) clean
 	rm -rf results results-smoke results-nightly traces \
 		BENCH_eval.json BENCH_oversub.json BENCH_serve.json \
-		BENCH_compare.json
+		BENCH_compare.json BENCH_gemm.json

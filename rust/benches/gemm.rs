@@ -1,0 +1,94 @@
+//! Kernel-tier GEMM/GEMV benches at the serving shapes of the native
+//! model (fc1: `in_dim = seq_len × Σd_emb`, fc2: `hidden → classes`),
+//! across every `--precision` tier. Besides the console report, writes
+//! `BENCH_gemm.json` (schema `bench_gemm/v1`) at the repo root so
+//! `make kernel-bench` leaves a machine-readable artifact next to the
+//! other BENCH files.
+
+use std::path::Path;
+use std::time::Duration;
+use uvm_prefetch::predictor::kernel::{linear_forward_batch, Precision, QuantizedLinear};
+use uvm_prefetch::predictor::quant;
+use uvm_prefetch::util::bench::{black_box, Bench};
+use uvm_prefetch::util::{Json, XorShift64};
+
+fn randvec(rng: &mut XorShift64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.next_u64() % 2000) as f32 / 1000.0 - 1.0).collect()
+}
+
+/// One (m=batch, k=in_dim, n=out_dim) layer shape to sweep.
+struct Shape {
+    tag: &'static str,
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+fn main() {
+    // The native default config: seq_len 30 × (8+8+16) features into a
+    // 64-wide hidden layer, then out to a ~256-delta vocabulary. Batch
+    // 1 is the sequential serve path, batch 8 the batcher's flush size.
+    let shapes = [
+        Shape { tag: "fc1", batch: 1, in_dim: 960, out_dim: 64 },
+        Shape { tag: "fc1", batch: 8, in_dim: 960, out_dim: 64 },
+        Shape { tag: "fc2", batch: 8, in_dim: 64, out_dim: 257 },
+    ];
+    let tiers = [Precision::Exact, Precision::Fast, Precision::Int8, Precision::Int4];
+
+    let mut b = Bench::new().with_min_time(Duration::from_millis(400));
+    println!("== gemm kernels ==");
+    let mut meta: Vec<(String, &'static str, usize, usize, usize)> = Vec::new();
+
+    for s in &shapes {
+        let mut rng = XorShift64::new(0x6e33);
+        let w = randvec(&mut rng, s.in_dim * s.out_dim);
+        let bias = randvec(&mut rng, s.out_dim);
+        let xs = randvec(&mut rng, s.in_dim * s.batch);
+        let mut out = vec![0.0f32; s.out_dim * s.batch];
+        let (scale, packed) = quant::pack_scaled(&w);
+        for &tier in &tiers {
+            let name =
+                format!("{} {}x{}x{} {}", s.tag, s.batch, s.in_dim, s.out_dim, tier.as_str());
+            if tier.is_quantized() {
+                let q =
+                    QuantizedLinear::from_packed(&packed, scale, s.out_dim, s.in_dim, tier)
+                        .unwrap();
+                b.case(&name, s.batch as u64, || {
+                    q.forward_batch(&bias, &xs, &mut out);
+                    black_box(out[0])
+                });
+            } else {
+                b.case(&name, s.batch as u64, || {
+                    linear_forward_batch(tier, &w, &bias, &xs, &mut out, s.in_dim, s.out_dim);
+                    black_box(out[0])
+                });
+            }
+            meta.push((name, tier.as_str(), s.batch, s.in_dim, s.out_dim));
+        }
+    }
+
+    // bench_gemm/v1: one record per case, with enough shape info to
+    // recompute throughput; gflops = 2·m·k·n / mean_ns.
+    let cases = b.results().iter().zip(&meta).map(|(r, (name, tier, m, k, n))| {
+        let flops = 2.0 * (*m as f64) * (*k as f64) * (*n as f64);
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("precision", Json::str(tier)),
+            ("m", Json::Num(*m as f64)),
+            ("k", Json::Num(*k as f64)),
+            ("n", Json::Num(*n as f64)),
+            ("mean_ns", Json::Num(r.mean_ns)),
+            ("min_ns", Json::Num(r.min_ns)),
+            ("gflops", Json::Num(flops / r.mean_ns)),
+        ])
+    });
+    let doc = Json::obj(vec![
+        ("schema", Json::str("bench_gemm/v1")),
+        ("cases", Json::arr(cases)),
+    ]);
+    // Anchor on the manifest dir so the artifact lands at the repo
+    // root no matter whether cargo or the binary sets the CWD.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_gemm.json");
+    doc.write_file(&path).unwrap();
+    println!("wrote {}", path.display());
+}

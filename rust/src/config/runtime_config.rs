@@ -2,6 +2,7 @@
 //! active and how the learned predictor is deployed (paper §6, §7.1,
 //! §7.3).
 
+use crate::predictor::kernel::Precision;
 use crate::util::Json;
 use anyhow::Result;
 
@@ -159,6 +160,12 @@ pub struct RuntimeConfig {
     /// Number of labelled windows replayed per fine-tune round.
     pub finetune_batch: usize,
     pub backend: PredictorBackendKind,
+    /// Inference kernel tier for the in-process backends
+    /// (`--precision exact|fast|int8|int4`, see
+    /// [`crate::predictor::kernel`]). Exact is the default everywhere
+    /// determinism is pinned; the faster tiers are inference-only and
+    /// validated per backend by `predictor::factory`.
+    pub precision: Precision,
     /// Tree prefetcher: promote a node once its valid fraction
     /// exceeds this (paper §2.2: 50%).
     pub tree_threshold: f64,
@@ -190,6 +197,7 @@ impl Default for RuntimeConfig {
             finetune_interval_insts: 0,
             finetune_batch: 64,
             backend: PredictorBackendKind::Stride,
+            precision: Precision::Exact,
             tree_threshold: 0.5,
             max_prefetch_pages_dl: 16,
             pressure_threshold: 0.85,
@@ -211,6 +219,7 @@ impl RuntimeConfig {
             ("finetune_interval_insts", Json::Num(self.finetune_interval_insts as f64)),
             ("finetune_batch", Json::Num(self.finetune_batch as f64)),
             ("backend", self.backend.to_json()),
+            ("precision", Json::str(self.precision.as_str())),
             ("tree_threshold", Json::Num(self.tree_threshold)),
             ("max_prefetch_pages_dl", Json::Num(self.max_prefetch_pages_dl as f64)),
             ("pressure_threshold", Json::Num(self.pressure_threshold)),
@@ -246,6 +255,11 @@ impl RuntimeConfig {
         }
         if let Some(b) = j.get("backend") {
             c.backend = PredictorBackendKind::from_json(b)?;
+        }
+        if let Some(p) = j.get("precision").and_then(Json::as_str) {
+            c.precision = Precision::parse(p).ok_or_else(|| {
+                anyhow::anyhow!("bad precision '{p}' (expected exact | fast | int8 | int4)")
+            })?;
         }
         Ok(c)
     }
@@ -303,5 +317,21 @@ mod tests {
     fn bypass_parse() {
         assert_eq!(BypassMode::parse("auto"), Some(BypassMode::Auto));
         assert_eq!(BypassMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn precision_json_roundtrip_and_default() {
+        let cfg = RuntimeConfig { precision: Precision::Int4, ..Default::default() };
+        let back =
+            RuntimeConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.precision, Precision::Int4);
+        // Absent field → exact (old configs keep their meaning).
+        let old = RuntimeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(old.precision, Precision::Exact);
+        let err =
+            RuntimeConfig::from_json(&Json::parse("{\"precision\": \"turbo\"}").unwrap())
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("turbo"), "{err}");
     }
 }

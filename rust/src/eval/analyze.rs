@@ -22,7 +22,10 @@
 
 use crate::eval::report::Table;
 use crate::eval::train::{self, ModelArch, TrainOptions, TrainedModel};
-use crate::predictor::{DeltaVocab, LabelledWindow, TransformerBackend, Window};
+use crate::predictor::{
+    DeltaVocab, LabelledWindow, NativeBackend, NativeConfig, Precision, TransformerBackend,
+    TransformerConfig, Window,
+};
 use crate::runtime::params::TensorStore;
 use crate::util::Json;
 use anyhow::Result;
@@ -65,6 +68,10 @@ pub struct ModelArm {
     pub arch: String,
     /// Held-out top-1 accuracy.
     pub top1: f64,
+    /// Held-out top-1 when serving from the int4 checkpoint — the
+    /// quantized-inference accuracy column (native serves the integer
+    /// tier directly; the transformer dequantizes the int4 store).
+    pub int4_top1: f64,
     pub n_params: usize,
     pub flops_per_inference: u64,
     pub first_epoch_loss: f64,
@@ -183,12 +190,15 @@ fn fit_arm(
     model.save(&p32, false)?;
     model.save(&p4, true)?;
     let quant = quant_errors(&p32, &p4)?;
+    let int4_top1 = int4_checkpoint_top1(&p4, arch, &ws, eval_set)?;
 
+    let info = model.info();
     let arm = ModelArm {
         arch: name.to_string(),
         top1,
-        n_params: model.n_params(),
-        flops_per_inference: model.flops_per_inference(),
+        int4_top1,
+        n_params: info.n_params,
+        flops_per_inference: info.flops_per_inference,
         first_epoch_loss,
         last_epoch_loss,
         train_ms,
@@ -196,6 +206,33 @@ fn fit_arm(
         quant,
     };
     Ok((model, arm))
+}
+
+/// Held-out top-1 of the int4 checkpoint: the native arm serves the
+/// integer-accumulate tier straight off the dtype-3 codes
+/// (`--precision int4`'s real serving path); the transformer arm,
+/// which has no quantized tier, dequantizes the store to f32.
+fn int4_checkpoint_top1(
+    p4: &Path,
+    arch: ModelArch,
+    ws: &[Window],
+    eval_set: &[LabelledWindow],
+) -> Result<f64> {
+    let preds = match arch {
+        ModelArch::Native => {
+            NativeBackend::load_with_precision(p4, &NativeConfig::default(), Precision::Int4)?
+                .predict_batch(ws)
+        }
+        ModelArch::Transformer => {
+            TransformerBackend::load(p4, &TransformerConfig::default())?.predict_batch(ws)
+        }
+    };
+    let hits = preds
+        .iter()
+        .zip(eval_set)
+        .filter(|(p, lw)| **p == lw.label.max(0) as u32)
+        .count();
+    Ok(hits as f64 / eval_set.len().max(1) as f64)
 }
 
 /// Per-tensor |f32 − dequant(int4)| statistics between the two saved
@@ -283,6 +320,7 @@ fn arm_json(a: &ModelArm) -> Json {
     Json::obj(vec![
         ("arch", Json::str(&a.arch)),
         ("top1", Json::Num(a.top1)),
+        ("int4_top1", Json::Num(a.int4_top1)),
         ("n_params", Json::Num(a.n_params as f64)),
         ("flops_per_inference", Json::Num(a.flops_per_inference as f64)),
         ("first_epoch_loss", Json::Num(a.first_epoch_loss)),
@@ -342,12 +380,22 @@ impl AnalyzeReport {
                 self.n_eval,
                 self.stride_top1 * 100.0
             ),
-            &["arch", "top-1 %", "params", "FLOPs/inf", "train ms", "infer µs/win", "loss"],
+            &[
+                "arch",
+                "top-1 %",
+                "int4 top-1 %",
+                "params",
+                "FLOPs/inf",
+                "train ms",
+                "infer µs/win",
+                "loss",
+            ],
         );
         for a in [&self.native, &self.transformer] {
             t.row(vec![
                 a.arch.clone(),
                 format!("{:.2}", a.top1 * 100.0),
+                format!("{:.2}", a.int4_top1 * 100.0),
                 a.n_params.to_string(),
                 a.flops_per_inference.to_string(),
                 format!("{:.1}", a.train_ms),
@@ -357,6 +405,7 @@ impl AnalyzeReport {
         }
         t.row(vec![
             "t/n ratio".into(),
+            String::new(),
             String::new(),
             format!("{:.1}×", self.params_ratio),
             format!("{:.1}×", self.flops_ratio),
@@ -465,10 +514,15 @@ mod tests {
             for q in &arm.quant {
                 assert!(q.max_err <= crate::predictor::quant::max_quant_error() as f64 + 1e-5);
             }
+            assert!((0.0..=1.0).contains(&arm.int4_top1), "{}", arm.int4_top1);
         }
         let j = Json::parse_file(&dir.path().join("BENCH_compare.json")).unwrap();
         assert_eq!(j.req("schema").unwrap().as_str(), Some("bench_compare/v1"));
         assert!(j.req("flops_ratio").unwrap().as_f64().unwrap() > 1.0);
+        // Both arms carry the quantized-inference accuracy column.
+        for arm in ["native", "transformer"] {
+            assert!(j.req(arm).unwrap().req("int4_top1").unwrap().as_f64().is_some(), "{arm}");
+        }
         let heads = j.req("heads").unwrap().as_arr().unwrap();
         assert_eq!(heads.len(), 2);
         // Tables render without panicking and carry both arch rows.
@@ -484,6 +538,7 @@ mod tests {
         let ra = analyze(&tiny_opts(dir_a.path().to_path_buf())).unwrap();
         let rb = analyze(&tiny_opts(dir_b.path().to_path_buf())).unwrap();
         assert_eq!(ra.native.top1, rb.native.top1);
+        assert_eq!(ra.native.int4_top1, rb.native.int4_top1);
         assert_eq!(ra.transformer.top1, rb.transformer.top1);
         assert_eq!(ra.flops_ratio, rb.flops_ratio);
         for (a, b) in ra.heads.iter().zip(&rb.heads) {

@@ -1,10 +1,7 @@
 //! Experiment runner: build a workload + prefetcher and simulate.
 
 use crate::config::{ExperimentConfig, PredictorBackendKind, RuntimeConfig};
-use crate::predictor::{
-    DeltaVocab, NativeBackend, NativeConfig, PredictorEngine, StrideBackend, TransformerBackend,
-    TransformerConfig,
-};
+use crate::predictor::{BackendSpec, Precision, PredictorEngine};
 use crate::prefetch::dl::DlPrefetcher;
 use crate::prefetch::none::NonePrefetcher;
 use crate::prefetch::oracle::OraclePrefetcher;
@@ -12,7 +9,7 @@ use crate::prefetch::stride::StridePrefetcher;
 use crate::prefetch::tree::TreePrefetcher;
 use crate::prefetch::uvmsmart::UvmSmartPrefetcher;
 use crate::prefetch::{FaultInfo, PrefetchDecision, Prefetcher};
-use crate::runtime::{Manifest, ModelExecutable, PjrtBackend};
+use crate::runtime::Manifest;
 use crate::sim::{Metrics, Simulator, TraceWriter};
 use crate::types::PageNum;
 use crate::workloads;
@@ -37,6 +34,11 @@ pub struct RunOptions {
     /// `artifacts` is set, stride otherwise). Unknown names are
     /// rejected by [`RunOptions::backend_kind`].
     pub backend: String,
+    /// Kernel tier for inference (`--precision exact | fast | int8 |
+    /// int4`). `exact` is the bit-pinned default; the other tiers are
+    /// inference-only and validated per backend by
+    /// [`crate::predictor::kernel::ensure_supported`].
+    pub precision: Precision,
 }
 
 impl Default for RunOptions {
@@ -53,6 +55,7 @@ impl Default for RunOptions {
             model: String::new(),
             seed: 0x5eed,
             backend: String::new(),
+            precision: Precision::Exact,
         }
     }
 }
@@ -137,6 +140,7 @@ impl RunOptions {
         exp.seed = workload_seed(self.seed, benchmark);
         exp.runtime.prefetcher = prefetcher.to_string();
         exp.runtime.backend = self.backend_kind()?;
+        exp.runtime.precision = self.precision;
         Ok(exp)
     }
 }
@@ -206,127 +210,15 @@ impl Prefetcher for RecordingPrefetcher {
     }
 }
 
-/// Load an in-process learned backend (`arch` = "native" |
-/// "transformer") from an artifacts manifest: resolve the model key,
-/// guard the arch both directions, load the weights and validate the
-/// class count against the vocabulary. Shared by
-/// [`build_dl_prefetcher`] and `repro serve`
-/// (`eval/serve.rs::build_serve_backend`) so the two paths cannot
-/// drift. `who` prefixes the log/error lines ("dl", "serve").
-pub fn load_model_backend(
-    artifacts: &str,
-    model: &str,
-    benchmark: &str,
-    arch: &str,
-    who: &str,
-) -> anyhow::Result<(DeltaVocab, Box<dyn crate::predictor::PredictorBackend>)> {
-    let dir = Path::new(artifacts);
-    let manifest = Manifest::load(dir).map_err(|e| {
-        anyhow::anyhow!(
-            "{who} --backend {arch}: {e}; train a model first \
-             (`repro train --arch {arch} --workload …`)"
-        )
-    })?;
-    let (key, entry) = manifest.resolve(model, benchmark)?;
-    if entry.arch != arch {
-        anyhow::bail!(
-            "model '{key}' has arch '{}' — not a {arch} model; use --backend {} for these \
-             artifacts",
-            entry.arch,
-            match entry.arch.as_str() {
-                "native" | "transformer" => entry.arch.as_str(),
-                _ => "pjrt",
-            }
-        );
-    }
-    let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
-    let backend: Box<dyn crate::predictor::PredictorBackend> = match arch {
-        "native" => {
-            let m = NativeBackend::load(&dir.join(&entry.params), &NativeConfig::default())?;
-            eprintln!(
-                "{who}: loaded native model '{key}' ({} params, seq={}, classes={})",
-                m.n_params(),
-                m.seq_len(),
-                m.n_classes()
-            );
-            Box::new(m)
-        }
-        "transformer" => {
-            let m =
-                TransformerBackend::load(&dir.join(&entry.params), &TransformerConfig::default())?;
-            eprintln!(
-                "{who}: loaded transformer model '{key}' ({} params, seq={}, {} layer(s) × {} \
-                 head(s), classes={})",
-                m.n_params(),
-                m.seq_len(),
-                m.n_layers(),
-                m.n_heads(),
-                m.n_classes()
-            );
-            Box::new(m)
-        }
-        other => anyhow::bail!("load_model_backend: unsupported arch '{other}'"),
-    };
-    anyhow::ensure!(
-        backend.n_classes() == vocab.n_classes(),
-        "model '{key}': params have {} classes but the vocab has {}",
-        backend.n_classes(),
-        vocab.n_classes()
-    );
-    Ok((vocab, backend))
-}
-
-/// Build the DL prefetcher per the configured backend.
+/// Build the DL prefetcher per the configured backend. All manifest /
+/// arch / precision resolution lives in the one factory
+/// ([`crate::predictor::factory`]) shared with `repro serve`.
 pub fn build_dl_prefetcher(
     rcfg: &RuntimeConfig,
     benchmark: &str,
 ) -> anyhow::Result<DlPrefetcher> {
-    match &rcfg.backend {
-        PredictorBackendKind::Pjrt { artifacts, model } => {
-            let dir = Path::new(artifacts);
-            let manifest = Manifest::load(dir)?;
-            let (key, entry) = manifest.resolve(model, benchmark)?;
-            if entry.arch == "native" || entry.arch == "transformer" {
-                anyhow::bail!(
-                    "model '{key}' is an in-process artifact (arch={}) — run with --backend {} \
-                     instead of pjrt",
-                    entry.arch,
-                    entry.arch
-                );
-            }
-            let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
-            let exe = ModelExecutable::load(dir, entry)?;
-            let backend = PjrtBackend::new(exe, entry.arch.clone());
-            eprintln!(
-                "dl: loaded model '{key}' (arch={}, batch={}, classes={})",
-                entry.arch, entry.batch, entry.n_classes
-            );
-            Ok(DlPrefetcher::new(
-                PredictorEngine::new(Box::new(backend), vocab),
-                rcfg,
-            ))
-        }
-        PredictorBackendKind::Native { artifacts, model } => {
-            let (vocab, backend) = load_model_backend(artifacts, model, benchmark, "native", "dl")?;
-            Ok(DlPrefetcher::new(PredictorEngine::new(backend, vocab), rcfg))
-        }
-        PredictorBackendKind::Transformer { artifacts, model } => {
-            let (vocab, backend) =
-                load_model_backend(artifacts, model, benchmark, "transformer", "dl")?;
-            Ok(DlPrefetcher::new(PredictorEngine::new(backend, vocab), rcfg))
-        }
-        PredictorBackendKind::Stride => {
-            // The shared artifact-free vocab + vote backend (the
-            // stride backend only votes over observed ids).
-            let (vocab, backend) = StrideBackend::with_default_vocab(rcfg.history_len);
-            Ok(DlPrefetcher::new(PredictorEngine::new(Box::new(backend), vocab), rcfg))
-        }
-        PredictorBackendKind::Constant(d) => {
-            let vocab = DeltaVocab::synthetic(vec![*d], rcfg.history_len);
-            let backend = crate::predictor::ConstantBackend { class: 0, n_classes: 2 };
-            Ok(DlPrefetcher::new(PredictorEngine::new(Box::new(backend), vocab), rcfg))
-        }
-    }
+    let (vocab, backend, _) = BackendSpec::from_runtime(rcfg, benchmark, "dl").resolve()?;
+    Ok(DlPrefetcher::new(PredictorEngine::new(backend, vocab), rcfg))
 }
 
 /// Build any prefetcher by name. `scale` feeds the oracle's recording

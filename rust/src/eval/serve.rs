@@ -17,9 +17,8 @@
 use crate::config::{BypassMode, ExperimentConfig, RuntimeConfig};
 use crate::coordinator::{CoordinatorService, FaultEvent, PrefetchCommand, SpawnOptions};
 use crate::eval::runner::{workload_seed, RunOptions};
-use crate::predictor::{ConstantBackend, DeltaVocab, PredictorBackend, StrideBackend};
+use crate::predictor::{BackendSpec, DeltaVocab, PredictorBackend};
 use crate::prefetch::none::NonePrefetcher;
-use crate::runtime::{Manifest, ModelExecutable, PjrtBackend};
 use crate::sim::{Simulator, TraceWriter, TRACE_HEADER};
 use crate::types::{AccessOrigin, TenantId};
 use crate::util::{HistSummary, Json};
@@ -77,6 +76,8 @@ pub struct TenantReport {
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub backend: String,
+    /// Kernel tier the model served with (`--precision`).
+    pub precision: String,
     pub streams: usize,
     pub shards: usize,
     pub benchmarks: Vec<String>,
@@ -98,55 +99,25 @@ pub struct ServeReport {
     pub tenants: Vec<TenantReport>,
 }
 
-/// Resolve the `--backend` axis to a servable (vocab, backend) pair.
-/// `benchmark` picks the model for artifact-backed kinds (the first
-/// replayed benchmark — multi-benchmark runs share one model, like the
-/// paper's pretrained "shared" deployment).
+/// Resolve the `--backend` axis to a servable (vocab, backend) pair —
+/// a thin shim over the one factory ([`crate::predictor::factory`])
+/// shared with the `dl` policy. `benchmark` picks the model for
+/// artifact-backed kinds (the first replayed benchmark —
+/// multi-benchmark runs share one model, like the paper's pretrained
+/// "shared" deployment).
 pub fn build_serve_backend(
     run: &RunOptions,
     benchmark: &str,
     rcfg: &RuntimeConfig,
 ) -> Result<(DeltaVocab, Box<dyn PredictorBackend>, &'static str)> {
-    use crate::config::PredictorBackendKind as K;
-    Ok(match run.backend_kind()? {
-        K::Stride => {
-            let (vocab, backend) = StrideBackend::with_default_vocab(rcfg.history_len);
-            (vocab, Box::new(backend), "stride")
-        }
-        K::Native { artifacts, model } => {
-            let (vocab, backend) =
-                crate::eval::runner::load_model_backend(&artifacts, &model, benchmark, "native", "serve")?;
-            (vocab, backend, "native")
-        }
-        K::Transformer { artifacts, model } => {
-            let (vocab, backend) = crate::eval::runner::load_model_backend(
-                &artifacts,
-                &model,
-                benchmark,
-                "transformer",
-                "serve",
-            )?;
-            (vocab, backend, "transformer")
-        }
-        K::Pjrt { artifacts, model } => {
-            let dir = Path::new(&artifacts);
-            let manifest = Manifest::load(dir)?;
-            let (key, entry) = manifest.resolve(&model, benchmark)?;
-            anyhow::ensure!(
-                entry.arch != "native" && entry.arch != "transformer",
-                "serve: model '{key}' is an in-process artifact (arch={}) — run with --backend {}",
-                entry.arch,
-                entry.arch
-            );
-            let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
-            let exe = ModelExecutable::load(dir, entry)?;
-            (vocab, Box::new(PjrtBackend::new(exe, entry.arch.clone())), "pjrt")
-        }
-        K::Constant(d) => {
-            let vocab = DeltaVocab::synthetic(vec![d], rcfg.history_len);
-            (vocab, Box::new(ConstantBackend { class: 0, n_classes: 2 }), "constant")
-        }
-    })
+    BackendSpec {
+        kind: run.backend_kind()?,
+        precision: run.precision,
+        history_len: rcfg.history_len,
+        benchmark: benchmark.to_string(),
+        who: "serve",
+    }
+    .resolve()
 }
 
 /// Removes the file on drop — the trace temp file must not outlive the
@@ -267,7 +238,11 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
     anyhow::ensure!(opts.streams >= 1, "serve: --streams must be ≥ 1");
     anyhow::ensure!(opts.shards >= 1, "serve: --shards must be ≥ 1");
     anyhow::ensure!(!opts.benchmarks.is_empty(), "serve: need at least one benchmark");
-    let rcfg = RuntimeConfig { bypass: opts.bypass, ..Default::default() };
+    let rcfg = RuntimeConfig {
+        bypass: opts.bypass,
+        precision: opts.run.precision,
+        ..Default::default()
+    };
     let (vocab, backend, backend_name) =
         build_serve_backend(&opts.run, &opts.benchmarks[0], &rcfg)?;
 
@@ -346,6 +321,7 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
 
     Ok(ServeReport {
         backend: backend_name.to_string(),
+        precision: opts.run.precision.as_str().to_string(),
         streams: opts.streams,
         shards: opts.shards,
         benchmarks: opts.benchmarks.clone(),
@@ -370,6 +346,7 @@ pub fn bench_serve_json(r: &ServeReport) -> Json {
     Json::obj(vec![
         ("schema", Json::str("bench_serve/v1")),
         ("backend", Json::str(&r.backend)),
+        ("precision", Json::str(&r.precision)),
         ("streams", Json::Num(r.streams as f64)),
         ("shards", Json::Num(r.shards as f64)),
         ("benchmarks", Json::arr(r.benchmarks.iter().map(|b| Json::str(b)))),

@@ -109,18 +109,22 @@ impl TrainedModel {
         }
     }
 
-    pub fn n_params(&self) -> usize {
+    /// Uniform introspection ([`PredictorBackend::info`]) — the train
+    /// and analyze report tables read this instead of downcasting per
+    /// arch.
+    pub fn info(&self) -> crate::predictor::BackendInfo {
         match self {
-            Self::Native(m) => m.n_params(),
-            Self::Transformer(m) => m.n_params(),
+            Self::Native(m) => m.info(),
+            Self::Transformer(m) => m.info(),
         }
     }
 
+    pub fn n_params(&self) -> usize {
+        self.info().n_params
+    }
+
     pub fn flops_per_inference(&self) -> u64 {
-        match self {
-            Self::Native(m) => m.flops_per_inference(),
-            Self::Transformer(m) => m.flops_per_inference(),
-        }
+        self.info().flops_per_inference
     }
 
     /// Write the weights as a tensor store (f32, or int4 when `int4`).
@@ -478,6 +482,12 @@ pub fn train_model(opts: &TrainOptions) -> Result<TrainReport> {
     let params_path = opts.out.join(&params_rel);
     let vocab_path = opts.out.join(&vocab_rel);
     model.save(&params_path, opts.int4)?;
+    // Always write the dtype-3 sibling store next to the registered
+    // one: the quantized serving tiers (`--precision int8|int4`) read
+    // integer codes straight off it instead of requantizing f32 at
+    // load time (the factory prefers it whenever it exists).
+    let int4_rel = format!("{}.{arch}.int4.params.bin", opts.benchmark);
+    model.save(&opts.out.join(&int4_rel), true)?;
     file.to_json().write_file(&vocab_path)?;
     let mut manifest =
         Manifest::load(&opts.out).unwrap_or(Manifest { version: 1, models: BTreeMap::new() });
@@ -515,14 +525,15 @@ pub fn train_model(opts: &TrainOptions) -> Result<TrainReport> {
     );
     manifest.save(&opts.out)?;
 
+    let info = model.info();
     Ok(TrainReport {
         benchmark: opts.benchmark.clone(),
         arch: arch.to_string(),
         n_train: train.len(),
         n_eval: eval.len(),
         n_classes: vocab.n_classes(),
-        n_params: model.n_params(),
-        flops_per_inference: model.flops_per_inference(),
+        n_params: info.n_params,
+        flops_per_inference: info.flops_per_inference,
         first_epoch_loss: first_loss,
         last_epoch_loss: last_loss,
         model_top1,
@@ -602,6 +613,15 @@ mod tests {
             ..Default::default()
         };
         let metrics = run_benchmark("streamtriad", "dl", &run).unwrap();
+        assert!(metrics.mem_accesses > 0);
+
+        // Training always leaves a dtype-3 sibling store, and the
+        // quantized tiers serve end-to-end from its integer codes.
+        let sibling = dir.path().join("streamtriad.native.int4.params.bin");
+        assert!(sibling.exists(), "missing {}", sibling.display());
+        let run_q =
+            RunOptions { precision: crate::predictor::Precision::Int4, ..run };
+        let metrics = run_benchmark("streamtriad", "dl", &run_q).unwrap();
         assert!(metrics.mem_accesses > 0);
     }
 

@@ -25,6 +25,10 @@
 //! See `DESIGN.md` (repo root) for the module inventory, the
 //! per-table/figure experiment index, and the paper-vs-measured notes.
 
+// `--features simd` swaps the fast kernel tier's inner loops to
+// `std::simd` (nightly only); the stable default compiles the portable
+// scalar form instead (predictor/kernel.rs).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 // Crate-wide lint posture for `clippy -- -D warnings` (CI): the three
 // allows below are deliberate idioms, not oversights — the in-tree
 // `Json` serializer exposes an inherent `to_string` (no Display on

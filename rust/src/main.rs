@@ -4,7 +4,8 @@
 //! repro trace-gen  [--out traces] [--benchmarks a --benchmarks b]
 //!                  [--limit N] [--scale F] [--max-instructions N]
 //! repro simulate   [--benchmark B] [--prefetcher P] [--backend K]
-//!                  [--artifacts DIR] [--model M] [--scale F]
+//!                  [--precision T] [--artifacts DIR] [--model M]
+//!                  [--scale F]
 //!                  [--max-instructions N] [--prediction-us F]
 //!                  [--config FILE] [--oversubscribe R] [--eviction P]
 //!                    --oversubscribe: resident fraction of the
@@ -32,7 +33,8 @@
 //!                    int4 quantization error; writes
 //!                    BENCH_compare.json (schema bench_compare/v1).
 //! repro eval       <pairs|table10|table11|fig10|fig11|fig12|summary|oversub|all>
-//!                  [--backend K] [--artifacts DIR] [--out results]
+//!                  [--backend K] [--precision T] [--artifacts DIR]
+//!                  [--out results]
 //!                  [--scale F] [--max-instructions N] [--no-pjrt]
 //!                  oversub only: [--ratios 1.0,0.75,0.5]
 //!                  [--evictions lru,random,freq,prefetch-aware]
@@ -43,6 +45,7 @@
 //! repro golden     <check|update> [--path ci/golden_metrics.json]
 //! repro serve      [--streams N] [--shards K] [--benchmark B]
 //!                  [--benchmarks a --benchmarks b] [--backend K]
+//!                  [--precision T]
 //!                  [--artifacts DIR] [--model M] [--max-faults N]
 //!                  [--scale F] [--bypass never|auto|always]
 //!                  [--seed S] [--out results]
@@ -59,13 +62,20 @@
 //! `repro train --arch transformer`), or `pjrt` (AOT HLO, needs the
 //! `pjrt` cargo feature). Unset, the legacy auto rule applies: pjrt
 //! when `--artifacts` is given, stride otherwise. See DESIGN.md §6/§9.
+//!
+//! `--precision T` selects the inference kernel tier: `exact`
+//! (default — the bit-pinned scalar path; golden gate, training and
+//! grad checks run here), `fast` (blocked/reassociated f32 GEMM),
+//! `int8` / `int4` (integer accumulation straight off the dtype-3
+//! quantized store; native backend only). Inference-only: `repro
+//! train` and `repro analyze` reject every tier but `exact`.
 
 use anyhow::Result;
 use std::path::{Path, PathBuf};
 use uvm_prefetch::config::ExperimentConfig;
 use uvm_prefetch::eval::report::Table;
 use uvm_prefetch::eval::{self, runner::RunOptions};
-use uvm_prefetch::predictor::NativeConfig;
+use uvm_prefetch::predictor::{NativeConfig, Precision};
 use uvm_prefetch::runtime::Manifest;
 use uvm_prefetch::sim::TraceWriter;
 use uvm_prefetch::util::cli::Args;
@@ -100,10 +110,20 @@ fn opts_from(args: &Args) -> Result<RunOptions> {
         model: args.str("model", ""),
         seed: args.u64("seed", 0x5eed)?,
         backend: args.str("backend", ""),
+        precision: precision_from(args)?,
     };
     // Reject unknown --backend names before any cell runs.
     opts.backend_kind()?;
     Ok(opts)
+}
+
+/// Parse the `--precision` kernel-tier axis; unknown names fail
+/// naming the flag's full domain.
+fn precision_from(args: &Args) -> Result<Precision> {
+    let name = args.str("precision", "exact");
+    Precision::parse(&name).ok_or_else(|| {
+        anyhow::anyhow!("--precision '{name}' (expected exact | fast | int8 | int4)")
+    })
 }
 
 fn trace_gen(args: &Args) -> Result<()> {
@@ -253,7 +273,18 @@ fn train_opts_from(
             seed,
         },
         transformer: TransformerConfig { d_model, n_heads, n_layers, d_ff, lr, optimizer, seed },
-        run: opts_from(args)?,
+        run: {
+            let run = opts_from(args)?;
+            // Training and grad paths are pinned to the exact kernels;
+            // the faster tiers are inference-only.
+            anyhow::ensure!(
+                run.precision.is_exact(),
+                "--precision {} is not allowed on `repro train` / `repro analyze` — training is \
+                 pinned to the exact kernels; drop the flag or pass --precision exact",
+                run.precision.as_str()
+            );
+            run
+        },
     })
 }
 
@@ -472,6 +503,7 @@ fn serve(args: &Args) -> Result<()> {
             seed: args.u64("seed", 0x5eed)?,
             backend: args.str("backend", ""),
             max_instructions: args.u64("max-instructions", 2_000_000)?,
+            precision: precision_from(args)?,
         },
     };
     opts.run.backend_kind()?; // reject unknown --backend before any work
@@ -485,9 +517,10 @@ fn serve(args: &Args) -> Result<()> {
     }
 
     println!(
-        "serve[{}]: {} streams × {} shard(s) — {} accesses ({} misses) → {} commands in \
+        "serve[{}/{}]: {} streams × {} shard(s) — {} accesses ({} misses) → {} commands in \
          {:.1} ms ({:.1} faults/ms, {:.1} accesses/ms)",
         r.backend,
+        r.precision,
         r.streams,
         r.shards,
         r.accesses,

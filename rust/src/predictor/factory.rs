@@ -1,0 +1,307 @@
+//! One backend factory for every entry point.
+//!
+//! `repro simulate/eval` (the `dl` policy), `repro serve`, and the
+//! report tooling all used to carry their own copy of the
+//! manifest-load / model-key / arch-guard / class-count dance — three
+//! slightly different spellings that could (and did) drift. A
+//! [`BackendSpec`] is the single resolver: build one from the CLI axes
+//! (or a [`RuntimeConfig`]), call [`BackendSpec::resolve`], and get the
+//! `(vocab, backend, name)` triple every caller needs. The
+//! both-direction arch guards (an in-process loader rejecting a pjrt
+//! artifact, the pjrt loader rejecting an in-process artifact) and the
+//! precision validity table ([`kernel::ensure_supported`]) live here
+//! and nowhere else, and every error names the CLI flag that fixes it.
+
+use crate::config::{PredictorBackendKind, RuntimeConfig};
+use crate::predictor::kernel::{self, Precision};
+use crate::predictor::{
+    ConstantBackend, DeltaVocab, NativeBackend, NativeConfig, PredictorBackend, StrideBackend,
+    TransformerBackend, TransformerConfig,
+};
+use crate::runtime::{Manifest, ModelExecutable, PjrtBackend};
+use anyhow::Result;
+use std::path::Path;
+
+/// Everything needed to materialize a servable predictor backend.
+#[derive(Debug, Clone)]
+pub struct BackendSpec {
+    /// Which backend (and, for artifact-backed kinds, where its
+    /// artifacts live and which model key to resolve).
+    pub kind: PredictorBackendKind,
+    /// Kernel tier the instance will serve with (`--precision`).
+    pub precision: Precision,
+    /// Sliding-window length for the artifact-free vocabularies
+    /// (stride, constant).
+    pub history_len: usize,
+    /// Benchmark whose model to resolve for artifact-backed kinds.
+    pub benchmark: String,
+    /// Log/error prefix naming the entry point ("dl", "serve", …).
+    pub who: &'static str,
+}
+
+impl BackendSpec {
+    /// Spec for a simulator/server runtime config (the `dl` policy and
+    /// `repro serve` both carry their axes in a [`RuntimeConfig`]).
+    pub fn from_runtime(rcfg: &RuntimeConfig, benchmark: &str, who: &'static str) -> Self {
+        Self {
+            kind: rcfg.backend.clone(),
+            precision: rcfg.precision,
+            history_len: rcfg.history_len,
+            benchmark: benchmark.to_string(),
+            who,
+        }
+    }
+
+    /// Arch tag of the configured kind — the string
+    /// [`kernel::ensure_supported`] and the report tables key on.
+    pub fn arch(&self) -> &'static str {
+        match &self.kind {
+            PredictorBackendKind::Stride => "stride",
+            PredictorBackendKind::Constant(_) => "constant",
+            PredictorBackendKind::Native { .. } => "native",
+            PredictorBackendKind::Transformer { .. } => "transformer",
+            PredictorBackendKind::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// Materialize the backend: validate the (arch, precision) pair,
+    /// load artifacts where the kind needs them (guarding the arch in
+    /// both directions), and return `(vocab, backend, name)`.
+    pub fn resolve(&self) -> Result<(DeltaVocab, Box<dyn PredictorBackend>, &'static str)> {
+        kernel::ensure_supported(self.arch(), self.precision)?;
+        Ok(match &self.kind {
+            PredictorBackendKind::Stride => {
+                // The shared artifact-free vocab + vote backend (the
+                // stride backend only votes over observed ids).
+                let (vocab, backend) = StrideBackend::with_default_vocab(self.history_len);
+                (vocab, Box::new(backend), "stride")
+            }
+            PredictorBackendKind::Constant(d) => {
+                let vocab = DeltaVocab::synthetic(vec![*d], self.history_len);
+                (vocab, Box::new(ConstantBackend { class: 0, n_classes: 2 }), "constant")
+            }
+            PredictorBackendKind::Native { artifacts, model } => {
+                let (vocab, backend) = load_model_backend(
+                    artifacts,
+                    model,
+                    &self.benchmark,
+                    "native",
+                    self.precision,
+                    self.who,
+                )?;
+                (vocab, backend, "native")
+            }
+            PredictorBackendKind::Transformer { artifacts, model } => {
+                let (vocab, backend) = load_model_backend(
+                    artifacts,
+                    model,
+                    &self.benchmark,
+                    "transformer",
+                    self.precision,
+                    self.who,
+                )?;
+                (vocab, backend, "transformer")
+            }
+            PredictorBackendKind::Pjrt { artifacts, model } => {
+                let dir = Path::new(artifacts);
+                let manifest = Manifest::load(dir)?;
+                let (key, entry) = manifest.resolve(model, &self.benchmark)?;
+                if entry.arch == "native" || entry.arch == "transformer" {
+                    anyhow::bail!(
+                        "{}: model '{key}' is an in-process artifact (arch={}) — run with \
+                         --backend {} instead of pjrt",
+                        self.who,
+                        entry.arch,
+                        entry.arch
+                    );
+                }
+                let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
+                let exe = ModelExecutable::load(dir, entry)?;
+                eprintln!(
+                    "{}: loaded model '{key}' (arch={}, batch={}, classes={})",
+                    self.who, entry.arch, entry.batch, entry.n_classes
+                );
+                (vocab, Box::new(PjrtBackend::new(exe, entry.arch.clone())), "pjrt")
+            }
+        })
+    }
+}
+
+/// Load an in-process learned backend (`arch` = "native" |
+/// "transformer") from an artifacts manifest: resolve the model key,
+/// guard the arch both directions, load the weights at the requested
+/// kernel tier, and validate the class count against the vocabulary.
+/// Quantized tiers prefer the `<model>.int4.params.bin` sibling store
+/// (written by `repro train` alongside the f32 weights) and fall back
+/// to the main store, whose loader rejects f32-only tensors with an
+/// error naming `--precision`. `who` prefixes the log/error lines
+/// ("dl", "serve").
+pub fn load_model_backend(
+    artifacts: &str,
+    model: &str,
+    benchmark: &str,
+    arch: &str,
+    precision: Precision,
+    who: &str,
+) -> Result<(DeltaVocab, Box<dyn PredictorBackend>)> {
+    kernel::ensure_supported(arch, precision)?;
+    let dir = Path::new(artifacts);
+    let manifest = Manifest::load(dir).map_err(|e| {
+        anyhow::anyhow!(
+            "{who} --backend {arch}: {e}; train a model first \
+             (`repro train --arch {arch} --workload …`)"
+        )
+    })?;
+    let (key, entry) = manifest.resolve(model, benchmark)?;
+    if entry.arch != arch {
+        anyhow::bail!(
+            "model '{key}' has arch '{}' — not a {arch} model; use --backend {} for these \
+             artifacts",
+            entry.arch,
+            match entry.arch.as_str() {
+                "native" | "transformer" => entry.arch.as_str(),
+                _ => "pjrt",
+            }
+        );
+    }
+    let vocab = DeltaVocab::from_file(&dir.join(&entry.vocab))?;
+    let params = quantized_sibling(dir, &entry.params, precision);
+    let backend: Box<dyn PredictorBackend> = match arch {
+        "native" => {
+            let m = if precision.is_quantized() {
+                NativeBackend::load_with_precision(&params, &NativeConfig::default(), precision)?
+            } else {
+                let mut m = NativeBackend::load(&params, &NativeConfig::default())?;
+                m.set_precision(precision)?;
+                m
+            };
+            eprintln!(
+                "{who}: loaded native model '{key}' ({} params, seq={}, classes={}, \
+                 precision={})",
+                m.n_params(),
+                m.seq_len(),
+                m.n_classes(),
+                precision.as_str()
+            );
+            Box::new(m)
+        }
+        "transformer" => {
+            let mut m = TransformerBackend::load(&params, &TransformerConfig::default())?;
+            m.set_precision(precision)?;
+            eprintln!(
+                "{who}: loaded transformer model '{key}' ({} params, seq={}, {} layer(s) × {} \
+                 head(s), classes={}, precision={})",
+                m.n_params(),
+                m.seq_len(),
+                m.n_layers(),
+                m.n_heads(),
+                m.n_classes(),
+                precision.as_str()
+            );
+            Box::new(m)
+        }
+        other => anyhow::bail!("load_model_backend: unsupported arch '{other}'"),
+    };
+    anyhow::ensure!(
+        backend.n_classes() == vocab.n_classes(),
+        "model '{key}': params have {} classes but the vocab has {}",
+        backend.n_classes(),
+        vocab.n_classes()
+    );
+    Ok((vocab, backend))
+}
+
+/// Resolve the params path for a tier: quantized tiers prefer the
+/// dtype-3 sibling store next to the f32 one when it exists.
+fn quantized_sibling(dir: &Path, params: &str, precision: Precision) -> std::path::PathBuf {
+    if precision.is_quantized() {
+        if let Some(stem) = params.strip_suffix(".params.bin") {
+            let sibling = dir.join(format!("{stem}.int4.params.bin"));
+            if sibling.exists() {
+                return sibling;
+            }
+        }
+    }
+    dir.join(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TestDir;
+
+    fn spec(kind: PredictorBackendKind, precision: Precision) -> BackendSpec {
+        BackendSpec {
+            kind,
+            precision,
+            history_len: 8,
+            benchmark: "addvectors".to_string(),
+            who: "test",
+        }
+    }
+
+    #[test]
+    fn stride_and_constant_resolve_without_artifacts() {
+        let (vocab, backend, name) =
+            spec(PredictorBackendKind::Stride, Precision::Exact).resolve().unwrap();
+        assert_eq!(name, "stride");
+        assert_eq!(backend.n_classes(), vocab.n_classes());
+
+        let (vocab, backend, name) =
+            spec(PredictorBackendKind::Constant(3), Precision::Exact).resolve().unwrap();
+        assert_eq!(name, "constant");
+        assert_eq!(backend.n_classes(), 2);
+        assert_eq!(vocab.n_classes(), 2);
+    }
+
+    #[test]
+    fn precision_table_guards_before_artifact_load() {
+        // pjrt rejects every non-exact tier by name, before touching
+        // the (absent) artifacts directory.
+        let kind = PredictorBackendKind::Pjrt {
+            artifacts: "/nonexistent".to_string(),
+            model: String::new(),
+        };
+        let err = spec(kind, Precision::Fast).resolve().unwrap_err().to_string();
+        assert!(err.contains("--precision fast"), "{err}");
+        assert!(err.contains("pjrt"), "{err}");
+
+        // transformer serves exact|fast only.
+        let kind = PredictorBackendKind::Transformer {
+            artifacts: "/nonexistent".to_string(),
+            model: String::new(),
+        };
+        let err = spec(kind, Precision::Int8).resolve().unwrap_err().to_string();
+        assert!(err.contains("--precision int8"), "{err}");
+        assert!(err.contains("--backend native"), "{err}");
+    }
+
+    #[test]
+    fn missing_artifacts_name_the_training_command() {
+        let dir = TestDir::new();
+        let kind = PredictorBackendKind::Native {
+            artifacts: dir.path().to_string_lossy().into_owned(),
+            model: String::new(),
+        };
+        let err = spec(kind, Precision::Exact).resolve().unwrap_err().to_string();
+        assert!(err.contains("repro train --arch native"), "{err}");
+    }
+
+    #[test]
+    fn quantized_sibling_prefers_int4_store_when_present() {
+        let dir = TestDir::new();
+        let main = "m.native.params.bin";
+        std::fs::write(dir.path().join("m.native.int4.params.bin"), b"x").unwrap();
+        let p = quantized_sibling(dir.path(), main, Precision::Int4);
+        assert!(p.to_string_lossy().ends_with("m.native.int4.params.bin"));
+        // Exact/fast tiers keep the f32 store even when the sibling
+        // exists (bit-pinned path must not silently requantize).
+        let p = quantized_sibling(dir.path(), main, Precision::Exact);
+        assert!(p.to_string_lossy().ends_with("m.native.params.bin"));
+        // No sibling → fall back to the main store (whose loader
+        // rejects f32-only tensors with a named-flag error).
+        std::fs::remove_file(dir.path().join("m.native.int4.params.bin")).unwrap();
+        let p = quantized_sibling(dir.path(), main, Precision::Int8);
+        assert!(p.to_string_lossy().ends_with("m.native.params.bin"));
+    }
+}

@@ -1,0 +1,535 @@
+//! Precision-tiered GEMM/GEMV kernels for the in-process backends.
+//!
+//! The repo pins two hard invariants on the model plane: same-seed
+//! training is byte-deterministic, and batched inference is
+//! bit-identical to sequential inference. Both hinge on the scalar
+//! fixed-order loops in [`crate::predictor::nn`] — so that path is
+//! kept verbatim here as the **exact** tier (the bit-pinned oracle)
+//! and everything faster is opt-in per run via `--precision`:
+//!
+//! * **exact** — delegates to `nn::linear_forward_batch` unchanged.
+//!   The default everywhere determinism is pinned (golden gate,
+//!   training, grad checks).
+//! * **fast** — a register-blocked f32 microkernel: two output rows
+//!   retire per pass over the activation vector, each row carrying
+//!   eight independent partial sums. Reassociating the reduction
+//!   breaks the sequential FP dependency chain the exact loop imposes,
+//!   which is what lets LLVM vectorize it on stable Rust. A
+//!   `std::simd` variant of the same microkernel sits behind the
+//!   off-by-default `simd` cargo feature (nightly only); results stay
+//!   row-local either way, so batched == sequential still holds
+//!   bitwise *within* the fast tier.
+//! * **int8 / int4** — integer-accumulate inference directly on the
+//!   dtype-3 scaled-int4 tensor store ([`crate::predictor::quant`]),
+//!   without materializing f32 weights: per-tensor power-of-two weight
+//!   scale, per-row dynamic absmax activation quantization to i8, i32
+//!   accumulation, one f32 rescale per output. The int8 tier expands
+//!   the 4-bit codes to one signed byte each at load (trades 2x
+//!   footprint for a branch-free inner loop); the int4 tier reads the
+//!   packed nibbles in place. Both tiers see the *same* codes, so
+//!   their outputs are identical — int4 is the storage-true path,
+//!   int8 the speed-true one.
+//!
+//! Fast and quantized tiers are inference-only; the factory and the
+//! CLI reject them on training paths (`repro train`, grad checks).
+
+use crate::predictor::nn;
+use anyhow::{bail, ensure, Result};
+
+/// The `--precision` axis: which kernel tier answers inference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Scalar fixed-order oracle — bit-pinned, the only tier allowed
+    /// on training paths.
+    #[default]
+    Exact,
+    /// Register-blocked/vectorized f32 kernels (inference only).
+    Fast,
+    /// Integer-accumulate on dtype-3 codes, pre-expanded to i8.
+    Int8,
+    /// Integer-accumulate on dtype-3 codes, packed nibbles in place.
+    Int4,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "exact" => Some(Self::Exact),
+            "fast" => Some(Self::Fast),
+            "int8" => Some(Self::Int8),
+            "int4" => Some(Self::Int4),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Exact => "exact",
+            Self::Fast => "fast",
+            Self::Int8 => "int8",
+            Self::Int4 => "int4",
+        }
+    }
+
+    pub fn is_exact(&self) -> bool {
+        *self == Self::Exact
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, Self::Int8 | Self::Int4)
+    }
+}
+
+/// Batched dense layer dispatch: `out[i] = W · xs[i] + b` for each of
+/// the `xs.len() / in_dim` row-major activation rows. The exact tier
+/// is byte-for-byte `nn::linear_forward_batch`; every other tier runs
+/// the fast f32 microkernel (quantized models route their integer
+/// layers through [`QuantizedLinear`] instead and only fall through
+/// here for layers that stayed f32).
+pub fn linear_forward_batch(
+    precision: Precision,
+    w: &[f32],
+    b: &[f32],
+    xs: &[f32],
+    out: &mut [f32],
+    in_dim: usize,
+    out_dim: usize,
+) {
+    if precision.is_exact() {
+        nn::linear_forward_batch(w, b, xs, out, in_dim, out_dim);
+        return;
+    }
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    debug_assert_eq!(b.len(), out_dim);
+    debug_assert_eq!(xs.len() % in_dim.max(1), 0);
+    debug_assert_eq!(out.len() % out_dim.max(1), 0);
+    for (x, o) in xs.chunks_exact(in_dim).zip(out.chunks_exact_mut(out_dim)) {
+        linear_row_fast(w, b, x, o, in_dim);
+    }
+}
+
+/// One activation row through the fast microkernel.
+fn linear_row_fast(w: &[f32], b: &[f32], x: &[f32], o: &mut [f32], in_dim: usize) {
+    let out_dim = o.len();
+    let mut r = 0;
+    // 2×8 register block: two weight rows share one streamed pass
+    // over `x`, so the activation row is loaded once per pair.
+    while r + 2 <= out_dim {
+        let row0 = &w[r * in_dim..(r + 1) * in_dim];
+        let row1 = &w[(r + 1) * in_dim..(r + 2) * in_dim];
+        let (s0, s1) = dot2_fast(row0, row1, x);
+        o[r] = s0 + b[r];
+        o[r + 1] = s1 + b[r + 1];
+        r += 2;
+    }
+    if r < out_dim {
+        let row = &w[r * in_dim..(r + 1) * in_dim];
+        o[r] = dot_fast(row, x) + b[r];
+    }
+}
+
+const LANES: usize = 8;
+
+/// Reassociated dot product: eight independent partial sums over the
+/// 8-wide chunks, scalar tail. Breaking the FP dependency chain is
+/// what unlocks auto-vectorization; it also means results differ from
+/// the exact tier at the last-ulp level (the tolerance tests state
+/// the bound).
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn dot_fast(row: &[f32], x: &[f32]) -> f32 {
+    debug_assert_eq!(row.len(), x.len());
+    let rc = row.chunks_exact(LANES);
+    let xc = x.chunks_exact(LANES);
+    let (rt, xt) = (rc.remainder(), xc.remainder());
+    let mut acc = [0.0f32; LANES];
+    for (rk, xk) in rc.zip(xc) {
+        for l in 0..LANES {
+            acc[l] += rk[l] * xk[l];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for (ri, xi) in rt.iter().zip(xt) {
+        s += ri * xi;
+    }
+    s
+}
+
+/// `std::simd` variant of [`dot_fast`] (nightly, `--features simd`).
+#[cfg(feature = "simd")]
+#[inline]
+pub fn dot_fast(row: &[f32], x: &[f32]) -> f32 {
+    use std::simd::{f32x8, num::SimdFloat};
+    debug_assert_eq!(row.len(), x.len());
+    let rc = row.chunks_exact(LANES);
+    let xc = x.chunks_exact(LANES);
+    let (rt, xt) = (rc.remainder(), xc.remainder());
+    let mut acc = f32x8::splat(0.0);
+    for (rk, xk) in rc.zip(xc) {
+        acc += f32x8::from_slice(rk) * f32x8::from_slice(xk);
+    }
+    let mut s = acc.reduce_sum();
+    for (ri, xi) in rt.iter().zip(xt) {
+        s += ri * xi;
+    }
+    s
+}
+
+/// Two weight rows against one activation vector — the 2×8 microkernel
+/// body. `x` is read once per 8-chunk and feeds both rows' lane
+/// accumulators.
+#[cfg(not(feature = "simd"))]
+#[inline]
+fn dot2_fast(r0: &[f32], r1: &[f32], x: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(r0.len(), x.len());
+    debug_assert_eq!(r1.len(), x.len());
+    let c0 = r0.chunks_exact(LANES);
+    let c1 = r1.chunks_exact(LANES);
+    let cx = x.chunks_exact(LANES);
+    let (t0, t1, tx) = (c0.remainder(), c1.remainder(), cx.remainder());
+    let mut a0 = [0.0f32; LANES];
+    let mut a1 = [0.0f32; LANES];
+    for ((k0, k1), kx) in c0.zip(c1).zip(cx) {
+        for l in 0..LANES {
+            let xv = kx[l];
+            a0[l] += k0[l] * xv;
+            a1[l] += k1[l] * xv;
+        }
+    }
+    let (mut s0, mut s1) = (a0.iter().sum::<f32>(), a1.iter().sum::<f32>());
+    for ((v0, v1), xv) in t0.iter().zip(t1).zip(tx) {
+        s0 += v0 * xv;
+        s1 += v1 * xv;
+    }
+    (s0, s1)
+}
+
+#[cfg(feature = "simd")]
+#[inline]
+fn dot2_fast(r0: &[f32], r1: &[f32], x: &[f32]) -> (f32, f32) {
+    use std::simd::{f32x8, num::SimdFloat};
+    debug_assert_eq!(r0.len(), x.len());
+    debug_assert_eq!(r1.len(), x.len());
+    let c0 = r0.chunks_exact(LANES);
+    let c1 = r1.chunks_exact(LANES);
+    let cx = x.chunks_exact(LANES);
+    let (t0, t1, tx) = (c0.remainder(), c1.remainder(), cx.remainder());
+    let mut a0 = f32x8::splat(0.0);
+    let mut a1 = f32x8::splat(0.0);
+    for ((k0, k1), kx) in c0.zip(c1).zip(cx) {
+        let xv = f32x8::from_slice(kx);
+        a0 += f32x8::from_slice(k0) * xv;
+        a1 += f32x8::from_slice(k1) * xv;
+    }
+    let (mut s0, mut s1) = (a0.reduce_sum(), a1.reduce_sum());
+    for ((v0, v1), xv) in t0.iter().zip(t1).zip(tx) {
+        s0 += v0 * xv;
+        s1 += v1 * xv;
+    }
+    (s0, s1)
+}
+
+/// The weight plane of one quantized dense layer, exactly as stored.
+#[derive(Debug, Clone)]
+enum QuantWeights {
+    /// dtype-3 codes re-signed and pre-expanded to one byte each
+    /// (−7..7; the int8 tier).
+    I8(Vec<i8>),
+    /// Raw dtype-3 nibble buffer, low nibble first (the int4 tier).
+    /// Codes are unpacked by flat element index, so rows need no
+    /// byte alignment.
+    Packed(Vec<u8>),
+}
+
+/// One dense layer served straight off the dtype-3 quantized store —
+/// the f32 weights are never materialized.
+///
+/// Numerics: `out[r] = (Σ_i w_code[r,i]·x_q[i]) · w_scale · x_scale
+/// + bias[r]`, where `x_q` is the activation row quantized to i8
+/// against its own absmax (`x_scale = absmax/127`) and the sum is an
+/// i32 accumulation. Each output row depends only on its own
+/// activation row and order-independent integer adds, so
+/// `logits_batch == logits_one` holds *exactly* on these tiers. A
+/// zero activation row or an all-zero weight tensor degenerates to
+/// `out = bias`.
+#[derive(Debug, Clone)]
+pub struct QuantizedLinear {
+    out_dim: usize,
+    in_dim: usize,
+    /// Per-tensor power-of-two weight scale (0.0 = all-zero tensor).
+    w_scale: f32,
+    weights: QuantWeights,
+}
+
+impl QuantizedLinear {
+    /// Build from a dtype-3 payload (`scale`, nibble-packed codes) as
+    /// retained by [`crate::runtime::params::TensorStore`].
+    pub fn from_packed(
+        packed: &[u8],
+        w_scale: f32,
+        out_dim: usize,
+        in_dim: usize,
+        precision: Precision,
+    ) -> Result<Self> {
+        ensure!(
+            precision.is_quantized(),
+            "QuantizedLinear: precision '{}' is not a quantized tier",
+            precision.as_str()
+        );
+        let numel = out_dim * in_dim;
+        ensure!(
+            packed.len() * 2 >= numel,
+            "QuantizedLinear: {} nibbles < {out_dim}x{in_dim} weights",
+            packed.len() * 2
+        );
+        // i32 accumulator headroom: |code| ≤ 8, |x_q| ≤ 127.
+        ensure!(
+            in_dim as u64 * 8 * 127 <= i32::MAX as u64,
+            "QuantizedLinear: in_dim {in_dim} overflows the i32 accumulator"
+        );
+        let weights = match precision {
+            Precision::Int8 => {
+                let codes = (0..numel)
+                    .map(|i| {
+                        let b = packed[i / 2];
+                        let code = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+                        (code as i32 - 8) as i8
+                    })
+                    .collect();
+                QuantWeights::I8(codes)
+            }
+            Precision::Int4 => QuantWeights::Packed(packed[..numel.div_ceil(2)].to_vec()),
+            _ => unreachable!(),
+        };
+        Ok(Self { out_dim, in_dim, w_scale, weights })
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Bytes held by the weight plane (footprint accounting).
+    pub fn weight_bytes(&self) -> usize {
+        match &self.weights {
+            QuantWeights::I8(v) => v.len(),
+            QuantWeights::Packed(v) => v.len(),
+        }
+    }
+
+    /// Batched forward: one activation row per `in_dim` chunk of `xs`.
+    pub fn forward_batch(&self, bias: &[f32], xs: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(bias.len(), self.out_dim);
+        debug_assert_eq!(xs.len() % self.in_dim.max(1), 0);
+        debug_assert_eq!(out.len() % self.out_dim.max(1), 0);
+        let mut xq = vec![0i8; self.in_dim];
+        for (x, o) in xs.chunks_exact(self.in_dim).zip(out.chunks_exact_mut(self.out_dim)) {
+            let absmax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            if absmax == 0.0 || self.w_scale == 0.0 {
+                o.copy_from_slice(bias);
+                continue;
+            }
+            let inv = 127.0 / absmax;
+            for (q, &v) in xq.iter_mut().zip(x) {
+                *q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+            }
+            let rescale = self.w_scale * (absmax / 127.0);
+            match &self.weights {
+                QuantWeights::I8(w) => {
+                    for (r, or) in o.iter_mut().enumerate() {
+                        let row = &w[r * self.in_dim..(r + 1) * self.in_dim];
+                        let mut acc = 0i32;
+                        for (wi, xi) in row.iter().zip(&xq) {
+                            acc += *wi as i32 * *xi as i32;
+                        }
+                        *or = acc as f32 * rescale + bias[r];
+                    }
+                }
+                QuantWeights::Packed(bytes) => {
+                    for (r, or) in o.iter_mut().enumerate() {
+                        let base = r * self.in_dim;
+                        let mut acc = 0i32;
+                        for (ci, xi) in xq.iter().enumerate() {
+                            let i = base + ci;
+                            let b = bytes[i / 2];
+                            let code = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+                            acc += (code as i32 - 8) * *xi as i32;
+                        }
+                        *or = acc as f32 * rescale + bias[r];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Single-row forward.
+    pub fn forward_one(&self, bias: &[f32], x: &[f32], out: &mut [f32]) {
+        self.forward_batch(bias, x, out)
+    }
+}
+
+/// Validate a (backend arch, precision) pair; the single home of the
+/// "who may run what" table. Error messages name the CLI flag to fix.
+pub fn ensure_supported(arch: &str, precision: Precision) -> Result<()> {
+    match (arch, precision) {
+        (_, Precision::Exact) => Ok(()),
+        ("native", _) => Ok(()),
+        ("transformer", Precision::Fast) => Ok(()),
+        ("transformer", p) => bail!(
+            "--precision {} runs only on --backend native (the transformer serves exact|fast)",
+            p.as_str()
+        ),
+        ("pjrt", p) => bail!(
+            "--backend pjrt: --precision {} is not supported on the pjrt path — the AOT \
+             executable fixes its own arithmetic; use --precision exact",
+            p.as_str()
+        ),
+        // Kernel-free backends (stride, constant) ignore the axis.
+        _ => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::quant;
+    use crate::util::XorShift64;
+
+    fn randvec(rng: &mut XorShift64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.next_u64() % 2000) as f32 / 1000.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for p in [Precision::Exact, Precision::Fast, Precision::Int8, Precision::Int4] {
+            assert_eq!(Precision::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Precision::parse("turbo"), None);
+        assert!(Precision::Exact.is_exact());
+        assert!(Precision::Int4.is_quantized());
+        assert!(!Precision::Fast.is_quantized());
+    }
+
+    #[test]
+    fn exact_tier_is_the_nn_oracle_bitwise() {
+        let mut rng = XorShift64::new(7);
+        let (in_dim, out_dim, batch) = (37, 11, 3);
+        let w = randvec(&mut rng, in_dim * out_dim);
+        let b = randvec(&mut rng, out_dim);
+        let xs = randvec(&mut rng, in_dim * batch);
+        let mut got = vec![0.0f32; out_dim * batch];
+        let mut want = vec![0.0f32; out_dim * batch];
+        linear_forward_batch(Precision::Exact, &w, &b, &xs, &mut got, in_dim, out_dim);
+        nn::linear_forward_batch(&w, &b, &xs, &mut want, in_dim, out_dim);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn fast_matches_exact_within_tolerance_on_odd_shapes() {
+        // Odd shapes: 1×1, sub-lane K, non-multiple-of-8 K, odd M/N.
+        for &(in_dim, out_dim, batch) in
+            &[(1, 1, 1), (3, 5, 2), (7, 2, 1), (8, 8, 4), (13, 17, 3), (129, 9, 5)]
+        {
+            let mut rng = XorShift64::new(in_dim as u64 * 31 + out_dim as u64);
+            let w = randvec(&mut rng, in_dim * out_dim);
+            let b = randvec(&mut rng, out_dim);
+            let xs = randvec(&mut rng, in_dim * batch);
+            let mut fast = vec![0.0f32; out_dim * batch];
+            let mut exact = vec![0.0f32; out_dim * batch];
+            linear_forward_batch(Precision::Fast, &w, &b, &xs, &mut fast, in_dim, out_dim);
+            linear_forward_batch(Precision::Exact, &w, &b, &xs, &mut exact, in_dim, out_dim);
+            let tol = 1e-5 * (in_dim as f32 + 1.0);
+            for (f, e) in fast.iter().zip(&exact) {
+                assert!((f - e).abs() <= tol, "{in_dim}x{out_dim}: fast {f} vs exact {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_tier_handles_empty_batch() {
+        let w = vec![1.0f32; 12];
+        let b = vec![0.0f32; 3];
+        let mut out = [0.0f32; 0];
+        linear_forward_batch(Precision::Fast, &w, &b, &[], &mut out, 4, 3);
+    }
+
+    #[test]
+    fn quantized_tiers_agree_and_track_f32() {
+        let mut rng = XorShift64::new(99);
+        let (in_dim, out_dim) = (24, 6);
+        let w = randvec(&mut rng, in_dim * out_dim);
+        let b = randvec(&mut rng, out_dim);
+        let x = randvec(&mut rng, in_dim);
+        let (scale, packed) = quant::pack_scaled(&w);
+        let l8 = QuantizedLinear::from_packed(&packed, scale, out_dim, in_dim, Precision::Int8)
+            .unwrap();
+        let l4 = QuantizedLinear::from_packed(&packed, scale, out_dim, in_dim, Precision::Int4)
+            .unwrap();
+        let mut o8 = vec![0.0f32; out_dim];
+        let mut o4 = vec![0.0f32; out_dim];
+        l8.forward_one(&b, &x, &mut o8);
+        l4.forward_one(&b, &x, &mut o4);
+        // Same codes, same accumulation — the tiers are bit-identical.
+        for (a, c) in o8.iter().zip(&o4) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+        // And both track the f32 layer within the quantization budget.
+        let mut of = vec![0.0f32; out_dim];
+        nn::linear_forward(&w, &b, &x, &mut of);
+        let budget = (scale / 2.0 + 0.02) * in_dim as f32;
+        for (q, f) in o8.iter().zip(&of) {
+            assert!((q - f).abs() <= budget, "quant {q} vs f32 {f} (budget {budget})");
+        }
+    }
+
+    #[test]
+    fn quantized_batch_is_bitwise_one_at_a_time() {
+        let mut rng = XorShift64::new(123);
+        let (in_dim, out_dim, batch) = (15, 7, 4);
+        let w = randvec(&mut rng, in_dim * out_dim);
+        let b = randvec(&mut rng, out_dim);
+        let xs = randvec(&mut rng, in_dim * batch);
+        let (scale, packed) = quant::pack_scaled(&w);
+        let l = QuantizedLinear::from_packed(&packed, scale, out_dim, in_dim, Precision::Int4)
+            .unwrap();
+        let mut batched = vec![0.0f32; out_dim * batch];
+        l.forward_batch(&b, &xs, &mut batched);
+        for (i, x) in xs.chunks_exact(in_dim).enumerate() {
+            let mut one = vec![0.0f32; out_dim];
+            l.forward_one(&b, x, &mut one);
+            for (a, c) in one.iter().zip(&batched[i * out_dim..(i + 1) * out_dim]) {
+                assert_eq!(a.to_bits(), c.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_zero_row_and_zero_tensor_degenerate_to_bias() {
+        let b = vec![0.5f32, -1.5];
+        let (scale, packed) = quant::pack_scaled(&[0.0f32; 6]);
+        let l = QuantizedLinear::from_packed(&packed, scale, 2, 3, Precision::Int8).unwrap();
+        let mut out = vec![0.0f32; 2];
+        l.forward_one(&b, &[1.0, 2.0, 3.0], &mut out);
+        assert_eq!(out, b);
+        let (s2, p2) = quant::pack_scaled(&[1.0f32; 6]);
+        let l2 = QuantizedLinear::from_packed(&p2, s2, 2, 3, Precision::Int8).unwrap();
+        l2.forward_one(&b, &[0.0, 0.0, 0.0], &mut out);
+        assert_eq!(out, b);
+    }
+
+    #[test]
+    fn precision_support_table() {
+        assert!(ensure_supported("native", Precision::Int4).is_ok());
+        assert!(ensure_supported("transformer", Precision::Fast).is_ok());
+        assert!(ensure_supported("pjrt", Precision::Exact).is_ok());
+        let e = ensure_supported("transformer", Precision::Int8).unwrap_err().to_string();
+        assert!(e.contains("--precision int8"), "{e}");
+        let e = ensure_supported("pjrt", Precision::Fast).unwrap_err().to_string();
+        assert!(e.contains("--precision"), "{e}");
+    }
+}

@@ -15,8 +15,10 @@
 pub mod batcher;
 pub mod cluster;
 pub mod engine;
+pub mod factory;
 pub mod finetune;
 pub mod history;
+pub mod kernel;
 pub mod native;
 pub mod nn;
 pub mod quant;
@@ -25,7 +27,9 @@ pub mod vocab;
 
 pub use cluster::{ClusterBy, ClusterKey};
 pub use engine::{PredictorEngine, StrideBackend};
+pub use factory::BackendSpec;
 pub use history::HistoryToken;
+pub use kernel::Precision;
 pub use native::{NativeBackend, NativeConfig};
 pub use transformer::{TransformerBackend, TransformerConfig};
 pub use vocab::DeltaVocab;
@@ -82,6 +86,31 @@ pub trait PredictorBackend: Send {
 
     /// Number of delta classes (incl. OOV) this backend emits.
     fn n_classes(&self) -> usize;
+
+    /// Introspection for report tables (`repro train` / `repro
+    /// analyze`) — replaces per-arch downcasting. The default covers
+    /// parameterless backends (stride, constant, the pjrt stub).
+    fn info(&self) -> BackendInfo {
+        BackendInfo {
+            arch: self.name(),
+            n_params: 0,
+            flops_per_inference: 0,
+            precision: Precision::Exact,
+        }
+    }
+}
+
+/// What [`PredictorBackend::info`] answers: enough for the train /
+/// analyze report tables and the serving logs, uniformly across
+/// arches.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackendInfo {
+    pub arch: &'static str,
+    pub n_params: usize,
+    pub flops_per_inference: u64,
+    /// Kernel tier this instance serves with (see
+    /// [`kernel::Precision`]).
+    pub precision: Precision,
 }
 
 /// Always predicts the same class — test + ablation backend.

@@ -16,12 +16,19 @@
 //! AOT artifacts ([`crate::runtime::params`]): `repro train` writes
 //! `<model>.native.params.bin` plus a manifest entry with
 //! `arch = "native"`, and `--backend native` loads it back on the
-//! eval/simulate path. All arithmetic is scalar `f32` in a fixed
+//! eval/simulate path. Training arithmetic is scalar `f32` in a fixed
 //! order, so same-seed training is byte-deterministic
-//! (`rust/tests/native_backend.rs` pins this).
+//! (`rust/tests/native_backend.rs` pins this). Inference additionally
+//! offers the faster tiers of [`crate::predictor::kernel`] — exact
+//! (default, the bit-pinned oracle), fast (blocked f32), and
+//! int8/int4 (integer accumulation straight off a dtype-3 store via
+//! [`NativeBackend::load_with_precision`]).
 
+use crate::predictor::kernel::{self, Precision, QuantizedLinear};
 use crate::predictor::nn::{self, OptKind, Optimizer};
-use crate::predictor::{ClassId, DeltaVocab, LabelledWindow, PredictorBackend, Window};
+use crate::predictor::{
+    BackendInfo, ClassId, DeltaVocab, LabelledWindow, PredictorBackend, Window,
+};
 use crate::runtime::params::{write_store, TensorStore};
 use crate::util::XorShift64;
 use anyhow::{bail, Result};
@@ -100,6 +107,19 @@ pub struct NativeBackend {
     opt: Optimizer,
     /// Total optimizer steps taken (offline + online).
     pub train_steps: u64,
+    /// Kernel tier serving inference (training is always exact).
+    precision: Precision,
+    /// Integer FC layers, present only on the quantized tiers (built
+    /// from the dtype-3 store's raw codes at load).
+    qlayers: Option<QuantLayers>,
+}
+
+/// The two FC layers as served on the int8/int4 tiers; embeddings and
+/// biases stay f32 (they are gathers and adds, not GEMMs).
+#[derive(Debug)]
+struct QuantLayers {
+    fc1: QuantizedLinear,
+    fc2: QuantizedLinear,
 }
 
 impl NativeBackend {
@@ -153,6 +173,8 @@ impl NativeBackend {
             params,
             opt,
             train_steps: 0,
+            precision: Precision::Exact,
+            qlayers: None,
         }
     }
 
@@ -199,6 +221,26 @@ impl NativeBackend {
     /// The flat parameter vector (tests compare models through this).
     pub fn params(&self) -> &[f32] {
         &self.params
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Switch the serving tier. Exact/fast always work; the quantized
+    /// tiers need the integer plane a quantized load builds — use
+    /// [`NativeBackend::load_with_precision`] on an int4 (dtype-3)
+    /// checkpoint for those.
+    pub fn set_precision(&mut self, precision: Precision) -> Result<()> {
+        if precision.is_quantized() && self.qlayers.is_none() {
+            bail!(
+                "native backend: --precision {} needs an int4 (dtype-3) checkpoint loaded \
+                 through load_with_precision; this instance has only f32 weights",
+                precision.as_str()
+            );
+        }
+        self.precision = precision;
+        Ok(())
     }
 
     /// Analytic FLOPs for one window's forward pass (MAC = 2 flops):
@@ -255,11 +297,7 @@ impl NativeBackend {
 
     /// Top-1 class for one window.
     pub fn predict_one(&self, window: &Window) -> ClassId {
-        let mut x = vec![0.0; self.in_dim];
-        let mut h = vec![0.0; self.hidden];
-        let mut z = vec![0.0; self.n_classes];
-        self.forward(window, &mut x, &mut h, &mut z);
-        Self::argmax(&z)
+        Self::argmax(&self.logits_one(window))
     }
 
     /// First maximum wins — the tie-break both the sequential and the
@@ -275,8 +313,15 @@ impl NativeBackend {
     }
 
     /// Logits for one window (sequential reference path; the batched
-    /// path is pinned against this bit-for-bit).
+    /// path is pinned against this bit-for-bit). On the exact tier
+    /// this is the original scratch-buffer loop; the other tiers
+    /// route through [`NativeBackend::logits_batch`] with a batch of
+    /// one, which keeps batched == sequential trivially true there
+    /// too.
     pub fn logits_one(&self, window: &Window) -> Vec<f32> {
+        if !self.precision.is_exact() {
+            return self.logits_batch(std::slice::from_ref(window));
+        }
         let mut x = vec![0.0; self.in_dim];
         let mut h = vec![0.0; self.hidden];
         let mut z = vec![0.0; self.n_classes];
@@ -286,8 +331,10 @@ impl NativeBackend {
 
     /// Batched forward: gathers every window into one `[n × in_dim]`
     /// input matrix and runs each FC layer as a single batched GEMM
-    /// ([`nn::linear_forward_batch`]) — no per-window scratch
-    /// allocations, no per-window dispatch. Returns the flat
+    /// through the precision-tier dispatch
+    /// ([`kernel::linear_forward_batch`], or the integer plane on the
+    /// quantized tiers) — no per-window scratch allocations, no
+    /// per-window dispatch. Returns the flat
     /// `[n × n_classes]` logits, **bit-identical** to concatenating
     /// [`NativeBackend::logits_one`] over the batch (pinned by
     /// `batched_forward_bit_identical_to_sequential`).
@@ -299,24 +346,35 @@ impl NativeBackend {
             self.gather(w, x);
         }
         let mut hs = vec![0.0f32; n * self.hidden];
-        nn::linear_forward_batch(
-            &self.params[o_w1..o_w1 + self.hidden * self.in_dim],
-            &self.params[o_b1..o_b1 + self.hidden],
-            &xs,
-            &mut hs,
-            self.in_dim,
-            self.hidden,
-        );
-        nn::relu(&mut hs);
         let mut zs = vec![0.0f32; n * self.n_classes];
-        nn::linear_forward_batch(
-            &self.params[o_w2..o_w2 + self.n_classes * self.hidden],
-            &self.params[o_b2..o_b2 + self.n_classes],
-            &hs,
-            &mut zs,
-            self.hidden,
-            self.n_classes,
-        );
+        match (&self.qlayers, self.precision) {
+            (Some(q), p) if p.is_quantized() => {
+                q.fc1.forward_batch(&self.params[o_b1..o_b1 + self.hidden], &xs, &mut hs);
+                nn::relu(&mut hs);
+                q.fc2.forward_batch(&self.params[o_b2..o_b2 + self.n_classes], &hs, &mut zs);
+            }
+            _ => {
+                kernel::linear_forward_batch(
+                    self.precision,
+                    &self.params[o_w1..o_w1 + self.hidden * self.in_dim],
+                    &self.params[o_b1..o_b1 + self.hidden],
+                    &xs,
+                    &mut hs,
+                    self.in_dim,
+                    self.hidden,
+                );
+                nn::relu(&mut hs);
+                kernel::linear_forward_batch(
+                    self.precision,
+                    &self.params[o_w2..o_w2 + self.n_classes * self.hidden],
+                    &self.params[o_b2..o_b2 + self.n_classes],
+                    &hs,
+                    &mut zs,
+                    self.hidden,
+                    self.n_classes,
+                );
+            }
+        }
         zs
     }
 
@@ -443,6 +501,20 @@ impl NativeBackend {
     /// recovered from the tensor dims, optimizer state starts fresh
     /// from `cfg` (only its `optimizer`/`lr` fields are used).
     pub fn load(path: &Path, cfg: &NativeConfig) -> Result<Self> {
+        Self::load_with_precision(path, cfg, Precision::Exact)
+    }
+
+    /// Load and pin a serving tier in one step. The quantized tiers
+    /// require a dtype-3 (scaled-int4) store: the raw codes become
+    /// the integer FC plane and are *also* dequantized into the f32
+    /// parameter vector (embeddings, biases, and anything that still
+    /// wants f32 reads the latter). An f32-only checkpoint fails with
+    /// an error naming the flag to fix.
+    pub fn load_with_precision(
+        path: &Path,
+        cfg: &NativeConfig,
+        precision: Precision,
+    ) -> Result<Self> {
         let store = TensorStore::load(path)?;
         let find = |name: &str| {
             store
@@ -490,6 +562,34 @@ impl NativeBackend {
             params.extend_from_slice(&t.data);
         }
         let opt = Optimizer::new(cfg.optimizer, cfg.lr, params.len());
+        let qlayers = if precision.is_quantized() {
+            let payload = |t: &crate::runtime::params::NamedTensor| {
+                t.quant.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "{}: tensor '{}' is stored as f32 — --precision {} needs an int4 \
+                         (dtype-3) checkpoint; retrain with `repro train` (which writes the \
+                         .int4.params.bin sibling) or use --precision exact|fast",
+                        path.display(),
+                        t.name,
+                        precision.as_str()
+                    )
+                })
+            };
+            let q1 = payload(fc1_w)?;
+            let q2 = payload(fc2_w)?;
+            Some(QuantLayers {
+                fc1: QuantizedLinear::from_packed(&q1.packed, q1.scale, hidden, in_dim, precision)?,
+                fc2: QuantizedLinear::from_packed(
+                    &q2.packed,
+                    q2.scale,
+                    n_classes,
+                    hidden,
+                    precision,
+                )?,
+            })
+        } else {
+            None
+        };
         Ok(Self {
             seq_len,
             n_classes,
@@ -503,6 +603,8 @@ impl NativeBackend {
             params,
             opt,
             train_steps: 0,
+            precision,
+            qlayers,
         })
     }
 }
@@ -517,11 +619,26 @@ impl PredictorBackend for NativeBackend {
     }
 
     fn finetune(&mut self, batch: &[LabelledWindow]) -> Option<f64> {
+        // The quantized tiers serve a frozen integer plane; an f32
+        // parameter update would silently diverge from the codes the
+        // forward pass actually reads, so learning is disabled there.
+        if self.precision.is_quantized() {
+            return None;
+        }
         Some(self.train_batch(batch) as f64)
     }
 
     fn n_classes(&self) -> usize {
         self.n_classes
+    }
+
+    fn info(&self) -> BackendInfo {
+        BackendInfo {
+            arch: "native",
+            n_params: self.n_params(),
+            flops_per_inference: self.flops_per_inference(),
+            precision: self.precision,
+        }
     }
 }
 
@@ -643,6 +760,39 @@ mod tests {
         let one_by_one: Vec<ClassId> = windows.iter().map(|w| m.predict_one(w)).collect();
         assert_eq!(classes, one_by_one);
         assert!(m.logits_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn quantized_load_serves_from_codes_and_rejects_f32_stores() {
+        let dir = crate::util::TestDir::new();
+        let pf = dir.file("m.native.params.bin");
+        let pq = dir.file("m.native.int4.params.bin");
+        let mut m = NativeBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        let batch: Vec<LabelledWindow> = (0..6)
+            .map(|i| LabelledWindow { window: window(&[i % 3, 1, 2, 0]), label: i % 3 })
+            .collect();
+        for _ in 0..20 {
+            m.train_batch(&batch);
+        }
+        m.save(&pf, false).unwrap();
+        m.save(&pq, true).unwrap();
+        // f32-only checkpoint + quantized tier → named-flag error.
+        let err = NativeBackend::load_with_precision(&pf, &tiny_cfg(), Precision::Int4)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--precision int4"), "{err}");
+        // Both quantized tiers load the dtype-3 store and agree bitwise.
+        let q8 = NativeBackend::load_with_precision(&pq, &tiny_cfg(), Precision::Int8).unwrap();
+        let mut q4 = NativeBackend::load_with_precision(&pq, &tiny_cfg(), Precision::Int4).unwrap();
+        assert_eq!(q8.precision(), Precision::Int8);
+        let ws = vec![window(&[1, 1, 1, 1]), window(&[2]), window(&[0, 1, 2, 0])];
+        let b8 = q8.logits_batch(&ws);
+        assert_eq!(b8, q4.logits_batch(&ws), "int8 and int4 read the same codes");
+        let sequential: Vec<f32> = ws.iter().flat_map(|w| q4.logits_one(w)).collect();
+        assert_eq!(b8, sequential, "quantized batched == sequential");
+        // The integer plane is frozen: no online learning.
+        assert!(q4.finetune(&batch).is_none());
+        assert_eq!(q4.info().precision, Precision::Int4);
     }
 
     #[test]

@@ -24,8 +24,11 @@
 //! pins both, `rust/tests/grad_check.rs` pins every backward against
 //! central differences).
 
+use crate::predictor::kernel::{self, Precision};
 use crate::predictor::nn::{self, OptKind, Optimizer};
-use crate::predictor::{ClassId, DeltaVocab, LabelledWindow, PredictorBackend, Window};
+use crate::predictor::{
+    BackendInfo, ClassId, DeltaVocab, LabelledWindow, PredictorBackend, Window,
+};
 use crate::runtime::params::{write_store, TensorStore};
 use crate::util::XorShift64;
 use anyhow::{bail, Result};
@@ -173,6 +176,9 @@ pub struct TransformerBackend {
     opt: Optimizer,
     /// Total optimizer steps taken (offline + online).
     pub train_steps: u64,
+    /// Kernel tier the projection/FFN GEMMs dispatch through
+    /// (exact|fast only — there is no integer plane for this arch).
+    precision: Precision,
 }
 
 impl TransformerBackend {
@@ -247,6 +253,7 @@ impl TransformerBackend {
             params,
             opt,
             train_steps: 0,
+            precision: Precision::Exact,
         };
         debug_assert_eq!(me.params.len(), me.total_len());
         me
@@ -345,6 +352,25 @@ impl TransformerBackend {
     /// The flat parameter vector (tests compare models through this).
     pub fn params(&self) -> &[f32] {
         &self.params
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Switch the GEMM tier. This arch has no integer weight plane,
+    /// so only exact|fast are accepted; the quantized tiers fail with
+    /// an error naming the flags to fix.
+    pub fn set_precision(&mut self, precision: Precision) -> Result<()> {
+        if precision.is_quantized() {
+            bail!(
+                "--precision {} runs only on --backend native (the transformer serves \
+                 exact|fast)",
+                precision.as_str()
+            );
+        }
+        self.precision = precision;
+        Ok(())
     }
 
     /// Mutable parameter access — the finite-difference gradient
@@ -467,6 +493,13 @@ impl TransformerBackend {
         let (s, d, f) = (self.seq_len, self.d_model, self.d_ff);
         let hd = self.head_dim();
         let p = &self.params;
+        // Projection/FFN GEMMs dispatch by tier; `pr` is Exact on
+        // every training path (constructors pin it), so gradients and
+        // same-seed byte determinism are untouched.
+        let pr = self.precision;
+        let lin = |w: &[f32], b: &[f32], xs: &[f32], out: &mut [f32], i_dim: usize, o_dim: usize| {
+            kernel::linear_forward_batch(pr, w, b, xs, out, i_dim, o_dim)
+        };
         self.gather(window, &mut fwd.x);
         for l in 0..self.n_layers {
             let o = self.layer_off(l);
@@ -480,18 +513,11 @@ impl TransformerBackend {
                     &mut c.y1[r * d..(r + 1) * d],
                 );
             }
-            nn::linear_forward_batch(&p[o.wq..][..d * d], &p[o.wq + d * d..][..d], &c.y1, &mut c.q, d, d);
-            nn::linear_forward_batch(&p[o.wk..][..d * d], &p[o.wk + d * d..][..d], &c.y1, &mut c.k, d, d);
-            nn::linear_forward_batch(&p[o.wv..][..d * d], &p[o.wv + d * d..][..d], &c.y1, &mut c.v, d, d);
+            lin(&p[o.wq..][..d * d], &p[o.wq + d * d..][..d], &c.y1, &mut c.q, d, d);
+            lin(&p[o.wk..][..d * d], &p[o.wk + d * d..][..d], &c.y1, &mut c.k, d, d);
+            lin(&p[o.wv..][..d * d], &p[o.wv + d * d..][..d], &c.y1, &mut c.v, d, d);
             nn::attention_forward(&c.q, &c.k, &c.v, s, self.n_heads, hd, &mut c.attn, &mut c.ctx);
-            nn::linear_forward_batch(
-                &p[o.wo..][..d * d],
-                &p[o.wo + d * d..][..d],
-                &c.ctx,
-                &mut fwd.t,
-                d,
-                d,
-            );
+            lin(&p[o.wo..][..d * d], &p[o.wo + d * d..][..d], &c.ctx, &mut fwd.t, d, d);
             for (xv, &tv) in fwd.x.iter_mut().zip(fwd.t.iter()) {
                 *xv += tv;
             }
@@ -504,9 +530,9 @@ impl TransformerBackend {
                     &mut c.y2[r * d..(r + 1) * d],
                 );
             }
-            nn::linear_forward_batch(&p[o.w1..][..f * d], &p[o.w1 + f * d..][..f], &c.y2, &mut c.f1, d, f);
+            lin(&p[o.w1..][..f * d], &p[o.w1 + f * d..][..f], &c.y2, &mut c.f1, d, f);
             nn::gelu_forward(&c.f1, &mut c.g);
-            nn::linear_forward_batch(&p[o.w2..][..d * f], &p[o.w2 + d * f..][..d], &c.g, &mut fwd.t, f, d);
+            lin(&p[o.w2..][..d * f], &p[o.w2 + d * f..][..d], &c.g, &mut fwd.t, f, d);
             for (xv, &tv) in fwd.x.iter_mut().zip(fwd.t.iter()) {
                 *xv += tv;
             }
@@ -552,9 +578,9 @@ impl TransformerBackend {
 
     /// Batched inference: gathers every window into one `[n·S × D]`
     /// activation matrix and runs each projection/FFN layer as a
-    /// single batched pass over all windows
-    /// ([`nn::linear_forward_batch`]); attention stays window-local by
-    /// construction. Every op is row-local with the same accumulation
+    /// single batched pass over all windows (the precision-tier
+    /// dispatch [`kernel::linear_forward_batch`]); attention stays
+    /// window-local by construction. Every op is row-local with the same accumulation
     /// order as the sequential path, so the flat `[n × n_classes]`
     /// result is **bit-identical** to concatenating
     /// [`TransformerBackend::logits_one`] over the batch (pinned in
@@ -568,6 +594,12 @@ impl TransformerBackend {
         let hd = self.head_dim();
         let rows = n * s;
         let p = &self.params;
+        // Same tier dispatch as `forward` — row-local either way, so
+        // batched == sequential stays bitwise on every tier.
+        let pr = self.precision;
+        let lin = |w: &[f32], b: &[f32], xs: &[f32], out: &mut [f32], i_dim: usize, o_dim: usize| {
+            kernel::linear_forward_batch(pr, w, b, xs, out, i_dim, o_dim)
+        };
         let mut x = vec![0.0f32; rows * d];
         for (w, xw) in windows.iter().zip(x.chunks_exact_mut(s * d)) {
             self.gather(w, xw);
@@ -593,9 +625,9 @@ impl TransformerBackend {
                     &mut y[r * d..(r + 1) * d],
                 );
             }
-            nn::linear_forward_batch(&p[o.wq..][..d * d], &p[o.wq + d * d..][..d], &y, &mut q, d, d);
-            nn::linear_forward_batch(&p[o.wk..][..d * d], &p[o.wk + d * d..][..d], &y, &mut k, d, d);
-            nn::linear_forward_batch(&p[o.wv..][..d * d], &p[o.wv + d * d..][..d], &y, &mut v, d, d);
+            lin(&p[o.wq..][..d * d], &p[o.wq + d * d..][..d], &y, &mut q, d, d);
+            lin(&p[o.wk..][..d * d], &p[o.wk + d * d..][..d], &y, &mut k, d, d);
+            lin(&p[o.wv..][..d * d], &p[o.wv + d * d..][..d], &y, &mut v, d, d);
             for wi in 0..n {
                 let span = wi * s * d..(wi + 1) * s * d;
                 nn::attention_forward(
@@ -609,7 +641,7 @@ impl TransformerBackend {
                     &mut ctx[span],
                 );
             }
-            nn::linear_forward_batch(&p[o.wo..][..d * d], &p[o.wo + d * d..][..d], &ctx, &mut t, d, d);
+            lin(&p[o.wo..][..d * d], &p[o.wo + d * d..][..d], &ctx, &mut t, d, d);
             for (xv, &tv) in x.iter_mut().zip(t.iter()) {
                 *xv += tv;
             }
@@ -622,9 +654,9 @@ impl TransformerBackend {
                     &mut y[r * d..(r + 1) * d],
                 );
             }
-            nn::linear_forward_batch(&p[o.w1..][..f * d], &p[o.w1 + f * d..][..f], &y, &mut f1, d, f);
+            lin(&p[o.w1..][..f * d], &p[o.w1 + f * d..][..f], &y, &mut f1, d, f);
             nn::gelu_forward(&f1, &mut g);
-            nn::linear_forward_batch(&p[o.w2..][..d * f], &p[o.w2 + d * f..][..d], &g, &mut t, f, d);
+            lin(&p[o.w2..][..d * f], &p[o.w2 + d * f..][..d], &g, &mut t, f, d);
             for (xv, &tv) in x.iter_mut().zip(t.iter()) {
                 *xv += tv;
             }
@@ -1072,6 +1104,15 @@ impl PredictorBackend for TransformerBackend {
     fn n_classes(&self) -> usize {
         self.n_classes
     }
+
+    fn info(&self) -> BackendInfo {
+        BackendInfo {
+            arch: "transformer",
+            n_params: self.n_params(),
+            flops_per_inference: self.flops_per_inference(),
+            precision: self.precision,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1251,5 +1292,30 @@ mod tests {
         let loss = m.finetune(&batch).expect("transformer supports learning");
         assert!(loss.is_finite() && loss > 0.0);
         assert_eq!(m.train_steps, 1);
+    }
+
+    #[test]
+    fn fast_tier_tracks_exact_and_quantized_is_rejected() {
+        let mut m = TransformerBackend::with_shape(4, 3, 5, 7, &tiny_cfg());
+        let batch: Vec<LabelledWindow> = (0..6)
+            .map(|i| LabelledWindow { window: window(&[i % 3, 1, 2, 0]), label: i % 3 })
+            .collect();
+        for _ in 0..5 {
+            m.train_batch(&batch);
+        }
+        let ws = vec![window(&[1, 1, 1, 1]), window(&[2]), window(&[0, 1, 2, 0])];
+        let exact = m.logits_batch(&ws);
+        m.set_precision(Precision::Fast).unwrap();
+        assert_eq!(m.info().precision, Precision::Fast);
+        let fast = m.logits_batch(&ws);
+        for (f, e) in fast.iter().zip(&exact) {
+            assert!((f - e).abs() <= 1e-3, "fast {f} vs exact {e}");
+        }
+        // Fast keeps batched == sequential bitwise.
+        let sequential: Vec<f32> = ws.iter().flat_map(|w| m.logits_one(w)).collect();
+        assert_eq!(fast, sequential);
+        let err = m.set_precision(Precision::Int4).unwrap_err().to_string();
+        assert!(err.contains("--precision int4"), "{err}");
+        assert!(err.contains("--backend native"), "{err}");
     }
 }

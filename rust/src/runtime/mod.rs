@@ -35,5 +35,5 @@ pub mod pjrt;
 pub mod pjrt;
 
 pub use manifest::{Manifest, ModelEntry};
-pub use params::{NamedTensor, TensorStore};
+pub use params::{NamedTensor, QuantPayload, TensorStore};
 pub use pjrt::{ModelExecutable, PjrtBackend, PjrtRuntime};

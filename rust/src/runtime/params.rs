@@ -30,6 +30,17 @@ use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"UVMT";
 
+/// Raw per-tensor payload retained from a dtype-3 (scaled-int4) load:
+/// the power-of-two scale plus the untouched nibble buffer, so the
+/// integer inference tiers (`predictor::kernel::QuantizedLinear`) can
+/// run directly on the stored codes without materializing f32 weights.
+#[derive(Debug, Clone)]
+pub struct QuantPayload {
+    pub scale: f32,
+    /// Nibble-packed codes, low nibble first (see `predictor::quant`).
+    pub packed: Vec<u8>,
+}
+
 #[derive(Debug, Clone)]
 pub struct NamedTensor {
     pub name: String,
@@ -39,6 +50,9 @@ pub struct NamedTensor {
     /// accounting.
     pub stored_dtype: u8,
     pub stored_bytes: u64,
+    /// Present iff the tensor was stored as dtype 3; `data` still
+    /// holds the dequantized f32 view for the exact/fast tiers.
+    pub quant: Option<QuantPayload>,
 }
 
 impl NamedTensor {
@@ -93,6 +107,7 @@ impl TensorStore {
             let nbytes = u64_le(&mut f)?;
             let raw = read_exact(&mut f, nbytes as usize)?;
             let numel: usize = dims.iter().product();
+            let mut retained = None;
             let data = match dtype {
                 0 => {
                     if raw.len() != numel * 4 {
@@ -120,11 +135,19 @@ impl TensorStore {
                         bail!("{name}: scaled-int4 buffer too small");
                     }
                     let scale = f32::from_le_bytes(raw[0..4].try_into().unwrap());
+                    retained = Some(QuantPayload { scale, packed: raw[4..].to_vec() });
                     quant::unpack_scaled(&raw[4..], scale, numel)
                 }
                 d => bail!("{name}: unknown dtype {d}"),
             };
-            tensors.push(NamedTensor { name, dims, data, stored_dtype: dtype, stored_bytes: nbytes });
+            tensors.push(NamedTensor {
+                name,
+                dims,
+                data,
+                stored_dtype: dtype,
+                stored_bytes: nbytes,
+                quant: retained,
+            });
         }
         Ok(Self { tensors })
     }
@@ -215,6 +238,25 @@ mod tests {
         for (a, b) in data.iter().zip(&t.data) {
             assert!((a - b).abs() <= 1.0 / 7.0 + 1e-6, "v={a} back={b}");
         }
+    }
+
+    #[test]
+    fn scaled_int4_retains_raw_codes() {
+        let dir = crate::util::TestDir::new();
+        let p = dir.file("qr.bin");
+        let data = vec![0.0f32, 0.07, -0.03, 1.0, -0.52];
+        write_store(
+            &p,
+            &[("q".into(), vec![5], data.clone(), 3), ("f".into(), vec![5], data.clone(), 0)],
+        )
+        .unwrap();
+        let s = TensorStore::load(&p).unwrap();
+        let q = s.tensors[0].quant.as_ref().expect("dtype-3 keeps its raw payload");
+        let (scale, packed) = quant::pack_scaled(&data);
+        assert_eq!(q.scale, scale);
+        assert_eq!(q.packed, packed);
+        assert_eq!(quant::unpack_scaled(&q.packed, q.scale, 5), s.tensors[0].data);
+        assert!(s.tensors[1].quant.is_none(), "f32 tensors carry no quant payload");
     }
 
     #[test]

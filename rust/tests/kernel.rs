@@ -1,0 +1,189 @@
+//! Integration suite for the precision-tiered kernel layer (ISSUE 6
+//! acceptance): quantized serving accuracy on a trained model, the
+//! exact tier's bit stability across tier switches, and the backend
+//! factory's named-flag precision errors end to end.
+
+use std::collections::BTreeMap;
+use uvm_prefetch::predictor::engine::featurize_window;
+use uvm_prefetch::predictor::nn::OptKind;
+use uvm_prefetch::predictor::vocab::VocabFile;
+use uvm_prefetch::predictor::{
+    factory, DeltaVocab, HistoryToken, LabelledWindow, NativeBackend, NativeConfig, Precision,
+    PredictorBackend, Window,
+};
+use uvm_prefetch::runtime::{Manifest, ModelEntry};
+use uvm_prefetch::util::TestDir;
+
+const HIST: usize = 6;
+
+/// The same periodic `1, 1, 3` page walk as the native-backend suite:
+/// fully predictable from the window tail, so a trained model clears
+/// 99% top-1 and any quantization damage shows up as lost points.
+fn periodic_stride_corpus(n_tokens: usize) -> (DeltaVocab, Vec<LabelledWindow>) {
+    let vocab = DeltaVocab::synthetic(vec![1, 3], HIST);
+    let pattern = [1i64, 1, 3];
+    let mut page = 0u64;
+    let mut toks = Vec::with_capacity(n_tokens);
+    for i in 0..n_tokens {
+        let delta = pattern[i % pattern.len()];
+        page = (page as i64 + delta) as u64;
+        toks.push(HistoryToken { pc: 0x40, page, delta });
+    }
+    let mut windows = Vec::new();
+    for i in 0..toks.len() - HIST {
+        windows.push(LabelledWindow {
+            window: featurize_window(&vocab, &toks[i..i + HIST]),
+            label: vocab.encode_delta(toks[i + HIST].delta) as i32,
+        });
+    }
+    (vocab, windows)
+}
+
+fn trained_model(windows: &[LabelledWindow], vocab: &DeltaVocab) -> NativeBackend {
+    let cfg = NativeConfig {
+        d_pc: 2,
+        d_page: 4,
+        d_delta: 8,
+        hidden: 16,
+        lr: 0.01,
+        optimizer: OptKind::Adam,
+        seed: 0x5eed,
+    };
+    let mut model = NativeBackend::init(vocab, &cfg);
+    for _ in 0..40 {
+        for chunk in windows.chunks(16) {
+            model.train_batch(chunk);
+        }
+    }
+    model
+}
+
+fn top1(model: &NativeBackend, windows: &[LabelledWindow]) -> f64 {
+    let ws: Vec<Window> = windows.iter().map(|lw| lw.window.clone()).collect();
+    let hits = model
+        .predict_batch(&ws)
+        .iter()
+        .zip(windows)
+        .filter(|(p, lw)| **p == lw.label as u32)
+        .count();
+    hits as f64 / windows.len().max(1) as f64
+}
+
+/// Register a saved checkpoint in a minimal manifest so the factory
+/// can resolve it like a real `repro train` artifact.
+fn register(dir: &TestDir, vocab_file: &VocabFile, params_rel: &str, n_params: usize) {
+    vocab_file.to_json().write_file(&dir.path().join("bench.vocab.json")).unwrap();
+    let mut models = BTreeMap::new();
+    models.insert(
+        "bench".to_string(),
+        ModelEntry {
+            infer_hlo: String::new(),
+            train_hlo: None,
+            params: params_rel.to_string(),
+            vocab: "bench.vocab.json".to_string(),
+            batch: 16,
+            train_batch: 16,
+            seq_len: HIST,
+            n_features: 3,
+            n_classes: 3,
+            n_params,
+            arch: "native".to_string(),
+        },
+    );
+    Manifest { version: 1, models }.save(dir.path()).unwrap();
+}
+
+fn vocab_file() -> VocabFile {
+    VocabFile {
+        deltas: vec![1, 3],
+        pcs: vec![],
+        page_buckets: 1024,
+        dominant_delta: 1,
+        convergence: 0.0,
+        history_len: HIST,
+    }
+}
+
+/// Acceptance: on the periodic-stride corpus, every non-exact serving
+/// tier of a trained model stays within one point of f32 top-1.
+#[test]
+fn quantized_and_fast_top1_within_one_point_of_f32() {
+    let (vocab, windows) = periodic_stride_corpus(320);
+    let mut model = trained_model(&windows, &vocab);
+    let exact = top1(&model, &windows);
+    assert!(exact >= 0.99, "trained f32 top-1 {exact} < 0.99");
+
+    model.set_precision(Precision::Fast).unwrap();
+    let fast = top1(&model, &windows);
+    assert!((exact - fast).abs() <= 0.01, "fast top-1 {fast} vs exact {exact}");
+
+    let dir = TestDir::new();
+    let p4 = dir.file("m.int4.bin");
+    model.save(&p4, true).unwrap();
+    for precision in [Precision::Int8, Precision::Int4] {
+        let q = NativeBackend::load_with_precision(&p4, &NativeConfig::default(), precision)
+            .unwrap();
+        let quant = top1(&q, &windows);
+        assert!(
+            (exact - quant).abs() <= 0.01,
+            "{} top-1 {quant} strays > 1 point from exact {exact}",
+            precision.as_str()
+        );
+    }
+}
+
+/// Switching tiers never contaminates the exact path: logits after a
+/// fast round trip are bit-identical to before, and the fast tier is
+/// batch-order invariant.
+#[test]
+fn exact_tier_survives_tier_switches_bitwise() {
+    let (vocab, windows) = periodic_stride_corpus(150);
+    let mut model = trained_model(&windows, &vocab);
+    let ws: Vec<Window> = windows.iter().map(|lw| lw.window.clone()).collect();
+    let before = model.logits_batch(&ws);
+
+    model.set_precision(Precision::Fast).unwrap();
+    let fast = model.logits_batch(&ws);
+    let fast_seq: Vec<f32> = ws.iter().flat_map(|w| model.logits_one(w)).collect();
+    assert_eq!(fast, fast_seq, "fast tier batched == sequential");
+
+    model.set_precision(Precision::Exact).unwrap();
+    assert_eq!(model.logits_batch(&ws), before, "exact logits changed after a tier round trip");
+}
+
+/// The factory serves the quantized tiers from a registered artifact —
+/// preferring the `.int4.params.bin` sibling — and rejects an f32-only
+/// checkpoint with an error naming `--precision`.
+#[test]
+fn factory_resolves_quantized_siblings_and_names_the_flag() {
+    let (vocab, windows) = periodic_stride_corpus(150);
+    let model = trained_model(&windows, &vocab);
+    let dir = TestDir::new();
+    model.save(&dir.path().join("bench.native.params.bin"), false).unwrap();
+    register(&dir, &vocab_file(), "bench.native.params.bin", model.params().len());
+    let artifacts = dir.path().to_string_lossy().into_owned();
+
+    // f32-only store + int4 tier → named-flag error, not a panic.
+    let err = factory::load_model_backend(&artifacts, "", "bench", "native", Precision::Int4, "t")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--precision int4"), "{err}");
+
+    // With the sibling store on disk the same spec serves integers.
+    model.save(&dir.path().join("bench.native.int4.params.bin"), true).unwrap();
+    let (loaded_vocab, mut backend) =
+        factory::load_model_backend(&artifacts, "", "bench", "native", Precision::Int4, "t")
+            .unwrap();
+    assert_eq!(loaded_vocab.n_classes(), 3);
+    assert_eq!(backend.info().precision, Precision::Int4);
+    let ws: Vec<Window> = windows.iter().map(|lw| lw.window.clone()).collect();
+    let preds = backend.predict(&ws);
+    assert_eq!(preds.len(), ws.len());
+
+    // The exact tier through the same factory still reads the f32
+    // store and matches the in-memory model bitwise.
+    let (_, mut exact) =
+        factory::load_model_backend(&artifacts, "", "bench", "native", Precision::Exact, "t")
+            .unwrap();
+    assert_eq!(exact.predict(&ws), model.predict_batch(&ws));
+}
