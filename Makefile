@@ -5,6 +5,7 @@
 #   make lint          rustfmt check + clippy -D warnings + check --all-targets
 #   make check         cargo check --all-targets --release (benches/examples)
 #   make eval-smoke    small parallel all-benchmark sweep → BENCH_eval.json
+#   make trace-smoke   ingest ci/sample_trace.txt + sweep one trace cell
 #   make oversub-smoke small oversubscription sweep → BENCH_oversub.json
 #   make serve-smoke   tiny multi-tenant serving run → BENCH_serve.json
 #   make serve-smoke-fast  serve the trained native model on the fast
@@ -25,7 +26,7 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test lint fmt clippy check doc eval-smoke oversub-smoke serve-smoke serve-smoke-fast kernel-bench train train-transformer analyze analyze-smoke model-smoke golden-check golden-update eval oversub artifacts clean
+.PHONY: build test lint fmt clippy check doc eval-smoke trace-smoke oversub-smoke serve-smoke serve-smoke-fast kernel-bench train train-transformer analyze analyze-smoke model-smoke golden-check golden-update eval oversub artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -57,6 +58,18 @@ doc:
 # fallback (no PJRT artifacts needed). Produces BENCH_eval.json.
 eval-smoke:
 	$(CARGO) run --release --bin repro -- eval summary --no-pjrt \
+		--scale 0.25 --max-instructions 200000 --out results-smoke
+
+# Trace-ingestion smoke (CI): ingest the checked-in sample trace, list
+# it, and sweep one `trace:` cell through the summary grid — the cells
+# land in BENCH_eval.json tagged source=trace.
+trace-smoke:
+	$(CARGO) run --release --bin repro -- trace ingest ci/sample_trace.txt \
+		--trace-dir results-smoke/traces
+	$(CARGO) run --release --bin repro -- trace list \
+		--trace-dir results-smoke/traces
+	$(CARGO) run --release --bin repro -- eval summary --no-pjrt \
+		--trace-dir results-smoke/traces --benchmarks trace:sample_trace \
 		--scale 0.25 --max-instructions 200000 --out results-smoke
 
 # Oversubscription smoke: 3 workloads, two ratios, full eviction axis.
@@ -145,7 +158,8 @@ golden-update:
 eval:
 	$(CARGO) run --release --bin repro -- eval all --no-pjrt
 
-# Full oversubscription grid: {11 workloads} × {none,tree,uvmsmart,dl}
+# Full oversubscription grid: {14 workloads — the dense suite plus the
+# irregular bfs/spmv/hash_join trio} × {none,tree,uvmsmart,dl}
 # × {1.0,0.75,0.5} × {lru,random,freq,prefetch-aware}.
 oversub:
 	$(CARGO) run --release --bin repro -- eval oversub --no-pjrt

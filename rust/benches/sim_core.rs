@@ -13,7 +13,7 @@ use uvm_prefetch::sim::gmmu::Tlb;
 use uvm_prefetch::sim::interconnect::Interconnect;
 use uvm_prefetch::sim::Simulator;
 use uvm_prefetch::util::bench::{black_box, Bench};
-use uvm_prefetch::workloads;
+use uvm_prefetch::workloads::WorkloadRegistry;
 
 fn sim_run(prefetcher: &str, max_insts: u64) -> u64 {
     let exp = ExperimentConfig {
@@ -21,7 +21,7 @@ fn sim_run(prefetcher: &str, max_insts: u64) -> u64 {
         max_instructions: max_insts,
         ..Default::default()
     };
-    let wl = workloads::build("atax", &exp.sim, 1, 0.25).unwrap();
+    let wl = WorkloadRegistry::builtin().build("atax", &exp.sim, 1, 0.25).unwrap();
     let pf: Box<dyn uvm_prefetch::prefetch::Prefetcher> = match prefetcher {
         "none" => Box::new(NonePrefetcher),
         _ => Box::new(TreePrefetcher::new(0.5)),
@@ -77,6 +77,6 @@ fn main() {
     // Workload generation (materialization cost).
     b.case("workload-gen: atax @0.25", 1, || {
         let exp = ExperimentConfig::default();
-        workloads::build("atax", &exp.sim, 1, 0.25).unwrap().total_ops
+        WorkloadRegistry::builtin().build("atax", &exp.sim, 1, 0.25).unwrap().total_ops
     });
 }

@@ -18,7 +18,10 @@ use anyhow::Result;
 pub struct ExperimentConfig {
     pub sim: SimConfig,
     pub runtime: RuntimeConfig,
-    /// Benchmark name (one of [`crate::workloads::ALL_BENCHMARKS`]).
+    /// Benchmark name: any name registered in
+    /// [`crate::workloads::WorkloadRegistry`] — the built-in dense and
+    /// irregular generators, or an ingested `trace:<name>` workload
+    /// when a trace directory is supplied.
     pub benchmark: String,
     /// Stop after this many simulated instructions (0 = run the
     /// workload to completion).

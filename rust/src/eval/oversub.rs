@@ -36,7 +36,7 @@ use crate::eval::runner::RunOptions;
 use crate::eval::sweep::{self, CellSpec, SweepOutcome};
 use crate::sim::eviction::ALL_EVICTION_POLICIES;
 use crate::util::Json;
-use crate::workloads::ALL_BENCHMARKS;
+use crate::workloads::WorkloadRegistry;
 use std::path::Path;
 
 /// Default memory-ratio axis: baseline, mild and heavy pressure.
@@ -57,9 +57,16 @@ pub struct OversubGrid {
 }
 
 impl Default for OversubGrid {
+    /// Every built-in workload source (dense + irregular — the
+    /// nightly grid covers the irregular trio by construction) ×
+    /// default policy/ratio/eviction axes.
     fn default() -> Self {
         Self {
-            benchmarks: ALL_BENCHMARKS.iter().map(|s| s.to_string()).collect(),
+            benchmarks: WorkloadRegistry::builtin()
+                .all()
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
             prefetchers: OVERSUB_PREFETCHERS.iter().map(|s| s.to_string()).collect(),
             ratios: OVERSUB_RATIOS.to_vec(),
             evictions: ALL_EVICTION_POLICIES.iter().map(|s| s.to_string()).collect(),
@@ -268,9 +275,9 @@ mod tests {
     fn default_grid_shape() {
         let grid = OversubGrid::default();
         let cells = grid.cells(&tiny());
-        // ratio 1.0 → 1 eviction × 4 prefetchers × 11 benchmarks = 44;
-        // ratios 0.75 and 0.5 → 4 evictions × 4 × 11 = 176 each.
-        assert_eq!(cells.len(), 44 + 176 + 176);
+        // ratio 1.0 → 1 eviction × 4 prefetchers × 14 benchmarks = 56;
+        // ratios 0.75 and 0.5 → 4 evictions × 4 × 14 = 224 each.
+        assert_eq!(cells.len(), 56 + 224 + 224);
         assert!(cells
             .iter()
             .filter(|c| c.oversub_ratio == Some(1.0))

@@ -12,7 +12,7 @@ use crate::prefetch::{FaultInfo, PrefetchDecision, Prefetcher};
 use crate::runtime::Manifest;
 use crate::sim::{Metrics, Simulator, TraceWriter};
 use crate::types::PageNum;
-use crate::workloads;
+use crate::workloads::WorkloadRegistry;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
@@ -39,6 +39,15 @@ pub struct RunOptions {
     /// inference-only and validated per backend by
     /// [`crate::predictor::kernel::ensure_supported`].
     pub precision: Precision,
+    /// Directory of ingested traces (`repro trace ingest --trace-dir`).
+    /// "" = built-in sources only; otherwise the manifest's `trace:*`
+    /// entries register alongside the built-ins (see
+    /// [`RunOptions::registry`]).
+    pub trace_dir: String,
+    /// Explicit benchmark selection (`--benchmarks a,b,…`). Empty =
+    /// each axis's default grid; names are validated against the
+    /// registry before any cell runs.
+    pub benchmarks: Vec<String>,
 }
 
 impl Default for RunOptions {
@@ -56,6 +65,8 @@ impl Default for RunOptions {
             seed: 0x5eed,
             backend: String::new(),
             precision: Precision::Exact,
+            trace_dir: String::new(),
+            benchmarks: Vec::new(),
         }
     }
 }
@@ -126,6 +137,16 @@ impl RunOptions {
                     "pjrt"
                 }
             }
+        }
+    }
+
+    /// The workload registry these options see: every built-in source,
+    /// plus the ingested traces under `--trace-dir` when one is set.
+    pub fn registry(&self) -> anyhow::Result<WorkloadRegistry> {
+        if self.trace_dir.is_empty() {
+            Ok(WorkloadRegistry::builtin())
+        } else {
+            WorkloadRegistry::with_trace_dir(Path::new(&self.trace_dir))
         }
     }
 
@@ -222,12 +243,13 @@ pub fn build_dl_prefetcher(
 }
 
 /// Build any prefetcher by name. `scale` feeds the oracle's recording
-/// pass, which regenerates the workload (the config struct has no
-/// scale field — `RunOptions` carries it, and each cell passes its own
-/// value, so concurrent cells never share state).
+/// pass, which regenerates the workload from `registry` (the config
+/// struct has no scale field — `RunOptions` carries it, and each cell
+/// passes its own value, so concurrent cells never share state).
 pub fn build_prefetcher(
     exp: &ExperimentConfig,
     scale: f64,
+    registry: &WorkloadRegistry,
 ) -> anyhow::Result<Box<dyn Prefetcher>> {
     let rcfg = &exp.runtime;
     Ok(match rcfg.prefetcher.as_str() {
@@ -242,7 +264,7 @@ pub fn build_prefetcher(
         "oracle" => {
             // Recording pass first (same workload, demand paging).
             let order = Arc::new(Mutex::new(Vec::new()));
-            let wl = workloads::build(&exp.benchmark, &exp.sim, exp.seed, scale)?;
+            let wl = registry.build(&exp.benchmark, &exp.sim, exp.seed, scale)?;
             let rec = RecordingPrefetcher { order: order.clone() };
             let _ = Simulator::new(exp, wl, Box::new(rec), None).run();
             let order = Arc::try_unwrap(order)
@@ -275,8 +297,9 @@ pub fn run_benchmark_with(
 ) -> anyhow::Result<Metrics> {
     let exp = tweak(opts.experiment(benchmark, prefetcher)?);
     exp.sim.validate()?;
-    let wl = workloads::build(benchmark, &exp.sim, exp.seed, opts.scale)?;
-    let pf = build_prefetcher(&exp, opts.scale)?;
+    let registry = opts.registry()?;
+    let wl = registry.build(benchmark, &exp.sim, exp.seed, opts.scale)?;
+    let pf = build_prefetcher(&exp, opts.scale, &registry)?;
     Ok(Simulator::new(&exp, wl, pf, trace).run())
 }
 

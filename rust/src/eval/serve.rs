@@ -22,7 +22,6 @@ use crate::prefetch::none::NonePrefetcher;
 use crate::sim::{Simulator, TraceWriter, TRACE_HEADER};
 use crate::types::{AccessOrigin, TenantId};
 use crate::util::{HistSummary, Json};
-use crate::workloads;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -216,7 +215,7 @@ fn tenant_stream(
         seed: workload_seed(opts.run.seed.wrapping_add(tenant as u64), benchmark),
         ..Default::default()
     };
-    let wl = workloads::build(benchmark, &exp.sim, exp.seed, opts.run.scale)?;
+    let wl = opts.run.registry()?.build(benchmark, &exp.sim, exp.seed, opts.run.scale)?;
     // (pid, sequence, tenant) triple: concurrent `run()` calls in one
     // process (parallel tests) must not collide on a temp path.
     static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);

@@ -13,15 +13,15 @@
 //! Scheduling is work-stealing in the simplest possible form: workers
 //! race on an atomic cursor over the cell list, so a thread that
 //! finishes a cheap streaming cell immediately steals the next pending
-//! cell from the slower ones (the 11-benchmark suite is heavily
-//! skewed: the matvec column sweeps cost several times a streaming
-//! kernel). Results are re-ordered by cell index before they are
-//! merged into the [`Table`](crate::eval::report::Table) machinery.
+//! cell from the slower ones (the benchmark suite is heavily skewed:
+//! the matvec column sweeps cost several times a streaming kernel).
+//! Results are re-ordered by cell index before they are merged into
+//! the [`Table`](crate::eval::report::Table) machinery.
 
 use crate::eval::runner::{run_benchmark_with, RunOptions};
 use crate::sim::Metrics;
 use crate::util::Json;
-use crate::workloads::ALL_BENCHMARKS;
+use crate::workloads::source_tag;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -104,6 +104,11 @@ pub struct CellResult {
     /// ("stride" | "native" | "pjrt") — recorded even for cells whose
     /// policy never consults a predictor, so grids stay homogeneous.
     pub backend: String,
+    /// Where the workload came from: `"builtin"` (generator) or
+    /// `"trace"` (ingested via `repro trace ingest`) — derived from
+    /// the benchmark name's `trace:` convention
+    /// ([`crate::workloads::source_tag`]).
+    pub source: String,
     pub metrics: Metrics,
     pub wall: Duration,
 }
@@ -150,7 +155,9 @@ pub fn default_threads() -> usize {
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
-/// The full 11-workload × 6-policy grid behind `repro eval summary`.
+/// The full registry × 6-policy grid behind `repro eval summary`: every
+/// registered workload source (dense, irregular, and — when
+/// `opts.trace_dir` is set — ingested traces), in registration order.
 ///
 /// Cells are ordered *policy-major* on purpose: the work-stealing
 /// cursor hands adjacent cells to different workers, and a
@@ -159,9 +166,10 @@ pub fn default_threads() -> usize {
 /// concurrently. Policy-major order spreads the heavyweights across
 /// the sweep, bounding peak memory at roughly one copy of each big
 /// workload instead of `threads` copies of the biggest.
-pub fn full_sweep_cells(opts: &RunOptions) -> Vec<CellSpec> {
-    let benches: Vec<String> = ALL_BENCHMARKS.iter().map(|b| b.to_string()).collect();
-    sweep_cells(&benches, SWEEP_PREFETCHERS, opts)
+pub fn full_sweep_cells(opts: &RunOptions) -> anyhow::Result<Vec<CellSpec>> {
+    let registry = opts.registry()?;
+    let benches: Vec<String> = registry.all().iter().map(|b| b.to_string()).collect();
+    Ok(sweep_cells(&benches, SWEEP_PREFETCHERS, opts))
 }
 
 /// Policy-major grid over an explicit benchmark list (the
@@ -238,6 +246,7 @@ pub fn sweep(cells: &[CellSpec], threads: usize) -> anyhow::Result<SweepOutcome>
             benchmark: spec.benchmark.clone(),
             prefetcher: spec.prefetcher.clone(),
             backend: spec.opts.backend_name().to_string(),
+            source: source_tag(&spec.benchmark).to_string(),
             metrics,
             wall,
         });
@@ -255,6 +264,7 @@ pub fn bench_eval_json(o: &SweepOutcome) -> Json {
             ("benchmark", Json::str(&c.benchmark)),
             ("prefetcher", Json::str(&c.prefetcher)),
             ("backend", Json::str(&c.backend)),
+            ("source", Json::str(&c.source)),
             ("wall_ms", Json::Num(c.wall.as_secs_f64() * 1e3)),
             ("instructions", Json::Num(c.metrics.instructions as f64)),
             ("cycles", Json::Num(c.metrics.cycles as f64)),
@@ -323,9 +333,9 @@ mod tests {
     }
 
     #[test]
-    fn full_grid_is_11_by_6() {
-        let cells = full_sweep_cells(&tiny());
-        assert_eq!(cells.len(), 11 * 6);
+    fn full_grid_is_registry_by_6() {
+        let cells = full_sweep_cells(&tiny()).unwrap();
+        assert_eq!(cells.len(), 14 * 6, "11 dense + 3 irregular, 6 policies");
     }
 
     #[test]
@@ -338,5 +348,6 @@ mod tests {
         assert!(j.get("speedup_vs_serial_estimate").and_then(Json::as_f64).is_some());
         let cell = &j.get("cells").and_then(Json::as_arr).unwrap()[0];
         assert_eq!(cell.get("backend").and_then(Json::as_str), Some("stride"));
+        assert_eq!(cell.get("source").and_then(Json::as_str), Some("builtin"));
     }
 }

@@ -8,13 +8,25 @@ use crate::eval::report::{f, Table};
 use crate::eval::runner::{backend_benchmarks, run_pair, BenchPair, RunOptions};
 use crate::eval::sweep::{self, CellSpec};
 use crate::util::geomean;
-use crate::workloads::ALL_BENCHMARKS;
 use std::path::Path;
 
-/// The benchmark axis of a sweep: the full 11-workload suite, narrowed
-/// to the trained models when the native backend is selected.
+/// The benchmark axis of a sweep: every registered workload source
+/// (dense + irregular + ingested traces when `--trace-dir` is set), or
+/// the explicit `--benchmarks` selection validated against the
+/// registry — then narrowed to the trained models when an in-process
+/// learned backend is selected.
 fn grid_benchmarks(opts: &RunOptions) -> anyhow::Result<Vec<String>> {
-    let all: Vec<String> = ALL_BENCHMARKS.iter().map(|b| b.to_string()).collect();
+    let registry = opts.registry()?;
+    let all: Vec<String> = if opts.benchmarks.is_empty() {
+        registry.all().iter().map(|b| b.to_string()).collect()
+    } else {
+        for b in &opts.benchmarks {
+            if registry.get(b).is_none() {
+                return Err(registry.unknown(b));
+            }
+        }
+        opts.benchmarks.clone()
+    };
     backend_benchmarks(opts, &all)
 }
 
@@ -32,7 +44,7 @@ fn bench_pairs(opts: &RunOptions) -> anyhow::Result<Vec<BenchPair>> {
 }
 
 /// Zip a sweep's `uvmsmart` and `dl` cells into U-vs-R pairs. Both
-/// policy slices come back in `ALL_BENCHMARKS` order (the sweep
+/// policy slices come back in the grid's benchmark order (the sweep
 /// preserves cell order), so pairing is positional.
 fn pairs_from(outcome: &sweep::SweepOutcome) -> Vec<BenchPair> {
     let u_cells = outcome.by_prefetcher("uvmsmart");
@@ -252,7 +264,7 @@ pub fn fig12(opts: &RunOptions, out: &Path) -> anyhow::Result<Table> {
 /// **Headline summary** (§7.4/§7.5/§7.6): IPC +10.89 % geomean, hit
 /// rate 89.02 % vs 76.10 %, PCIe −11.05 %, unity 0.90 vs 0.85.
 ///
-/// Runs the full 11-workload × 6-policy grid as one parallel sweep and
+/// Runs the registry's workload × 6-policy grid as one parallel sweep and
 /// writes `BENCH_eval.json` (per-cell wall-clock, total sweep time,
 /// speedup vs the serial estimate) next to the CSVs and at the
 /// workspace root, so the perf trajectory is tracked per PR.

@@ -36,7 +36,6 @@ use crate::runtime::{Manifest, ModelEntry};
 use crate::sim::Simulator;
 use crate::types::{AccessOrigin, Cycle, PageNum};
 use crate::util::XorShift64;
-use crate::workloads;
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
@@ -260,7 +259,7 @@ impl Prefetcher for AccessCollector {
 pub fn harvest_streams(opts: &TrainOptions) -> Result<BTreeMap<ClusterKey, Vec<HistoryToken>>> {
     let exp = opts.run.experiment(&opts.benchmark, "none")?;
     exp.sim.validate()?;
-    let wl = workloads::build(&opts.benchmark, &exp.sim, exp.seed, opts.run.scale)?;
+    let wl = opts.run.registry()?.build(&opts.benchmark, &exp.sim, exp.seed, opts.run.scale)?;
     let streams = Arc::new(Mutex::new(BTreeMap::new()));
     let collector = AccessCollector {
         streams: streams.clone(),

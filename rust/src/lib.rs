@@ -5,8 +5,10 @@
 //! three-layer Rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the coordination contribution: a
-//!   discrete-event GPU-UVM simulator ([`sim`]), eleven benchmark
-//!   access-pattern workloads ([`workloads`]), the tree-based /
+//!   discrete-event GPU-UVM simulator ([`sim`]), a workload registry
+//!   of benchmark access-pattern generators — the paper's dense suite
+//!   plus irregular graph/sparse/join kernels — and ingested kernel
+//!   traces replayed as workloads ([`workloads`]), the tree-based /
 //!   UVMSmart baselines and the DL-driven prefetcher ([`prefetch`]),
 //!   the deployment path for the learned predictor — clustering,
 //!   history windows, dynamic batching, vocab mapping, online

@@ -36,10 +36,10 @@
 //!                  [--backend K] [--precision T] [--artifacts DIR]
 //!                  [--out results]
 //!                  [--scale F] [--max-instructions N] [--no-pjrt]
+//!                  [--benchmarks a,b] [--trace-dir DIR]
 //!                  oversub only: [--ratios 1.0,0.75,0.5]
 //!                  [--evictions lru,random,freq,prefetch-aware]
 //!                  [--prefetchers none,tree,uvmsmart,dl]
-//!                  [--benchmarks a --benchmarks b]
 //!                  ("all" covers the paper artifacts; oversub is its
 //!                  own axis and must be requested explicitly)
 //! repro golden     <check|update> [--path ci/golden_metrics.json]
@@ -52,8 +52,25 @@
 //!                    load generator: N tenant fault streams replayed
 //!                    concurrently through K router shards + one
 //!                    shared batcher; writes BENCH_serve.json.
+//! repro trace      <ingest FILE... [--name N] | list>
+//!                  [--trace-dir traces-ingested]
+//!                    ingest: stream-parse accelsim-style kernel
+//!                    traces — whitespace `(pc, sm, warp, cta, vaddr
+//!                    [, store, compute, kernel, array])` records or
+//!                    the GMMU CSV written by trace-gen — normalize
+//!                    placement, and cache them under --trace-dir.
+//!                    Every cached trace then registers as benchmark
+//!                    `trace:<name>` in any subcommand that is given
+//!                    the same --trace-dir.
+//! repro list       [--trace-dir DIR]
+//!                    print the workload registry (all / dense /
+//!                    irregular / trace / model name lists) as JSON.
 //! repro info       [--artifacts DIR] [--dump-config]
 //! ```
+//!
+//! `--benchmarks` flags accept comma-separated lists and may repeat;
+//! workload names come from the registry (`repro list`), including
+//! `trace:<name>` entries once a `--trace-dir` is supplied.
 //!
 //! `--backend K` selects the `dl` policy's predictor: `stride`
 //! (pure-Rust frequency vote — the floor), `native` (pure-Rust revised
@@ -80,10 +97,10 @@ use uvm_prefetch::runtime::Manifest;
 use uvm_prefetch::sim::TraceWriter;
 use uvm_prefetch::util::cli::Args;
 use uvm_prefetch::util::Json;
-use uvm_prefetch::workloads::{ALL_BENCHMARKS, MODEL_BENCHMARKS};
+use uvm_prefetch::workloads::{trace, WorkloadFamily, WorkloadRegistry};
 
-const USAGE: &str = "repro <trace-gen|simulate|train|analyze|eval|golden|serve|info> [flags] \
-                     (see rust/src/main.rs header)";
+const USAGE: &str = "repro <trace-gen|simulate|train|analyze|eval|golden|serve|trace|list|info> \
+                     [flags] (see rust/src/main.rs header)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -97,6 +114,8 @@ fn main() -> Result<()> {
         "eval" => eval_cmd(&args),
         "golden" => golden(&args),
         "serve" => serve(&args),
+        "trace" => trace_cmd(&args),
+        "list" => list_cmd(&args),
         "info" => info(&args),
         other => anyhow::bail!("unknown command '{other}'\nusage: {USAGE}"),
     }
@@ -111,10 +130,24 @@ fn opts_from(args: &Args) -> Result<RunOptions> {
         seed: args.u64("seed", 0x5eed)?,
         backend: args.str("backend", ""),
         precision: precision_from(args)?,
+        trace_dir: args.str("trace-dir", ""),
+        benchmarks: benchmarks_from(args),
     };
     // Reject unknown --backend names before any cell runs.
     opts.backend_kind()?;
     Ok(opts)
+}
+
+/// Collect `--benchmarks` values: the flag may repeat, and each value
+/// may itself be a comma-separated list. Empty = caller's default
+/// (usually the full registry).
+fn benchmarks_from(args: &Args) -> Vec<String> {
+    args.get_all("benchmarks")
+        .into_iter()
+        .flat_map(|v| v.split(','))
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
 }
 
 /// Parse the `--precision` kernel-tier axis; unknown names fail
@@ -131,18 +164,17 @@ fn trace_gen(args: &Args) -> Result<()> {
     std::fs::create_dir_all(&out)?;
     let limit = args.u64("limit", 400_000)?;
     let scale = args.f64("scale", 1.0)?;
-    let names: Vec<String> = {
-        let given = args.get_all("benchmarks");
-        if given.is_empty() {
-            ALL_BENCHMARKS.iter().map(|s| s.to_string()).collect()
-        } else {
-            given.into_iter().map(|s| s.to_string()).collect()
-        }
-    };
     let mut opts = opts_from(args)?;
     opts.scale = scale;
     opts.max_instructions = args.u64("max-instructions", 60_000_000)?;
+    let registry = opts.registry()?;
+    let names: Vec<String> = if opts.benchmarks.is_empty() {
+        registry.all().into_iter().map(str::to_string).collect()
+    } else {
+        opts.benchmarks.clone()
+    };
     for name in names {
+        // `trace:` names are valid here too; ':' is fine in a path.
         let path = out.join(format!("{name}.csv"));
         let writer = TraceWriter::create(&path, limit)?;
         // Trace under the tree prefetcher: the paper collects traces
@@ -156,12 +188,23 @@ fn trace_gen(args: &Args) -> Result<()> {
             path.display()
         );
     }
-    Json::obj(vec![
-        ("all", Json::arr(ALL_BENCHMARKS.iter().map(|s| Json::str(s)))),
-        ("model", Json::arr(MODEL_BENCHMARKS.iter().map(|s| Json::str(s)))),
-    ])
-    .write_file(&out.join("benchmarks.json"))?;
+    registry_json(&registry).write_file(&out.join("benchmarks.json"))?;
     Ok(())
+}
+
+/// The registry's name lists as JSON — written next to generated
+/// traces as `benchmarks.json` and printed by `repro list`, so both
+/// always reflect what is actually registered (builtins *and* any
+/// ingested `trace:` entries).
+fn registry_json(registry: &WorkloadRegistry) -> Json {
+    let names = |v: Vec<&str>| Json::arr(v.into_iter().map(Json::str));
+    Json::obj(vec![
+        ("all", names(registry.all())),
+        ("dense", names(registry.family(WorkloadFamily::Dense))),
+        ("irregular", names(registry.family(WorkloadFamily::Irregular))),
+        ("trace", names(registry.family(WorkloadFamily::Trace))),
+        ("model", names(registry.model())),
+    ])
 }
 
 fn simulate(args: &Args) -> Result<()> {
@@ -294,11 +337,11 @@ fn train(args: &Args) -> Result<()> {
     use uvm_prefetch::eval::train::train_model;
 
     let names: Vec<String> = {
-        let given = args.get_all("benchmarks");
+        let given = benchmarks_from(args);
         if given.is_empty() {
             vec![args.str("workload", "streamtriad")]
         } else {
-            given.into_iter().map(|s| s.to_string()).collect()
+            given
         }
     };
     for name in names {
@@ -428,9 +471,9 @@ fn oversub_grid_from(args: &Args) -> Result<eval::OversubGrid> {
     if let Some(list) = args.get("prefetchers") {
         grid.prefetchers = list.split(',').map(|s| s.trim().to_string()).collect();
     }
-    let benches = args.get_all("benchmarks");
+    let benches = benchmarks_from(args);
     if !benches.is_empty() {
-        grid.benchmarks = benches.into_iter().map(|s| s.to_string()).collect();
+        grid.benchmarks = benches;
     }
     Ok(grid)
 }
@@ -478,11 +521,11 @@ fn serve(args: &Args) -> Result<()> {
 
     let defaults = srv::ServeOptions::default();
     let benchmarks: Vec<String> = {
-        let given = args.get_all("benchmarks");
+        let given = benchmarks_from(args);
         if given.is_empty() {
             vec![args.str("benchmark", "addvectors")]
         } else {
-            given.into_iter().map(|s| s.to_string()).collect()
+            given
         }
     };
     let bypass = {
@@ -504,6 +547,8 @@ fn serve(args: &Args) -> Result<()> {
             backend: args.str("backend", ""),
             max_instructions: args.u64("max-instructions", 2_000_000)?,
             precision: precision_from(args)?,
+            trace_dir: args.str("trace-dir", ""),
+            benchmarks: Vec::new(),
         },
     };
     opts.run.backend_kind()?; // reject unknown --backend before any work
@@ -556,5 +601,87 @@ fn serve(args: &Args) -> Result<()> {
             t.latency_us.p99,
         );
     }
+    Ok(())
+}
+
+/// `repro trace <ingest|list>` — the trace-ingestion frontend: parse
+/// accelsim-style kernel traces, normalize their (sm, warp) placement
+/// against the simulated GPU, and cache them (plus a manifest) under
+/// `--trace-dir`. Cached traces register as `trace:<name>` benchmarks
+/// in every subcommand given the same `--trace-dir`. See DESIGN.md
+/// §10 for the record grammar.
+fn trace_cmd(args: &Args) -> Result<()> {
+    let mode = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("trace needs a mode: ingest|list"))?;
+    let dir = PathBuf::from(args.str("trace-dir", "traces-ingested"));
+    match mode {
+        "ingest" => {
+            let files: Vec<PathBuf> = args.positional[2..].iter().map(PathBuf::from).collect();
+            anyhow::ensure!(
+                !files.is_empty(),
+                "trace ingest needs at least one trace file: repro trace ingest FILE... \
+                 [--trace-dir DIR] [--name N]"
+            );
+            let name = args.get("name");
+            anyhow::ensure!(
+                name.is_none() || files.len() == 1,
+                "--name applies to a single file, got {}",
+                files.len()
+            );
+            // Placement is normalized against the same default GPU
+            // shape every simulation uses (config::SimConfig).
+            let cfg = ExperimentConfig::default().sim;
+            for f in &files {
+                let r = trace::ingest(f, &dir, name, &cfg)?;
+                println!(
+                    "trace ingest {}: {} records → {} warp streams, {} ops, {} pages — cached \
+                     {} (run with --benchmarks trace:{} --trace-dir {})",
+                    f.display(),
+                    r.records,
+                    r.tasks,
+                    r.ops,
+                    r.footprint_pages,
+                    r.cached.display(),
+                    r.name,
+                    dir.display(),
+                );
+            }
+            Ok(())
+        }
+        "list" => {
+            let entries = trace::load_manifest(&dir)?;
+            if entries.is_empty() {
+                println!("no ingested traces under {}", dir.display());
+            }
+            for e in &entries {
+                println!(
+                    "trace:{} — {} records, {} warp streams, {} pages ({})",
+                    e.name,
+                    e.records,
+                    e.tasks,
+                    e.footprint_pages,
+                    dir.join(&e.file).display(),
+                );
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown trace mode '{other}' (expected ingest|list)"),
+    }
+}
+
+/// `repro list` — print the workload registry as JSON (same shape as
+/// the `benchmarks.json` trace-gen writes). Pass `--trace-dir` to
+/// include ingested `trace:` entries.
+fn list_cmd(args: &Args) -> Result<()> {
+    let dir = args.str("trace-dir", "");
+    let registry = if dir.is_empty() {
+        WorkloadRegistry::builtin()
+    } else {
+        WorkloadRegistry::with_trace_dir(Path::new(&dir))?
+    };
+    println!("{}", registry_json(&registry).to_string());
     Ok(())
 }

@@ -15,7 +15,7 @@ use std::collections::VecDeque;
 
 /// One warp-level step: `compute` arithmetic instructions followed by
 /// a single coalesced memory instruction.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WarpOp {
     pub compute: u32,
     pub access: MemAccess,

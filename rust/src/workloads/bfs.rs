@@ -1,0 +1,136 @@
+//! BFS — frontier-driven breadth-first traversal over a seeded
+//! power-law graph (UVMBench's graph-analytics family).
+//!
+//! Level-synchronous CSR BFS: each frontier node's warp reads its row
+//! extent, then walks its edge list — `col[e]` streams sequentially,
+//! but the `dist[v]` visited-check lands wherever the edge points.
+//! Edge targets are hub-biased (r² sampling), so a few high-degree
+//! pages stay hot while the long tail scatters across the whole `dist`
+//! array: the data-dependent pattern locality-based prefetchers cannot
+//! anticipate. Unreachable components restart the frontier (forest
+//! traversal), so every node is expanded exactly once.
+
+use super::common::{pc, Builder};
+use super::WorkloadInstance;
+
+pub fn build(mut b: Builder) -> WorkloadInstance {
+    let n = b.scaled(65_536, 32);
+    let deg_cap = 64.min(n / 4).max(1);
+
+    // Power-law out-degrees (heavy tail, clamped): sum = edge count m.
+    let mut degrees = Vec::with_capacity(n as usize);
+    let mut m = 0u64;
+    for _ in 0..n {
+        let u = b.rng.unit();
+        let d = ((1.0 / (1.0 - u * 0.999)).powf(1.3) as u64).clamp(1, deg_cap);
+        degrees.push(d);
+        m += d;
+    }
+    let mut starts = Vec::with_capacity(n as usize);
+    let mut s = 0u64;
+    for &d in &degrees {
+        starts.push(s);
+        s += d;
+    }
+    // Hub-biased edge targets: r² sampling concentrates in-edges on
+    // low-numbered nodes (the "hubs") with a scattered tail.
+    let mut adj = Vec::with_capacity(m as usize);
+    for _ in 0..m {
+        let r = b.rng.unit();
+        adj.push(((r * r * n as f64) as u64).min(n - 1));
+    }
+
+    let row = b.alloc((n + 1) * 4); // CSR row extents
+    let col = b.alloc(m * 4); // edge targets
+    let dist = b.alloc(n * 4); // BFS level per node
+    let frontier = b.alloc(n * 4); // next-frontier append buffer
+
+    let n_workers = b.n_workers();
+    let mut visited = vec![false; n as usize];
+    let mut current: Vec<u64> = vec![0];
+    visited[0] = true;
+    let mut next: Vec<u64> = Vec::new();
+    let mut appended = 0u64; // frontier write cursor (wraps)
+    let mut restart_from = 1usize; // forward-only forest-restart scan
+
+    loop {
+        if current.is_empty() {
+            // Forest restart: seed the next unvisited node. The scan
+            // cursor only moves forward, so restarts are O(n) total.
+            while restart_from < n as usize && visited[restart_from] {
+                restart_from += 1;
+            }
+            if restart_from >= n as usize {
+                break;
+            }
+            visited[restart_from] = true;
+            current.push(restart_from as u64);
+        }
+        next.clear();
+        for (i, &u) in current.iter().enumerate() {
+            let worker = i % n_workers;
+            let cta = (worker / 4) as u32;
+            b.load(worker, pc(0, 0), &row, u * 4, 2, cta, 0);
+            let (e0, d) = (starts[u as usize], degrees[u as usize]);
+            for e in e0..e0 + d {
+                let v = adj[e as usize];
+                b.load(worker, pc(0, 1), &col, e * 4, 1, cta, 0);
+                // The visited-check is the scattered, data-dependent read.
+                b.load(worker, pc(0, 2), &dist, v * 4, 1, cta, 0);
+                if !visited[v as usize] {
+                    visited[v as usize] = true;
+                    b.store(worker, pc(0, 3), &dist, v * 4, 1, cta, 0);
+                    b.store(worker, pc(0, 4), &frontier, (appended % n) * 4, 1, cta, 0);
+                    appended += 1;
+                    next.push(v);
+                }
+            }
+        }
+        std::mem::swap(&mut current, &mut next);
+    }
+    b.finish("bfs")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SimConfig;
+    use crate::types::page_of;
+    use crate::workloads::common::Builder;
+    use std::collections::HashSet;
+
+    #[test]
+    fn expands_every_node_exactly_once() {
+        let cfg = SimConfig::default();
+        let wl = super::build(Builder::new(&cfg, 1, 0.05));
+        // One row-extent read per node expansion; node count = scaled n.
+        let expansions: u64 = wl
+            .tasks
+            .iter()
+            .flat_map(|t| t.ops.iter())
+            .filter(|o| o.access.pc == crate::workloads::common::pc(0, 0))
+            .count() as u64;
+        let n = Builder::new(&cfg, 1, 0.05).scaled(65_536, 32);
+        assert_eq!(expansions, n);
+    }
+
+    #[test]
+    fn visited_checks_scatter_across_pages() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 3, 0.5));
+        let site = crate::workloads::common::pc(0, 2);
+        let mut deltas = HashSet::new();
+        for t in &wl.tasks {
+            let pages: Vec<u64> = t
+                .ops
+                .iter()
+                .filter(|o| o.access.pc == site)
+                .map(|o| page_of(o.access.vaddr))
+                .collect();
+            for w in pages.windows(2) {
+                deltas.insert(w[1] as i64 - w[0] as i64);
+            }
+        }
+        // A frontier traversal has no dominant stride — the delta
+        // vocabulary is wide (contrast atax's >90% single delta).
+        assert!(deltas.len() > 8, "only {} distinct deltas", deltas.len());
+    }
+}

@@ -1,0 +1,267 @@
+//! The unified workload-source registry.
+//!
+//! Every way of producing a [`WorkloadInstance`] — the 11 dense
+//! paper kernels, the UVMBench-style irregular generators, and traces
+//! ingested by `repro trace ingest` — enters the simulator through one
+//! API: a [`WorkloadSource`] looked up by name in a
+//! [`WorkloadRegistry`]. The eval axes (sweep, oversub, train, serve,
+//! analyze) query the registry instead of a closed name list, so a
+//! freshly ingested trace is immediately sweepable with no per-axis
+//! special-casing (DESIGN.md §10).
+//!
+//! Sources are kept in *registration order* (dense suite in the
+//! canonical Tables 10/11 row order, then the irregular trio, then
+//! traces in manifest order), so grid layouts and the positional
+//! U-vs-R pairing stay stable across releases.
+
+use crate::config::SimConfig;
+use crate::workloads::common::Builder;
+use crate::workloads::{trace, WorkloadInstance};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Access-pattern family of a workload source — the coarse taxonomy
+/// grids are narrowed by (`registry.family(...)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadFamily {
+    /// The paper's Fig. 6 loop nests: streaming, matvec, stencil,
+    /// wavefront, two-phase.
+    Dense,
+    /// Data-dependent access patterns (graph traversal, sparse matvec,
+    /// hash join) where locality-based prefetching breaks down.
+    Irregular,
+    /// Replayed `(pc, sm, warp, cta, vaddr)` streams ingested by
+    /// `repro trace ingest` (names carry the `trace:` prefix).
+    Trace,
+}
+
+impl WorkloadFamily {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WorkloadFamily::Dense => "dense",
+            WorkloadFamily::Irregular => "irregular",
+            WorkloadFamily::Trace => "trace",
+        }
+    }
+}
+
+/// One way of producing a workload. `build` must be deterministic in
+/// `(cfg, seed, scale)` — the parallel sweep executor relies on it.
+pub trait WorkloadSource: Send + Sync {
+    /// Registry key (and `WorkloadInstance::name`). Trace sources use
+    /// the `trace:<name>` convention so the BENCH_eval.json `source`
+    /// tag is derivable from the name alone (see [`source_tag`]).
+    fn name(&self) -> &str;
+    fn family(&self) -> WorkloadFamily;
+    fn build(&self, cfg: &SimConfig, seed: u64, scale: f64) -> anyhow::Result<WorkloadInstance>;
+}
+
+/// BENCH_eval.json `source` tag for a benchmark name: `"trace"` for
+/// ingested traces (the `trace:` naming convention), `"builtin"` for
+/// everything else. Pure function of the name so telemetry tagging
+/// needs no registry lookup.
+pub fn source_tag(name: &str) -> &'static str {
+    if name.starts_with(trace::TRACE_PREFIX) {
+        "trace"
+    } else {
+        "builtin"
+    }
+}
+
+/// A generator-backed source: thin adapter from the per-benchmark
+/// `build(Builder) -> WorkloadInstance` functions to the trait.
+struct BuiltinSource {
+    name: &'static str,
+    family: WorkloadFamily,
+    build: fn(Builder) -> WorkloadInstance,
+}
+
+impl WorkloadSource for BuiltinSource {
+    fn name(&self) -> &str {
+        self.name
+    }
+    fn family(&self) -> WorkloadFamily {
+        self.family
+    }
+    fn build(&self, cfg: &SimConfig, seed: u64, scale: f64) -> anyhow::Result<WorkloadInstance> {
+        Ok((self.build)(Builder::new(cfg, seed, scale)))
+    }
+}
+
+/// The built-in generators, in canonical grid order: the paper's 11
+/// dense kernels (Tables 10/11 row order), then the irregular trio.
+const BUILTINS: &[(&str, WorkloadFamily, fn(Builder) -> WorkloadInstance)] = &[
+    ("addvectors", WorkloadFamily::Dense, crate::workloads::addvectors::build),
+    ("atax", WorkloadFamily::Dense, crate::workloads::atax::build),
+    ("backprop", WorkloadFamily::Dense, crate::workloads::backprop::build),
+    ("bicg", WorkloadFamily::Dense, crate::workloads::bicg::build),
+    ("hotspot", WorkloadFamily::Dense, crate::workloads::hotspot::build),
+    ("mvt", WorkloadFamily::Dense, crate::workloads::mvt::build),
+    ("nw", WorkloadFamily::Dense, crate::workloads::nw::build),
+    ("pathfinder", WorkloadFamily::Dense, crate::workloads::pathfinder::build),
+    ("srad_v2", WorkloadFamily::Dense, crate::workloads::srad_v2::build),
+    ("streamtriad", WorkloadFamily::Dense, crate::workloads::streamtriad::build),
+    ("conv2d", WorkloadFamily::Dense, crate::workloads::conv2d::build),
+    ("bfs", WorkloadFamily::Irregular, crate::workloads::bfs::build),
+    ("spmv", WorkloadFamily::Irregular, crate::workloads::spmv::build),
+    ("hash_join", WorkloadFamily::Irregular, crate::workloads::hash_join::build),
+];
+
+/// The dense subset used by the model-quality tables (Tables 1–8):
+/// everything but the two kernels the paper leaves out of them.
+const MODEL_SUBSET: &[&str] = &[
+    "addvectors",
+    "atax",
+    "backprop",
+    "bicg",
+    "hotspot",
+    "mvt",
+    "nw",
+    "pathfinder",
+    "srad_v2",
+];
+
+/// Name-indexed collection of [`WorkloadSource`]s, in registration
+/// order.
+pub struct WorkloadRegistry {
+    sources: Vec<Box<dyn WorkloadSource>>,
+    index: HashMap<String, usize>,
+}
+
+impl WorkloadRegistry {
+    /// Registry of every built-in generator (dense + irregular), no
+    /// trace entries.
+    pub fn builtin() -> Self {
+        let mut r = Self { sources: Vec::new(), index: HashMap::new() };
+        for &(name, family, build) in BUILTINS {
+            r.register(Box::new(BuiltinSource { name, family, build }))
+                .expect("builtin names are unique");
+        }
+        r
+    }
+
+    /// Built-ins plus every trace recorded in `dir`'s manifest
+    /// (written by `repro trace ingest --trace-dir`).
+    pub fn with_trace_dir(dir: &Path) -> anyhow::Result<Self> {
+        let mut r = Self::builtin();
+        for src in trace::trace_sources(dir)? {
+            r.register(Box::new(src))?;
+        }
+        Ok(r)
+    }
+
+    /// Add a source; duplicate names are an error (the `trace:` prefix
+    /// keeps ingested traces from shadowing built-ins).
+    pub fn register(&mut self, src: Box<dyn WorkloadSource>) -> anyhow::Result<()> {
+        let name = src.name().to_string();
+        anyhow::ensure!(
+            !self.index.contains_key(&name),
+            "workload source '{name}' is already registered"
+        );
+        self.index.insert(name, self.sources.len());
+        self.sources.push(src);
+        Ok(())
+    }
+
+    /// Resolve spelling aliases kept for compatibility (the paper
+    /// writes 2DCONV for the convolution kernel).
+    fn resolve_key<'a>(&self, name: &'a str) -> &'a str {
+        match name {
+            "2dconv" => "conv2d",
+            other => other,
+        }
+    }
+
+    /// Look a source up by name (alias-aware); `None` when unknown.
+    pub fn get(&self, name: &str) -> Option<&dyn WorkloadSource> {
+        self.index.get(self.resolve_key(name)).map(|&i| self.sources[i].as_ref())
+    }
+
+    /// The unknown-name error, listing every registered name (trace
+    /// entries included) so typos are self-diagnosing.
+    pub fn unknown(&self, name: &str) -> anyhow::Error {
+        anyhow::anyhow!(
+            "unknown benchmark '{name}' (registered: {})",
+            self.all().join(", ")
+        )
+    }
+
+    /// Build a workload by name.
+    pub fn build(
+        &self,
+        name: &str,
+        cfg: &SimConfig,
+        seed: u64,
+        scale: f64,
+    ) -> anyhow::Result<WorkloadInstance> {
+        match self.get(name) {
+            Some(src) => src.build(cfg, seed, scale),
+            None => Err(self.unknown(name)),
+        }
+    }
+
+    /// Every registered name, in registration (= grid) order.
+    pub fn all(&self) -> Vec<&str> {
+        self.sources.iter().map(|s| s.name()).collect()
+    }
+
+    /// Registered names of one family, in registration order.
+    pub fn family(&self, family: WorkloadFamily) -> Vec<&str> {
+        self.sources.iter().filter(|s| s.family() == family).map(|s| s.name()).collect()
+    }
+
+    /// The model-quality subset (Tables 1–8 rows): the registered
+    /// dense kernels the paper trains per-benchmark predictors for.
+    pub fn model(&self) -> Vec<&str> {
+        self.sources
+            .iter()
+            .map(|s| s.name())
+            .filter(|n| MODEL_SUBSET.contains(n))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_has_grid_order_and_families() {
+        let r = WorkloadRegistry::builtin();
+        let all = r.all();
+        assert_eq!(all.len(), 14);
+        assert_eq!(&all[..3], &["addvectors", "atax", "backprop"]);
+        assert_eq!(&all[11..], &["bfs", "spmv", "hash_join"]);
+        assert_eq!(r.family(WorkloadFamily::Dense).len(), 11);
+        assert_eq!(r.family(WorkloadFamily::Irregular), vec!["bfs", "spmv", "hash_join"]);
+        assert!(r.family(WorkloadFamily::Trace).is_empty());
+        assert_eq!(r.model().len(), 9);
+    }
+
+    #[test]
+    fn alias_resolves_and_unknown_lists_names() {
+        let r = WorkloadRegistry::builtin();
+        assert!(r.get("2dconv").is_some(), "paper spelling of conv2d");
+        let err = r.build("nope", &SimConfig::default(), 0, 1.0).unwrap_err().to_string();
+        assert!(err.contains("unknown benchmark 'nope'"), "{err}");
+        assert!(err.contains("bfs") && err.contains("conv2d"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut r = WorkloadRegistry::builtin();
+        let dup = Box::new(BuiltinSource {
+            name: "atax",
+            family: WorkloadFamily::Dense,
+            build: crate::workloads::atax::build,
+        });
+        assert!(r.register(dup).is_err());
+    }
+
+    #[test]
+    fn source_tag_follows_naming_convention() {
+        assert_eq!(source_tag("atax"), "builtin");
+        assert_eq!(source_tag("bfs"), "builtin");
+        assert_eq!(source_tag("trace:sample"), "trace");
+    }
+}

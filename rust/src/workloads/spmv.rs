@@ -1,0 +1,91 @@
+//! SpMV — CSR sparse matrix-vector multiply, row-skewed
+//! (UVMBench's sparse-algebra family).
+//!
+//! `y = A·x` with A in CSR: per row, `rowptr`/`colidx`/`vals` stream
+//! sequentially, but the gather `x[colidx[e]]` jumps wherever the
+//! nonzero sits — hub-biased (r² sampling) so a few columns stay hot
+//! while the tail scatters. Row lengths follow a clamped power law and
+//! rows are split contiguously across warps, so warp op counts are
+//! *skewed* (unlike the dense suite's near-uniform split) — the
+//! load-imbalance signature of real sparse kernels.
+
+use super::common::{pc, Builder};
+use super::WorkloadInstance;
+
+pub fn build(mut b: Builder) -> WorkloadInstance {
+    let n = b.scaled(32_768, 32);
+    let len_cap = 256.min(n / 2).max(1);
+
+    // Power-law row lengths (nnz per row), clamped to keep the matrix
+    // bounded; the skew is what unbalances the row split below.
+    let mut lens = Vec::with_capacity(n as usize);
+    let mut nnz = 0u64;
+    for _ in 0..n {
+        let u = b.rng.unit();
+        let l = ((2.0 / (1.0 - u * 0.999)).powf(1.2) as u64).clamp(2, len_cap);
+        lens.push(l);
+        nnz += l;
+    }
+    let mut starts = Vec::with_capacity(n as usize);
+    let mut s = 0u64;
+    for &l in &lens {
+        starts.push(s);
+        s += l;
+    }
+
+    let rowptr = b.alloc((n + 1) * 4);
+    let colidx = b.alloc(nnz * 4);
+    let vals = b.alloc(nnz * 4);
+    let x = b.alloc(n * 4);
+    let y = b.alloc(n * 4);
+
+    // One contiguous row range per warp; row-length skew makes the
+    // ranges cost wildly different op counts.
+    for (worker, (r0, rows)) in b.split(n).into_iter().enumerate() {
+        let cta = (worker / 4) as u32;
+        for r in r0..r0 + rows {
+            b.load(worker, pc(0, 0), &rowptr, r * 4, 1, cta, 0);
+            let (e0, l) = (starts[r as usize], lens[r as usize]);
+            let mut e = 0;
+            while e < l {
+                // One coalesced group of up to 32 nonzeros: sequential
+                // colidx/vals reads, then the scattered x gather.
+                b.load(worker, pc(0, 1), &colidx, (e0 + e) * 4, 1, cta, 0);
+                b.load(worker, pc(0, 2), &vals, (e0 + e) * 4, 1, cta, 0);
+                let u = b.rng.unit();
+                let colv = ((u * u * n as f64) as u64).min(n - 1);
+                b.load(worker, pc(0, 3), &x, colv * 4, 2, cta, 0);
+                e += (l - e).min(32);
+            }
+            b.store(worker, pc(0, 4), &y, r * 4, 1, cta, 0);
+        }
+    }
+    b.finish("spmv")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SimConfig;
+    use crate::workloads::common::Builder;
+
+    #[test]
+    fn row_skew_unbalances_warp_op_counts() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 1, 0.1));
+        let counts: Vec<usize> = wl.tasks.iter().map(|t| t.ops.len()).collect();
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(
+            *max as f64 > *min as f64 * 1.2,
+            "power-law rows should skew warp loads: min {min}, max {max}"
+        );
+    }
+
+    #[test]
+    fn touches_all_five_arrays() {
+        let wl = super::build(Builder::new(&SimConfig::default(), 0, 0.05));
+        let mut arrays: Vec<u8> =
+            wl.tasks.iter().flat_map(|t| t.ops.iter().map(|o| o.access.array_id)).collect();
+        arrays.sort_unstable();
+        arrays.dedup();
+        assert_eq!(arrays, vec![0, 1, 2, 3, 4]);
+    }
+}

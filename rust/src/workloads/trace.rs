@@ -1,0 +1,566 @@
+//! Trace-ingestion workload frontend (`repro trace ingest`).
+//!
+//! Parses accelsim-style kernel trace files — the
+//! `(pc, sm, warp, cta, vaddr)` tuple stream the GMMU observes, the
+//! same granularity `sim/trace.rs` emits — into [`WorkloadInstance`]s,
+//! so real-application traces run through every eval axis exactly like
+//! the built-in generators (DESIGN.md §10).
+//!
+//! Grammar (whitespace-separated, one record per line):
+//!
+//! ```text
+//! line      := record | "-" directive | "#" comment | blank
+//! record    := pc sm warp cta vaddr [store [compute [kernel [array]]]]
+//! directive := key "=" value        ; "-workload name = x", "-trace version = 1"
+//! ```
+//!
+//! `pc` and `vaddr` accept decimal or `0x` hex; the optional columns
+//! default to `store=0 compute=1 kernel=0 array=255`. Files whose
+//! first line is the `repro trace-gen` CSV header are auto-detected
+//! and read in that column layout (`vaddr = page << 12`).
+//!
+//! The parse is streaming (one `BufRead` line at a time — no full-file
+//! materialization) and every error names the file, the 1-based line,
+//! and the offending column, matching the serve-replay CSV convention
+//! in [`crate::eval::serve`]. Ingestion normalizes `(sm, warp)`
+//! placement to the machine, caches the canonical form under
+//! `--trace-dir`, and records it in `manifest.json`
+//! (schema `trace_manifest/v1`); the cached entries register in the
+//! [`WorkloadRegistry`](crate::workloads::WorkloadRegistry) as
+//! `trace:<name>` sources.
+
+use crate::config::SimConfig;
+use crate::sim::sm::WarpOp;
+use crate::sim::trace::TRACE_HEADER;
+use crate::types::MemAccess;
+use crate::util::Json;
+use crate::workloads::registry::{WorkloadFamily, WorkloadSource};
+use crate::workloads::{WarpTask, WorkloadInstance};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// Registry-name prefix for ingested traces (`trace:<name>`).
+pub const TRACE_PREFIX: &str = "trace:";
+
+/// Canonical trace-format version accepted by the parser.
+pub const TRACE_VERSION: u64 = 1;
+
+/// `manifest.json` schema tag.
+pub const MANIFEST_SCHEMA: &str = "trace_manifest/v1";
+
+const COLUMNS: &[&str] =
+    &["pc", "sm", "warp", "cta", "vaddr", "store", "compute", "kernel", "array"];
+
+/// A parsed trace: per-`(sm, warp)` op streams in first-appearance
+/// order (which is what defines task order after placement).
+pub struct ParsedTrace {
+    /// Bare name (no `trace:` prefix): the `-workload name` directive
+    /// when present, else the file stem.
+    pub name: String,
+    pub tasks: Vec<((u16, u16), Vec<WarpOp>)>,
+    /// Record lines parsed (comments/directives excluded).
+    pub records: u64,
+}
+
+struct Rec {
+    sm: u16,
+    warp: u16,
+    op: WarpOp,
+}
+
+fn parse_u64(tok: &str) -> std::result::Result<u64, std::num::ParseIntError> {
+    match tok.strip_prefix("0x").or_else(|| tok.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => tok.parse(),
+    }
+}
+
+/// One whitespace-separated record; errors name the 1-based column and
+/// its field name.
+fn parse_record(line: &str) -> Result<Rec> {
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    if toks.len() < 5 {
+        bail!("expected at least 5 fields (pc sm warp cta vaddr), got {}", toks.len());
+    }
+    if toks.len() > COLUMNS.len() {
+        bail!(
+            "expected at most {} fields ({}), got {}",
+            COLUMNS.len(),
+            COLUMNS.join(" "),
+            toks.len()
+        );
+    }
+    let field = |i: usize, max: u64| -> Result<u64> {
+        let tok = toks[i];
+        let v = parse_u64(tok)
+            .map_err(|e| anyhow!("column {} ({}) '{tok}': {e}", i + 1, COLUMNS[i]))?;
+        if v > max {
+            bail!("column {} ({}) '{tok}': exceeds max {max}", i + 1, COLUMNS[i]);
+        }
+        Ok(v)
+    };
+    let pc = field(0, u64::MAX)?;
+    let sm = field(1, u16::MAX as u64)? as u16;
+    let warp = field(2, u16::MAX as u64)? as u16;
+    let cta = field(3, u32::MAX as u64)? as u32;
+    let vaddr = field(4, u64::MAX)?;
+    let is_store = if toks.len() > 5 { field(5, 1)? == 1 } else { false };
+    let compute = if toks.len() > 6 { field(6, u32::MAX as u64)? as u32 } else { 1 };
+    let kernel_id = if toks.len() > 7 { field(7, u16::MAX as u64)? as u16 } else { 0 };
+    let array_id = if toks.len() > 8 { field(8, u8::MAX as u64)? as u8 } else { u8::MAX };
+    Ok(Rec {
+        sm,
+        warp,
+        op: WarpOp {
+            compute,
+            access: MemAccess { pc, vaddr, array_id, is_store },
+            cta,
+            kernel_id,
+        },
+    })
+}
+
+/// One `repro trace-gen` CSV row (`TRACE_HEADER` layout). The CSV
+/// records pages, not byte addresses, so `vaddr = page << 12`; the
+/// store flag is not recorded there and defaults to a load.
+fn parse_csv_record(line: &str) -> Result<Rec> {
+    let cols: Vec<&str> = line.split(',').collect();
+    let names: Vec<&str> = TRACE_HEADER.split(',').collect();
+    if cols.len() != names.len() {
+        bail!("expected {} CSV columns ({TRACE_HEADER}), got {}", names.len(), cols.len());
+    }
+    let field = |i: usize, max: u64| -> Result<u64> {
+        let tok = cols[i];
+        let v: u64 = tok
+            .parse()
+            .map_err(|e| anyhow!("column {} ({}) '{tok}': {e}", i + 1, names[i]))?;
+        if v > max {
+            bail!("column {} ({}) '{tok}': exceeds max {max}", i + 1, names[i]);
+        }
+        Ok(v)
+    };
+    Ok(Rec {
+        sm: field(3, u16::MAX as u64)? as u16,
+        warp: field(4, u16::MAX as u64)? as u16,
+        op: WarpOp {
+            compute: 1,
+            access: MemAccess {
+                pc: field(1, u64::MAX)?,
+                vaddr: field(2, (1u64 << 52) - 1)? << 12,
+                array_id: field(8, u8::MAX as u64)? as u8,
+                is_store: false,
+            },
+            cta: field(5, u32::MAX as u64)? as u32,
+            kernel_id: field(7, u16::MAX as u64)? as u16,
+        },
+    })
+}
+
+/// Streaming parse of a trace file in either accepted layout.
+pub fn parse_trace_file(path: &Path) -> Result<ParsedTrace> {
+    let file = std::fs::File::open(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let reader = BufReader::new(file);
+    let mut name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "trace".to_string());
+    let mut tasks: Vec<((u16, u16), Vec<WarpOp>)> = Vec::new();
+    let mut slot: HashMap<(u16, u16), usize> = HashMap::new();
+    let mut records = 0u64;
+    let mut csv = false;
+    for (idx, line) in reader.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = line.map_err(|e| anyhow!("{} line {lineno}: {e}", path.display()))?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        if idx == 0 && t == TRACE_HEADER {
+            csv = true;
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix('-') {
+            let (k, v) = rest.split_once('=').ok_or_else(|| {
+                anyhow!("{} line {lineno}: directive '-{rest}' needs a '= value'", path.display())
+            })?;
+            match k.trim() {
+                "workload name" => name = v.trim().to_string(),
+                "trace version" => {
+                    let ver: u64 = v.trim().parse().map_err(|e| {
+                        anyhow!(
+                            "{} line {lineno}: trace version '{}': {e}",
+                            path.display(),
+                            v.trim()
+                        )
+                    })?;
+                    if ver != TRACE_VERSION {
+                        bail!(
+                            "{} line {lineno}: unsupported trace version {ver} (this parser \
+                             reads version {TRACE_VERSION})",
+                            path.display()
+                        );
+                    }
+                }
+                // Foreign directives (accelsim headers carry many) are
+                // ignored rather than rejected.
+                _ => {}
+            }
+            continue;
+        }
+        let rec = if csv { parse_csv_record(t) } else { parse_record(t) }
+            .map_err(|e| anyhow!("{} line {lineno}: {e}", path.display()))?;
+        records += 1;
+        let key = (rec.sm, rec.warp);
+        let ti = *slot.entry(key).or_insert_with(|| {
+            tasks.push((key, Vec::new()));
+            tasks.len() - 1
+        });
+        tasks[ti].1.push(rec.op);
+    }
+    if records == 0 {
+        bail!("{}: no trace records (expected 'pc sm warp cta vaddr …' lines)", path.display());
+    }
+    Ok(ParsedTrace { name, tasks, records })
+}
+
+/// Fit parsed streams onto the machine: `(sm, warp)` pairs are kept
+/// verbatim when every pair is in bounds; otherwise *all* pairs are
+/// remapped in first-appearance order onto slot `k` →
+/// `(k % n_sms, k / n_sms)` (the same round-robin rasterization the
+/// generators use). Pairs are unique by construction (first-appearance
+/// grouping), so no two tasks ever collide on one warp slot.
+pub fn place(tasks: Vec<((u16, u16), Vec<WarpOp>)>, cfg: &SimConfig) -> Result<Vec<WarpTask>> {
+    let slots = cfg.n_sms as usize * cfg.warps_per_sm as usize;
+    anyhow::ensure!(
+        tasks.len() <= slots,
+        "trace has {} distinct (sm, warp) streams but the machine has only {slots} warp slots \
+         ({} SMs × {} warps)",
+        tasks.len(),
+        cfg.n_sms,
+        cfg.warps_per_sm
+    );
+    let fits = tasks.iter().all(|((sm, warp), _)| *sm < cfg.n_sms && *warp < cfg.warps_per_sm);
+    Ok(tasks
+        .into_iter()
+        .enumerate()
+        .map(|(k, ((sm, warp), ops))| {
+            let (sm, warp) = if fits {
+                (sm, warp)
+            } else {
+                ((k % cfg.n_sms as usize) as u16, (k / cfg.n_sms as usize) as u16)
+            };
+            WarpTask { sm, warp, ops }
+        })
+        .collect())
+}
+
+/// Serialize a workload in the canonical trace format. Parsing the
+/// result back (and placing it on the same machine) reproduces
+/// `wl.tasks` exactly — the round-trip contract
+/// `rust/tests/workload_sources.rs` pins.
+pub fn write_workload_trace(wl: &WorkloadInstance, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let mut out = BufWriter::with_capacity(1 << 20, file);
+    writeln!(out, "# uvm_prefetch workload trace: {}", COLUMNS.join(" "))?;
+    writeln!(out, "-trace version = {TRACE_VERSION}")?;
+    writeln!(out, "-workload name = {}", wl.name)?;
+    for t in &wl.tasks {
+        for op in &t.ops {
+            writeln!(
+                out,
+                "{:#x} {} {} {} {:#x} {} {} {} {}",
+                op.access.pc,
+                t.sm,
+                t.warp,
+                op.cta,
+                op.access.vaddr,
+                op.access.is_store as u8,
+                op.compute,
+                op.kernel_id,
+                op.access.array_id
+            )?;
+        }
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// One `manifest.json` entry — a cached, normalized trace.
+#[derive(Debug, Clone)]
+pub struct TraceManifestEntry {
+    /// Bare name; registers as `trace:<name>`.
+    pub name: String,
+    /// Cached canonical trace file, relative to the trace dir.
+    pub file: String,
+    pub records: u64,
+    pub tasks: u64,
+    pub footprint_pages: u64,
+}
+
+/// Load a trace dir's manifest; a missing file is an empty manifest
+/// (the dir just hasn't been ingested into yet).
+pub fn load_manifest(dir: &Path) -> Result<Vec<TraceManifestEntry>> {
+    let path = dir.join("manifest.json");
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let j = Json::parse_file(&path)?;
+    let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+    anyhow::ensure!(
+        schema == MANIFEST_SCHEMA,
+        "{}: schema '{schema}' (expected {MANIFEST_SCHEMA})",
+        path.display()
+    );
+    let need = |e: &Json, k: &str| -> Result<Json> {
+        e.get(k).cloned().ok_or_else(|| anyhow!("{}: trace entry missing '{k}'", path.display()))
+    };
+    let mut out = Vec::new();
+    for e in j.get("traces").and_then(Json::as_arr).unwrap_or(&[]) {
+        out.push(TraceManifestEntry {
+            name: need(e, "name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("{}: 'name' must be a string", path.display()))?
+                .to_string(),
+            file: need(e, "file")?
+                .as_str()
+                .ok_or_else(|| anyhow!("{}: 'file' must be a string", path.display()))?
+                .to_string(),
+            records: need(e, "records")?.as_u64().unwrap_or(0),
+            tasks: need(e, "tasks")?.as_u64().unwrap_or(0),
+            footprint_pages: need(e, "footprint_pages")?.as_u64().unwrap_or(0),
+        });
+    }
+    Ok(out)
+}
+
+fn save_manifest(dir: &Path, entries: &[TraceManifestEntry]) -> Result<()> {
+    let traces = entries.iter().map(|e| {
+        Json::obj(vec![
+            ("name", Json::str(&e.name)),
+            ("file", Json::str(&e.file)),
+            ("records", Json::Num(e.records as f64)),
+            ("tasks", Json::Num(e.tasks as f64)),
+            ("footprint_pages", Json::Num(e.footprint_pages as f64)),
+        ])
+    });
+    Json::obj(vec![("schema", Json::str(MANIFEST_SCHEMA)), ("traces", Json::arr(traces))])
+        .write_file(&dir.join("manifest.json"))
+}
+
+/// What `repro trace ingest` reports per file.
+#[derive(Debug)]
+pub struct IngestReport {
+    /// Bare trace name (registers as `trace:<name>`).
+    pub name: String,
+    /// Cached canonical trace path.
+    pub cached: PathBuf,
+    pub records: u64,
+    pub tasks: u64,
+    pub ops: u64,
+    pub footprint_pages: u64,
+}
+
+/// Ingest one trace file: streaming parse → placement normalization
+/// against `cfg` → canonical cache file under `trace_dir` → manifest
+/// update (re-ingesting a name replaces its entry). The manifest is
+/// kept name-sorted so registry order is stable across re-ingests.
+pub fn ingest(
+    file: &Path,
+    trace_dir: &Path,
+    name_override: Option<&str>,
+    cfg: &SimConfig,
+) -> Result<IngestReport> {
+    let parsed = parse_trace_file(file)?;
+    let mut name = name_override.map(|s| s.to_string()).unwrap_or(parsed.name);
+    if let Some(bare) = name.strip_prefix(TRACE_PREFIX) {
+        // Re-ingesting a cached trace must not stack prefixes.
+        name = bare.to_string();
+    }
+    anyhow::ensure!(
+        !name.is_empty()
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || "-_.".contains(c)),
+        "trace name '{name}' (use letters, digits, '-', '_', '.'; override with --name)"
+    );
+    let tasks = place(parsed.tasks, cfg)?;
+    let total_ops: u64 = tasks.iter().map(|t| t.ops.len() as u64).sum();
+    let wl = WorkloadInstance { name: format!("{TRACE_PREFIX}{name}"), tasks, total_ops };
+
+    std::fs::create_dir_all(trace_dir)
+        .map_err(|e| anyhow!("{}: {e}", trace_dir.display()))?;
+    let file_name = format!("{name}.trace");
+    let cached = trace_dir.join(&file_name);
+    write_workload_trace(&wl, &cached)?;
+
+    let mut entries = load_manifest(trace_dir)?;
+    entries.retain(|e| e.name != name);
+    entries.push(TraceManifestEntry {
+        name: name.clone(),
+        file: file_name,
+        records: parsed.records,
+        tasks: wl.tasks.len() as u64,
+        footprint_pages: wl.footprint_pages(),
+    });
+    entries.sort_by(|a, b| a.name.cmp(&b.name));
+    save_manifest(trace_dir, &entries)?;
+
+    Ok(IngestReport {
+        name,
+        cached,
+        records: parsed.records,
+        tasks: wl.tasks.len() as u64,
+        ops: total_ops,
+        footprint_pages: wl.footprint_pages(),
+    })
+}
+
+/// A cached ingested trace, replayed verbatim: `seed` and `scale` are
+/// ignored by design (a recorded stream has fixed content — that is
+/// also what makes trace cells trivially byte-deterministic).
+pub struct TraceSource {
+    name: String,
+    path: PathBuf,
+}
+
+impl WorkloadSource for TraceSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn family(&self) -> WorkloadFamily {
+        WorkloadFamily::Trace
+    }
+    fn build(&self, cfg: &SimConfig, _seed: u64, _scale: f64) -> Result<WorkloadInstance> {
+        let parsed = parse_trace_file(&self.path)?;
+        let tasks = place(parsed.tasks, cfg)?;
+        let total_ops: u64 = tasks.iter().map(|t| t.ops.len() as u64).sum();
+        Ok(WorkloadInstance { name: self.name.clone(), tasks, total_ops })
+    }
+}
+
+/// Trace sources recorded in `dir`'s manifest, in manifest order.
+pub fn trace_sources(dir: &Path) -> Result<Vec<TraceSource>> {
+    Ok(load_manifest(dir)?
+        .into_iter()
+        .map(|e| TraceSource {
+            name: format!("{TRACE_PREFIX}{}", e.name),
+            path: dir.join(&e.file),
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TestDir;
+
+    fn write(path: &Path, text: &str) {
+        std::fs::write(path, text).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_and_full_records() {
+        let dir = TestDir::new();
+        let p = dir.file("t.trace");
+        write(
+            &p,
+            "# comment\n-trace version = 1\n0x1000 0 0 0 0x40000000\n\
+             0x1008 0 1 0 0x40001000 1 3 2 7\n",
+        );
+        let t = parse_trace_file(&p).unwrap();
+        assert_eq!(t.records, 2);
+        assert_eq!(t.tasks.len(), 2, "two (sm, warp) streams");
+        let op = &t.tasks[1].1[0];
+        assert!(op.access.is_store);
+        assert_eq!(op.compute, 3);
+        assert_eq!(op.kernel_id, 2);
+        assert_eq!(op.access.array_id, 7);
+        let first = &t.tasks[0].1[0];
+        assert!(!first.access.is_store, "store defaults to 0");
+        assert_eq!(first.compute, 1, "compute defaults to 1");
+        assert_eq!(first.access.array_id, u8::MAX, "array defaults to unknown");
+    }
+
+    #[test]
+    fn errors_carry_file_line_and_column() {
+        let dir = TestDir::new();
+        let p = dir.file("bad.trace");
+        write(&p, "0x1000 0 0 0 0x40000000\n0x1008 zz 0 0 0x40001000\n");
+        let err = parse_trace_file(&p).unwrap_err().to_string();
+        assert!(err.contains("bad.trace"), "{err}");
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("column 2 (sm)"), "{err}");
+
+        write(&p, "0x1000 0 0\n");
+        let err = parse_trace_file(&p).unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("at least 5 fields"), "{err}");
+
+        write(&p, "0x1000 99999 0 0 0x40000000\n");
+        let err = parse_trace_file(&p).unwrap_err().to_string();
+        assert!(err.contains("exceeds max"), "{err}");
+    }
+
+    #[test]
+    fn empty_trace_rejected() {
+        let dir = TestDir::new();
+        let p = dir.file("empty.trace");
+        write(&p, "# nothing here\n");
+        assert!(parse_trace_file(&p).unwrap_err().to_string().contains("no trace records"));
+    }
+
+    #[test]
+    fn placement_keeps_in_bounds_pairs_and_remaps_oversized() {
+        let cfg = SimConfig::default();
+        let op = WarpOp {
+            compute: 1,
+            access: MemAccess { pc: 1, vaddr: 4096, array_id: 0, is_store: false },
+            cta: 0,
+            kernel_id: 0,
+        };
+        let fit = place(vec![((3, 5), vec![op])], &cfg).unwrap();
+        assert_eq!((fit[0].sm, fit[0].warp), (3, 5), "in-bounds placement kept verbatim");
+        // An out-of-bounds SM forces the round-robin remap.
+        let moved = place(vec![((cfg.n_sms + 7, 5), vec![op]), ((0, 1), vec![op])], &cfg).unwrap();
+        assert_eq!((moved[0].sm, moved[0].warp), (0, 0));
+        assert_eq!((moved[1].sm, moved[1].warp), (1, 0));
+    }
+
+    #[test]
+    fn ingest_writes_cache_and_manifest_and_replaces() {
+        let dir = TestDir::new();
+        let src = dir.file("app.trace");
+        write(&src, "0x10 0 0 0 0x40000000\n0x18 0 0 0 0x40001000\n");
+        let cfg = SimConfig::default();
+        let r = ingest(&src, &dir.path().join("cache"), None, &cfg).unwrap();
+        assert_eq!(r.name, "app");
+        assert_eq!((r.records, r.ops, r.tasks), (2, 2, 1));
+        let m = load_manifest(&dir.path().join("cache")).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].footprint_pages, 2);
+        // Re-ingest under the same name replaces, not duplicates.
+        ingest(&src, &dir.path().join("cache"), Some("app"), &cfg).unwrap();
+        assert_eq!(load_manifest(&dir.path().join("cache")).unwrap().len(), 1);
+        // The cached file parses back through the registered source.
+        let srcs = trace_sources(&dir.path().join("cache")).unwrap();
+        assert_eq!(srcs.len(), 1);
+        assert_eq!(srcs[0].name(), "trace:app");
+        let wl = srcs[0].build(&cfg, 0, 1.0).unwrap();
+        assert_eq!(wl.total_ops, 2);
+        assert_eq!(wl.name, "trace:app");
+    }
+
+    #[test]
+    fn trace_gen_csv_layout_autodetected() {
+        let dir = TestDir::new();
+        let p = dir.file("gen.csv");
+        write(
+            &p,
+            &format!("{TRACE_HEADER}\n5,4096,262144,1,2,3,0,0,1,1\n9,4104,262145,1,2,3,0,0,1,0\n"),
+        );
+        let t = parse_trace_file(&p).unwrap();
+        assert_eq!(t.records, 2);
+        assert_eq!(t.tasks.len(), 1);
+        assert_eq!(t.tasks[0].0, (1, 2));
+        assert_eq!(t.tasks[0].1[0].access.vaddr, 262144 << 12);
+    }
+}

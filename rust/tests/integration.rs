@@ -4,7 +4,7 @@
 
 use uvm_prefetch::eval::runner::{run_benchmark, RunOptions};
 use uvm_prefetch::types::PAGE_SIZE;
-use uvm_prefetch::workloads::ALL_BENCHMARKS;
+use uvm_prefetch::workloads::{WorkloadFamily, WorkloadRegistry};
 
 fn quick() -> RunOptions {
     RunOptions { scale: 0.25, max_instructions: 400_000, ..Default::default() }
@@ -47,7 +47,7 @@ fn check_invariants(name: &str, policy: &str, m: &uvm_prefetch::sim::Metrics) {
 #[test]
 fn all_benchmarks_under_demand_paging() {
     let opts = quick();
-    for b in ALL_BENCHMARKS {
+    for b in WorkloadRegistry::builtin().all() {
         let m = run_benchmark(b, "none", &opts).unwrap();
         check_invariants(b, "none", &m);
         assert_eq!(m.prefetch_transfers, 0, "{b}: demand paging never prefetches");
@@ -58,18 +58,29 @@ fn all_benchmarks_under_demand_paging() {
 #[test]
 fn all_benchmarks_under_tree_policy() {
     let opts = quick();
-    for b in ALL_BENCHMARKS {
+    let registry = WorkloadRegistry::builtin();
+    let dense = registry.family(WorkloadFamily::Dense);
+    for b in registry.all() {
         let m = run_benchmark(b, "tree", &opts).unwrap();
         check_invariants(b, "tree", &m);
         assert!(m.prefetch_transfers > 0, "{b}: tree must prefetch");
-        assert!(m.coverage() > 0.5, "{b}: block transactions cover most pages: {}", m.coverage());
+        // Block transactions cover most pages only on dense streaming
+        // kernels; irregular graph/join traversals fault data-
+        // dependently and make no such promise.
+        if dense.contains(&b) {
+            assert!(
+                m.coverage() > 0.5,
+                "{b}: block transactions cover most pages: {}",
+                m.coverage()
+            );
+        }
     }
 }
 
 #[test]
 fn all_benchmarks_under_dl_policy_stride_fallback() {
     let opts = quick();
-    for b in ALL_BENCHMARKS {
+    for b in WorkloadRegistry::builtin().all() {
         let m = run_benchmark(b, "dl", &opts).unwrap();
         check_invariants(b, "dl", &m);
         assert!(m.prefetch_transfers > 0, "{b}: dl prefetches at least the blocks");
@@ -79,7 +90,7 @@ fn all_benchmarks_under_dl_policy_stride_fallback() {
 #[test]
 fn tree_never_loses_to_demand_paging_on_faults() {
     let opts = quick();
-    for b in ALL_BENCHMARKS {
+    for b in WorkloadRegistry::builtin().all() {
         let none = run_benchmark(b, "none", &opts).unwrap();
         let tree = run_benchmark(b, "tree", &opts).unwrap();
         assert!(

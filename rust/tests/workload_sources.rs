@@ -1,0 +1,148 @@
+//! Workload-source integration tests: the registry contract, the
+//! irregular generators' determinism, and the trace ingest → cache →
+//! replay loop (DESIGN.md §10). These pin the API redesign's promises:
+//! every registered name builds and places, trace round-trips are
+//! byte-identical, parse errors are actionable, and trace cells flow
+//! through the sweep with a `source = trace` tag.
+
+use uvm_prefetch::config::SimConfig;
+use uvm_prefetch::eval::runner::RunOptions;
+use uvm_prefetch::eval::sweep::{bench_eval_json, sweep, CellSpec};
+use uvm_prefetch::util::TestDir;
+use uvm_prefetch::workloads::{trace, WorkloadFamily, WorkloadRegistry};
+
+/// Every registered builtin builds at a small scale and places every
+/// stream inside the simulated machine.
+#[test]
+fn every_registered_workload_builds_and_places() {
+    let cfg = SimConfig::default();
+    let registry = WorkloadRegistry::builtin();
+    for name in registry.all() {
+        let wl = registry.build(name, &cfg, 7, 0.1).unwrap();
+        assert!(wl.total_ops > 0, "{name}: empty workload");
+        assert!(!wl.tasks.is_empty(), "{name}: no warp streams");
+        for t in &wl.tasks {
+            assert!(t.sm < cfg.n_sms, "{name}: sm {} out of bounds", t.sm);
+            assert!(t.warp < cfg.warps_per_sm, "{name}: warp {} out of bounds", t.warp);
+        }
+    }
+}
+
+/// The irregular trio is seed-deterministic (same seed → identical
+/// instance) and seed-sensitive, and its footprints stay bounded so
+/// CI-scale runs stay cheap.
+#[test]
+fn irregular_generators_are_deterministic_and_bounded() {
+    let cfg = SimConfig::default();
+    let registry = WorkloadRegistry::builtin();
+    let irregular = registry.family(WorkloadFamily::Irregular);
+    assert_eq!(irregular, vec!["bfs", "spmv", "hash_join"]);
+    for name in irregular {
+        let a = registry.build(name, &cfg, 11, 0.1).unwrap();
+        let b = registry.build(name, &cfg, 11, 0.1).unwrap();
+        assert_eq!(a.tasks, b.tasks, "{name}: same seed must reproduce the instance");
+        let c = registry.build(name, &cfg, 12, 0.1).unwrap();
+        assert_ne!(a.tasks, c.tasks, "{name}: a different seed must change the instance");
+        // Bounded footprint: at scale 0.1 the trio stays well under
+        // the 1 GiB device memory (32 MiB is ample headroom).
+        let bytes = a.footprint_pages() * 4096;
+        assert!(bytes <= 32 << 20, "{name}: footprint {bytes} bytes at scale 0.1");
+    }
+}
+
+/// Serialize → ingest → registry build reproduces the original tasks
+/// exactly, and the replay ignores seed/scale (byte-determinism).
+#[test]
+fn trace_roundtrip_is_byte_identical() {
+    let dir = TestDir::new();
+    let cfg = SimConfig::default();
+    let registry = WorkloadRegistry::builtin();
+    let orig = registry.build("atax", &cfg, 3, 0.1).unwrap();
+
+    let raw = dir.file("atax-export.trace");
+    trace::write_workload_trace(&orig, &raw).unwrap();
+    let report = trace::ingest(&raw, dir.path(), Some("atax-rt"), &cfg).unwrap();
+    assert_eq!(report.ops, orig.total_ops);
+
+    let with_traces = WorkloadRegistry::with_trace_dir(dir.path()).unwrap();
+    let replay = with_traces.build("trace:atax-rt", &cfg, 999, 4.0).unwrap();
+    assert_eq!(replay.tasks, orig.tasks, "replay must reproduce the tasks verbatim");
+    assert_eq!(replay.total_ops, orig.total_ops);
+    // A second build (different seed/scale again) is identical: traces
+    // replay verbatim by design.
+    let again = with_traces.build("trace:atax-rt", &cfg, 1, 0.25).unwrap();
+    assert_eq!(again.tasks, replay.tasks);
+}
+
+/// Malformed traces fail with the file, the 1-based line, and the
+/// offending column's name — the serve-replay error convention.
+#[test]
+fn malformed_trace_errors_name_file_line_and_column() {
+    let dir = TestDir::new();
+    let bad = dir.file("bad.trace");
+    std::fs::write(&bad, "# comment\n0x10 0 0 0 0x1000\n0x10 zz 0 0 0x2000\n").unwrap();
+    let err = trace::parse_trace_file(&bad).unwrap_err().to_string();
+    assert!(err.contains("bad.trace"), "no file in: {err}");
+    assert!(err.contains("line 3"), "no line in: {err}");
+    assert!(err.contains("column 2 (sm)"), "no column in: {err}");
+
+    let short = dir.file("short.trace");
+    std::fs::write(&short, "0x10 0 0\n").unwrap();
+    let err = trace::parse_trace_file(&short).unwrap_err().to_string();
+    assert!(err.contains("short.trace") && err.contains("line 1"), "{err}");
+    assert!(err.contains("at least 5 fields"), "{err}");
+
+    let empty = dir.file("empty.trace");
+    std::fs::write(&empty, "# nothing here\n").unwrap();
+    let err = trace::parse_trace_file(&empty).unwrap_err().to_string();
+    assert!(err.contains("no trace records"), "{err}");
+}
+
+/// Unknown benchmark names fail listing the registered names —
+/// including ingested `trace:` entries.
+#[test]
+fn unknown_names_list_registered_traces() {
+    let dir = TestDir::new();
+    let cfg = SimConfig::default();
+    let wl = WorkloadRegistry::builtin().build("streamtriad", &cfg, 1, 0.05).unwrap();
+    let raw = dir.file("st.trace");
+    trace::write_workload_trace(&wl, &raw).unwrap();
+    trace::ingest(&raw, dir.path(), Some("st"), &cfg).unwrap();
+
+    let registry = WorkloadRegistry::with_trace_dir(dir.path()).unwrap();
+    let err = registry.build("nope", &cfg, 1, 1.0).unwrap_err().to_string();
+    assert!(err.contains("unknown benchmark 'nope'"), "{err}");
+    assert!(err.contains("bfs"), "builtins missing from: {err}");
+    assert!(err.contains("trace:st"), "trace entry missing from: {err}");
+}
+
+/// An ingested trace runs through the sweep like any builtin: the
+/// cell is tagged `source = trace` in `BENCH_eval.json` and its
+/// metrics are byte-deterministic across runs.
+#[test]
+fn sweep_over_ingested_trace_is_tagged_and_deterministic() {
+    let dir = TestDir::new();
+    let cfg = SimConfig::default();
+    let wl = WorkloadRegistry::builtin().build("addvectors", &cfg, 5, 0.1).unwrap();
+    let raw = dir.file("av.trace");
+    trace::write_workload_trace(&wl, &raw).unwrap();
+    trace::ingest(&raw, dir.path(), Some("av"), &cfg).unwrap();
+
+    let opts = RunOptions {
+        scale: 0.1,
+        max_instructions: 200_000,
+        trace_dir: dir.path().display().to_string(),
+        ..Default::default()
+    };
+    let spec = CellSpec::new("trace:av", "tree", &opts);
+    let a = sweep(&[spec.clone()], 1).unwrap();
+    let b = sweep(&[spec], 2).unwrap();
+    assert_eq!(a.cells[0].metrics, b.cells[0].metrics, "trace cells must be deterministic");
+    assert_eq!(a.cells[0].source, "trace");
+    assert!(a.cells[0].metrics.mem_accesses > 0);
+
+    let json = bench_eval_json(&a);
+    let cells = json.get("cells").and_then(|c| c.as_arr()).unwrap();
+    assert_eq!(cells[0].get("benchmark").and_then(|v| v.as_str()), Some("trace:av"));
+    assert_eq!(cells[0].get("source").and_then(|v| v.as_str()), Some("trace"));
+}
