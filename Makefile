@@ -7,6 +7,8 @@
 #   make eval-smoke    small parallel all-benchmark sweep → BENCH_eval.json
 #   make trace-smoke   ingest ci/sample_trace.txt + sweep one trace cell
 #   make oversub-smoke small oversubscription sweep → BENCH_oversub.json
+#   make oversub-learned-smoke  learned-vs-lru eviction at severe
+#                      pressure (ratio 0.25), full-run spmv cell
 #   make serve-smoke   tiny multi-tenant serving run → BENCH_serve.json
 #   make serve-smoke-fast  serve the trained native model on the fast
 #                      kernel tier (runs model-smoke first)
@@ -26,7 +28,7 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test lint fmt clippy check doc eval-smoke trace-smoke oversub-smoke serve-smoke serve-smoke-fast kernel-bench train train-transformer analyze analyze-smoke model-smoke golden-check golden-update eval oversub artifacts clean
+.PHONY: build test lint fmt clippy check doc eval-smoke trace-smoke oversub-smoke oversub-learned-smoke serve-smoke serve-smoke-fast kernel-bench train train-transformer analyze analyze-smoke model-smoke golden-check golden-update eval oversub artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -79,6 +81,16 @@ oversub-smoke:
 		--scale 0.25 --max-instructions 200000 --out results-smoke \
 		--ratios 1.0,0.5 \
 		--benchmarks addvectors --benchmarks atax --benchmarks pathfinder
+
+# Learned-eviction smoke: the online-trained policy against lru at
+# severe pressure (ratio 0.25) on one irregular workload, run to
+# completion (--max-instructions 0) so the capped device genuinely
+# fills — the cell the ISSUE's success metric reads.
+oversub-learned-smoke:
+	$(CARGO) run --release --bin repro -- eval oversub --no-pjrt \
+		--scale 0.1 --max-instructions 0 --out results-smoke \
+		--ratios 0.25 --evictions lru,learned --prefetchers dl \
+		--benchmarks spmv
 
 # Serving smoke (CI): two tenant streams through two router shards on
 # the stride backend — exercises the sharded coordinator, the shared
@@ -160,7 +172,7 @@ eval:
 
 # Full oversubscription grid: {14 workloads — the dense suite plus the
 # irregular bfs/spmv/hash_join trio} × {none,tree,uvmsmart,dl}
-# × {1.0,0.75,0.5} × {lru,random,freq,prefetch-aware}.
+# × {1.0,0.75,0.5,0.375,0.25} × {lru,random,freq,prefetch-aware,learned}.
 oversub:
 	$(CARGO) run --release --bin repro -- eval oversub --no-pjrt
 

@@ -47,7 +47,7 @@ pub struct SimConfig {
     pub oversub_ratio: f64,
     /// Victim-selection policy under memory pressure — one of
     /// [`crate::sim::eviction::ALL_EVICTION_POLICIES`]
-    /// ("lru" | "random" | "freq" | "prefetch-aware").
+    /// ("lru" | "random" | "freq" | "prefetch-aware" | "learned").
     pub eviction_policy: String,
 }
 

@@ -20,4 +20,4 @@ pub use router::{shard_of, tenant_cluster_key, FaultEvent, PrefetchCommand, Rout
 pub use service::{
     CoordinatorHandle, CoordinatorService, FaultSender, ShutdownReport, SpawnOptions,
 };
-pub use stats::{CoordinatorStats, TenantStats};
+pub use stats::{CommandKind, CoordinatorStats, TenantStats};

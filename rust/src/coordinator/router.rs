@@ -15,7 +15,18 @@ use crate::config::{BypassMode, RuntimeConfig};
 use crate::predictor::engine::featurize_window;
 use crate::predictor::history::HistoryTable;
 use crate::predictor::{ClusterBy, ClusterKey, DeltaVocab, Window};
-use crate::types::{bb_base, AccessOrigin, Cycle, PageNum, TenantId, PAGES_PER_BB};
+use crate::types::{bb_base, AccessOrigin, AdviseHint, Cycle, PageNum, TenantId, PAGES_PER_BB};
+use std::collections::{HashMap, HashSet};
+
+/// Delta-distribution convergence a cluster needs before the basic
+/// block it streamed past is declared dead and emitted as a lazy
+/// `Discard` (mirrors the sim-side `DlPrefetcher` threshold).
+const DISCARD_CONVERGENCE: f64 = 0.75;
+
+/// Convergence of a *delta-0* cluster — the same page missing over and
+/// over is CPU/GPU ping-pong, answered once per cluster with a
+/// read-mostly `Advise` (a host duplicate stops the bouncing).
+const ADVISE_CONVERGENCE: f64 = 0.75;
 
 /// A GMMU access delivered to the coordinator. Every access extends
 /// the cluster history (the predictor windows over the full access
@@ -44,6 +55,11 @@ pub enum PrefetchCommand {
     Migrate { tenant: TenantId, pages: Vec<PageNum> },
     /// Migrate one predicted page (model answer).
     Predicted { tenant: TenantId, page: PageNum },
+    /// Attach a memory-usage hint (`cudaMemAdvise` modeled) to pages.
+    Advise { tenant: TenantId, pages: Vec<PageNum>, hint: AdviseHint },
+    /// Hand pages back without writeback (`UvmDiscardAsync` modeled
+    /// when `lazy`).
+    Discard { tenant: TenantId, pages: Vec<PageNum>, lazy: bool },
 }
 
 impl PrefetchCommand {
@@ -51,6 +67,8 @@ impl PrefetchCommand {
         match self {
             PrefetchCommand::Migrate { tenant, .. } => *tenant,
             PrefetchCommand::Predicted { tenant, .. } => *tenant,
+            PrefetchCommand::Advise { tenant, .. } => *tenant,
+            PrefetchCommand::Discard { tenant, .. } => *tenant,
         }
     }
 }
@@ -86,6 +104,12 @@ pub struct RouteOutcome {
     pub window: Option<(ClusterKey, Window)>,
     /// Bypass answer, if the cluster's delta distribution converged.
     pub bypass_page: Option<PageNum>,
+    /// One-shot read-mostly hint for the faulting block, when the
+    /// cluster's history converged on delta 0 (ping-pong signature).
+    pub advise: Option<(Vec<PageNum>, AdviseHint)>,
+    /// Previous basic block to lazily hand back, when the cluster
+    /// streamed forward past it with a converged positive delta.
+    pub discard: Option<Vec<PageNum>>,
 }
 
 pub struct Router {
@@ -94,6 +118,12 @@ pub struct Router {
     vocab: DeltaVocab,
     bypass: BypassMode,
     bypass_convergence: f64,
+    /// Basic block of each cluster's previous miss — the lazy-discard
+    /// candidate once the cluster streams past it. Keyed lookups only.
+    last_bb: HashMap<ClusterKey, PageNum>,
+    /// Clusters that already received their one-shot read-mostly
+    /// advise.
+    advised: HashSet<ClusterKey>,
     pub faults_routed: u64,
     pub windows_emitted: u64,
     pub bypasses: u64,
@@ -107,6 +137,8 @@ impl Router {
             vocab,
             bypass: rcfg.bypass,
             bypass_convergence: rcfg.bypass_convergence,
+            last_bb: HashMap::new(),
+            advised: HashSet::new(),
             faults_routed: 0,
             windows_emitted: 0,
             bypasses: 0,
@@ -122,41 +154,72 @@ impl Router {
         self.history.push(key, ev.pc, ev.page, ev.at);
         if !ev.miss {
             // Hits only feed the history.
-            return RouteOutcome { block: Vec::new(), window: None, bypass_page: None };
+            return RouteOutcome {
+                block: Vec::new(),
+                window: None,
+                bypass_page: None,
+                advise: None,
+                discard: None,
+            };
         }
         self.faults_routed += 1;
 
         let bb = bb_base(ev.page);
         let block: Vec<PageNum> =
             (bb..bb + PAGES_PER_BB).filter(|&p| p != ev.page).collect();
+        let prev_bb = self.last_bb.insert(key, bb);
 
         let cluster = self.history.get_mut(&key).expect("pushed above");
+        let dominant = cluster.dominant_delta();
+
+        // Streamed past the previous block with a converged forward
+        // delta: the block is dead weight, hand it back lazily. All
+        // state is per-cluster, so the emission is shard-invariant.
+        let discard = match prev_bb {
+            Some(prev)
+                if prev < bb
+                    && dominant.is_some_and(|(d, c)| d > 0 && c >= DISCARD_CONVERGENCE) =>
+            {
+                Some((prev..prev + PAGES_PER_BB).filter(|&p| p != ev.page).collect())
+            }
+            _ => None,
+        };
+        // Converged delta-0 miss stream: the same page keeps coming
+        // back — CPU/GPU ping-pong. Answer once per cluster with a
+        // read-mostly duplicate of the faulting block.
+        let advise = if !self.advised.contains(&key)
+            && dominant.is_some_and(|(d, c)| d == 0 && c >= ADVISE_CONVERGENCE)
+        {
+            self.advised.insert(key);
+            Some(((bb..bb + PAGES_PER_BB).collect(), AdviseHint::ReadMostly))
+        } else {
+            None
+        };
+
         if cluster.full_window().is_none() {
-            return RouteOutcome { block, window: None, bypass_page: None };
+            return RouteOutcome { block, window: None, bypass_page: None, advise, discard };
         }
 
         let do_bypass = match self.bypass {
             BypassMode::Always => true,
             BypassMode::Never => false,
-            BypassMode::Auto => cluster
-                .dominant_delta()
+            BypassMode::Auto => dominant
                 .map(|(_, c)| c >= self.bypass_convergence)
                 .unwrap_or(false),
         };
         if do_bypass {
             self.bypasses += 1;
-            let page = cluster
-                .dominant_delta()
+            let page = dominant
                 .map(|(d, _)| ev.page as i64 + d)
                 .filter(|&p| p >= 0)
                 .map(|p| p as PageNum);
-            return RouteOutcome { block, window: None, bypass_page: page };
+            return RouteOutcome { block, window: None, bypass_page: page, advise, discard };
         }
 
         self.windows_emitted += 1;
         let toks = cluster.full_window().expect("checked above");
         let window = featurize_window(&self.vocab, toks);
-        RouteOutcome { block, window: Some((key, window)), bypass_page: None }
+        RouteOutcome { block, window: Some((key, window)), bypass_page: None, advise, discard }
     }
 }
 
@@ -257,7 +320,72 @@ mod tests {
     fn command_tenant_accessor() {
         let m = PrefetchCommand::Migrate { tenant: 7, pages: vec![1] };
         let p = PrefetchCommand::Predicted { tenant: 9, page: 4 };
+        let a = PrefetchCommand::Advise { tenant: 3, pages: vec![2], hint: AdviseHint::ReadMostly };
+        let d = PrefetchCommand::Discard { tenant: 5, pages: vec![8], lazy: true };
         assert_eq!(m.tenant(), 7);
         assert_eq!(p.tenant(), 9);
+        assert_eq!(a.tenant(), 3);
+        assert_eq!(d.tenant(), 5);
+    }
+
+    /// The shard-determinism multiset tests sort mixed command vectors
+    /// — `Ord` must cover every variant and produce a stable total
+    /// order.
+    #[test]
+    fn commands_sort_stably_across_all_variants() {
+        use crate::types::PreferredLocation;
+        let mut cmds = vec![
+            PrefetchCommand::Discard { tenant: 1, pages: vec![8], lazy: true },
+            PrefetchCommand::Advise {
+                tenant: 1,
+                pages: vec![2],
+                hint: AdviseHint::PreferredLocation(PreferredLocation::Device),
+            },
+            PrefetchCommand::Predicted { tenant: 1, page: 4 },
+            PrefetchCommand::Migrate { tenant: 1, pages: vec![1] },
+            PrefetchCommand::Advise { tenant: 1, pages: vec![2], hint: AdviseHint::ReadMostly },
+            PrefetchCommand::Discard { tenant: 1, pages: vec![8], lazy: false },
+        ];
+        let mut twice = cmds.clone();
+        cmds.sort();
+        twice.sort();
+        assert_eq!(cmds, twice);
+        // Declaration order: Migrate < Predicted < Advise < Discard.
+        assert!(matches!(cmds[0], PrefetchCommand::Migrate { .. }));
+        assert!(matches!(cmds[1], PrefetchCommand::Predicted { .. }));
+        assert!(matches!(cmds[2], PrefetchCommand::Advise { .. }));
+        assert!(matches!(cmds[5], PrefetchCommand::Discard { .. }));
+    }
+
+    #[test]
+    fn streaming_cluster_emits_discard_for_previous_block() {
+        let mut r = router(BypassMode::Never);
+        for i in 0..8u64 {
+            let out = r.route(&event(i, i));
+            assert!(out.discard.is_none(), "still inside block 0");
+        }
+        // Crossing into block 1 with a converged +1 stream hands the
+        // previous block back.
+        let out = r.route(&event(16, 16));
+        let discard = out.discard.expect("bb advance on a converged stream");
+        assert_eq!(discard.len(), 16);
+        assert!(discard.iter().all(|&p| p < 16));
+        // No new bb advance ⇒ no new discard.
+        assert!(r.route(&event(17, 17)).discard.is_none());
+    }
+
+    #[test]
+    fn ping_pong_cluster_gets_one_read_mostly_advise() {
+        let mut r = router(BypassMode::Never);
+        assert!(r.route(&event(5, 0)).advise.is_none(), "no deltas yet");
+        // Second miss on the same page: delta-0 convergence = 1.0.
+        let out = r.route(&event(5, 1));
+        let (pages, hint) = out.advise.expect("delta-0 convergence");
+        assert_eq!(hint, AdviseHint::ReadMostly);
+        assert_eq!(pages, (0..16).collect::<Vec<PageNum>>());
+        // One-shot per cluster.
+        for i in 2..6u64 {
+            assert!(r.route(&event(5, i)).advise.is_none(), "advise is one-shot");
+        }
     }
 }

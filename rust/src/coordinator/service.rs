@@ -32,7 +32,7 @@
 
 use crate::config::RuntimeConfig;
 use crate::coordinator::router::{shard_of, FaultEvent, PrefetchCommand, Router};
-use crate::coordinator::stats::CoordinatorStats;
+use crate::coordinator::stats::{CommandKind, CoordinatorStats};
 use crate::predictor::{DeltaVocab, Prediction, PredictorBackend, Window};
 use crate::types::{PageNum, TenantId};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SendError, SyncSender};
@@ -223,7 +223,42 @@ impl CoordinatorService {
                             let c =
                                 PrefetchCommand::Migrate { tenant: ev.tenant, pages: out.block };
                             if cmd.send(c).is_ok() {
-                                st.record_command(ev.tenant, false, us_since(enqueued));
+                                st.record_command(
+                                    ev.tenant,
+                                    CommandKind::Migrate,
+                                    us_since(enqueued),
+                                );
+                            } else {
+                                CoordinatorStats::inc(&st.dropped_commands, 1);
+                                dead = true;
+                            }
+                        }
+                        // Memory-management verbs ride the same command
+                        // channel as migrations: a lazy Discard for the
+                        // block a streaming cluster just left behind, a
+                        // one-shot ReadMostly Advise for ping-pong pages.
+                        if let Some(pages) = out.discard {
+                            let c =
+                                PrefetchCommand::Discard { tenant: ev.tenant, pages, lazy: true };
+                            if !dead && cmd.send(c).is_ok() {
+                                st.record_command(
+                                    ev.tenant,
+                                    CommandKind::Discard,
+                                    us_since(enqueued),
+                                );
+                            } else {
+                                CoordinatorStats::inc(&st.dropped_commands, 1);
+                                dead = true;
+                            }
+                        }
+                        if let Some((pages, hint)) = out.advise {
+                            let c = PrefetchCommand::Advise { tenant: ev.tenant, pages, hint };
+                            if !dead && cmd.send(c).is_ok() {
+                                st.record_command(
+                                    ev.tenant,
+                                    CommandKind::Advise,
+                                    us_since(enqueued),
+                                );
                             } else {
                                 CoordinatorStats::inc(&st.dropped_commands, 1);
                                 dead = true;
@@ -233,7 +268,11 @@ impl CoordinatorService {
                             CoordinatorStats::inc(&st.bypasses, 1);
                             let c = PrefetchCommand::Predicted { tenant: ev.tenant, page };
                             if !dead && cmd.send(c).is_ok() {
-                                st.record_command(ev.tenant, true, us_since(enqueued));
+                                st.record_command(
+                                    ev.tenant,
+                                    CommandKind::Predicted,
+                                    us_since(enqueued),
+                                );
                             } else {
                                 CoordinatorStats::inc(&st.dropped_commands, 1);
                                 dead = true;
@@ -308,7 +347,7 @@ impl CoordinatorService {
                                     if !dead && cmd_tx.send(c).is_ok() {
                                         st.record_command(
                                             req.tenant,
-                                            true,
+                                            CommandKind::Predicted,
                                             us_since(req.enqueued),
                                         );
                                     } else {

@@ -13,13 +13,25 @@ use crate::types::TenantId;
 use crate::util::{AtomicHistogram, HistSummary};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// Which command a shard delivered — the per-tenant counter it bumps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommandKind {
+    Migrate,
+    Predicted,
+    Advise,
+    Discard,
+}
+
 /// Per-tenant slice of the telemetry.
 #[derive(Debug, Default)]
 pub struct TenantStats {
-    /// Commands emitted for this tenant (migrates + predicted).
+    /// Commands emitted for this tenant (migrates + predicted +
+    /// advises + discards).
     pub commands: AtomicU64,
     pub migrates: AtomicU64,
     pub predicted: AtomicU64,
+    pub advises: AtomicU64,
+    pub discards: AtomicU64,
     /// End-to-end fault→command latency, microseconds.
     pub latency_us: AtomicHistogram,
 }
@@ -84,15 +96,17 @@ impl CoordinatorStats {
 
     /// Record one delivered command: aggregate + per-tenant counters
     /// and the end-to-end latency sample.
-    pub fn record_command(&self, tenant: TenantId, predicted: bool, latency_us: u64) {
+    pub fn record_command(&self, tenant: TenantId, kind: CommandKind, latency_us: u64) {
         self.fault_to_cmd_us.record(latency_us);
         let t = self.tenant(tenant);
         t.commands.fetch_add(1, Ordering::Relaxed);
-        if predicted {
-            t.predicted.fetch_add(1, Ordering::Relaxed);
-        } else {
-            t.migrates.fetch_add(1, Ordering::Relaxed);
-        }
+        let counter = match kind {
+            CommandKind::Migrate => &t.migrates,
+            CommandKind::Predicted => &t.predicted,
+            CommandKind::Advise => &t.advises,
+            CommandKind::Discard => &t.discards,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
         t.latency_us.record(latency_us);
     }
 
@@ -169,9 +183,9 @@ mod tests {
     #[test]
     fn per_tenant_commands_and_clamping() {
         let s = CoordinatorStats::with_tenants(2);
-        s.record_command(0, false, 10);
-        s.record_command(1, true, 20);
-        s.record_command(99, true, 30); // clamps to the last slot
+        s.record_command(0, CommandKind::Migrate, 10);
+        s.record_command(1, CommandKind::Predicted, 20);
+        s.record_command(99, CommandKind::Predicted, 30); // clamps to the last slot
         assert_eq!(s.tenant(0).migrates.load(Ordering::Relaxed), 1);
         assert_eq!(s.tenant(1).predicted.load(Ordering::Relaxed), 2);
         assert_eq!(s.tenant(1).commands.load(Ordering::Relaxed), 2);
@@ -180,10 +194,24 @@ mod tests {
     }
 
     #[test]
+    fn advise_and_discard_have_their_own_counters() {
+        let s = CoordinatorStats::with_tenants(2);
+        s.record_command(0, CommandKind::Advise, 5);
+        s.record_command(0, CommandKind::Discard, 6);
+        s.record_command(0, CommandKind::Discard, 7);
+        let t = s.tenant(0);
+        assert_eq!(t.advises.load(Ordering::Relaxed), 1);
+        assert_eq!(t.discards.load(Ordering::Relaxed), 2);
+        assert_eq!(t.commands.load(Ordering::Relaxed), 3, "all kinds count as commands");
+        assert_eq!(t.migrates.load(Ordering::Relaxed), 0);
+        assert_eq!(t.predicted.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
     fn default_is_single_tenant() {
         let s = CoordinatorStats::default();
         assert_eq!(s.n_tenants(), 1);
-        s.record_command(5, false, 1); // must not panic
+        s.record_command(5, CommandKind::Migrate, 1); // must not panic
         assert_eq!(s.tenant(0).commands.load(Ordering::Relaxed), 1);
     }
 }

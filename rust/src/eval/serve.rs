@@ -68,6 +68,10 @@ pub struct TenantReport {
     pub commands: u64,
     pub migrates: u64,
     pub predicted: u64,
+    /// `Advise` commands (memory hints) emitted for this tenant.
+    pub advises: u64,
+    /// `Discard` commands emitted for this tenant.
+    pub discards: u64,
     pub latency_us: HistSummary,
 }
 
@@ -314,6 +318,8 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
             commands: ts.commands.load(Ordering::Relaxed),
             migrates: ts.migrates.load(Ordering::Relaxed),
             predicted: ts.predicted.load(Ordering::Relaxed),
+            advises: ts.advises.load(Ordering::Relaxed),
+            discards: ts.discards.load(Ordering::Relaxed),
             latency_us: ts.latency_us.summary(),
         });
     }
@@ -372,6 +378,8 @@ pub fn bench_serve_json(r: &ServeReport) -> Json {
                     ("commands", Json::Num(t.commands as f64)),
                     ("migrates", Json::Num(t.migrates as f64)),
                     ("predicted", Json::Num(t.predicted as f64)),
+                    ("advises", Json::Num(t.advises as f64)),
+                    ("discards", Json::Num(t.discards as f64)),
                     ("latency_us", t.latency_us.to_json()),
                 ])
             })),

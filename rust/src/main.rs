@@ -11,7 +11,7 @@
 //!                    --oversubscribe: resident fraction of the
 //!                    workload footprint, in (0, 1]; 1.0 (default) =
 //!                    no oversubscription. --eviction: lru | random |
-//!                    freq | prefetch-aware.
+//!                    freq | prefetch-aware | learned.
 //! repro train      [--arch native|transformer]
 //!                  [--workload B | --benchmarks a --benchmarks b]
 //!                  [--out artifacts] [--epochs N] [--batch N]
@@ -37,8 +37,8 @@
 //!                  [--out results]
 //!                  [--scale F] [--max-instructions N] [--no-pjrt]
 //!                  [--benchmarks a,b] [--trace-dir DIR]
-//!                  oversub only: [--ratios 1.0,0.75,0.5]
-//!                  [--evictions lru,random,freq,prefetch-aware]
+//!                  oversub only: [--ratios 1.0,0.75,0.5,0.375,0.25]
+//!                  [--evictions lru,random,freq,prefetch-aware,learned]
 //!                  [--prefetchers none,tree,uvmsmart,dl]
 //!                  ("all" covers the paper artifacts; oversub is its
 //!                  own axis and must be requested explicitly)

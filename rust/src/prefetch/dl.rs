@@ -19,7 +19,9 @@
 //! instructions (§7.1) — a real gradient step (with a real loss) on
 //! the native backend.
 
-use super::{FaultInfo, PrefetchDecision, Prefetcher, PrefetchRequest, PrefetchTelemetry};
+use super::{
+    DiscardRequest, FaultInfo, PrefetchDecision, Prefetcher, PrefetchRequest, PrefetchTelemetry,
+};
 use crate::config::{BypassMode, RuntimeConfig};
 use crate::predictor::batcher::{Batcher, PendingRequest};
 use crate::predictor::engine::featurize_window;
@@ -38,12 +40,22 @@ const BYPASS_LATENCY_DIV: u64 = 10;
 /// a quarter basic block (4 pages) instead of the full 64 KB block.
 const THROTTLED_SPAN: u64 = PAGES_PER_BB / 4;
 
+/// Delta-distribution convergence a cluster must reach before its
+/// previous basic block is declared dead under pressure: a strongly
+/// forward-streaming cluster (dominant delta > 0) will not revisit the
+/// block it just left, so the pages can be handed back lazily instead
+/// of waiting for the eviction policy to guess.
+const DISCARD_CONVERGENCE: f64 = 0.75;
+
 pub struct DlPrefetcher {
     engine: PredictorEngine,
     cluster_by: ClusterBy,
     history: HistoryTable<ClusterKey>,
     /// Last *full* window per cluster, pending its ground-truth label.
     last_window: HashMap<ClusterKey, Window>,
+    /// Basic block of each cluster's previous fault — the candidate
+    /// for a lazy discard once the cluster streams past it.
+    last_bb: HashMap<ClusterKey, PageNum>,
     batcher: Batcher,
     finetune: FinetuneScheduler,
     latency: Cycle,
@@ -67,6 +79,7 @@ impl DlPrefetcher {
             cluster_by: ClusterBy::SmWarp,
             history: HistoryTable::new(history_len),
             last_window: HashMap::new(),
+            last_bb: HashMap::new(),
             batcher: Batcher::new(rcfg.batch_size, rcfg.batch_flush_cycles),
             finetune: FinetuneScheduler::new(
                 rcfg.finetune_interval_insts,
@@ -166,14 +179,16 @@ impl Prefetcher for DlPrefetcher {
         // at 1 µs decaying to 0.90× at 10 µs); only the demanded page
         // itself rides the hardware fault path unaffected.
         let decision_at = fault.service_at + self.latency;
+        let bb = bb_base(fault.page);
+        let prev_bb = self.last_bb.insert(key, bb);
+        let under_pressure = fault.mem.above(self.pressure_threshold);
         // Near capacity every speculative page evicts a live one, so
         // the block floor shrinks to the faulted quarter block; the
         // top-1 predicted page below still issues at full priority.
-        let (lo, hi) = if fault.mem.above(self.pressure_threshold) {
+        let (lo, hi) = if under_pressure {
             let q = fault.page & !(THROTTLED_SPAN - 1);
             (q, q + THROTTLED_SPAN)
         } else {
-            let bb = bb_base(fault.page);
             (bb, bb + PAGES_PER_BB)
         };
         let mut requests: Vec<PrefetchRequest> = (lo..hi)
@@ -181,11 +196,36 @@ impl Prefetcher for DlPrefetcher {
             .map(|p| PrefetchRequest::at(p, decision_at))
             .collect();
 
+        // Predicted-dead block: once a converged forward-streaming
+        // cluster advances to a new basic block under pressure, the
+        // block it just left is dead weight — hand it back lazily so
+        // the next admissions reclaim free frames instead of evicting
+        // live pages. Unpressured runs emit nothing (the ratio-1.0
+        // byte-identity anchor).
+        let discards: Vec<DiscardRequest> = match prev_bb {
+            Some(prev) if under_pressure && prev < bb => {
+                let streaming = self
+                    .history
+                    .get(&key)
+                    .and_then(|c| c.dominant_delta())
+                    .is_some_and(|(d, conv)| d > 0 && conv >= DISCARD_CONVERGENCE);
+                if streaming {
+                    (prev..prev + PAGES_PER_BB)
+                        .filter(|&pg| pg != fault.page)
+                        .map(|pg| DiscardRequest { page: pg, lazy: true })
+                        .collect()
+                } else {
+                    Vec::new()
+                }
+            }
+            _ => Vec::new(),
+        };
+
         // Top-1 prediction for the +1 page, over the cluster's access
         // history window (the fault itself enters the history via the
         // engine's subsequent on_access call).
         let Some(cluster) = self.history.get_mut(&key) else {
-            return PrefetchDecision { requests };
+            return PrefetchDecision { requests, discards };
         };
         if let Some(window_toks) = cluster.full_window() {
             let window = featurize_window(&self.engine.vocab, window_toks);
@@ -223,7 +263,7 @@ impl Prefetcher for DlPrefetcher {
             }
         }
 
-        PrefetchDecision { requests }
+        PrefetchDecision { requests, discards }
     }
 
     fn drain(&mut self, now: Cycle) -> Vec<PrefetchRequest> {
@@ -338,6 +378,29 @@ mod tests {
         let d = p.on_fault(&f);
         assert_eq!(d.requests.len(), 3, "quarter block minus the faulted page");
         assert!(d.requests.iter().all(|r| r.page >= 4 && r.page < 8 && r.page != 5));
+    }
+
+    #[test]
+    fn discards_previous_block_under_pressure_when_streaming() {
+        let cfg = small_cfg();
+        let mut p = dl(&cfg, 0, vec![1]);
+        // Converge the cluster on delta +1; unpressured faults never
+        // emit discards (the ratio-1.0 byte-identity anchor).
+        for i in 0..6u64 {
+            let d = fault_access(&mut p, i, i * 10);
+            assert!(d.discards.is_empty(), "no pressure, no discard");
+        }
+        // Cross into the next basic block under pressure: the block
+        // just left (pages 0..16) is predicted dead — lazy discards.
+        let mut f = fault(16, 100);
+        f.mem = MemPressure::at(99, 100);
+        let d = p.on_fault(&f);
+        assert_eq!(d.discards.len(), 16, "{:?}", d.discards);
+        assert!(d.discards.iter().all(|r| r.lazy && r.page < 16));
+        // Same block again: no bb advance, no new discards.
+        let mut f = fault(17, 110);
+        f.mem = MemPressure::at(99, 100);
+        assert!(p.on_fault(&f).discards.is_empty());
     }
 
     #[test]

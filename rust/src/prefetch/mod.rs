@@ -95,10 +95,25 @@ impl PrefetchRequest {
     }
 }
 
+/// One page the prefetcher declares dead and wants given back —
+/// freed without writeback (the discard half of the command
+/// vocabulary; `UvmDiscardAsync` modeled when `lazy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DiscardRequest {
+    pub page: PageNum,
+    /// Lazy discards only mark the page; the frame is reclaimed when
+    /// admission pressure needs it, and a demand touch cancels the
+    /// mark. Eager (`false`) discards free the frame immediately.
+    pub lazy: bool,
+}
+
 /// Response to a single fault.
 #[derive(Debug, Clone, Default)]
 pub struct PrefetchDecision {
     pub requests: Vec<PrefetchRequest>,
+    /// Predicted-dead pages to hand back (see [`DiscardRequest`]).
+    /// Empty for every policy except `dl` under memory pressure.
+    pub discards: Vec<DiscardRequest>,
 }
 
 /// Telemetry exported by learned policies (merged into

@@ -48,7 +48,7 @@ impl Prefetcher for OraclePrefetcher {
             }
             i += 1;
         }
-        PrefetchDecision { requests }
+        PrefetchDecision { requests, ..Default::default() }
     }
 }
 

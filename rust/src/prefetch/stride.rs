@@ -73,7 +73,7 @@ impl Prefetcher for StridePrefetcher {
                 }
             }
         }
-        PrefetchDecision { requests }
+        PrefetchDecision { requests, ..Default::default() }
     }
 
     fn on_access(&mut self, origin: crate::types::AccessOrigin, _pc: u64, page: PageNum, hit: bool, _now: u64) {

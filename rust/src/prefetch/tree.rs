@@ -132,7 +132,7 @@ impl Prefetcher for TreePrefetcher {
                 self.throttled += retain_basic_block(&mut requests, fault.page);
             }
         }
-        PrefetchDecision { requests }
+        PrefetchDecision { requests, ..Default::default() }
     }
 
     fn on_evict(&mut self, page: PageNum) {

@@ -4,8 +4,8 @@
 //! metrics.
 
 use crate::sim::eviction::{EvictionPolicy, LruPolicy};
-use crate::types::{Cycle, PageNum};
-use std::collections::HashMap;
+use crate::types::{AdviseHint, Cycle, PageNum, PreferredLocation};
+use std::collections::{BTreeSet, HashMap};
 
 /// Migration state of a page known to the device.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -26,16 +26,29 @@ pub struct PageInfo {
     /// (feeds prefetcher *accuracy*).
     pub prefetch_used: bool,
     pub last_touch: Cycle,
+    /// `cudaMemAdviseSetReadMostly` modeled: the host keeps a
+    /// read-only duplicate, so dropping this copy needs no writeback
+    /// and CPU reads never migrate the page back.
+    pub read_mostly: bool,
+    /// `SetPreferredLocation(Device)` modeled: never an eviction
+    /// victim while set.
+    pub pinned: bool,
+    /// Marked by a lazy discard (`UvmDiscardAsync` modeled): the copy
+    /// is reclaimed only when admission needs a frame; a demand touch
+    /// cancels the mark (the death prediction was wrong).
+    pub lazy_discard: bool,
 }
 
 impl PageInfo {
-    /// Resident by `now` under lazy promotion — the only pages an
-    /// eviction policy may target (in-flight pages are never evicted).
+    /// Resident by `now` under lazy promotion and not pinned — the
+    /// only pages an eviction policy may target (in-flight pages are
+    /// never evicted).
     pub fn evictable(&self, now: Cycle) -> bool {
-        match self.state {
-            PageState::Resident => true,
-            PageState::Migrating { arrival } => arrival <= now,
-        }
+        !self.pinned
+            && match self.state {
+                PageState::Resident => true,
+                PageState::Migrating { arrival } => arrival <= now,
+            }
     }
 }
 
@@ -50,10 +63,27 @@ pub struct DeviceMemory {
     capacity_pages: u64,
     pages: HashMap<PageNum, PageInfo>,
     policy: Box<dyn EvictionPolicy>,
+    /// Lazy-discard marks in mark order — reclaimed oldest-first when
+    /// admission needs a frame, before the eviction policy is asked.
+    /// Entries go stale when a touch cancels the mark or the page
+    /// leaves; they are skipped and dropped at reclaim time.
+    lazy_marks: BTreeSet<(Cycle, PageNum)>,
     /// Number of prefetched copies that were evicted before ever being
     /// demanded (wasted transfers — hurts accuracy).
     pub evicted_unused_prefetches: u64,
     pub evictions: u64,
+    /// Pages dropped by discard commands (eager + reclaimed lazy) —
+    /// freed without writeback, charged no interconnect traffic, and
+    /// *not* counted as evictions.
+    pub discards: u64,
+    /// Subset of `discards` that were lazy marks reclaimed at
+    /// admission pressure.
+    pub lazy_discard_reclaims: u64,
+    /// Pages newly marked read-mostly by an advise.
+    pub advised_read_mostly: u64,
+    /// Read-mostly copies dropped (evicted or discarded) — each one a
+    /// writeback the host duplicate made unnecessary.
+    pub read_mostly_drops: u64,
 }
 
 impl DeviceMemory {
@@ -67,8 +97,13 @@ impl DeviceMemory {
             capacity_pages,
             pages: HashMap::new(),
             policy,
+            lazy_marks: BTreeSet::new(),
             evicted_unused_prefetches: 0,
             evictions: 0,
+            discards: 0,
+            lazy_discard_reclaims: 0,
+            advised_read_mostly: 0,
+            read_mostly_drops: 0,
         }
     }
 
@@ -107,6 +142,9 @@ impl DeviceMemory {
             let Some(info) = self.pages.get_mut(&page) else { return false };
             let prev = info.last_touch;
             info.last_touch = now;
+            // A demand touch disproves a lazy-discard death prediction
+            // — cancel the mark (its index entry goes stale).
+            info.lazy_discard = false;
             let first_use = info.via_prefetch && !info.prefetch_used;
             if first_use {
                 info.prefetch_used = true;
@@ -124,6 +162,13 @@ impl DeviceMemory {
         debug_assert!(!self.pages.contains_key(&page), "admit of already-known page {page}");
         let mut evicted = Vec::new();
         while self.pages.len() as u64 >= self.capacity_pages {
+            // Lazy-discard marks absorb the pressure first: reclaiming
+            // a predicted-dead copy is free, so the policy only picks
+            // a victim once no mark is reclaimable.
+            if let Some(p) = self.reclaim_lazy(now) {
+                evicted.push(p);
+                continue;
+            }
             match self.evict_one(now) {
                 Some(p) => evicted.push(p),
                 None => break, // everything in flight; over-commit rather than deadlock
@@ -131,10 +176,101 @@ impl DeviceMemory {
         }
         self.pages.insert(
             page,
-            PageInfo { state: PageState::Migrating { arrival }, via_prefetch, prefetch_used: false, last_touch: now },
+            PageInfo {
+                state: PageState::Migrating { arrival },
+                via_prefetch,
+                prefetch_used: false,
+                last_touch: now,
+                read_mostly: false,
+                pinned: false,
+                lazy_discard: false,
+            },
         );
         self.policy.on_admit(page, now, via_prefetch);
         evicted
+    }
+
+    /// Apply a memory-usage hint to every *known* page in `pages`
+    /// (advice on unknown pages is a no-op, as in CUDA). Returns how
+    /// many pages the hint reached.
+    pub fn advise(&mut self, pages: &[PageNum], hint: AdviseHint) -> u64 {
+        let mut reached = 0;
+        for &p in pages {
+            let Some(info) = self.pages.get_mut(&p) else { continue };
+            match hint {
+                AdviseHint::ReadMostly => {
+                    if !info.read_mostly {
+                        info.read_mostly = true;
+                        self.advised_read_mostly += 1;
+                    }
+                }
+                AdviseHint::PreferredLocation(PreferredLocation::Device) => info.pinned = true,
+                AdviseHint::PreferredLocation(PreferredLocation::Host) => info.pinned = false,
+            }
+            reached += 1;
+        }
+        reached
+    }
+
+    /// Eagerly drop a page the producer declared dead: frees the frame
+    /// immediately, with no writeback and no interconnect traffic.
+    /// Refused (`false`) for unknown, in-flight, or pinned pages.
+    pub fn discard(&mut self, page: PageNum, now: Cycle) -> bool {
+        if !self.pages.get(&page).is_some_and(|i| i.evictable(now)) {
+            return false;
+        }
+        let info = self.pages.remove(&page).expect("checked above");
+        self.policy.on_remove(page, &info);
+        self.discards += 1;
+        if info.read_mostly {
+            self.read_mostly_drops += 1;
+        }
+        true
+    }
+
+    /// Mark a page for lazy discard: the frame is reclaimed only when
+    /// admission pressure needs it (oldest mark first), and a demand
+    /// touch before then cancels the mark. Returns `false` for unknown
+    /// or already-marked pages.
+    pub fn discard_lazy(&mut self, page: PageNum, now: Cycle) -> bool {
+        let Some(info) = self.pages.get_mut(&page) else { return false };
+        if info.lazy_discard {
+            return false;
+        }
+        info.lazy_discard = true;
+        self.lazy_marks.insert((now, page));
+        true
+    }
+
+    /// Reclaim the oldest still-valid lazy-discard mark that is
+    /// evictable at `now`, dropping stale index entries on the way.
+    fn reclaim_lazy(&mut self, now: Cycle) -> Option<PageNum> {
+        let mut stale = Vec::new();
+        let mut hit = None;
+        for &(at, page) in &self.lazy_marks {
+            match self.pages.get(&page) {
+                Some(i) if i.lazy_discard => {
+                    if i.evictable(now) {
+                        hit = Some((at, page));
+                        break;
+                    }
+                }
+                _ => stale.push((at, page)), // canceled or departed
+            }
+        }
+        for k in stale {
+            self.lazy_marks.remove(&k);
+        }
+        let (at, page) = hit?;
+        self.lazy_marks.remove(&(at, page));
+        let info = self.pages.remove(&page).expect("marked page is known");
+        self.policy.on_remove(page, &info);
+        self.discards += 1;
+        self.lazy_discard_reclaims += 1;
+        if info.read_mostly {
+            self.read_mostly_drops += 1;
+        }
+        Some(page)
     }
 
     /// Evict the policy's victim among pages resident by `now`.
@@ -144,6 +280,9 @@ impl DeviceMemory {
         self.policy.on_remove(victim, &info);
         if info.via_prefetch && !info.prefetch_used {
             self.evicted_unused_prefetches += 1;
+        }
+        if info.read_mostly {
+            self.read_mostly_drops += 1;
         }
         self.evictions += 1;
         Some(victim)
@@ -208,5 +347,82 @@ mod tests {
         let ev = m.admit(2, 1005, false, 5);
         assert!(ev.is_empty(), "in-flight page must not be evicted; over-commit");
         assert_eq!(m.occupancy(), 2);
+    }
+
+    #[test]
+    fn read_mostly_duplicate_survives_touches_and_counts_free_drops() {
+        use crate::types::AdviseHint;
+        let mut m = DeviceMemory::new(2);
+        m.admit(1, 0, false, 0);
+        m.admit(2, 1, false, 1);
+        // Advice reaches known pages only; unknown page 9 is a no-op.
+        assert_eq!(m.advise(&[1, 9], AdviseHint::ReadMostly), 1);
+        assert_eq!(m.advised_read_mostly, 1);
+        // The hint is metadata: the page stays resident and touchable,
+        // and repeated advise+touch cycles don't migrate anything.
+        m.touch(1, 5);
+        assert_eq!(m.advise(&[1], AdviseHint::ReadMostly), 1);
+        assert_eq!(m.advised_read_mostly, 1, "already read-mostly: not re-counted");
+        m.touch(1, 6);
+        assert!(m.info(1).is_some_and(|i| i.read_mostly));
+        assert_eq!(m.state(1, 6), Some(PageState::Resident));
+        // Evicting the read-mostly copy is a free drop (host duplicate
+        // is current — no writeback).
+        m.touch(2, 7); // page 1 (touched at 6) is now LRU
+        assert_eq!(m.admit(3, 10, false, 8), vec![1]);
+        assert_eq!(m.read_mostly_drops, 1);
+    }
+
+    #[test]
+    fn preferred_location_device_pins_against_eviction() {
+        use crate::types::{AdviseHint, PreferredLocation};
+        let mut m = DeviceMemory::new(2);
+        m.admit(1, 0, false, 0);
+        m.admit(2, 1, false, 1);
+        m.advise(&[1], AdviseHint::PreferredLocation(PreferredLocation::Device));
+        // Page 1 is the LRU victim but pinned — page 2 absorbs it.
+        assert_eq!(m.admit(3, 5, false, 5), vec![2]);
+        // Host advice unpins: page 1 is evictable again.
+        m.advise(&[1], AdviseHint::PreferredLocation(PreferredLocation::Host));
+        assert_eq!(m.admit(4, 10, false, 10), vec![1]);
+    }
+
+    #[test]
+    fn eager_discard_frees_without_eviction_and_never_resurrects() {
+        let mut m = DeviceMemory::new(4);
+        m.admit(1, 0, false, 0);
+        m.admit(2, 100, false, 1); // in flight until 100
+        assert!(m.discard(1, 5), "resident page discards");
+        assert!(!m.discard(1, 6), "already gone");
+        assert!(!m.discard(2, 6), "in-flight page refuses discard");
+        assert!(!m.discard(9, 6), "unknown page refuses discard");
+        assert_eq!(m.discards, 1);
+        assert_eq!(m.evictions, 0, "discard is not an eviction");
+        assert!(m.info(1).is_none(), "discard never resurrects");
+        assert!(!m.known_pages().any(|p| p == 1));
+        assert_eq!(m.occupancy(), 1);
+    }
+
+    #[test]
+    fn lazy_discard_defers_in_mark_order_and_touch_cancels() {
+        let mut m = DeviceMemory::new(3);
+        m.admit(1, 0, false, 0);
+        m.admit(2, 1, false, 1);
+        m.admit(3, 2, false, 2);
+        // Mark 3 then 1: nothing is freed until admission pressure.
+        assert!(m.discard_lazy(3, 4));
+        assert!(!m.discard_lazy(3, 5), "already marked");
+        assert!(m.discard_lazy(1, 5));
+        assert_eq!(m.occupancy(), 3);
+        assert_eq!(m.discards, 0);
+        // First pressure reclaims the oldest mark (page 3), not the
+        // LRU victim (page 1 was admitted first).
+        assert_eq!(m.admit(4, 10, false, 6), vec![3]);
+        assert_eq!((m.discards, m.lazy_discard_reclaims, m.evictions), (1, 1, 0));
+        // A demand touch cancels page 1's mark — the next pressure
+        // falls through to the policy, which picks LRU victim 2.
+        m.touch(1, 7);
+        assert_eq!(m.admit(5, 20, false, 8), vec![2]);
+        assert_eq!((m.discards, m.lazy_discard_reclaims, m.evictions), (1, 1, 1));
     }
 }

@@ -17,7 +17,7 @@
 //! are bit-deterministic.
 
 use crate::config::{ExperimentConfig, SimConfig};
-use crate::prefetch::{FaultInfo, MemPressure, Prefetcher, PrefetchRequest};
+use crate::prefetch::{DiscardRequest, FaultInfo, MemPressure, Prefetcher, PrefetchRequest};
 use crate::sim::device_memory::{DeviceMemory, PageState};
 use crate::sim::eviction;
 use crate::sim::gmmu::Gmmu;
@@ -184,6 +184,9 @@ impl Simulator {
         self.metrics.tlb_misses = self.gmmu.misses();
         self.metrics.evictions = self.device.evictions;
         self.metrics.evicted_unused_prefetches = self.device.evicted_unused_prefetches;
+        self.metrics.discards = self.device.discards;
+        self.metrics.lazy_discard_reclaims = self.device.lazy_discard_reclaims;
+        self.metrics.advised_pages = self.device.advised_read_mostly;
         if let Some(t) = self.trace.take() {
             let _ = t.finish();
         }
@@ -308,6 +311,7 @@ impl Simulator {
                 };
                 let decision = self.prefetcher.on_fault(&fault);
                 self.apply_prefetches(&decision.requests, t_eff);
+                self.apply_discards(&decision.discards, t_eff);
                 self.prefetcher.on_access(origin, op.access.pc, page, false, t);
                 (xfer.arrival + self.cfg.dram_cycles, 1u8)
             }
@@ -347,6 +351,25 @@ impl Simulator {
                 self.evicted_pages.insert(evicted);
             }
             self.metrics.prefetch_transfers += 1;
+        }
+    }
+
+    /// Apply discard requests from the prefetch decision. Eager
+    /// discards free the frame immediately — no writeback, no
+    /// interconnect transfer — and a later return of the page counts
+    /// as a refault (the discard predicted it dead). Lazy discards
+    /// only mark the page; reclaims happen inside
+    /// [`DeviceMemory::admit`] at pressure and surface through the
+    /// same evicted-pages bookkeeping as evictions.
+    fn apply_discards(&mut self, discards: &[DiscardRequest], now: Cycle) {
+        for d in discards {
+            if d.lazy {
+                self.device.discard_lazy(d.page, now);
+            } else if self.device.discard(d.page, now) {
+                self.gmmu.shootdown(d.page);
+                self.prefetcher.on_evict(d.page);
+                self.evicted_pages.insert(d.page);
+            }
         }
     }
 }
@@ -449,6 +472,42 @@ mod tests {
         };
         let m = Simulator::new(&exp, wl, Box::new(NonePrefetcher::default()), None).run();
         assert!(m.instructions >= 8 && m.instructions <= 12, "stopped near the cap: {}", m.instructions);
+    }
+
+    /// Test prefetcher that eagerly discards the page two behind every
+    /// fault — a stand-in for the dl policy's dead-block prediction.
+    #[derive(Debug, Default)]
+    struct DiscardingPrefetcher;
+
+    impl Prefetcher for DiscardingPrefetcher {
+        fn name(&self) -> &'static str {
+            "discarding"
+        }
+
+        fn on_fault(&mut self, fault: &FaultInfo) -> crate::prefetch::PrefetchDecision {
+            let discards = match fault.page.checked_sub(2) {
+                Some(p) => vec![DiscardRequest { page: p, lazy: false }],
+                None => Vec::new(),
+            };
+            crate::prefetch::PrefetchDecision { discards, ..Default::default() }
+        }
+    }
+
+    #[test]
+    fn eager_discards_free_frames_without_interconnect_traffic() {
+        let exp = tiny_config();
+        let wl = WorkloadInstance {
+            name: "t".into(),
+            tasks: vec![seq_task(0, 0, &[1, 2, 3, 4, 5, 6])],
+            total_ops: 6,
+        };
+        let m = Simulator::new(&exp, wl, Box::new(DiscardingPrefetcher), None).run();
+        assert_eq!(m.far_faults, 6);
+        assert_eq!(m.discards, 4, "pages 1-4 discarded two faults behind");
+        assert_eq!(m.evictions, 0, "discards are not evictions");
+        // The no-writeback accounting: only the six demand transfers
+        // are charged to the interconnect; discards move no bytes.
+        assert_eq!(m.pcie_bytes(), 6 * PAGE_SIZE);
     }
 
     #[test]

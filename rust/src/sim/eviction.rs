@@ -24,6 +24,12 @@
 //!   in LRU order; falls back to plain LRU once no unused prefetch is
 //!   evictable — the 2204.02974 insight that wrong prefetches, not
 //!   demand pages, should absorb the oversubscription penalty.
+//! * [`LearnedPolicy`] — a logistic scorer over per-page features
+//!   (age, touch count, unused-prefetch flag, reuse gap), trained
+//!   online from eviction outcomes: a victim that refaults within
+//!   [`REFAULT_HORIZON_CYCLES`] was a mispredicted eviction. The
+//!   2204.02974 framework distilled to the signals our hooks already
+//!   observe.
 //!
 //! All policies are deterministic for a fixed seed, and `Send` so a
 //! whole simulation cell can run on a sweep worker thread.
@@ -31,11 +37,18 @@
 use crate::sim::device_memory::PageInfo;
 use crate::types::{Cycle, PageNum};
 use crate::util::XorShift64;
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
 /// Canonical policy names accepted by [`build`] (the
 /// `SimConfig::eviction_policy` / `repro eval oversub` axis).
-pub const ALL_EVICTION_POLICIES: &[&str] = &["lru", "random", "freq", "prefetch-aware"];
+pub const ALL_EVICTION_POLICIES: &[&str] = &["lru", "random", "freq", "prefetch-aware", "learned"];
+
+/// Outcome horizon for [`LearnedPolicy`]'s online updates: an evicted
+/// page that comes back within this many cycles counts as a
+/// mispredicted eviction (label 0); one that stays out past it was a
+/// good victim (label 1). Exported so BENCH_oversub.json can record
+/// the horizon the learned cells were trained under.
+pub const REFAULT_HORIZON_CYCLES: u64 = 500_000;
 
 /// Victim-selection strategy plugged into `DeviceMemory`.
 ///
@@ -70,6 +83,7 @@ pub fn build(name: &str, seed: u64) -> anyhow::Result<Box<dyn EvictionPolicy>> {
         "random" => Box::new(RandomPolicy::new(seed)),
         "freq" => Box::new(FreqPolicy::default()),
         "prefetch-aware" => Box::new(PrefetchAwarePolicy::default()),
+        "learned" => Box::new(LearnedPolicy::new(seed)),
         other => anyhow::bail!(
             "unknown eviction policy '{other}' (expected one of {ALL_EVICTION_POLICIES:?})"
         ),
@@ -267,6 +281,178 @@ impl EvictionPolicy for PrefetchAwarePolicy {
     }
 }
 
+/// Number of per-page features the learned scorer sees.
+const N_FEATURES: usize = 5;
+/// Online-SGD step size for the logistic update.
+const LEARNED_LR: f64 = 0.05;
+
+/// Per-page observation state feeding [`LearnedPolicy`]'s features.
+#[derive(Debug, Clone, Copy)]
+struct Track {
+    last_touch: Cycle,
+    touches: u64,
+    via_prefetch: bool,
+    /// Demanded at least once since admission.
+    used: bool,
+    /// Cycles between the last two touches (0 until two touches).
+    last_gap: u64,
+}
+
+/// `log2(1 + x)` — compresses cycle/count magnitudes into a few units.
+fn log2_1p(x: u64) -> f64 {
+    (x as f64 + 1.0).log2()
+}
+
+/// Logistic eviction scorer (arXiv:2204.02974 distilled to the hook
+/// vocabulary): victim = argmax of `w · x` over evictable pages, where
+/// `x` is per-page features and `w` starts from an informed prior
+/// (old + rarely-touched + unused-prefetch pages look evictable) and
+/// is refined online. After each eviction the policy watches for the
+/// victim's return: a refault within [`REFAULT_HORIZON_CYCLES`]
+/// trains the scorer *down* on that feature vector (the page was
+/// live), staying out trains it *up*. Pure integer/f64 arithmetic over
+/// a `BTreeMap` index, so runs are bit-deterministic for a seed; the
+/// seed is accepted for interface parity but unused (no stochastic
+/// component).
+#[derive(Debug)]
+pub struct LearnedPolicy {
+    w: [f64; N_FEATURES],
+    /// Page-ordered member index — iterated for victim selection, so
+    /// ties break toward the smallest page deterministically.
+    tracks: BTreeMap<PageNum, Track>,
+    /// Victim just returned by `pick_victim`, consumed by the matching
+    /// `on_remove` (features frozen at decision time).
+    last_pick: Option<(PageNum, [f64; N_FEATURES], Cycle)>,
+    /// Evictions awaiting an outcome: page → (evicted_at, features).
+    /// Keyed lookup only — never iterated.
+    pending: HashMap<PageNum, (Cycle, [f64; N_FEATURES])>,
+    /// Eviction order, for horizon expiry of `pending` entries.
+    queue: VecDeque<(Cycle, PageNum)>,
+}
+
+impl LearnedPolicy {
+    pub fn new(_seed: u64) -> Self {
+        Self {
+            // Prior: age helps (LRU), touch count protects (LFU),
+            // unused prefetches are prime victims (prefetch-aware),
+            // long reuse gaps mildly help. Sensible before any
+            // outcome has been observed.
+            w: [1.0, -0.5, 1.0, 0.25, 0.0],
+            tracks: BTreeMap::new(),
+            last_pick: None,
+            pending: HashMap::new(),
+            queue: VecDeque::new(),
+        }
+    }
+
+    /// Current feature weights `[age, touches, unused-prefetch,
+    /// reuse-gap, bias]` — telemetry/test hook.
+    pub fn weights(&self) -> [f64; N_FEATURES] {
+        self.w
+    }
+
+    fn featurize(t: &Track, now: Cycle) -> [f64; N_FEATURES] {
+        [
+            log2_1p(now.saturating_sub(t.last_touch)) / 32.0,
+            log2_1p(t.touches) / 8.0,
+            if t.via_prefetch && !t.used { 1.0 } else { 0.0 },
+            log2_1p(t.last_gap) / 32.0,
+            1.0,
+        ]
+    }
+
+    /// One logistic-regression step toward `good` (1 = the eviction
+    /// held up, 0 = the victim refaulted inside the horizon).
+    fn update(&mut self, x: &[f64; N_FEATURES], good: f64) {
+        let z: f64 = self.w.iter().zip(x).map(|(w, f)| w * f).sum();
+        let p = 1.0 / (1.0 + (-z).exp());
+        for (w, f) in self.w.iter_mut().zip(x) {
+            *w += LEARNED_LR * (good - p) * f;
+        }
+    }
+
+    /// Flush outcomes older than the horizon: victims that never came
+    /// back were good evictions.
+    fn settle(&mut self, now: Cycle) {
+        while let Some(&(at, page)) = self.queue.front() {
+            if now.saturating_sub(at) <= REFAULT_HORIZON_CYCLES {
+                break;
+            }
+            self.queue.pop_front();
+            // Train only if this entry is still the live outcome for
+            // the page (it may have refaulted and been re-evicted,
+            // leaving a fresher pending record).
+            if let Some(&(pend_at, x)) = self.pending.get(&page) {
+                if pend_at == at {
+                    self.pending.remove(&page);
+                    self.update(&x, 1.0);
+                }
+            }
+        }
+    }
+}
+
+impl EvictionPolicy for LearnedPolicy {
+    fn name(&self) -> &'static str {
+        "learned"
+    }
+
+    fn on_admit(&mut self, page: PageNum, now: Cycle, via_prefetch: bool) {
+        self.settle(now);
+        if let Some((evicted_at, x)) = self.pending.remove(&page) {
+            if now.saturating_sub(evicted_at) <= REFAULT_HORIZON_CYCLES {
+                self.update(&x, 0.0); // refault inside the horizon: mispredict
+            }
+        }
+        self.tracks.insert(
+            page,
+            Track { last_touch: now, touches: 1, via_prefetch, used: false, last_gap: 0 },
+        );
+    }
+
+    fn on_touch(&mut self, page: PageNum, _prev: Cycle, now: Cycle) {
+        if let Some(t) = self.tracks.get_mut(&page) {
+            t.last_gap = now.saturating_sub(t.last_touch);
+            t.last_touch = now;
+            t.touches += 1;
+            t.used = true;
+        }
+    }
+
+    fn on_remove(&mut self, page: PageNum, _info: &PageInfo) {
+        self.tracks.remove(&page);
+        if let Some((picked, x, at)) = self.last_pick.take() {
+            if picked == page {
+                self.pending.insert(page, (at, x));
+                self.queue.push_back((at, page));
+            } else {
+                // External removal (e.g. a discard) — not our pick;
+                // keep the pending decision for its own on_remove.
+                self.last_pick = Some((picked, x, at));
+            }
+        }
+    }
+
+    fn pick_victim(&mut self, pages: &HashMap<PageNum, PageInfo>, now: Cycle) -> Option<PageNum> {
+        let mut best_score = f64::NEG_INFINITY;
+        let mut best: Option<(PageNum, [f64; N_FEATURES])> = None;
+        for (&page, track) in &self.tracks {
+            if !evictable_in(pages, page, now) {
+                continue;
+            }
+            let x = Self::featurize(track, now);
+            let score: f64 = self.w.iter().zip(&x).map(|(w, f)| w * f).sum();
+            if score > best_score {
+                best_score = score;
+                best = Some((page, x));
+            }
+        }
+        let (page, x) = best?;
+        self.last_pick = Some((page, x, now));
+        Some(page)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -341,6 +527,72 @@ mod tests {
         m.admit(2, 5, true, 5);
         m.touch(2, 7); // prefetch used → graduates to the LRU set
         assert_eq!(m.admit(3, 8, false, 8), vec![1], "plain LRU fallback");
+    }
+
+    /// Recorded-trace pin for the learned policy (mirror of
+    /// `lru_reproduces_prerefactor_trace`): with the untrained prior
+    /// `w = [1, -0.5, 1, 0.25, 0]` the hand-computed scores produce
+    /// the eviction sequence [2], [1], [3].
+    #[test]
+    fn learned_reproduces_recorded_trace() {
+        let mut m = DeviceMemory::with_policy(3, build("learned", 7).unwrap());
+        assert!(m.admit(1, 0, false, 0).is_empty());
+        assert!(m.admit(2, 1, true, 1).is_empty());
+        assert!(m.admit(3, 2, false, 2).is_empty());
+        m.touch(1, 3);
+        // At now=4: page 2 is an unused prefetch (f2 = 1 → score 1.0);
+        // pages 1 and 3 score ≈ −0.052 and ≈ −0.013.
+        assert_eq!(m.admit(4, 10, false, 4), vec![2], "unused prefetch dominates");
+        assert_eq!(m.evicted_unused_prefetches, 1);
+        m.touch(3, 5);
+        // At now=6: page 4 still migrating (arrival 10); page 1's age
+        // term (touched at 3) beats page 3's (touched at 5).
+        assert_eq!(m.admit(5, 20, false, 6), vec![1]);
+        // At now=7 only page 3 is evictable (4 and 5 in flight).
+        assert_eq!(m.admit(6, 30, false, 7), vec![3]);
+        assert_eq!(m.evictions, 3);
+    }
+
+    /// The online update: a victim that refaults inside the horizon
+    /// pushes its features' weights down; one that stays out pushes
+    /// them up. Stale queue entries (page re-evicted after a refault)
+    /// must not train.
+    #[test]
+    fn learned_updates_weights_from_refault_outcome() {
+        use crate::sim::device_memory::{PageInfo, PageState};
+        let info = |last_touch: Cycle, via_prefetch: bool| PageInfo {
+            state: PageState::Resident,
+            via_prefetch,
+            prefetch_used: false,
+            last_touch,
+            read_mostly: false,
+            pinned: false,
+            lazy_discard: false,
+        };
+        let mut p = LearnedPolicy::new(0);
+        let w0 = p.weights();
+
+        // Evict an unused prefetch...
+        p.on_admit(10, 0, true);
+        let pages: HashMap<PageNum, PageInfo> = [(10, info(0, true))].into_iter().collect();
+        assert_eq!(p.pick_victim(&pages, 5), Some(10));
+        p.on_remove(10, &pages[&10]);
+        assert_eq!(p.weights(), w0, "no update until the outcome is known");
+
+        // ...and see it refault within the horizon: mispredict, the
+        // unused-prefetch weight drops.
+        p.on_admit(10, 100, false);
+        let w1 = p.weights();
+        assert!(w1[2] < w0[2], "refault trains the driving feature down");
+
+        // Evict it again (now a demand page), then let the horizon
+        // expire: good eviction, the bias weight rises. The stale
+        // first queue entry for page 10 must be skipped.
+        let pages: HashMap<PageNum, PageInfo> = [(10, info(100, false))].into_iter().collect();
+        assert_eq!(p.pick_victim(&pages, 101), Some(10));
+        p.on_remove(10, &pages[&10]);
+        p.on_admit(20, 101 + REFAULT_HORIZON_CYCLES + 1, false);
+        assert!(p.weights()[4] > w1[4], "surviving the horizon trains toward evict");
     }
 
     #[test]

@@ -59,6 +59,14 @@ pub struct Metrics {
     /// Distinct pages the workload touches; only computed (non-zero)
     /// for oversubscribed runs (`oversub_ratio` < 1.0).
     pub footprint_pages: u64,
+    /// Pages dropped by discard commands (eager + reclaimed lazy) —
+    /// freed with no writeback and no interconnect traffic.
+    pub discards: u64,
+    /// Subset of `discards`: lazy marks reclaimed at admission
+    /// pressure (`UvmDiscardAsync`-style deferral).
+    pub lazy_discard_reclaims: u64,
+    /// Pages newly marked read-mostly by advise commands.
+    pub advised_pages: u64,
     // --- predictor telemetry (DL policy only) ---
     pub predictions: u64,
     pub prediction_batches: u64,

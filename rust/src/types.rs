@@ -105,6 +105,32 @@ pub struct TraceRecord {
     pub miss: u8,
 }
 
+/// Side of the CPU-GPU interconnect a page should prefer to live on —
+/// the target of a `PreferredLocation` advise (mirrors
+/// `cudaMemAdviseSetPreferredLocation`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PreferredLocation {
+    /// Keep the page host-side: device touches fault it over but it is
+    /// not pinned on device.
+    Host,
+    /// Pin the page on device: it is never chosen as an eviction
+    /// victim while the hint holds.
+    Device,
+}
+
+/// Memory-usage hint attached to an `Advise` command — the modeled
+/// subset of the `cudaMemAdvise` vocabulary (SNIPPETS.md snippets
+/// 1-2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum AdviseHint {
+    /// Read-duplicate: the host keeps a zero-cost read-only copy, so
+    /// CPU touches never migrate the page back and evicting the device
+    /// copy needs no writeback.
+    ReadMostly,
+    /// Preferred residency side (see [`PreferredLocation`]).
+    PreferredLocation(PreferredLocation),
+}
+
 /// Outcome classification of a single device-memory access, used for
 /// the paper's page-hit-rate metric (Table 10) and the coverage term
 /// of unity (Table 11).

@@ -1,0 +1,281 @@
+//! Property tests for every eviction policy over real workload page
+//! streams — dense AND irregular families.
+//!
+//! Rather than pinning one recorded trace per policy (the unit tests
+//! in `sim/eviction.rs` do that), these tests drive [`DeviceMemory`]
+//! with page streams harvested from the builtin workload generators
+//! and check the invariants that must hold for *any* policy:
+//!
+//! 1. **Victim always resident** — `pick_victim` never returns an
+//!    in-flight or pinned page (asserted inside an instrumented
+//!    policy wrapper, so the check sees exactly what the memory saw).
+//! 2. **Resident ≤ capacity** — occupancy never exceeds the frame
+//!    budget when at least one page is evictable.
+//! 3. **Hook call balance** — `on_admit` calls minus `on_remove`
+//!    calls equals live occupancy at every checkpoint: the policy's
+//!    index can never leak or double-free an entry.
+//! 4. **Double-run byte-identity** — the full eviction sequence is
+//!    identical across two runs with the same inputs (the sweep's
+//!    determinism contract, including the online-trained learned
+//!    policy).
+//! 5. **Discard never resurrects** — once a page is eagerly
+//!    discarded (or a lazy mark is reclaimed) it stays gone until a
+//!    fresh admit; no hook sequence brings a freed frame back.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use uvm_prefetch::config::SimConfig;
+use uvm_prefetch::sim::device_memory::{DeviceMemory, PageInfo};
+use uvm_prefetch::sim::eviction::{self, EvictionPolicy, ALL_EVICTION_POLICIES};
+use uvm_prefetch::types::{page_of, Cycle, PageNum};
+use uvm_prefetch::workloads::WorkloadRegistry;
+
+/// Dense (strided/stencil) and irregular (data-dependent) stream
+/// sources — the two families whose access shapes stress a victim
+/// index differently.
+const DENSE: &[&str] = &["addvectors", "atax"];
+const IRREGULAR: &[&str] = &["bfs", "spmv", "hash_join"];
+
+/// Accesses per drive — enough to wrap the capped device many times
+/// over without making the suite slow.
+const STREAM_CAP: usize = 3_000;
+
+/// Harvest a benchmark's page stream: build the generator small, then
+/// interleave the per-warp op streams round-robin — the order the
+/// GMMU would observe them in.
+fn harvest(benchmark: &str) -> Vec<PageNum> {
+    let wl = WorkloadRegistry::builtin()
+        .build(benchmark, &SimConfig::default(), 42, 0.05)
+        .expect("build workload");
+    let mut out = Vec::with_capacity(STREAM_CAP);
+    let mut idx = 0usize;
+    loop {
+        let mut any = false;
+        for t in &wl.tasks {
+            if let Some(op) = t.ops.get(idx) {
+                out.push(page_of(op.access.vaddr));
+                any = true;
+                if out.len() >= STREAM_CAP {
+                    return out;
+                }
+            }
+        }
+        if !any {
+            return out;
+        }
+        idx += 1;
+    }
+}
+
+/// A frame budget small enough that the stream wraps it repeatedly.
+fn pressure_capacity(stream: &[PageNum]) -> u64 {
+    let distinct = stream.iter().collect::<BTreeSet<_>>().len() as u64;
+    (distinct / 4).max(8)
+}
+
+/// Hook-call counters shared with the test after [`DeviceMemory`]
+/// takes ownership of the policy box.
+#[derive(Debug, Default)]
+struct Counters {
+    admits: AtomicU64,
+    removes: AtomicU64,
+    picks: AtomicU64,
+}
+
+/// Wraps a real policy, counting hook calls and asserting invariant 1
+/// at the exact call site: every victim must be evictable in the page
+/// table the memory handed over.
+#[derive(Debug)]
+struct Instrumented {
+    inner: Box<dyn EvictionPolicy>,
+    counters: Arc<Counters>,
+}
+
+impl EvictionPolicy for Instrumented {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn on_admit(&mut self, page: PageNum, now: Cycle, via_prefetch: bool) {
+        self.counters.admits.fetch_add(1, Ordering::Relaxed);
+        self.inner.on_admit(page, now, via_prefetch);
+    }
+
+    fn on_touch(&mut self, page: PageNum, prev: Cycle, now: Cycle) {
+        self.inner.on_touch(page, prev, now);
+    }
+
+    fn on_remove(&mut self, page: PageNum, info: &PageInfo) {
+        self.counters.removes.fetch_add(1, Ordering::Relaxed);
+        self.inner.on_remove(page, info);
+    }
+
+    fn pick_victim(&mut self, pages: &HashMap<PageNum, PageInfo>, now: Cycle) -> Option<PageNum> {
+        let v = self.inner.pick_victim(pages, now);
+        if let Some(p) = v {
+            self.counters.picks.fetch_add(1, Ordering::Relaxed);
+            assert!(
+                pages.get(&p).is_some_and(|i| i.evictable(now)),
+                "{}: picked victim {p} that is not evictable now",
+                self.inner.name()
+            );
+        }
+        v
+    }
+}
+
+fn instrumented(policy: &str) -> (Box<dyn EvictionPolicy>, Arc<Counters>) {
+    let counters = Arc::new(Counters::default());
+    let inner = eviction::build(policy, 7).expect("known policy");
+    (Box::new(Instrumented { inner, counters: counters.clone() }), counters)
+}
+
+/// What one drive produced — compared across runs for invariant 4.
+#[derive(Debug, PartialEq, Eq)]
+struct DriveLog {
+    evictions: Vec<PageNum>,
+    final_occupancy: u64,
+    picks: u64,
+}
+
+/// Replay `stream` against a capped [`DeviceMemory`], checking
+/// invariants 2, 3 and no-resurrection at every step. Every 7th admit
+/// is briefly in-flight (arrival `now + 3`) so `pick_victim` must
+/// actually skip non-evictable pages; every 4th is tagged as a
+/// prefetch so prefetch-aware/learned exercise their special cases.
+fn drive(policy: &str, stream: &[PageNum], capacity: u64) -> DriveLog {
+    let (boxed, counters) = instrumented(policy);
+    let mut mem = DeviceMemory::with_policy(capacity, boxed);
+    let mut model: BTreeSet<PageNum> = BTreeSet::new();
+    let mut evictions = Vec::new();
+    for (i, &p) in stream.iter().enumerate() {
+        let now = i as Cycle;
+        if mem.state(p, now).is_some() {
+            assert!(model.contains(&p), "{policy}: page {p} resurrected without an admit");
+            mem.touch(p, now);
+        } else {
+            assert!(!model.contains(&p), "{policy}: page {p} vanished without an eviction");
+            let arrival = if i % 7 == 0 { now + 3 } else { now };
+            let out = mem.admit(p, arrival, i % 4 == 0, now);
+            for &e in &out {
+                assert!(model.remove(&e), "{policy}: evicted page {e} was not resident");
+            }
+            evictions.extend(out);
+            model.insert(p);
+            assert!(
+                mem.occupancy() <= capacity,
+                "{policy}: occupancy {} exceeds capacity {capacity}",
+                mem.occupancy()
+            );
+        }
+        if i % 128 == 0 {
+            assert_eq!(mem.occupancy() as usize, model.len(), "{policy}: model diverged");
+            let a = counters.admits.load(Ordering::Relaxed);
+            let r = counters.removes.load(Ordering::Relaxed);
+            assert_eq!(
+                a - r,
+                mem.occupancy(),
+                "{policy}: hook balance broken (admits {a}, removes {r})"
+            );
+        }
+    }
+    DriveLog {
+        evictions,
+        final_occupancy: mem.occupancy(),
+        picks: counters.picks.load(Ordering::Relaxed),
+    }
+}
+
+/// Like [`drive`], but interleaves eager and lazy discards of resident
+/// pages — invariant 5: a freed frame stays gone until re-admitted
+/// (the no-resurrection assert inside the loop is what would trip).
+fn drive_with_discards(policy: &str, stream: &[PageNum], capacity: u64) {
+    let (boxed, counters) = instrumented(policy);
+    let mut mem = DeviceMemory::with_policy(capacity, boxed);
+    let mut model: BTreeSet<PageNum> = BTreeSet::new();
+    for (i, &p) in stream.iter().enumerate() {
+        let now = i as Cycle;
+        if mem.state(p, now).is_some() {
+            assert!(model.contains(&p), "{policy}: page {p} resurrected without an admit");
+            mem.touch(p, now);
+        } else {
+            assert!(!model.contains(&p), "{policy}: page {p} vanished without an eviction");
+            let out = mem.admit(p, now, false, now);
+            for &e in &out {
+                assert!(model.remove(&e), "{policy}: evicted/reclaimed page {e} not resident");
+            }
+            model.insert(p);
+        }
+        // Every 5th access, discard the lowest-numbered resident page
+        // (deterministic target) — alternating eager and lazy flavors.
+        if i % 5 == 0 {
+            if let Some(&target) = model.first() {
+                if i % 2 == 0 {
+                    if mem.discard(target, now) {
+                        model.remove(&target);
+                        assert!(
+                            mem.state(target, now).is_none(),
+                            "{policy}: eagerly discarded page {target} still resident"
+                        );
+                    }
+                } else {
+                    // Lazy: the page stays resident until reclaimed at
+                    // admission pressure (it then comes back through
+                    // admit's return) or the mark is cancelled by a
+                    // touch — either way the model stays consistent.
+                    mem.discard_lazy(target, now);
+                }
+            }
+        }
+        if i % 128 == 0 {
+            assert_eq!(mem.occupancy() as usize, model.len(), "{policy}: model diverged");
+            let a = counters.admits.load(Ordering::Relaxed);
+            let r = counters.removes.load(Ordering::Relaxed);
+            assert_eq!(a - r, mem.occupancy(), "{policy}: hook balance broken under discards");
+        }
+    }
+    assert!(mem.discards > 0, "{policy}: the discard interleave never fired");
+}
+
+#[test]
+fn invariants_hold_for_every_policy_on_dense_and_irregular_streams() {
+    for benchmark in DENSE.iter().chain(IRREGULAR) {
+        let stream = harvest(benchmark);
+        let capacity = pressure_capacity(&stream);
+        for policy in ALL_EVICTION_POLICIES {
+            let log = drive(policy, &stream, capacity);
+            assert!(
+                !log.evictions.is_empty(),
+                "{policy}/{benchmark}: capacity {capacity} never pressured — vacuous run"
+            );
+            assert!(log.picks > 0, "{policy}/{benchmark}: pick_victim never consulted");
+        }
+    }
+}
+
+#[test]
+fn double_run_is_byte_identical_for_every_policy() {
+    // One stream per family is enough: determinism is a property of
+    // the policy, the family just varies the index shapes it sees.
+    for benchmark in ["atax", "bfs"] {
+        let stream = harvest(benchmark);
+        let capacity = pressure_capacity(&stream);
+        for policy in ALL_EVICTION_POLICIES {
+            let a = drive(policy, &stream, capacity);
+            let b = drive(policy, &stream, capacity);
+            assert_eq!(a, b, "{policy}/{benchmark}: eviction sequence diverged across runs");
+        }
+    }
+}
+
+#[test]
+fn discards_never_resurrect_for_every_policy() {
+    for benchmark in ["addvectors", "spmv"] {
+        let stream = harvest(benchmark);
+        let capacity = pressure_capacity(&stream);
+        for policy in ALL_EVICTION_POLICIES {
+            drive_with_discards(policy, &stream, capacity);
+        }
+    }
+}

@@ -83,7 +83,18 @@ fn every_eviction_policy_survives_pressure_on_every_prefetcher() {
         for pf in ["none", "tree", "uvmsmart", "dl"] {
             let m = oversub_run("atax", pf, 0.5, ev);
             assert!(m.instructions > 0, "{ev}/{pf}");
-            assert!(m.evictions > 0, "{ev}/{pf}: no evictions at half footprint");
+            // dl lazily discards predicted-dead blocks under pressure,
+            // so reclaimed marks may absorb part (or even all) of the
+            // admission pressure; every other prefetcher must evict.
+            if pf == "dl" {
+                assert!(
+                    m.evictions + m.discards > 0,
+                    "{ev}/{pf}: no pressure activity at half footprint"
+                );
+            } else {
+                assert_eq!(m.discards, 0, "{ev}/{pf}: only dl emits discards");
+                assert!(m.evictions > 0, "{ev}/{pf}: no evictions at half footprint");
+            }
             assert_eq!(
                 m.page_hits + m.coalesced + m.far_faults,
                 m.mem_accesses,

@@ -26,7 +26,10 @@ fn event(tenant: TenantId, warp: u16, page: u64, at: u64, miss: bool) -> FaultEv
 }
 
 /// Deterministic multi-tenant event mix: `tenants` streams, each with
-/// its own stride pattern, interleaved round-robin.
+/// its own stride pattern (warps 0–2, converging positive deltas →
+/// streaming Discards on block advance) plus one ping-pong cluster
+/// (warp 3, same page every time, delta 0 → a one-shot ReadMostly
+/// Advise), interleaved round-robin.
 fn tenant_mix(tenants: u32, per_tenant: u64) -> Vec<FaultEvent> {
     let mut rng = XorShift64::new(0xfeed);
     let mut out = Vec::new();
@@ -35,6 +38,7 @@ fn tenant_mix(tenants: u32, per_tenant: u64) -> Vec<FaultEvent> {
             let warp = (i % 3) as u16;
             let page = 10_000 * t as u64 + (t as u64 + 1) * i;
             out.push(event(t, warp, page, i, rng.unit() < 0.7));
+            out.push(event(t, 3, 10_000 * t as u64 + 5_000, i, true));
         }
     }
     out
@@ -138,6 +142,17 @@ fn shard_count_does_not_change_per_tenant_commands() {
             "tenant {tenant}: command multiset changed with shard count"
         );
     }
+    // The invariance claim must cover the whole vocabulary: the mix is
+    // built to emit every command variant, not just Migrate/Predicted.
+    let all: Vec<&PrefetchCommand> = one.values().flatten().collect();
+    assert!(
+        all.iter().any(|c| matches!(c, PrefetchCommand::Advise { .. })),
+        "mix produced no Advise commands — the test lost its coverage"
+    );
+    assert!(
+        all.iter().any(|c| matches!(c, PrefetchCommand::Discard { .. })),
+        "mix produced no Discard commands — the test lost its coverage"
+    );
 }
 
 /// The load generator end to end on the stride backend: two tenant
@@ -162,7 +177,7 @@ fn serve_load_generator_smoke_stride() {
     assert_eq!(r.tenants.len(), 2);
     for t in &r.tenants {
         assert!(t.commands > 0, "tenant {} starved", t.tenant);
-        assert_eq!(t.commands, t.migrates + t.predicted);
+        assert_eq!(t.commands, t.migrates + t.predicted + t.advises + t.discards);
         assert!(t.latency_us.n == t.commands, "one latency sample per command");
     }
     let total: u64 = r.tenants.iter().map(|t| t.commands).sum();
@@ -200,5 +215,7 @@ fn serve_per_tenant_counts_shard_invariant() {
         assert_eq!(a.commands, b.commands, "tenant {} commands diverged", a.tenant);
         assert_eq!(a.migrates, b.migrates);
         assert_eq!(a.predicted, b.predicted);
+        assert_eq!(a.advises, b.advises);
+        assert_eq!(a.discards, b.discards);
     }
 }
