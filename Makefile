@@ -13,6 +13,11 @@
 #   make serve-smoke-fast  serve the trained native model on the fast
 #                      kernel tier (runs model-smoke first)
 #   make kernel-bench  GEMM kernel tiers at serving shapes → BENCH_gemm.json
+#   make perf          simulator-throughput harness (repro perf): cargo
+#                      benches + pinned hot-path matrix + end-to-end
+#                      cells/sec → BENCH_sim.json, warn-only check vs
+#                      ci/perf_baseline.json
+#   make perf-smoke    short-window perf variant for PR CI
 #   make train         train the native backend (streamtriad → artifacts/)
 #   make train-transformer  train the Transformer reference backend
 #   make analyze       transformer-vs-native attention analysis → BENCH_compare.json
@@ -28,7 +33,7 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test lint fmt clippy check doc eval-smoke trace-smoke oversub-smoke oversub-learned-smoke serve-smoke serve-smoke-fast kernel-bench train train-transformer analyze analyze-smoke model-smoke golden-check golden-update eval oversub artifacts clean
+.PHONY: build test lint fmt clippy check doc eval-smoke trace-smoke oversub-smoke oversub-learned-smoke serve-smoke serve-smoke-fast kernel-bench perf perf-smoke train train-transformer analyze analyze-smoke model-smoke golden-check golden-update eval oversub artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -117,6 +122,21 @@ serve-smoke-fast: model-smoke
 kernel-bench:
 	$(CARGO) bench --bench gemm
 
+# Simulator-throughput harness (DESIGN.md §12): the sim_core and
+# prefetchers cargo benches plus `repro perf` all merge into one
+# BENCH_sim.json (schema bench_sim/v1); the --check is warn-only with
+# 2x tolerance against ci/perf_baseline.json (bootstrap baselines just
+# print candidates — re-pin with `repro perf --check ... --update`).
+perf:
+	$(CARGO) bench --bench sim_core
+	$(CARGO) bench --bench prefetchers
+	$(CARGO) run --release --bin repro -- perf --check ci/perf_baseline.json
+
+# Short-window variant for PR CI: skips the cargo benches, shrinks the
+# measurement windows and the end-to-end cell set.
+perf-smoke:
+	$(CARGO) run --release --bin repro -- perf --smoke --check ci/perf_baseline.json
+
 # Train the native (pure-Rust) predictor backend offline: access-stream
 # harvest → vocab → windows → SGD/Adam → artifacts/<wl>.native.params.bin
 # + vocab + manifest entry (arch=native). Add more workloads with
@@ -185,4 +205,4 @@ clean:
 	$(CARGO) clean
 	rm -rf results results-smoke results-nightly traces \
 		BENCH_eval.json BENCH_oversub.json BENCH_serve.json \
-		BENCH_compare.json BENCH_gemm.json
+		BENCH_compare.json BENCH_gemm.json BENCH_sim.json

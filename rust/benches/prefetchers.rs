@@ -1,7 +1,13 @@
 //! Prefetch-policy micro-benchmarks: per-fault decision cost for each
 //! policy, plus the ablation of the bypass indicator (DESIGN.md §6 —
 //! "ablation benches for the design choices").
+//!
+//! Results land in the shared `bench_sim/v1` artifact (suite
+//! `prefetchers`; `$UVM_BENCH_OUT` overrides the `BENCH_sim.json`
+//! default) alongside the `sim_core` suite and the `repro perf`
+//! summary.
 
+use std::path::PathBuf;
 use std::time::Duration;
 use uvm_prefetch::config::{BypassMode, RuntimeConfig};
 use uvm_prefetch::prefetch::dl::dl_with_stride_backend;
@@ -10,7 +16,7 @@ use uvm_prefetch::prefetch::tree::TreePrefetcher;
 use uvm_prefetch::prefetch::uvmsmart::UvmSmartPrefetcher;
 use uvm_prefetch::prefetch::{FaultInfo, MemPressure, Prefetcher};
 use uvm_prefetch::types::AccessOrigin;
-use uvm_prefetch::util::bench::{black_box, Bench};
+use uvm_prefetch::util::bench::{black_box, write_bench_sim, Bench};
 
 fn fault(page: u64, warp: u16, now: u64) -> FaultInfo {
     FaultInfo {
@@ -79,5 +85,10 @@ fn main() {
         drive(&mut p, 10_000)
     });
 
+    let out = PathBuf::from(
+        std::env::var("UVM_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim.json".into()),
+    );
+    write_bench_sim(&out, "prefetchers", b.results()).expect("write bench_sim artifact");
+    println!("wrote suite prefetchers -> {}", out.display());
     black_box(());
 }

@@ -3,7 +3,13 @@
 //! the L3 components the §Perf pass optimizes — the Fig 10-12 suite
 //! runs dozens of full simulations, so simulated-instructions/second
 //! is the quantity that gates the whole harness.
+//!
+//! Results land in the shared `bench_sim/v1` artifact (suite
+//! `sim_core`; `$UVM_BENCH_OUT` overrides the `BENCH_sim.json`
+//! default) alongside the `prefetchers` suite and the `repro perf`
+//! summary.
 
+use std::path::PathBuf;
 use std::time::Duration;
 use uvm_prefetch::config::ExperimentConfig;
 use uvm_prefetch::prefetch::none::NonePrefetcher;
@@ -12,8 +18,12 @@ use uvm_prefetch::sim::device_memory::DeviceMemory;
 use uvm_prefetch::sim::gmmu::Tlb;
 use uvm_prefetch::sim::interconnect::Interconnect;
 use uvm_prefetch::sim::Simulator;
-use uvm_prefetch::util::bench::{black_box, Bench};
+use uvm_prefetch::util::bench::{black_box, write_bench_sim, Bench};
 use uvm_prefetch::workloads::WorkloadRegistry;
+
+fn bench_out() -> PathBuf {
+    PathBuf::from(std::env::var("UVM_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim.json".into()))
+}
 
 fn sim_run(prefetcher: &str, max_insts: u64) -> u64 {
     let exp = ExperimentConfig {
@@ -79,4 +89,8 @@ fn main() {
         let exp = ExperimentConfig::default();
         WorkloadRegistry::builtin().build("atax", &exp.sim, 1, 0.25).unwrap().total_ops
     });
+
+    let out = bench_out();
+    write_bench_sim(&out, "sim_core", b.results()).expect("write bench_sim artifact");
+    println!("wrote suite sim_core -> {}", out.display());
 }

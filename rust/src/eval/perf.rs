@@ -1,0 +1,405 @@
+//! `repro perf` — the simulator-throughput harness.
+//!
+//! Runs a pinned microbench matrix over the hot-path subsystems
+//! (fault loop, eviction churn at ratio 0.25, TLB shootdown storm)
+//! plus a set of end-to-end representative sweep cells, and records
+//! everything in `BENCH_sim.json` (schema `bench_sim/v1`, shared with
+//! the cargo benches — see [`crate::util::bench::write_bench_sim`]).
+//! The end-to-end rows report **cells/sec**, the number the oversub
+//! sweep's wall-time scales with; that is the tracked speedup metric
+//! of the frame-table refactor (DESIGN.md §12).
+//!
+//! `--check <baseline.json>` compares against a committed baseline
+//! with a generous 2x tolerance (CI runners are noisy) and is
+//! **warn-only**: regressions print loudly but never fail the build.
+//! A baseline carrying `"bootstrap": true` — or a missing file —
+//! prints the measured candidates and the `--update` pin command
+//! instead of judging anything (the `repro golden` bootstrap pattern).
+
+use crate::eval::runner::RunOptions;
+use crate::eval::sweep::CellSpec;
+use crate::sim::device_memory::{DeviceMemory, SmSet};
+use crate::sim::eviction;
+use crate::sim::gmmu::Gmmu;
+use crate::util::bench::{
+    black_box, merge_bench_sim_section, write_bench_sim, Bench, BenchResult,
+};
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Baseline artifact schema (`ci/perf_baseline.json`).
+pub const PERF_BASELINE_SCHEMA: &str = "perf_baseline/v1";
+
+/// Regression tolerance: warn only when throughput falls below
+/// `baseline / 2` (shared CI runners jitter far more than a dedicated
+/// box; a 2x floor still catches an accidental O(n) → O(n²)).
+pub const CHECK_TOLERANCE: f64 = 2.0;
+
+/// Pages driven through the allocation-free fault loop per iteration.
+const FAULT_PAGES: u64 = 1 << 14;
+/// Distinct pages of the churn bench; capacity is a quarter of this
+/// (the oversub grid's heaviest ratio).
+const CHURN_DISTINCT: u64 = 4096;
+const CHURN_OPS: u64 = 16_384;
+/// Fill + masked-shootdown rounds per storm iteration.
+const STORM_OPS: u64 = 8192;
+/// SM count of the storm (paper Table 9 scale).
+const STORM_SMS: usize = 30;
+
+#[derive(Debug, Clone)]
+pub struct PerfOptions {
+    /// Short measurement windows and a smaller end-to-end set — the
+    /// PR-CI variant (`make perf-smoke`).
+    pub smoke: bool,
+    /// Where `BENCH_sim.json` goes (merged read-modify-write).
+    pub out: PathBuf,
+    /// Baseline to compare against (warn-only), if any.
+    pub check: Option<PathBuf>,
+    /// Rewrite the `--check` baseline with the measured numbers.
+    pub update: bool,
+}
+
+/// One measured subsystem: stable baseline key + bench result.
+struct Subsystem {
+    key: &'static str,
+    result: BenchResult,
+}
+
+/// The pinned microbench matrix. Every case drives the real simulator
+/// structures (no mocks) with a deterministic synthetic stream, so
+/// run-to-run variance is scheduling noise only.
+fn run_subsystems(smoke: bool) -> Vec<Subsystem> {
+    let min_time = Duration::from_millis(if smoke { 60 } else { 400 });
+    let mut b = Bench::new().with_min_time(min_time);
+    let mut out = Vec::new();
+
+    // 1. Fault loop: state-probe + admit + touch of fresh pages with
+    //    zero eviction pressure — the dense frame table's alloc path.
+    let r = b
+        .case("fault_loop/admit+touch 16k fresh pages", FAULT_PAGES, || {
+            let mut m = DeviceMemory::new(FAULT_PAGES + 8);
+            for p in 0..FAULT_PAGES {
+                black_box(m.state(p, p));
+                m.admit(p, p, p % 4 == 0, p);
+                m.touch(p, p);
+            }
+            m.occupancy()
+        })
+        .clone();
+    out.push(Subsystem { key: "fault_loop", result: r });
+
+    // 2. Eviction churn at ratio 0.25: every revisit refaults, every
+    //    admit picks a victim — the intrusive LRU's steady state.
+    let r = b
+        .case("eviction_churn/lru ratio 0.25", CHURN_OPS, || {
+            let policy = eviction::build("lru", 7).expect("lru builds");
+            let mut m = DeviceMemory::with_policy(CHURN_DISTINCT / 4, policy);
+            for i in 0..CHURN_OPS {
+                let p = i % CHURN_DISTINCT;
+                if m.state(p, i).is_some() {
+                    m.touch(p, i);
+                } else {
+                    black_box(m.admit(p, i, false, i).len());
+                }
+            }
+            m.evictions
+        })
+        .clone();
+    out.push(Subsystem { key: "eviction_churn", result: r });
+
+    // 3. TLB shootdown storm: translate-miss, fill, then a masked
+    //    shootdown of exactly the filling SM — the path that replaced
+    //    the per-eviction all-SM retain sweep.
+    let r = b
+        .case("tlb_shootdown/masked storm 30 SMs", STORM_OPS, || {
+            let mut g = Gmmu::new(STORM_SMS, 64);
+            for i in 0..STORM_OPS {
+                let sm = (i % STORM_SMS as u64) as usize;
+                if g.translate(sm, i, i, 100) > 0 {
+                    g.fill(sm, i, i);
+                }
+                let mut mask = SmSet::default();
+                mask.insert(sm);
+                g.shootdown_masked(i, &mask);
+            }
+            g.misses()
+        })
+        .clone();
+    out.push(Subsystem { key: "tlb_shootdown", result: r });
+
+    out
+}
+
+/// End-to-end representative cells: the dense + irregular pair the
+/// byte-identity suite also anchors on, at the grid's heaviest
+/// pressure ratio plus one unpressured anchor.
+fn end_to_end_cells(smoke: bool) -> Vec<CellSpec> {
+    let opts = RunOptions {
+        scale: 0.05,
+        max_instructions: if smoke { 20_000 } else { 60_000 },
+        ..Default::default()
+    };
+    let pairs: &[(&str, &str, f64)] = if smoke {
+        &[("addvectors", "tree", 0.25), ("spmv", "none", 0.25)]
+    } else {
+        &[
+            ("addvectors", "none", 0.25),
+            ("addvectors", "tree", 0.25),
+            ("spmv", "none", 0.25),
+            ("spmv", "tree", 0.25),
+            ("addvectors", "tree", 1.0),
+        ]
+    };
+    pairs
+        .iter()
+        .map(|&(b, p, ratio)| CellSpec::new(b, p, &opts).with_oversub(ratio, "lru"))
+        .collect()
+}
+
+/// Measured end-to-end throughput.
+struct EndToEnd {
+    names: Vec<String>,
+    wall: Duration,
+    cells_per_sec: f64,
+}
+
+fn run_end_to_end(smoke: bool) -> anyhow::Result<EndToEnd> {
+    let cells = end_to_end_cells(smoke);
+    let names: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                "{}/{}@{:.2}",
+                c.benchmark,
+                c.prefetcher,
+                c.oversub_ratio.unwrap_or(1.0)
+            )
+        })
+        .collect();
+    let t0 = Instant::now();
+    for cell in &cells {
+        let m = cell.run()?;
+        black_box(m.cycles);
+    }
+    let wall = t0.elapsed();
+    let cells_per_sec = cells.len() as f64 / wall.as_secs_f64().max(1e-9);
+    println!(
+        "{:<44} {:>12} cells  wall {:>9.2} ms  {:>10.2} cells/s",
+        "end_to_end/oversub representative",
+        cells.len(),
+        wall.as_secs_f64() * 1e3,
+        cells_per_sec
+    );
+    Ok(EndToEnd { names, wall, cells_per_sec })
+}
+
+fn subsystems_json(subs: &[Subsystem]) -> Json {
+    let mut m = BTreeMap::new();
+    for s in subs {
+        let per_sec = if s.result.mean_ns > 0.0 {
+            s.result.items as f64 / (s.result.mean_ns / 1e9)
+        } else {
+            0.0
+        };
+        m.insert(
+            s.key.to_string(),
+            Json::obj(vec![
+                ("case", Json::str(&s.result.name)),
+                ("mean_ns", Json::num(s.result.mean_ns)),
+                ("min_ns", Json::num(s.result.min_ns)),
+                ("items", Json::num(s.result.items as f64)),
+                ("ns_per_item", Json::num(s.result.mean_ns / s.result.items.max(1) as f64)),
+                ("items_per_sec", Json::num(per_sec)),
+            ]),
+        );
+    }
+    Json::Obj(m)
+}
+
+/// Compare measured throughputs against a baseline document. Returns
+/// warning lines (empty = within tolerance); pure so the verdict logic
+/// is unit-testable without timing anything.
+fn check_verdicts(baseline: &Json, cells_per_sec: f64, subs: &[(String, f64)]) -> Vec<String> {
+    let mut warnings = Vec::new();
+    let floor = |base: f64| base / CHECK_TOLERANCE;
+    if let Some(base) = baseline.get("cells_per_sec").and_then(Json::as_f64) {
+        if cells_per_sec < floor(base) {
+            warnings.push(format!(
+                "end_to_end cells/sec regressed: {cells_per_sec:.2} < {:.2} \
+                 (baseline {base:.2} / {CHECK_TOLERANCE}x tolerance)",
+                floor(base)
+            ));
+        }
+    }
+    if let Some(Json::Obj(base_subs)) = baseline.get("subsystems") {
+        for (key, per_sec) in subs {
+            if let Some(base) = base_subs.get(key).and_then(Json::as_f64) {
+                if *per_sec < floor(base) {
+                    warnings.push(format!(
+                        "{key} items/sec regressed: {per_sec:.0} < {:.0} \
+                         (baseline {base:.0} / {CHECK_TOLERANCE}x tolerance)",
+                        floor(base)
+                    ));
+                }
+            }
+        }
+    }
+    warnings
+}
+
+fn baseline_json(cells_per_sec: f64, subs: &[(String, f64)]) -> Json {
+    let mut m = BTreeMap::new();
+    for (key, per_sec) in subs {
+        m.insert(key.clone(), Json::num(*per_sec));
+    }
+    Json::obj(vec![
+        ("schema", Json::str(PERF_BASELINE_SCHEMA)),
+        ("bootstrap", Json::Bool(false)),
+        ("cells_per_sec", Json::num(cells_per_sec)),
+        ("subsystems", Json::Obj(m)),
+    ])
+}
+
+fn apply_check(
+    path: &Path,
+    update: bool,
+    cells_per_sec: f64,
+    subs: &[(String, f64)],
+) -> anyhow::Result<()> {
+    if update {
+        baseline_json(cells_per_sec, subs).write_file(path)?;
+        eprintln!("perf: baseline pinned at {}", path.display());
+        return Ok(());
+    }
+    let doc = match Json::parse_file(path) {
+        Ok(d) => d,
+        Err(_) => {
+            eprintln!(
+                "perf: no baseline at {} — bootstrap mode. Measured candidates: \
+                 cells/sec {cells_per_sec:.2}; pin with `repro perf --check {} --update`.",
+                path.display(),
+                path.display()
+            );
+            return Ok(());
+        }
+    };
+    if doc.get("bootstrap").and_then(Json::as_bool).unwrap_or(false) {
+        eprintln!(
+            "perf: baseline {} is in bootstrap mode. Measured candidates: cells/sec \
+             {cells_per_sec:.2}; pin real numbers with `repro perf --check {} --update`.",
+            path.display(),
+            path.display()
+        );
+        return Ok(());
+    }
+    let warnings = check_verdicts(&doc, cells_per_sec, subs);
+    if warnings.is_empty() {
+        eprintln!("perf: within {CHECK_TOLERANCE}x of baseline {} — OK", path.display());
+    } else {
+        for w in &warnings {
+            eprintln!("perf: WARNING — {w}");
+        }
+        eprintln!(
+            "perf: {} regression warning(s) vs {} (warn-only: the build stays green; \
+             re-pin with --update if the new level is expected)",
+            warnings.len(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+/// Entry point for `repro perf`.
+pub fn perf(opts: &PerfOptions) -> anyhow::Result<()> {
+    eprintln!(
+        "perf: running pinned microbench matrix{}…",
+        if opts.smoke { " (smoke)" } else { "" }
+    );
+    let subs = run_subsystems(opts.smoke);
+    let e2e = run_end_to_end(opts.smoke)?;
+
+    let results: Vec<BenchResult> = subs.iter().map(|s| s.result.clone()).collect();
+    write_bench_sim(&opts.out, "perf_subsystems", &results)?;
+    let perf_section = Json::obj(vec![
+        ("smoke", Json::Bool(opts.smoke)),
+        ("subsystems", subsystems_json(&subs)),
+        (
+            "end_to_end",
+            Json::obj(vec![
+                ("cells", Json::num(e2e.names.len() as f64)),
+                ("cell_names", Json::arr(e2e.names.iter().map(|n| Json::str(n)))),
+                ("wall_ms", Json::num(e2e.wall.as_secs_f64() * 1e3)),
+                ("cells_per_sec", Json::num(e2e.cells_per_sec)),
+            ]),
+        ),
+    ]);
+    merge_bench_sim_section(&opts.out, "perf", perf_section)?;
+    eprintln!("perf: wrote {}", opts.out.display());
+
+    if let Some(check) = &opts.check {
+        let sub_rates: Vec<(String, f64)> = subs
+            .iter()
+            .map(|s| {
+                let per_sec = if s.result.mean_ns > 0.0 {
+                    s.result.items as f64 / (s.result.mean_ns / 1e9)
+                } else {
+                    0.0
+                };
+                (s.key.to_string(), per_sec)
+            })
+            .collect();
+        apply_check(check, opts.update, e2e.cells_per_sec, &sub_rates)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_sets_are_pinned() {
+        let full = end_to_end_cells(false);
+        let smoke = end_to_end_cells(true);
+        assert_eq!(full.len(), 5);
+        assert_eq!(smoke.len(), 2);
+        assert!(smoke.len() < full.len());
+        // Dense + irregular coverage and the heavy-pressure ratio.
+        for cells in [&full, &smoke] {
+            assert!(cells.iter().any(|c| c.benchmark == "addvectors"));
+            assert!(cells.iter().any(|c| c.benchmark == "spmv"));
+            assert!(cells.iter().all(|c| c.eviction.as_deref() == Some("lru")));
+            assert!(cells.iter().any(|c| c.oversub_ratio == Some(0.25)));
+        }
+        // The full set keeps one unpressured anchor cell.
+        assert!(full.iter().any(|c| c.oversub_ratio == Some(1.0)));
+    }
+
+    #[test]
+    fn check_verdicts_use_2x_tolerance() {
+        let base = baseline_json(100.0, &[("fault_loop".to_string(), 1_000_000.0)]);
+        // Half the baseline is exactly the floor — still OK.
+        assert!(check_verdicts(&base, 50.0, &[("fault_loop".into(), 500_000.0)]).is_empty());
+        // Below the floor warns, once per regressed series.
+        let w = check_verdicts(&base, 49.0, &[("fault_loop".into(), 400_000.0)]);
+        assert_eq!(w.len(), 2, "{w:?}");
+        assert!(w[0].contains("cells/sec"));
+        assert!(w[1].contains("fault_loop"));
+        // Unknown subsystem keys are ignored (baseline may lag).
+        assert!(check_verdicts(&base, 100.0, &[("brand_new".into(), 1.0)]).is_empty());
+    }
+
+    #[test]
+    fn baseline_round_trips_off_bootstrap() {
+        let j = baseline_json(42.0, &[("tlb_shootdown".to_string(), 7.0)]);
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(PERF_BASELINE_SCHEMA));
+        assert_eq!(j.get("bootstrap").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("cells_per_sec").and_then(Json::as_f64), Some(42.0));
+        assert_eq!(
+            j.get("subsystems").unwrap().get("tlb_shootdown").and_then(Json::as_f64),
+            Some(7.0)
+        );
+    }
+}

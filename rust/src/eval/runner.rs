@@ -225,9 +225,8 @@ impl Prefetcher for RecordingPrefetcher {
     fn name(&self) -> &'static str {
         "recording"
     }
-    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
+    fn on_fault_into(&mut self, fault: &FaultInfo, _out: &mut PrefetchDecision) {
         self.order.lock().expect("recording order lock").push(fault.page);
-        PrefetchDecision::default()
     }
 }
 

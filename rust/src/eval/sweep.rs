@@ -155,17 +155,21 @@ pub fn default_threads() -> usize {
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
-/// The full registry × 6-policy grid behind `repro eval summary`: every
-/// registered workload source (dense, irregular, and — when
-/// `opts.trace_dir` is set — ingested traces), in registration order.
+/// The full registry × [`SWEEP_PREFETCHERS`] grid behind `repro eval
+/// summary`: every registered workload source (dense, irregular, and —
+/// when `opts.trace_dir` is set — ingested traces), in registration
+/// order.
 ///
-/// Cells are ordered *policy-major* on purpose: the work-stealing
-/// cursor hands adjacent cells to different workers, and a
-/// benchmark-major order would run all six cells of the same heavy
-/// workload (conv2d/srad materialize hundreds of MB of warp ops each)
-/// concurrently. Policy-major order spreads the heavyweights across
-/// the sweep, bounding peak memory at roughly one copy of each big
-/// workload instead of `threads` copies of the biggest.
+/// Cell-ordering invariant, shared by every grid builder (this one and
+/// [`crate::eval::oversub::OversubGrid::cells`], which adds outer
+/// ratio/eviction axes): **the benchmark axis varies fastest**. The
+/// work-stealing cursor hands adjacent cells to different workers, so
+/// benchmark-innermost order has concurrent workers materializing
+/// *different* workloads; any benchmark-outer order would build every
+/// policy cell of the same heavy workload (conv2d/srad materialize
+/// hundreds of MB of warp ops each) at once. Peak memory stays at
+/// roughly one copy of each big workload instead of `threads` copies
+/// of the biggest.
 pub fn full_sweep_cells(opts: &RunOptions) -> anyhow::Result<Vec<CellSpec>> {
     let registry = opts.registry()?;
     let benches: Vec<String> = registry.all().iter().map(|b| b.to_string()).collect();

@@ -236,9 +236,7 @@ impl Prefetcher for AccessCollector {
         "train-collector"
     }
 
-    fn on_fault(&mut self, _fault: &FaultInfo) -> PrefetchDecision {
-        PrefetchDecision::default()
-    }
+    fn on_fault_into(&mut self, _fault: &FaultInfo, _out: &mut PrefetchDecision) {}
 
     fn on_access(&mut self, origin: AccessOrigin, pc: u64, page: PageNum, _hit: bool, _now: Cycle) {
         let key = self.cluster_by.key(&origin, pc);

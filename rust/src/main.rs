@@ -43,6 +43,17 @@
 //!                  ("all" covers the paper artifacts; oversub is its
 //!                  own axis and must be requested explicitly)
 //! repro golden     <check|update> [--path ci/golden_metrics.json]
+//! repro perf       [--smoke] [--out BENCH_sim.json]
+//!                  [--check ci/perf_baseline.json] [--update]
+//!                    simulator-throughput harness: pinned hot-path
+//!                    microbench matrix (fault loop, eviction churn at
+//!                    ratio 0.25, TLB shootdown storm) + end-to-end
+//!                    representative sweep cells (cells/sec); writes
+//!                    BENCH_sim.json (schema bench_sim/v1). --check
+//!                    compares against a committed baseline, warn-only
+//!                    with 2x tolerance (bootstrap baselines print the
+//!                    measured candidates); --update re-pins it.
+//!                    --smoke shortens windows for PR CI.
 //! repro serve      [--streams N] [--shards K] [--benchmark B]
 //!                  [--benchmarks a --benchmarks b] [--backend K]
 //!                  [--precision T]
@@ -99,8 +110,8 @@ use uvm_prefetch::util::cli::Args;
 use uvm_prefetch::util::Json;
 use uvm_prefetch::workloads::{trace, WorkloadFamily, WorkloadRegistry};
 
-const USAGE: &str = "repro <trace-gen|simulate|train|analyze|eval|golden|serve|trace|list|info> \
-                     [flags] (see rust/src/main.rs header)";
+const USAGE: &str = "repro <trace-gen|simulate|train|analyze|eval|golden|perf|serve|trace|list|\
+                     info> [flags] (see rust/src/main.rs header)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -113,6 +124,7 @@ fn main() -> Result<()> {
         "analyze" => analyze(&args),
         "eval" => eval_cmd(&args),
         "golden" => golden(&args),
+        "perf" => perf_cmd(&args),
         "serve" => serve(&args),
         "trace" => trace_cmd(&args),
         "list" => list_cmd(&args),
@@ -492,6 +504,19 @@ fn golden(args: &Args) -> Result<()> {
         "update" => eval::golden::update(&path),
         other => anyhow::bail!("unknown golden mode '{other}' (expected check|update)"),
     }
+}
+
+fn perf_cmd(args: &Args) -> Result<()> {
+    let opts = eval::perf::PerfOptions {
+        smoke: args.bool("smoke"),
+        out: PathBuf::from(args.str("out", "BENCH_sim.json")),
+        check: args.get("check").map(PathBuf::from),
+        update: args.bool("update"),
+    };
+    if opts.update && opts.check.is_none() {
+        anyhow::bail!("perf --update needs --check <baseline.json> to know what to pin");
+    }
+    eval::perf::perf(&opts)
 }
 
 fn info(args: &Args) -> Result<()> {

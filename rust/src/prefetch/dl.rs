@@ -164,7 +164,7 @@ impl Prefetcher for DlPrefetcher {
         }
     }
 
-    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
+    fn on_fault_into(&mut self, fault: &FaultInfo, out: &mut PrefetchDecision) {
         let key = self.cluster_by.key(&fault.origin, fault.pc);
 
         // Floor behaviour: migrate the faulting basic block (§4 — "we
@@ -191,10 +191,9 @@ impl Prefetcher for DlPrefetcher {
         } else {
             (bb, bb + PAGES_PER_BB)
         };
-        let mut requests: Vec<PrefetchRequest> = (lo..hi)
-            .filter(|&p| p != fault.page)
-            .map(|p| PrefetchRequest::at(p, decision_at))
-            .collect();
+        out.requests.extend(
+            (lo..hi).filter(|&p| p != fault.page).map(|p| PrefetchRequest::at(p, decision_at)),
+        );
 
         // Predicted-dead block: once a converged forward-streaming
         // cluster advances to a new basic block under pressure, the
@@ -202,30 +201,28 @@ impl Prefetcher for DlPrefetcher {
         // the next admissions reclaim free frames instead of evicting
         // live pages. Unpressured runs emit nothing (the ratio-1.0
         // byte-identity anchor).
-        let discards: Vec<DiscardRequest> = match prev_bb {
-            Some(prev) if under_pressure && prev < bb => {
+        if let Some(prev) = prev_bb {
+            if under_pressure && prev < bb {
                 let streaming = self
                     .history
                     .get(&key)
                     .and_then(|c| c.dominant_delta())
                     .is_some_and(|(d, conv)| d > 0 && conv >= DISCARD_CONVERGENCE);
                 if streaming {
-                    (prev..prev + PAGES_PER_BB)
-                        .filter(|&pg| pg != fault.page)
-                        .map(|pg| DiscardRequest { page: pg, lazy: true })
-                        .collect()
-                } else {
-                    Vec::new()
+                    out.discards.extend(
+                        (prev..prev + PAGES_PER_BB)
+                            .filter(|&pg| pg != fault.page)
+                            .map(|pg| DiscardRequest { page: pg, lazy: true }),
+                    );
                 }
             }
-            _ => Vec::new(),
-        };
+        }
 
         // Top-1 prediction for the +1 page, over the cluster's access
         // history window (the fault itself enters the history via the
         // engine's subsequent on_access call).
         let Some(cluster) = self.history.get_mut(&key) else {
-            return PrefetchDecision { requests, discards };
+            return;
         };
         if let Some(window_toks) = cluster.full_window() {
             let window = featurize_window(&self.engine.vocab, window_toks);
@@ -245,7 +242,7 @@ impl Prefetcher for DlPrefetcher {
                     let target = fault.page as i64 + d;
                     if target >= 0 && d != 0 {
                         self.telemetry.bypass_predictions += 1;
-                        requests.push(PrefetchRequest::at(
+                        out.requests.push(PrefetchRequest::at(
                             target as PageNum,
                             fault.service_at + self.latency / BYPASS_LATENCY_DIV,
                         ));
@@ -262,15 +259,13 @@ impl Prefetcher for DlPrefetcher {
                 }
             }
         }
-
-        PrefetchDecision { requests, discards }
     }
 
-    fn drain(&mut self, now: Cycle) -> Vec<PrefetchRequest> {
+    fn drain_into(&mut self, now: Cycle, out: &mut Vec<PrefetchRequest>) {
         if let Some(batch) = self.batcher.poll(now) {
             self.run_batch(batch, now);
         }
-        std::mem::take(&mut self.matured)
+        out.append(&mut self.matured);
     }
 
     fn on_retired(&mut self, instructions: u64) {

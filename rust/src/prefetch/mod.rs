@@ -116,6 +116,15 @@ pub struct PrefetchDecision {
     pub discards: Vec<DiscardRequest>,
 }
 
+impl PrefetchDecision {
+    /// Empty both lists keeping their capacity — the engine reuses one
+    /// decision buffer across the whole fault loop.
+    pub fn clear(&mut self) {
+        self.requests.clear();
+        self.discards.clear();
+    }
+}
+
 /// Telemetry exported by learned policies (merged into
 /// [`crate::sim::Metrics`] at the end of a run).
 #[derive(Debug, Clone, Default)]
@@ -134,7 +143,20 @@ pub trait Prefetcher: Send {
     fn name(&self) -> &'static str;
 
     /// Called on every far-fault (page absent, migration initiated).
-    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision;
+    /// Writes this fault's requests/discards into `out`, which the
+    /// caller has cleared (implementations may rely on it arriving
+    /// empty — the delegating policies post-filter what they appended).
+    /// The engine reuses one buffer across the whole fault loop, so
+    /// the hot path allocates nothing once its capacity has warmed up.
+    fn on_fault_into(&mut self, fault: &FaultInfo, out: &mut PrefetchDecision);
+
+    /// Allocating convenience wrapper around [`Prefetcher::on_fault_into`]
+    /// (unit tests and benches; the engine uses the buffered form).
+    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
+        let mut out = PrefetchDecision::default();
+        self.on_fault_into(fault, &mut out);
+        out
+    }
 
     /// Called on every device-memory access *after* outcome
     /// classification — feedback for learning/adaptive policies.
@@ -144,11 +166,17 @@ pub trait Prefetcher: Send {
     /// Called when the simulator evicts a page (oversubscription).
     fn on_evict(&mut self, _page: PageNum) {}
 
-    /// Collect prefetch requests that matured asynchronously (batched
-    /// predictions completing after their flush). Called once per
-    /// simulator event; must be cheap when empty.
-    fn drain(&mut self, _now: Cycle) -> Vec<PrefetchRequest> {
-        Vec::new()
+    /// Append prefetch requests that matured asynchronously (batched
+    /// predictions completing after their flush) to `out`. Called once
+    /// per simulator event; must be cheap when there is nothing to do
+    /// (the default does nothing).
+    fn drain_into(&mut self, _now: Cycle, _out: &mut Vec<PrefetchRequest>) {}
+
+    /// Allocating convenience wrapper around [`Prefetcher::drain_into`].
+    fn drain(&mut self, now: Cycle) -> Vec<PrefetchRequest> {
+        let mut out = Vec::new();
+        self.drain_into(now, &mut out);
+        out
     }
 
     /// Called with the retired-instruction counter after each memory
@@ -173,6 +201,17 @@ mod tests {
         let r = PrefetchRequest::at(42, 100);
         assert_eq!(r.page, 42);
         assert_eq!(r.earliest_start, 100);
+    }
+
+    #[test]
+    fn decision_clear_empties_but_keeps_capacity() {
+        let mut d = PrefetchDecision::default();
+        d.requests.push(PrefetchRequest::at(1, 0));
+        d.discards.push(DiscardRequest { page: 2, lazy: true });
+        let cap = (d.requests.capacity(), d.discards.capacity());
+        d.clear();
+        assert!(d.requests.is_empty() && d.discards.is_empty());
+        assert_eq!((d.requests.capacity(), d.discards.capacity()), cap);
     }
 
     #[test]

@@ -12,9 +12,7 @@ impl Prefetcher for NonePrefetcher {
         "none"
     }
 
-    fn on_fault(&mut self, _fault: &FaultInfo) -> PrefetchDecision {
-        PrefetchDecision::default()
-    }
+    fn on_fault_into(&mut self, _fault: &FaultInfo, _out: &mut PrefetchDecision) {}
 }
 
 #[cfg(test)]

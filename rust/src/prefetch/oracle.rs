@@ -32,23 +32,25 @@ impl Prefetcher for OraclePrefetcher {
         "oracle"
     }
 
-    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
+    fn on_fault_into(&mut self, fault: &FaultInfo, out: &mut PrefetchDecision) {
         // Advance the cursor past the faulting page (we are "here" in
         // the recorded order) and emit the next `lookahead` pages.
         if let Some(pos) = self.future[self.cursor..].iter().position(|&p| p == fault.page) {
             self.cursor += pos + 1;
         }
         self.issued.insert(fault.page);
-        let mut requests = Vec::new();
+        // Bound by pages pushed *here*, not `out.requests.len()` — the
+        // lookahead budget is per-fault regardless of buffer contents.
+        let mut pushed = 0;
         let mut i = self.cursor;
-        while requests.len() < self.lookahead && i < self.future.len() {
+        while pushed < self.lookahead && i < self.future.len() {
             let p = self.future[i];
             if self.issued.insert(p) {
-                requests.push(PrefetchRequest::at(p, fault.service_at));
+                out.requests.push(PrefetchRequest::at(p, fault.service_at));
+                pushed += 1;
             }
             i += 1;
         }
-        PrefetchDecision { requests, ..Default::default() }
     }
 }
 

@@ -61,19 +61,17 @@ impl Prefetcher for StridePrefetcher {
         "stride"
     }
 
-    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
+    fn on_fault_into(&mut self, fault: &FaultInfo, out: &mut PrefetchDecision) {
         let stride = self.observe(fault.origin.sm, fault.origin.warp, fault.page);
-        let mut requests = Vec::new();
         if let Some(d) = stride {
             let mut p = fault.page as i64;
             for _ in 0..self.degree {
                 p += d;
                 if p >= 0 {
-                    requests.push(PrefetchRequest::at(p as PageNum, fault.service_at));
+                    out.requests.push(PrefetchRequest::at(p as PageNum, fault.service_at));
                 }
             }
         }
-        PrefetchDecision { requests, ..Default::default() }
     }
 
     fn on_access(&mut self, origin: crate::types::AccessOrigin, _pc: u64, page: PageNum, hit: bool, _now: u64) {

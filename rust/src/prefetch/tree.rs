@@ -79,14 +79,13 @@ impl TreePrefetcher {
         self
     }
 
-    /// Mark pages valid and collect the promotion cascade: walk from
-    /// the faulted basic block up toward the 2 MB root; at each level,
-    /// if the enclosing node is now > threshold valid, schedule its
-    /// remaining invalid pages (and keep walking up).
-    fn fault_block(&mut self, page: PageNum, at: Cycle) -> Vec<PrefetchRequest> {
+    /// Mark pages valid and append the promotion cascade to `out`:
+    /// walk from the faulted basic block up toward the 2 MB root; at
+    /// each level, if the enclosing node is now > threshold valid,
+    /// schedule its remaining invalid pages (and keep walking up).
+    fn fault_block_into(&mut self, page: PageNum, at: Cycle, out: &mut Vec<PrefetchRequest>) {
         let root = root_base(page);
         let chunk = self.chunks.entry(root).or_default();
-        let mut out = Vec::new();
 
         // Leaf: migrate the whole 64 KB basic block.
         let bb = bb_base(page) - root;
@@ -113,7 +112,6 @@ impl TreePrefetcher {
             }
             span *= 2;
         }
-        out
     }
 }
 
@@ -122,17 +120,18 @@ impl Prefetcher for TreePrefetcher {
         "tree"
     }
 
-    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
-        let mut requests = self.fault_block(fault.page, fault.service_at);
+    fn on_fault_into(&mut self, fault: &FaultInfo, out: &mut PrefetchDecision) {
+        self.fault_block_into(fault.page, fault.service_at, &mut out.requests);
         if let Some(thr) = self.pressure_throttle {
             if fault.mem.above(thr) {
                 // Keep only the faulted basic block; promoted pages
                 // stay marked valid in the bitmap (the driver believes
-                // them handled), mirroring UVMSmart's conservative mode.
-                self.throttled += retain_basic_block(&mut requests, fault.page);
+                // them handled), mirroring UVMSmart's conservative
+                // mode. Retaining over the whole buffer is sound
+                // because it arrives empty (trait contract).
+                self.throttled += retain_basic_block(&mut out.requests, fault.page);
             }
         }
-        PrefetchDecision { requests, ..Default::default() }
     }
 
     fn on_evict(&mut self, page: PageNum) {

@@ -47,13 +47,14 @@ impl Prefetcher for UvmSmartPrefetcher {
         "uvmsmart"
     }
 
-    fn on_fault(&mut self, fault: &FaultInfo) -> PrefetchDecision {
-        let mut decision = self.tree.on_fault(fault);
+    fn on_fault_into(&mut self, fault: &FaultInfo, out: &mut PrefetchDecision) {
+        self.tree.on_fault_into(fault, out);
         if fault.mem.above(self.pressure_threshold) || self.recent_evictions > 0 {
             // Conservative mode: keep only the faulted basic block.
-            self.promotions_suppressed += retain_basic_block(&mut decision.requests, fault.page);
+            // The buffer arrives empty (trait contract), so the retain
+            // filters exactly what the tree just appended.
+            self.promotions_suppressed += retain_basic_block(&mut out.requests, fault.page);
         }
-        decision
     }
 
     fn on_evict(&mut self, page: PageNum) {

@@ -1,11 +1,30 @@
-//! Device-memory residency tracking: page frames, migration state,
-//! pluggable eviction (see [`crate::sim::eviction`]), and the per-page
-//! bookkeeping behind the paper's accuracy / coverage / hit-rate
-//! metrics.
+//! Device-memory residency tracking: a dense frame table with a
+//! free-list allocator, page→frame translation through a two-level
+//! sparse index, migration state, pluggable eviction (see
+//! [`crate::sim::eviction`]), and the per-page bookkeeping behind the
+//! paper's accuracy / coverage / hit-rate metrics.
+//!
+//! Hot-path layout (DESIGN.md §12): [`PageInfo`] lives in [`Frame`]
+//! slots of a `Vec` addressed by small integer [`FrameIdx`]es, so the
+//! fault loop touches one cache line per page instead of probing a
+//! `HashMap`. `PageMap` resolves page numbers to slots through a
+//! chunked direct-mapped index on the dense-footprint path (a
+//! `HashMap` catches far outliers from ingested traces). Lazy-discard
+//! marks form a sorted intrusive doubly-linked list threaded through
+//! the frames, and each frame carries the set of SMs whose TLB may
+//! hold a translation, so eviction shoots down only those TLBs instead
+//! of scanning every SM.
 
 use crate::sim::eviction::{EvictionPolicy, LruPolicy};
 use crate::types::{AdviseHint, Cycle, PageNum, PreferredLocation};
-use std::collections::{BTreeSet, HashMap};
+use std::collections::HashMap;
+
+/// Frame-table slot index. `u32` keeps policy side-tables compact;
+/// device capacities are page counts in the millions at most.
+pub type FrameIdx = u32;
+
+/// Intrusive-list terminator / "no frame" sentinel.
+const NIL: FrameIdx = u32::MAX;
 
 /// Migration state of a page known to the device.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,7 +71,201 @@ impl PageInfo {
     }
 }
 
-/// Device memory: a bounded set of page frames with pluggable
+/// The set of SMs whose TLB may hold a translation for a page —
+/// captured per frame so an eviction invalidates only those TLBs.
+/// The mask is a *superset*: a TLB capacity eviction drops the entry
+/// without telling the device, and a stale bit only costs one no-op
+/// invalidate. SM ids ≥ 128 saturate to "all SMs" (no configuration
+/// in the repo comes close; the bound keeps the mask one word pair).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SmSet {
+    bits: u128,
+    all: bool,
+}
+
+impl SmSet {
+    pub fn insert(&mut self, sm: usize) {
+        if sm >= 128 {
+            self.all = true;
+        } else {
+            self.bits |= 1u128 << sm;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        !self.all && self.bits == 0
+    }
+
+    /// Saturated masks lost track of individual SMs — the caller must
+    /// fall back to a full shootdown.
+    pub fn saturated(&self) -> bool {
+        self.all
+    }
+
+    /// Iterate the individually tracked SM ids (ascending). Empty when
+    /// [`SmSet::saturated`] — check that first.
+    pub fn sms(&self) -> SmBits {
+        SmBits(self.bits)
+    }
+}
+
+/// Ascending set-bit iterator over an [`SmSet`] mask.
+#[derive(Debug, Clone)]
+pub struct SmBits(u128);
+
+impl Iterator for SmBits {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.0 == 0 {
+            return None;
+        }
+        let i = self.0.trailing_zeros() as usize;
+        self.0 &= self.0 - 1;
+        Some(i)
+    }
+}
+
+/// A page dropped by [`DeviceMemory::admit`] (eviction or reclaimed
+/// lazy mark), carrying the TLB mask the engine needs for a targeted
+/// shootdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvictedPage {
+    pub page: PageNum,
+    pub tlb: SmSet,
+}
+
+/// One frame-table slot: the resident page's bookkeeping plus the
+/// intrusive lazy-discard links and the TLB presence mask. Freed
+/// slots stay in the `Vec` on a LIFO free list and are never visible
+/// to eviction policies (every `on_remove` precedes the free).
+#[derive(Debug, Clone, Copy)]
+pub struct Frame {
+    page: PageNum,
+    info: PageInfo,
+    in_use: bool,
+    /// Lazy-discard mark time; the list below is ordered by
+    /// `(lazy_at, page)` — exactly the old `BTreeSet<(Cycle, PageNum)>`
+    /// iteration order.
+    lazy_at: Cycle,
+    lazy_prev: FrameIdx,
+    lazy_next: FrameIdx,
+    lazy_linked: bool,
+    tlb: SmSet,
+}
+
+impl Frame {
+    fn vacant() -> Self {
+        Frame {
+            page: 0,
+            info: PageInfo {
+                state: PageState::Resident,
+                via_prefetch: false,
+                prefetch_used: false,
+                last_touch: 0,
+                read_mostly: false,
+                pinned: false,
+                lazy_discard: false,
+            },
+            in_use: false,
+            lazy_at: 0,
+            lazy_prev: NIL,
+            lazy_next: NIL,
+            lazy_linked: false,
+            tlb: SmSet::default(),
+        }
+    }
+
+    pub fn page(&self) -> PageNum {
+        self.page
+    }
+
+    pub fn info(&self) -> &PageInfo {
+        &self.info
+    }
+
+    /// See [`PageInfo::evictable`].
+    pub fn evictable(&self, now: Cycle) -> bool {
+        self.in_use && self.info.evictable(now)
+    }
+
+    /// Bare frame for driving a policy without a [`DeviceMemory`]
+    /// (unit tests of raw policy objects).
+    #[cfg(test)]
+    pub(crate) fn for_tests(page: PageNum, info: PageInfo) -> Self {
+        Frame { page, info, in_use: true, ..Frame::vacant() }
+    }
+}
+
+/// Frame-slot values stored in [`PageMap`]: a valid [`FrameIdx`], or
+/// one of two vacancy sentinels. `VACANT_DROPPED` distinguishes "was
+/// resident once and left" from "never seen" — the refault signal the
+/// engine used to keep in a separate `HashSet`. Slots never return to
+/// `VACANT`, matching that set's accumulate-forever semantics.
+const VACANT: u32 = u32::MAX;
+const VACANT_DROPPED: u32 = u32::MAX - 1;
+
+/// Pages per direct-mapped chunk of the page→frame index.
+const CHUNK_PAGES: u64 = 4096;
+/// Maximum chunk span the dense directory may cover (1 TiB of address
+/// space at 4 KiB pages) — footprints beyond it spill to `outliers`.
+const MAX_CHUNK_SPAN: u64 = 1 << 16;
+
+/// Two-level page→frame index. The workload footprint is contiguous
+/// for the builtin generators, so nearly every lookup is two array
+/// indexes; ingested traces with far-flung mappings fall back to the
+/// `outliers` map. A chunk refused dense coverage is refused forever
+/// (the span only grows), so the dense-range-first lookup is sound.
+#[derive(Debug, Default)]
+struct PageMap {
+    /// First chunk index covered by `dir` (meaningless while empty).
+    base: u64,
+    dir: Vec<Option<Box<[u32]>>>,
+    outliers: HashMap<PageNum, u32>,
+}
+
+impl PageMap {
+    fn get(&self, page: PageNum) -> u32 {
+        let chunk = page / CHUNK_PAGES;
+        if !self.dir.is_empty() && chunk >= self.base {
+            if let Some(slot) = self.dir.get((chunk - self.base) as usize) {
+                return match slot {
+                    Some(c) => c[(page % CHUNK_PAGES) as usize],
+                    None => VACANT,
+                };
+            }
+        }
+        self.outliers.get(&page).copied().unwrap_or(VACANT)
+    }
+
+    fn set(&mut self, page: PageNum, val: u32) {
+        let chunk = page / CHUNK_PAGES;
+        if self.dir.is_empty() {
+            self.base = chunk;
+            self.dir.push(None);
+        } else if chunk < self.base {
+            let grow = self.base - chunk;
+            if self.dir.len() as u64 + grow > MAX_CHUNK_SPAN {
+                self.outliers.insert(page, val);
+                return;
+            }
+            self.dir.splice(0..0, std::iter::repeat_with(|| None).take(grow as usize));
+            self.base = chunk;
+        } else if chunk - self.base >= self.dir.len() as u64 {
+            let end = chunk - self.base + 1;
+            if end > MAX_CHUNK_SPAN {
+                self.outliers.insert(page, val);
+                return;
+            }
+            self.dir.resize_with(end as usize, || None);
+        }
+        let slot = &mut self.dir[(chunk - self.base) as usize];
+        let c = slot.get_or_insert_with(|| vec![VACANT; CHUNK_PAGES as usize].into_boxed_slice());
+        c[(page % CHUNK_PAGES) as usize] = val;
+    }
+}
+
+/// Device memory: a bounded table of page frames with pluggable
 /// eviction ([`LruPolicy`] by default — the paper's baseline).
 ///
 /// Residency flips lazily: a `Migrating` page whose arrival has passed
@@ -61,13 +274,22 @@ impl PageInfo {
 #[derive(Debug)]
 pub struct DeviceMemory {
     capacity_pages: u64,
-    pages: HashMap<PageNum, PageInfo>,
+    frames: Vec<Frame>,
+    /// LIFO free list of frame slots — a just-evicted frame is the
+    /// next one reused, while its line is still hot.
+    free: Vec<FrameIdx>,
+    live: u64,
+    map: PageMap,
     policy: Box<dyn EvictionPolicy>,
-    /// Lazy-discard marks in mark order — reclaimed oldest-first when
-    /// admission needs a frame, before the eviction policy is asked.
-    /// Entries go stale when a touch cancels the mark or the page
-    /// leaves; they are skipped and dropped at reclaim time.
-    lazy_marks: BTreeSet<(Cycle, PageNum)>,
+    /// Lazy-discard marks as an intrusive list over the frames in mark
+    /// order — reclaimed oldest-first when admission needs a frame,
+    /// before the eviction policy is asked. Touch-cancel and page
+    /// departure unlink eagerly, so every linked entry is live.
+    lazy_head: FrameIdx,
+    lazy_tail: FrameIdx,
+    /// Reused output buffer for [`DeviceMemory::admit`] — the fault
+    /// loop allocates nothing per eviction.
+    evicted_buf: Vec<EvictedPage>,
     /// Number of prefetched copies that were evicted before ever being
     /// demanded (wasted transfers — hurts accuracy).
     pub evicted_unused_prefetches: u64,
@@ -95,9 +317,14 @@ impl DeviceMemory {
         assert!(capacity_pages > 0);
         Self {
             capacity_pages,
-            pages: HashMap::new(),
+            frames: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            map: PageMap::default(),
             policy,
-            lazy_marks: BTreeSet::new(),
+            lazy_head: NIL,
+            lazy_tail: NIL,
+            evicted_buf: Vec::new(),
             evicted_unused_prefetches: 0,
             evictions: 0,
             discards: 0,
@@ -112,16 +339,29 @@ impl DeviceMemory {
     }
 
     pub fn occupancy(&self) -> u64 {
-        self.pages.len() as u64
+        self.live
     }
 
     pub fn capacity(&self) -> u64 {
         self.capacity_pages
     }
 
+    fn frame_of(&self, page: PageNum) -> Option<FrameIdx> {
+        let slot = self.map.get(page);
+        (slot < VACANT_DROPPED).then_some(slot)
+    }
+
+    /// The page was dropped (evicted or discarded) at some point in
+    /// this run and is not currently resident — the engine's refault
+    /// signal.
+    pub fn was_dropped(&self, page: PageNum) -> bool {
+        self.map.get(page) == VACANT_DROPPED
+    }
+
     /// Current state of a page after lazy promotion at time `now`.
     pub fn state(&mut self, page: PageNum, now: Cycle) -> Option<PageState> {
-        let info = self.pages.get_mut(&page)?;
+        let f = self.frame_of(page)?;
+        let info = &mut self.frames[f as usize].info;
         if let PageState::Migrating { arrival } = info.state {
             if arrival <= now {
                 info.state = PageState::Resident;
@@ -131,63 +371,85 @@ impl DeviceMemory {
     }
 
     pub fn info(&self, page: PageNum) -> Option<&PageInfo> {
-        self.pages.get(&page)
+        self.frame_of(page).map(|f| &self.frames[f as usize].info)
+    }
+
+    /// Record that SM `sm` filled a TLB entry for `page` — the engine
+    /// calls this beside every `Gmmu::fill`, keeping the per-frame
+    /// shootdown mask a superset of the TLBs that hold the page.
+    pub fn note_tlb_fill(&mut self, page: PageNum, sm: usize) {
+        if let Some(f) = self.frame_of(page) {
+            self.frames[f as usize].tlb.insert(sm);
+        }
     }
 
     /// Record a demand touch (updates the eviction policy's index +
     /// prefetch-use accounting). Returns `true` when this is the first
     /// demand touch of a prefetched copy (the prefetch "hit").
     pub fn touch(&mut self, page: PageNum, now: Cycle) -> bool {
-        let (prev, first_use) = {
-            let Some(info) = self.pages.get_mut(&page) else { return false };
+        let Some(f) = self.frame_of(page) else { return false };
+        let (prev, first_use, cancel) = {
+            let info = &mut self.frames[f as usize].info;
             let prev = info.last_touch;
             info.last_touch = now;
             // A demand touch disproves a lazy-discard death prediction
-            // — cancel the mark (its index entry goes stale).
+            // — cancel the mark (and unlink it eagerly).
+            let cancel = info.lazy_discard;
             info.lazy_discard = false;
             let first_use = info.via_prefetch && !info.prefetch_used;
             if first_use {
                 info.prefetch_used = true;
             }
-            (prev, first_use)
+            (prev, first_use, cancel)
         };
-        self.policy.on_touch(page, prev, now);
+        if cancel {
+            self.lazy_unlink(f);
+        }
+        self.policy.on_touch(f, page, prev, now);
         first_use
     }
 
     /// Admit a page that is starting migration. Evicts policy-chosen
     /// pages if at capacity. Returns the evicted pages (resident only —
-    /// in-flight pages are never evicted).
-    pub fn admit(&mut self, page: PageNum, arrival: Cycle, via_prefetch: bool, now: Cycle) -> Vec<PageNum> {
-        debug_assert!(!self.pages.contains_key(&page), "admit of already-known page {page}");
-        let mut evicted = Vec::new();
-        while self.pages.len() as u64 >= self.capacity_pages {
+    /// in-flight pages are never evicted) with their TLB shootdown
+    /// masks; the slice borrows an internal reuse buffer valid until
+    /// the next `admit`.
+    pub fn admit(
+        &mut self,
+        page: PageNum,
+        arrival: Cycle,
+        via_prefetch: bool,
+        now: Cycle,
+    ) -> &[EvictedPage] {
+        debug_assert!(self.frame_of(page).is_none(), "admit of already-known page {page}");
+        self.evicted_buf.clear();
+        while self.live >= self.capacity_pages {
             // Lazy-discard marks absorb the pressure first: reclaiming
             // a predicted-dead copy is free, so the policy only picks
             // a victim once no mark is reclaimable.
-            if let Some(p) = self.reclaim_lazy(now) {
-                evicted.push(p);
+            if let Some(e) = self.reclaim_lazy(now) {
+                self.evicted_buf.push(e);
                 continue;
             }
             match self.evict_one(now) {
-                Some(p) => evicted.push(p),
+                Some(e) => self.evicted_buf.push(e),
                 None => break, // everything in flight; over-commit rather than deadlock
             }
         }
-        self.pages.insert(
-            page,
-            PageInfo {
-                state: PageState::Migrating { arrival },
-                via_prefetch,
-                prefetch_used: false,
-                last_touch: now,
-                read_mostly: false,
-                pinned: false,
-                lazy_discard: false,
-            },
-        );
-        self.policy.on_admit(page, now, via_prefetch);
-        evicted
+        let info = PageInfo {
+            state: PageState::Migrating { arrival },
+            via_prefetch,
+            prefetch_used: false,
+            last_touch: now,
+            read_mostly: false,
+            pinned: false,
+            lazy_discard: false,
+        };
+        let f = self.alloc_frame(page, info);
+        self.map.set(page, f);
+        self.live += 1;
+        self.policy.on_admit(f, page, now, via_prefetch);
+        &self.evicted_buf
     }
 
     /// Apply a memory-usage hint to every *known* page in `pages`
@@ -196,7 +458,8 @@ impl DeviceMemory {
     pub fn advise(&mut self, pages: &[PageNum], hint: AdviseHint) -> u64 {
         let mut reached = 0;
         for &p in pages {
-            let Some(info) = self.pages.get_mut(&p) else { continue };
+            let Some(f) = self.frame_of(p) else { continue };
+            let info = &mut self.frames[f as usize].info;
             match hint {
                 AdviseHint::ReadMostly => {
                     if !info.read_mostly {
@@ -214,18 +477,22 @@ impl DeviceMemory {
 
     /// Eagerly drop a page the producer declared dead: frees the frame
     /// immediately, with no writeback and no interconnect traffic.
-    /// Refused (`false`) for unknown, in-flight, or pinned pages.
-    pub fn discard(&mut self, page: PageNum, now: Cycle) -> bool {
-        if !self.pages.get(&page).is_some_and(|i| i.evictable(now)) {
-            return false;
+    /// Refused (`None`) for unknown, in-flight, or pinned pages;
+    /// otherwise returns the TLB shootdown mask for the dropped copy.
+    pub fn discard(&mut self, page: PageNum, now: Cycle) -> Option<SmSet> {
+        let f = self.frame_of(page)?;
+        let fr = &self.frames[f as usize];
+        if !fr.info.evictable(now) {
+            return None;
         }
-        let info = self.pages.remove(&page).expect("checked above");
-        self.policy.on_remove(page, &info);
+        let (info, tlb) = (fr.info, fr.tlb);
+        self.policy.on_remove(f, page, &info);
         self.discards += 1;
         if info.read_mostly {
             self.read_mostly_drops += 1;
         }
-        true
+        self.release(f);
+        Some(tlb)
     }
 
     /// Mark a page for lazy discard: the frame is reclaimed only when
@@ -233,51 +500,50 @@ impl DeviceMemory {
     /// touch before then cancels the mark. Returns `false` for unknown
     /// or already-marked pages.
     pub fn discard_lazy(&mut self, page: PageNum, now: Cycle) -> bool {
-        let Some(info) = self.pages.get_mut(&page) else { return false };
-        if info.lazy_discard {
+        let Some(f) = self.frame_of(page) else { return false };
+        if self.frames[f as usize].info.lazy_discard {
             return false;
         }
-        info.lazy_discard = true;
-        self.lazy_marks.insert((now, page));
+        self.frames[f as usize].info.lazy_discard = true;
+        self.lazy_link(f, now);
         true
     }
 
-    /// Reclaim the oldest still-valid lazy-discard mark that is
-    /// evictable at `now`, dropping stale index entries on the way.
-    fn reclaim_lazy(&mut self, now: Cycle) -> Option<PageNum> {
-        let mut stale = Vec::new();
-        let mut hit = None;
-        for &(at, page) in &self.lazy_marks {
-            match self.pages.get(&page) {
-                Some(i) if i.lazy_discard => {
-                    if i.evictable(now) {
-                        hit = Some((at, page));
-                        break;
-                    }
-                }
-                _ => stale.push((at, page)), // canceled or departed
+    /// Reclaim the oldest lazy-discard mark that is evictable at
+    /// `now`. Every linked mark is live (cancel/departure unlink
+    /// eagerly), so this is a head-first walk that skips in-flight
+    /// pages — the same scan order as the old stale-tolerant BTreeSet.
+    fn reclaim_lazy(&mut self, now: Cycle) -> Option<EvictedPage> {
+        let mut cur = self.lazy_head;
+        while cur != NIL {
+            let fr = &self.frames[cur as usize];
+            if fr.info.evictable(now) {
+                break;
             }
+            cur = fr.lazy_next;
         }
-        for k in stale {
-            self.lazy_marks.remove(&k);
+        if cur == NIL {
+            return None;
         }
-        let (at, page) = hit?;
-        self.lazy_marks.remove(&(at, page));
-        let info = self.pages.remove(&page).expect("marked page is known");
-        self.policy.on_remove(page, &info);
+        let fr = &self.frames[cur as usize];
+        let (page, info, tlb) = (fr.page, fr.info, fr.tlb);
+        self.policy.on_remove(cur, page, &info);
         self.discards += 1;
         self.lazy_discard_reclaims += 1;
         if info.read_mostly {
             self.read_mostly_drops += 1;
         }
-        Some(page)
+        self.release(cur);
+        Some(EvictedPage { page, tlb })
     }
 
     /// Evict the policy's victim among pages resident by `now`.
-    fn evict_one(&mut self, now: Cycle) -> Option<PageNum> {
-        let victim = self.policy.pick_victim(&self.pages, now)?;
-        let info = self.pages.remove(&victim).expect("policy picked an unknown page");
-        self.policy.on_remove(victim, &info);
+    fn evict_one(&mut self, now: Cycle) -> Option<EvictedPage> {
+        let victim = self.policy.pick_victim(&self.frames, now)?;
+        let fr = &self.frames[victim as usize];
+        debug_assert!(fr.in_use, "policy picked a free frame");
+        let (page, info, tlb) = (fr.page, fr.info, fr.tlb);
+        self.policy.on_remove(victim, page, &info);
         if info.via_prefetch && !info.prefetch_used {
             self.evicted_unused_prefetches += 1;
         }
@@ -285,18 +551,116 @@ impl DeviceMemory {
             self.read_mostly_drops += 1;
         }
         self.evictions += 1;
-        Some(victim)
+        self.release(victim);
+        Some(EvictedPage { page, tlb })
+    }
+
+    /// Take a frame off the free list (or grow the table) and reset
+    /// its per-frame state — including the TLB mask, which must not
+    /// leak from the previous tenant.
+    fn alloc_frame(&mut self, page: PageNum, info: PageInfo) -> FrameIdx {
+        let f = match self.free.pop() {
+            Some(f) => f,
+            None => {
+                self.frames.push(Frame::vacant());
+                (self.frames.len() - 1) as FrameIdx
+            }
+        };
+        let fr = &mut self.frames[f as usize];
+        debug_assert!(!fr.in_use && !fr.lazy_linked);
+        *fr = Frame::vacant();
+        fr.page = page;
+        fr.info = info;
+        fr.in_use = true;
+        f
+    }
+
+    /// Return a frame to the free list, recording the vacated page as
+    /// dropped (the refault signal). Callers run `policy.on_remove`
+    /// and counter updates first.
+    fn release(&mut self, f: FrameIdx) {
+        self.lazy_unlink(f);
+        let page = self.frames[f as usize].page;
+        self.frames[f as usize].in_use = false;
+        self.map.set(page, VACANT_DROPPED);
+        self.live -= 1;
+        self.free.push(f);
+    }
+
+    /// Insert frame `f` into the lazy-mark list keeping `(at, page)`
+    /// ascending. Marks arrive in near-sorted order (event time), so
+    /// the backward walk from the tail is amortized O(1).
+    fn lazy_link(&mut self, f: FrameIdx, at: Cycle) {
+        debug_assert!(!self.frames[f as usize].lazy_linked);
+        let page = self.frames[f as usize].page;
+        let mut cur = self.lazy_tail;
+        while cur != NIL {
+            let c = &self.frames[cur as usize];
+            if (c.lazy_at, c.page) > (at, page) {
+                cur = c.lazy_prev;
+            } else {
+                break;
+            }
+        }
+        let next = if cur == NIL { self.lazy_head } else { self.frames[cur as usize].lazy_next };
+        {
+            let fr = &mut self.frames[f as usize];
+            fr.lazy_at = at;
+            fr.lazy_prev = cur;
+            fr.lazy_next = next;
+            fr.lazy_linked = true;
+        }
+        if cur == NIL {
+            self.lazy_head = f;
+        } else {
+            self.frames[cur as usize].lazy_next = f;
+        }
+        if next == NIL {
+            self.lazy_tail = f;
+        } else {
+            self.frames[next as usize].lazy_prev = f;
+        }
+    }
+
+    fn lazy_unlink(&mut self, f: FrameIdx) {
+        if !self.frames[f as usize].lazy_linked {
+            return;
+        }
+        let (prev, next) = {
+            let fr = &mut self.frames[f as usize];
+            let (p, n) = (fr.lazy_prev, fr.lazy_next);
+            fr.lazy_prev = NIL;
+            fr.lazy_next = NIL;
+            fr.lazy_linked = false;
+            (p, n)
+        };
+        if prev == NIL {
+            self.lazy_head = next;
+        } else {
+            self.frames[prev as usize].lazy_next = next;
+        }
+        if next == NIL {
+            self.lazy_tail = prev;
+        } else {
+            self.frames[next as usize].lazy_prev = prev;
+        }
     }
 
     /// All pages currently known (resident or in flight). Test helper.
     pub fn known_pages(&self) -> impl Iterator<Item = PageNum> + '_ {
-        self.pages.keys().copied()
+        self.frames.iter().filter(|f| f.in_use).map(|f| f.page)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Evicted pages only — most assertions care about the sequence,
+    /// not the TLB masks.
+    fn pages(ev: &[EvictedPage]) -> Vec<PageNum> {
+        ev.iter().map(|e| e.page).collect()
+    }
 
     #[test]
     fn lazy_promotion() {
@@ -322,11 +686,11 @@ mod tests {
         m.admit(1, 0, true, 0);
         m.admit(2, 0, false, 1);
         m.touch(1, 5); // 2 is now LRU... but 1 was touched later
-        let evicted = m.admit(3, 10, false, 10);
+        let evicted = pages(m.admit(3, 10, false, 10));
         assert_eq!(evicted, vec![2], "page 2 least recently used");
         // Page 1 was a *used* prefetch, page 2 demand — no unused count.
         assert_eq!(m.evicted_unused_prefetches, 0);
-        let evicted = m.admit(4, 11, false, 11);
+        let evicted = pages(m.admit(4, 11, false, 11));
         // Next victim is page 1? No: touched at 5; page 3 admitted at 10.
         assert_eq!(evicted, vec![1]);
     }
@@ -335,7 +699,7 @@ mod tests {
     fn unused_prefetch_eviction_counted() {
         let mut m = DeviceMemory::new(1);
         m.admit(1, 0, true, 0);
-        let ev = m.admit(2, 5, false, 5);
+        let ev = pages(m.admit(2, 5, false, 5));
         assert_eq!(ev, vec![1]);
         assert_eq!(m.evicted_unused_prefetches, 1);
     }
@@ -344,7 +708,7 @@ mod tests {
     fn inflight_pages_not_evicted() {
         let mut m = DeviceMemory::new(1);
         m.admit(1, 1000, false, 0); // still migrating at now=5
-        let ev = m.admit(2, 1005, false, 5);
+        let ev = m.admit(2, 1005, false, 5).to_vec();
         assert!(ev.is_empty(), "in-flight page must not be evicted; over-commit");
         assert_eq!(m.occupancy(), 2);
     }
@@ -369,7 +733,7 @@ mod tests {
         // Evicting the read-mostly copy is a free drop (host duplicate
         // is current — no writeback).
         m.touch(2, 7); // page 1 (touched at 6) is now LRU
-        assert_eq!(m.admit(3, 10, false, 8), vec![1]);
+        assert_eq!(pages(m.admit(3, 10, false, 8)), vec![1]);
         assert_eq!(m.read_mostly_drops, 1);
     }
 
@@ -381,10 +745,10 @@ mod tests {
         m.admit(2, 1, false, 1);
         m.advise(&[1], AdviseHint::PreferredLocation(PreferredLocation::Device));
         // Page 1 is the LRU victim but pinned — page 2 absorbs it.
-        assert_eq!(m.admit(3, 5, false, 5), vec![2]);
+        assert_eq!(pages(m.admit(3, 5, false, 5)), vec![2]);
         // Host advice unpins: page 1 is evictable again.
         m.advise(&[1], AdviseHint::PreferredLocation(PreferredLocation::Host));
-        assert_eq!(m.admit(4, 10, false, 10), vec![1]);
+        assert_eq!(pages(m.admit(4, 10, false, 10)), vec![1]);
     }
 
     #[test]
@@ -392,15 +756,18 @@ mod tests {
         let mut m = DeviceMemory::new(4);
         m.admit(1, 0, false, 0);
         m.admit(2, 100, false, 1); // in flight until 100
-        assert!(m.discard(1, 5), "resident page discards");
-        assert!(!m.discard(1, 6), "already gone");
-        assert!(!m.discard(2, 6), "in-flight page refuses discard");
-        assert!(!m.discard(9, 6), "unknown page refuses discard");
+        assert!(m.discard(1, 5).is_some(), "resident page discards");
+        assert!(m.discard(1, 6).is_none(), "already gone");
+        assert!(m.discard(2, 6).is_none(), "in-flight page refuses discard");
+        assert!(m.discard(9, 6).is_none(), "unknown page refuses discard");
         assert_eq!(m.discards, 1);
         assert_eq!(m.evictions, 0, "discard is not an eviction");
         assert!(m.info(1).is_none(), "discard never resurrects");
         assert!(!m.known_pages().any(|p| p == 1));
         assert_eq!(m.occupancy(), 1);
+        assert!(m.was_dropped(1), "discarded page counts as dropped (refault signal)");
+        assert!(!m.was_dropped(2), "resident page is not dropped");
+        assert!(!m.was_dropped(9), "never-seen page is not dropped");
     }
 
     #[test]
@@ -417,12 +784,66 @@ mod tests {
         assert_eq!(m.discards, 0);
         // First pressure reclaims the oldest mark (page 3), not the
         // LRU victim (page 1 was admitted first).
-        assert_eq!(m.admit(4, 10, false, 6), vec![3]);
+        assert_eq!(pages(m.admit(4, 10, false, 6)), vec![3]);
         assert_eq!((m.discards, m.lazy_discard_reclaims, m.evictions), (1, 1, 0));
         // A demand touch cancels page 1's mark — the next pressure
         // falls through to the policy, which picks LRU victim 2.
         m.touch(1, 7);
-        assert_eq!(m.admit(5, 20, false, 8), vec![2]);
+        assert_eq!(pages(m.admit(5, 20, false, 8)), vec![2]);
         assert_eq!((m.discards, m.lazy_discard_reclaims, m.evictions), (1, 1, 1));
+    }
+
+    #[test]
+    fn eviction_reports_noted_tlb_fills_and_frame_reuse_resets_mask() {
+        let mut m = DeviceMemory::new(1);
+        m.admit(1, 0, false, 0);
+        m.note_tlb_fill(1, 3);
+        m.note_tlb_fill(1, 7);
+        m.note_tlb_fill(9, 0); // unknown page: no-op
+        let ev = m.admit(2, 5, false, 5).to_vec();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].page, 1);
+        assert!(!ev[0].tlb.saturated());
+        assert_eq!(ev[0].tlb.sms().collect::<Vec<_>>(), vec![3, 7]);
+        // Page 2 reused page 1's frame — its mask must start empty.
+        let ev = m.admit(3, 10, false, 10).to_vec();
+        assert_eq!(ev[0].page, 2);
+        assert!(ev[0].tlb.is_empty(), "frame reuse must reset the TLB mask");
+    }
+
+    #[test]
+    fn smset_saturates_past_128_sms() {
+        let mut s = SmSet::default();
+        s.insert(5);
+        assert!(!s.saturated());
+        s.insert(200);
+        assert!(s.saturated(), "sm ids past the mask width saturate to all");
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn page_map_handles_far_outliers_and_sparse_chunks() {
+        // A footprint far wider than MAX_CHUNK_SPAN chunks forces the
+        // second page into the outlier map; both stay addressable and
+        // both record drops.
+        let mut m = DeviceMemory::new(4);
+        let mid = 5 * CHUNK_PAGES + 3;
+        let far = (MAX_CHUNK_SPAN + 10) * CHUNK_PAGES;
+        m.admit(mid, 0, false, 0);
+        m.admit(far, 1, false, 1);
+        assert_eq!(m.state(far, 1), Some(PageState::Resident));
+        assert_eq!(m.occupancy(), 2);
+        assert!(m.discard(far, 2).is_some());
+        assert!(m.was_dropped(far), "outlier drops are tracked too");
+        assert!(m.state(far, 3).is_none());
+        // Re-admit of an outlier works and clears nothing else.
+        m.admit(far, 4, false, 4);
+        assert_eq!(m.state(far, 4), Some(PageState::Resident));
+        assert_eq!(m.occupancy(), 2);
+        // Growing the dense directory downward (page 0 sits below the
+        // first-admitted chunk) keeps earlier entries addressable.
+        m.admit(0, 5, false, 5);
+        assert_eq!(m.state(0, 5), Some(PageState::Resident));
+        assert_eq!(m.state(mid, 5), Some(PageState::Resident));
     }
 }

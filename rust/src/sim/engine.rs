@@ -17,7 +17,9 @@
 //! are bit-deterministic.
 
 use crate::config::{ExperimentConfig, SimConfig};
-use crate::prefetch::{DiscardRequest, FaultInfo, MemPressure, Prefetcher, PrefetchRequest};
+use crate::prefetch::{
+    DiscardRequest, FaultInfo, MemPressure, PrefetchDecision, Prefetcher, PrefetchRequest,
+};
 use crate::sim::device_memory::{DeviceMemory, PageState};
 use crate::sim::eviction;
 use crate::sim::gmmu::Gmmu;
@@ -25,10 +27,10 @@ use crate::sim::interconnect::Interconnect;
 use crate::sim::metrics::Metrics;
 use crate::sim::sm::{SmState, WarpOp};
 use crate::sim::trace::TraceWriter;
-use crate::types::{page_of, AccessOrigin, Cycle, PageNum, TraceRecord, PAGE_SIZE};
+use crate::types::{page_of, AccessOrigin, Cycle, TraceRecord, PAGE_SIZE};
 use crate::workloads::WorkloadInstance;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::BinaryHeap;
 
 #[derive(Debug)]
 enum EventKind {
@@ -76,9 +78,11 @@ pub struct Simulator {
     max_instructions: u64,
     stopping: bool,
     far_fault_cycles: Cycle,
-    /// Pages evicted at least once — a far-fault on one of these is a
-    /// *refault* (the thrash-ratio numerator under oversubscription).
-    evicted_pages: HashSet<PageNum>,
+    /// Scratch buffer handed to [`Prefetcher::on_fault_into`] — reused
+    /// across faults so the steady-state fault loop allocates nothing.
+    decision_buf: PrefetchDecision,
+    /// Scratch buffer for [`Prefetcher::drain_into`], reused likewise.
+    drain_buf: Vec<PrefetchRequest>,
 }
 
 impl Simulator {
@@ -130,7 +134,8 @@ impl Simulator {
             max_instructions: exp.max_instructions,
             stopping: false,
             far_fault_cycles,
-            evicted_pages: HashSet::new(),
+            decision_buf: PrefetchDecision::default(),
+            drain_buf: Vec::new(),
         };
         sim.metrics.pcie_bucket_cycles = sim.cfg.pcie_bucket_cycles;
         sim.metrics.capacity_pages = capacity_pages;
@@ -159,17 +164,10 @@ impl Simulator {
             if self.stopping {
                 break;
             }
-            // Matured asynchronous prefetches (batched predictions).
-            let drained = self.prefetcher.drain(self.now);
-            if !drained.is_empty() {
-                self.apply_prefetches(&drained, self.now);
-            }
+            self.drain_prefetcher();
         }
         self.prefetcher.finish(self.now);
-        let drained = self.prefetcher.drain(self.now);
-        if !drained.is_empty() {
-            self.apply_prefetches(&drained, self.now);
-        }
+        self.drain_prefetcher();
         let tel = self.prefetcher.telemetry();
         self.metrics.predictions = tel.predictions;
         self.metrics.prediction_batches = tel.prediction_batches;
@@ -191,6 +189,18 @@ impl Simulator {
             let _ = t.finish();
         }
         self.metrics
+    }
+
+    /// Collect matured asynchronous prefetches (batched predictions)
+    /// through the reusable drain buffer and apply them.
+    fn drain_prefetcher(&mut self) {
+        let mut drained = std::mem::take(&mut self.drain_buf);
+        drained.clear();
+        self.prefetcher.drain_into(self.now, &mut drained);
+        if !drained.is_empty() {
+            self.apply_prefetches(&drained, self.now);
+        }
+        self.drain_buf = drained;
     }
 
     fn on_dispatch(&mut self, t: Cycle, sm: u16) {
@@ -274,6 +284,10 @@ impl Simulator {
                     self.metrics.prefetch_used += 1;
                 }
                 self.gmmu.fill(sm as usize, page, t_eff);
+                // Record the fill on the frame so the eventual eviction
+                // shoots down only this SM's TLB (masked shootdown,
+                // DESIGN.md §12) instead of sweeping every SM.
+                self.device.note_tlb_fill(page, sm as usize);
                 self.prefetcher.on_access(origin, op.access.pc, page, true, t);
                 (t_eff + self.cfg.dram_cycles, 0u8)
             }
@@ -289,15 +303,17 @@ impl Simulator {
             None => {
                 // Far-fault: host-side service + page transfer.
                 self.metrics.far_faults += 1;
-                if self.evicted_pages.contains(&page) {
+                if self.device.was_dropped(page) {
+                    // The page left the device at least once (eviction
+                    // or discard) — this fault is a *refault*, the
+                    // thrash-ratio numerator under oversubscription.
                     self.metrics.refaults += 1;
                 }
                 let service_at = t_eff + self.far_fault_cycles;
                 let xfer = self.link.transfer(service_at, PAGE_SIZE, false);
-                for evicted in self.device.admit(page, xfer.arrival, false, t_eff) {
-                    self.gmmu.shootdown(evicted);
-                    self.prefetcher.on_evict(evicted);
-                    self.evicted_pages.insert(evicted);
+                for ev in self.device.admit(page, xfer.arrival, false, t_eff) {
+                    self.gmmu.shootdown_masked(ev.page, &ev.tlb);
+                    self.prefetcher.on_evict(ev.page);
                 }
                 self.device.touch(page, t_eff);
                 let fault = FaultInfo {
@@ -309,9 +325,14 @@ impl Simulator {
                     array_id: op.access.array_id,
                     mem: MemPressure::at(self.device.occupancy(), self.device.capacity()),
                 };
-                let decision = self.prefetcher.on_fault(&fault);
+                // Reuse one decision buffer across all faults (taken
+                // out of `self` so the prefetcher borrow is disjoint).
+                let mut decision = std::mem::take(&mut self.decision_buf);
+                decision.clear();
+                self.prefetcher.on_fault_into(&fault, &mut decision);
                 self.apply_prefetches(&decision.requests, t_eff);
                 self.apply_discards(&decision.discards, t_eff);
+                self.decision_buf = decision;
                 self.prefetcher.on_access(origin, op.access.pc, page, false, t);
                 (xfer.arrival + self.cfg.dram_cycles, 1u8)
             }
@@ -345,10 +366,9 @@ impl Simulator {
             }
             let start = r.earliest_start.max(now);
             let xfer = self.link.transfer(start, PAGE_SIZE, true);
-            for evicted in self.device.admit(r.page, xfer.arrival, true, now) {
-                self.gmmu.shootdown(evicted);
-                self.prefetcher.on_evict(evicted);
-                self.evicted_pages.insert(evicted);
+            for ev in self.device.admit(r.page, xfer.arrival, true, now) {
+                self.gmmu.shootdown_masked(ev.page, &ev.tlb);
+                self.prefetcher.on_evict(ev.page);
             }
             self.metrics.prefetch_transfers += 1;
         }
@@ -365,10 +385,9 @@ impl Simulator {
         for d in discards {
             if d.lazy {
                 self.device.discard_lazy(d.page, now);
-            } else if self.device.discard(d.page, now) {
-                self.gmmu.shootdown(d.page);
+            } else if let Some(tlb) = self.device.discard(d.page, now) {
+                self.gmmu.shootdown_masked(d.page, &tlb);
                 self.prefetcher.on_evict(d.page);
-                self.evicted_pages.insert(d.page);
             }
         }
     }
@@ -484,12 +503,10 @@ mod tests {
             "discarding"
         }
 
-        fn on_fault(&mut self, fault: &FaultInfo) -> crate::prefetch::PrefetchDecision {
-            let discards = match fault.page.checked_sub(2) {
-                Some(p) => vec![DiscardRequest { page: p, lazy: false }],
-                None => Vec::new(),
-            };
-            crate::prefetch::PrefetchDecision { discards, ..Default::default() }
+        fn on_fault_into(&mut self, fault: &FaultInfo, out: &mut PrefetchDecision) {
+            if let Some(p) = fault.page.checked_sub(2) {
+                out.discards.push(DiscardRequest { page: p, lazy: false });
+            }
         }
     }
 

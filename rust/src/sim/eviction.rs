@@ -9,12 +9,21 @@
 //! through the `on_admit` / `on_touch` / `on_remove` hooks and asks it
 //! for victims via `pick_victim`.
 //!
+//! The hooks are frame-indexed (DESIGN.md §12): the memory hands each
+//! policy the [`FrameIdx`] of the affected frame-table slot, so a
+//! policy keeps its metadata in flat per-frame vectors and its victim
+//! ordering in intrusive doubly-linked lists ([`SortedList`]) instead
+//! of `BTreeSet`/`HashMap` — same victim sequences (pinned by the
+//! recorded-trace tests below and `tests/eviction_props.rs`), no
+//! per-touch tree rebalancing or hashing.
+//!
 //! Implementations:
-//! * [`LruPolicy`] — least-recently-touched victim. This is the
-//!   pre-refactor `DeviceMemory` behaviour, byte-identical: same
-//!   `(last_touch, page)` BTreeSet index, same in-order scan that
-//!   skips in-flight pages (`tests::lru_reproduces_prerefactor_trace`
-//!   pins the recorded eviction sequence).
+//! * [`LruPolicy`] — least-recently-touched victim, byte-identical to
+//!   the original inline `(last_touch, page)` BTreeSet index: the
+//!   intrusive list is kept sorted by that same key, and the pick
+//!   scans it in order skipping in-flight pages
+//!   (`tests::lru_reproduces_prerefactor_trace` pins the recorded
+//!   eviction sequence).
 //! * [`RandomPolicy`] — uniform random victim from a seeded
 //!   deterministic RNG; the no-information baseline.
 //! * [`FreqPolicy`] — least-frequently-touched victim (LFU), ties
@@ -34,7 +43,7 @@
 //! All policies are deterministic for a fixed seed, and `Send` so a
 //! whole simulation cell can run on a sweep worker thread.
 
-use crate::sim::device_memory::PageInfo;
+use crate::sim::device_memory::{Frame, FrameIdx, PageInfo};
 use crate::types::{Cycle, PageNum};
 use crate::util::XorShift64;
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
@@ -50,29 +59,38 @@ pub const ALL_EVICTION_POLICIES: &[&str] = &["lru", "random", "freq", "prefetch-
 /// the horizon the learned cells were trained under.
 pub const REFAULT_HORIZON_CYCLES: u64 = 500_000;
 
+/// Intrusive-list terminator.
+const NIL: FrameIdx = u32::MAX;
+
 /// Victim-selection strategy plugged into `DeviceMemory`.
 ///
 /// The hooks mirror the memory's state transitions exactly once each,
-/// so a policy can maintain any index it likes. `pick_victim` must
-/// only return pages that are evictable *now* (resident by lazy
-/// promotion — in-flight pages are never evicted), or `None` to make
-/// the memory over-commit rather than deadlock.
+/// so a policy can maintain any index it likes; every hook names both
+/// the frame slot and the page it holds. `pick_victim` receives the
+/// whole frame table (free slots included — a policy only ever
+/// indexes it with frames it was admitted) and must only return
+/// frames that are evictable *now* (resident by lazy promotion —
+/// in-flight pages are never evicted), or `None` to make the memory
+/// over-commit rather than deadlock.
 pub trait EvictionPolicy: Send + std::fmt::Debug {
     fn name(&self) -> &'static str;
 
-    /// A page entered device memory (migration scheduled at `now`).
-    fn on_admit(&mut self, page: PageNum, now: Cycle, via_prefetch: bool);
+    /// A page entered device memory in frame `frame` (migration
+    /// scheduled at `now`).
+    fn on_admit(&mut self, frame: FrameIdx, page: PageNum, now: Cycle, via_prefetch: bool);
 
     /// A demand touch moved the page's `last_touch` from `prev` to
     /// `now`.
-    fn on_touch(&mut self, page: PageNum, prev: Cycle, now: Cycle);
+    fn on_touch(&mut self, frame: FrameIdx, page: PageNum, prev: Cycle, now: Cycle);
 
-    /// The page was evicted; `info` is its final bookkeeping state.
-    fn on_remove(&mut self, page: PageNum, info: &PageInfo);
+    /// The page left the frame (evicted or discarded); `info` is its
+    /// final bookkeeping state. The frame may be reused by a
+    /// subsequent `on_admit`.
+    fn on_remove(&mut self, frame: FrameIdx, page: PageNum, info: &PageInfo);
 
-    /// Choose the next victim among `pages` that are evictable at
-    /// `now` (see [`PageInfo::evictable`]).
-    fn pick_victim(&mut self, pages: &HashMap<PageNum, PageInfo>, now: Cycle) -> Option<PageNum>;
+    /// Choose the next victim frame among those evictable at `now`
+    /// (see [`Frame::evictable`]).
+    fn pick_victim(&mut self, frames: &[Frame], now: Cycle) -> Option<FrameIdx>;
 }
 
 /// Build a policy by name. `seed` feeds stochastic policies so runs
@@ -90,16 +108,124 @@ pub fn build(name: &str, seed: u64) -> anyhow::Result<Box<dyn EvictionPolicy>> {
     })
 }
 
-fn evictable_in(pages: &HashMap<PageNum, PageInfo>, page: PageNum, now: Cycle) -> bool {
-    pages.get(&page).is_some_and(|i| i.evictable(now))
+/// An intrusive doubly-linked list over frame slots kept sorted by
+/// `(stamp, page)` ascending — the exact iteration order of the
+/// `BTreeSet<(Cycle, PageNum)>` indexes it replaces, at O(1) amortized
+/// per update: stamps arrive in near-sorted event order, so the
+/// backward walk from the tail almost always stops immediately.
+/// (Stamps are *not* strictly monotone — the MSHR-merge path touches
+/// pages with their future arrival cycle — which is why this is a
+/// sorted insert and not a plain queue.)
+#[derive(Debug)]
+struct SortedList {
+    stamp: Vec<Cycle>,
+    page: Vec<PageNum>,
+    prev: Vec<FrameIdx>,
+    next: Vec<FrameIdx>,
+    linked: Vec<bool>,
+    head: FrameIdx,
+    tail: FrameIdx,
+}
+
+impl Default for SortedList {
+    fn default() -> Self {
+        SortedList {
+            stamp: Vec::new(),
+            page: Vec::new(),
+            prev: Vec::new(),
+            next: Vec::new(),
+            linked: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+}
+
+impl SortedList {
+    fn ensure(&mut self, f: FrameIdx) {
+        let need = f as usize + 1;
+        if self.linked.len() < need {
+            self.stamp.resize(need, 0);
+            self.page.resize(need, 0);
+            self.prev.resize(need, NIL);
+            self.next.resize(need, NIL);
+            self.linked.resize(need, false);
+        }
+    }
+
+    fn insert(&mut self, f: FrameIdx, stamp: Cycle, page: PageNum) {
+        self.ensure(f);
+        let i = f as usize;
+        debug_assert!(!self.linked[i], "frame {f} already linked");
+        self.stamp[i] = stamp;
+        self.page[i] = page;
+        let mut cur = self.tail;
+        while cur != NIL {
+            let c = cur as usize;
+            if (self.stamp[c], self.page[c]) > (stamp, page) {
+                cur = self.prev[c];
+            } else {
+                break;
+            }
+        }
+        let next = if cur == NIL { self.head } else { self.next[cur as usize] };
+        self.prev[i] = cur;
+        self.next[i] = next;
+        self.linked[i] = true;
+        if cur == NIL {
+            self.head = f;
+        } else {
+            self.next[cur as usize] = f;
+        }
+        if next == NIL {
+            self.tail = f;
+        } else {
+            self.prev[next as usize] = f;
+        }
+    }
+
+    /// Unlink `f`; `false` when it was not a member (mirrors
+    /// `BTreeSet::remove`, which the two-set policies branch on).
+    fn remove(&mut self, f: FrameIdx) -> bool {
+        let i = f as usize;
+        if i >= self.linked.len() || !self.linked[i] {
+            return false;
+        }
+        let (p, n) = (self.prev[i], self.next[i]);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.next[p as usize] = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.prev[n as usize] = p;
+        }
+        self.linked[i] = false;
+        true
+    }
+
+    /// First member (in `(stamp, page)` order) that is evictable now.
+    fn pick(&self, frames: &[Frame], now: Cycle) -> Option<FrameIdx> {
+        let mut cur = self.head;
+        while cur != NIL {
+            if frames[cur as usize].evictable(now) {
+                return Some(cur);
+            }
+            cur = self.next[cur as usize];
+        }
+        None
+    }
 }
 
 /// Least-recently-used — the pre-refactor `DeviceMemory` behaviour.
 #[derive(Debug, Default)]
 pub struct LruPolicy {
-    /// `(last_touch, page)`, kept in sync with the memory's
-    /// `last_touch` bookkeeping — identical to the old inline index.
-    lru: BTreeSet<(Cycle, PageNum)>,
+    /// Sorted by `(last_touch, page)`, kept in sync with the memory's
+    /// `last_touch` bookkeeping — identical order to the old inline
+    /// BTreeSet index.
+    lru: SortedList,
 }
 
 impl EvictionPolicy for LruPolicy {
@@ -107,25 +233,21 @@ impl EvictionPolicy for LruPolicy {
         "lru"
     }
 
-    fn on_admit(&mut self, page: PageNum, now: Cycle, _via_prefetch: bool) {
-        self.lru.insert((now, page));
+    fn on_admit(&mut self, frame: FrameIdx, page: PageNum, now: Cycle, _via_prefetch: bool) {
+        self.lru.insert(frame, now, page);
     }
 
-    fn on_touch(&mut self, page: PageNum, prev: Cycle, now: Cycle) {
-        self.lru.remove(&(prev, page));
-        self.lru.insert((now, page));
+    fn on_touch(&mut self, frame: FrameIdx, page: PageNum, _prev: Cycle, now: Cycle) {
+        self.lru.remove(frame);
+        self.lru.insert(frame, now, page);
     }
 
-    fn on_remove(&mut self, page: PageNum, info: &PageInfo) {
-        self.lru.remove(&(info.last_touch, page));
+    fn on_remove(&mut self, frame: FrameIdx, _page: PageNum, _info: &PageInfo) {
+        self.lru.remove(frame);
     }
 
-    fn pick_victim(&mut self, pages: &HashMap<PageNum, PageInfo>, now: Cycle) -> Option<PageNum> {
-        self.lru
-            .iter()
-            .copied()
-            .find(|&(_, p)| evictable_in(pages, p, now))
-            .map(|(_, p)| p)
+    fn pick_victim(&mut self, frames: &[Frame], now: Cycle) -> Option<FrameIdx> {
+        self.lru.pick(frames, now)
     }
 }
 
@@ -133,9 +255,12 @@ impl EvictionPolicy for LruPolicy {
 #[derive(Debug)]
 pub struct RandomPolicy {
     rng: XorShift64,
-    /// Resident-set members with O(1) swap-removal.
-    members: Vec<PageNum>,
-    pos: HashMap<PageNum, usize>,
+    /// Resident frames in admission order with O(1) swap-removal —
+    /// the same positional structure (and hence the same RNG-indexed
+    /// picks) as the old page-keyed member list.
+    members: Vec<FrameIdx>,
+    /// Frame → index in `members` (`NIL` when absent).
+    pos: Vec<u32>,
 }
 
 impl RandomPolicy {
@@ -143,7 +268,7 @@ impl RandomPolicy {
         Self {
             rng: XorShift64::new(seed ^ 0xE71C_7ED0_5EED_0B0E),
             members: Vec::new(),
-            pos: HashMap::new(),
+            pos: Vec::new(),
         }
     }
 }
@@ -153,24 +278,30 @@ impl EvictionPolicy for RandomPolicy {
         "random"
     }
 
-    fn on_admit(&mut self, page: PageNum, _now: Cycle, _via_prefetch: bool) {
-        self.pos.insert(page, self.members.len());
-        self.members.push(page);
+    fn on_admit(&mut self, frame: FrameIdx, _page: PageNum, _now: Cycle, _via_prefetch: bool) {
+        if self.pos.len() <= frame as usize {
+            self.pos.resize(frame as usize + 1, NIL);
+        }
+        self.pos[frame as usize] = self.members.len() as u32;
+        self.members.push(frame);
     }
 
-    fn on_touch(&mut self, _page: PageNum, _prev: Cycle, _now: Cycle) {}
+    fn on_touch(&mut self, _frame: FrameIdx, _page: PageNum, _prev: Cycle, _now: Cycle) {}
 
-    fn on_remove(&mut self, page: PageNum, _info: &PageInfo) {
-        if let Some(i) = self.pos.remove(&page) {
-            let last = self.members.pop().expect("member list not empty");
-            if last != page {
-                self.members[i] = last;
-                self.pos.insert(last, i);
-            }
+    fn on_remove(&mut self, frame: FrameIdx, _page: PageNum, _info: &PageInfo) {
+        let i = self.pos[frame as usize];
+        if i == NIL {
+            return;
+        }
+        self.pos[frame as usize] = NIL;
+        let last = self.members.pop().expect("member list not empty");
+        if last != frame {
+            self.members[i as usize] = last;
+            self.pos[last as usize] = i;
         }
     }
 
-    fn pick_victim(&mut self, pages: &HashMap<PageNum, PageInfo>, now: Cycle) -> Option<PageNum> {
+    fn pick_victim(&mut self, frames: &[Frame], now: Cycle) -> Option<FrameIdx> {
         if self.members.is_empty() {
             return None;
         }
@@ -179,24 +310,31 @@ impl EvictionPolicy for RandomPolicy {
         // terminates even when almost everything is in flight.
         let n = self.members.len() as u64;
         for _ in 0..16 {
-            let p = self.members[self.rng.below(n) as usize];
-            if evictable_in(pages, p, now) {
-                return Some(p);
+            let f = self.members[self.rng.below(n) as usize];
+            if frames[f as usize].evictable(now) {
+                return Some(f);
             }
         }
         let start = self.rng.below(n) as usize;
         (0..self.members.len())
             .map(|k| self.members[(start + k) % self.members.len()])
-            .find(|&p| evictable_in(pages, p, now))
+            .find(|&f| frames[f as usize].evictable(now))
     }
 }
 
 /// Least-frequently-touched victim (LFU); ties broken by page number.
 #[derive(Debug, Default)]
 pub struct FreqPolicy {
-    counts: HashMap<PageNum, u64>,
-    /// `(touch_count, page)` — the min entry is the victim candidate.
-    index: BTreeSet<(u64, PageNum)>,
+    /// Per-frame touch counts (0 = frame untracked).
+    counts: Vec<u64>,
+    /// `(touch_count, page, frame)` — the min entry is the victim
+    /// candidate. Pages are unique members, so the trailing frame
+    /// index never participates in ordering; it just lets the pick
+    /// return a frame without a page→frame lookup. (Kept as a BTreeSet
+    /// rather than an intrusive list: a touch moves the entry across
+    /// the whole count cohort, which an intrusive list would have to
+    /// walk — O(log n) rebalancing beats an O(cohort) scan here.)
+    index: BTreeSet<(u64, PageNum, FrameIdx)>,
 }
 
 impl EvictionPolicy for FreqPolicy {
@@ -204,31 +342,36 @@ impl EvictionPolicy for FreqPolicy {
         "freq"
     }
 
-    fn on_admit(&mut self, page: PageNum, _now: Cycle, _via_prefetch: bool) {
-        self.counts.insert(page, 1);
-        self.index.insert((1, page));
+    fn on_admit(&mut self, frame: FrameIdx, page: PageNum, _now: Cycle, _via_prefetch: bool) {
+        if self.counts.len() <= frame as usize {
+            self.counts.resize(frame as usize + 1, 0);
+        }
+        self.counts[frame as usize] = 1;
+        self.index.insert((1, page, frame));
     }
 
-    fn on_touch(&mut self, page: PageNum, _prev: Cycle, _now: Cycle) {
-        if let Some(c) = self.counts.get_mut(&page) {
-            self.index.remove(&(*c, page));
-            *c += 1;
-            self.index.insert((*c, page));
+    fn on_touch(&mut self, frame: FrameIdx, page: PageNum, _prev: Cycle, _now: Cycle) {
+        let c = self.counts[frame as usize];
+        if c > 0 {
+            self.index.remove(&(c, page, frame));
+            self.counts[frame as usize] = c + 1;
+            self.index.insert((c + 1, page, frame));
         }
     }
 
-    fn on_remove(&mut self, page: PageNum, _info: &PageInfo) {
-        if let Some(c) = self.counts.remove(&page) {
-            self.index.remove(&(c, page));
+    fn on_remove(&mut self, frame: FrameIdx, page: PageNum, _info: &PageInfo) {
+        let c = self.counts[frame as usize];
+        if c > 0 {
+            self.index.remove(&(c, page, frame));
+            self.counts[frame as usize] = 0;
         }
     }
 
-    fn pick_victim(&mut self, pages: &HashMap<PageNum, PageInfo>, now: Cycle) -> Option<PageNum> {
+    fn pick_victim(&mut self, frames: &[Frame], now: Cycle) -> Option<FrameIdx> {
         self.index
             .iter()
-            .copied()
-            .find(|&(_, p)| evictable_in(pages, p, now))
-            .map(|(_, p)| p)
+            .find(|&&(_, _, f)| frames[f as usize].evictable(now))
+            .map(|&(_, _, f)| f)
     }
 }
 
@@ -237,9 +380,9 @@ impl EvictionPolicy for FreqPolicy {
 #[derive(Debug, Default)]
 pub struct PrefetchAwarePolicy {
     /// Prefetched copies not yet demanded — the preferred victims.
-    unused: BTreeSet<(Cycle, PageNum)>,
+    unused: SortedList,
     /// Demand pages and demanded prefetches, LRU order.
-    lru: BTreeSet<(Cycle, PageNum)>,
+    lru: SortedList,
 }
 
 impl EvictionPolicy for PrefetchAwarePolicy {
@@ -247,37 +390,31 @@ impl EvictionPolicy for PrefetchAwarePolicy {
         "prefetch-aware"
     }
 
-    fn on_admit(&mut self, page: PageNum, now: Cycle, via_prefetch: bool) {
+    fn on_admit(&mut self, frame: FrameIdx, page: PageNum, now: Cycle, via_prefetch: bool) {
         if via_prefetch {
-            self.unused.insert((now, page));
+            self.unused.insert(frame, now, page);
         } else {
-            self.lru.insert((now, page));
+            self.lru.insert(frame, now, page);
         }
     }
 
-    fn on_touch(&mut self, page: PageNum, prev: Cycle, now: Cycle) {
+    fn on_touch(&mut self, frame: FrameIdx, page: PageNum, _prev: Cycle, now: Cycle) {
         // First demand touch of a prefetched copy graduates it out of
         // the preferred-victim set.
-        if !self.unused.remove(&(prev, page)) {
-            self.lru.remove(&(prev, page));
+        if !self.unused.remove(frame) {
+            self.lru.remove(frame);
         }
-        self.lru.insert((now, page));
+        self.lru.insert(frame, now, page);
     }
 
-    fn on_remove(&mut self, page: PageNum, info: &PageInfo) {
-        let key = (info.last_touch, page);
-        if !self.unused.remove(&key) {
-            self.lru.remove(&key);
+    fn on_remove(&mut self, frame: FrameIdx, _page: PageNum, _info: &PageInfo) {
+        if !self.unused.remove(frame) {
+            self.lru.remove(frame);
         }
     }
 
-    fn pick_victim(&mut self, pages: &HashMap<PageNum, PageInfo>, now: Cycle) -> Option<PageNum> {
-        self.unused
-            .iter()
-            .chain(self.lru.iter())
-            .copied()
-            .find(|&(_, p)| evictable_in(pages, p, now))
-            .map(|(_, p)| p)
+    fn pick_victim(&mut self, frames: &[Frame], now: Cycle) -> Option<FrameIdx> {
+        self.unused.pick(frames, now).or_else(|| self.lru.pick(frames, now))
     }
 }
 
@@ -287,7 +424,7 @@ const N_FEATURES: usize = 5;
 const LEARNED_LR: f64 = 0.05;
 
 /// Per-page observation state feeding [`LearnedPolicy`]'s features.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 struct Track {
     last_touch: Cycle,
     touches: u64,
@@ -310,16 +447,20 @@ fn log2_1p(x: u64) -> f64 {
 /// is refined online. After each eviction the policy watches for the
 /// victim's return: a refault within [`REFAULT_HORIZON_CYCLES`]
 /// trains the scorer *down* on that feature vector (the page was
-/// live), staying out trains it *up*. Pure integer/f64 arithmetic over
-/// a `BTreeMap` index, so runs are bit-deterministic for a seed; the
-/// seed is accepted for interface parity but unused (no stochastic
-/// component).
+/// live), staying out trains it *up*. Pure integer/f64 arithmetic with
+/// a page-ordered member index, so runs are bit-deterministic for a
+/// seed; the seed is accepted for interface parity but unused (no
+/// stochastic component).
 #[derive(Debug)]
 pub struct LearnedPolicy {
     w: [f64; N_FEATURES],
+    /// Per-frame observation state (valid while `members` maps the
+    /// frame's page to it).
+    tracks: Vec<Track>,
     /// Page-ordered member index — iterated for victim selection, so
-    /// ties break toward the smallest page deterministically.
-    tracks: BTreeMap<PageNum, Track>,
+    /// ties break toward the smallest page deterministically (the same
+    /// argmax order as the old page-keyed track map).
+    members: BTreeMap<PageNum, FrameIdx>,
     /// Victim just returned by `pick_victim`, consumed by the matching
     /// `on_remove` (features frozen at decision time).
     last_pick: Option<(PageNum, [f64; N_FEATURES], Cycle)>,
@@ -338,7 +479,8 @@ impl LearnedPolicy {
             // long reuse gaps mildly help. Sensible before any
             // outcome has been observed.
             w: [1.0, -0.5, 1.0, 0.25, 0.0],
-            tracks: BTreeMap::new(),
+            tracks: Vec::new(),
+            members: BTreeMap::new(),
             last_pick: None,
             pending: HashMap::new(),
             queue: VecDeque::new(),
@@ -397,21 +539,23 @@ impl EvictionPolicy for LearnedPolicy {
         "learned"
     }
 
-    fn on_admit(&mut self, page: PageNum, now: Cycle, via_prefetch: bool) {
+    fn on_admit(&mut self, frame: FrameIdx, page: PageNum, now: Cycle, via_prefetch: bool) {
         self.settle(now);
         if let Some((evicted_at, x)) = self.pending.remove(&page) {
             if now.saturating_sub(evicted_at) <= REFAULT_HORIZON_CYCLES {
                 self.update(&x, 0.0); // refault inside the horizon: mispredict
             }
         }
-        self.tracks.insert(
-            page,
-            Track { last_touch: now, touches: 1, via_prefetch, used: false, last_gap: 0 },
-        );
+        if self.tracks.len() <= frame as usize {
+            self.tracks.resize(frame as usize + 1, Track::default());
+        }
+        self.tracks[frame as usize] =
+            Track { last_touch: now, touches: 1, via_prefetch, used: false, last_gap: 0 };
+        self.members.insert(page, frame);
     }
 
-    fn on_touch(&mut self, page: PageNum, _prev: Cycle, now: Cycle) {
-        if let Some(t) = self.tracks.get_mut(&page) {
+    fn on_touch(&mut self, frame: FrameIdx, _page: PageNum, _prev: Cycle, now: Cycle) {
+        if let Some(t) = self.tracks.get_mut(frame as usize) {
             t.last_gap = now.saturating_sub(t.last_touch);
             t.last_touch = now;
             t.touches += 1;
@@ -419,8 +563,8 @@ impl EvictionPolicy for LearnedPolicy {
         }
     }
 
-    fn on_remove(&mut self, page: PageNum, _info: &PageInfo) {
-        self.tracks.remove(&page);
+    fn on_remove(&mut self, _frame: FrameIdx, page: PageNum, _info: &PageInfo) {
+        self.members.remove(&page);
         if let Some((picked, x, at)) = self.last_pick.take() {
             if picked == page {
                 self.pending.insert(page, (at, x));
@@ -433,30 +577,34 @@ impl EvictionPolicy for LearnedPolicy {
         }
     }
 
-    fn pick_victim(&mut self, pages: &HashMap<PageNum, PageInfo>, now: Cycle) -> Option<PageNum> {
+    fn pick_victim(&mut self, frames: &[Frame], now: Cycle) -> Option<FrameIdx> {
         let mut best_score = f64::NEG_INFINITY;
-        let mut best: Option<(PageNum, [f64; N_FEATURES])> = None;
-        for (&page, track) in &self.tracks {
-            if !evictable_in(pages, page, now) {
+        let mut best: Option<(PageNum, FrameIdx, [f64; N_FEATURES])> = None;
+        for (&page, &f) in &self.members {
+            if !frames[f as usize].evictable(now) {
                 continue;
             }
-            let x = Self::featurize(track, now);
+            let x = Self::featurize(&self.tracks[f as usize], now);
             let score: f64 = self.w.iter().zip(&x).map(|(w, f)| w * f).sum();
             if score > best_score {
                 best_score = score;
-                best = Some((page, x));
+                best = Some((page, f, x));
             }
         }
-        let (page, x) = best?;
+        let (page, f, x) = best?;
         self.last_pick = Some((page, x, now));
-        Some(page)
+        Some(f)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::device_memory::DeviceMemory;
+    use crate::sim::device_memory::{DeviceMemory, EvictedPage};
+
+    fn pages(ev: &[EvictedPage]) -> Vec<PageNum> {
+        ev.iter().map(|e| e.page).collect()
+    }
 
     #[test]
     fn build_accepts_all_canonical_names_and_rejects_unknown() {
@@ -478,12 +626,12 @@ mod tests {
         assert!(m.admit(2, 1, true, 1).is_empty());
         assert!(m.admit(3, 2, false, 2).is_empty());
         m.touch(1, 3); // LRU order now: 2@1, 3@2, 1@3
-        assert_eq!(m.admit(4, 10, false, 4), vec![2], "page 2 least recent");
+        assert_eq!(pages(m.admit(4, 10, false, 4)), vec![2], "page 2 least recent");
         assert_eq!(m.evicted_unused_prefetches, 1, "2 was an unused prefetch");
         m.touch(3, 5); // order: 1@3, 4@4, 3@5
-        assert_eq!(m.admit(5, 20, false, 6), vec![1]);
+        assert_eq!(pages(m.admit(5, 20, false, 6)), vec![1]);
         // Page 4 is still migrating (arrival 10 > now 7) — skipped.
-        assert_eq!(m.admit(6, 30, false, 7), vec![3]);
+        assert_eq!(pages(m.admit(6, 30, false, 7)), vec![3]);
         assert_eq!(m.evictions, 3);
         assert_eq!(m.evicted_unused_prefetches, 1);
     }
@@ -494,7 +642,7 @@ mod tests {
             let mut m = DeviceMemory::with_policy(2, build("random", seed).unwrap());
             let mut evs = Vec::new();
             for p in 0..8u64 {
-                evs.push(m.admit(p, p, false, p));
+                evs.push(pages(m.admit(p, p, false, p)));
             }
             evs
         };
@@ -512,7 +660,7 @@ mod tests {
         m.touch(10, 2);
         m.touch(10, 3);
         m.touch(20, 4); // counts: 10 → 3, 20 → 2; LRU would evict 10.
-        assert_eq!(m.admit(30, 5, false, 5), vec![20], "least-touched loses");
+        assert_eq!(pages(m.admit(30, 5, false, 5)), vec![20], "least-touched loses");
     }
 
     #[test]
@@ -520,13 +668,13 @@ mod tests {
         let mut m = DeviceMemory::with_policy(2, build("prefetch-aware", 0).unwrap());
         m.admit(1, 0, false, 0); // demand page, oldest — the LRU victim
         m.admit(2, 5, true, 5); // unused prefetch, newer
-        assert_eq!(m.admit(3, 6, false, 6), vec![2], "unused prefetch absorbs the eviction");
+        assert_eq!(pages(m.admit(3, 6, false, 6)), vec![2], "unused prefetch absorbs the eviction");
         // Once demanded, a prefetched page is protected like any other.
         let mut m = DeviceMemory::with_policy(2, build("prefetch-aware", 0).unwrap());
         m.admit(1, 0, false, 0);
         m.admit(2, 5, true, 5);
         m.touch(2, 7); // prefetch used → graduates to the LRU set
-        assert_eq!(m.admit(3, 8, false, 8), vec![1], "plain LRU fallback");
+        assert_eq!(pages(m.admit(3, 8, false, 8)), vec![1], "plain LRU fallback");
     }
 
     /// Recorded-trace pin for the learned policy (mirror of
@@ -542,24 +690,25 @@ mod tests {
         m.touch(1, 3);
         // At now=4: page 2 is an unused prefetch (f2 = 1 → score 1.0);
         // pages 1 and 3 score ≈ −0.052 and ≈ −0.013.
-        assert_eq!(m.admit(4, 10, false, 4), vec![2], "unused prefetch dominates");
+        assert_eq!(pages(m.admit(4, 10, false, 4)), vec![2], "unused prefetch dominates");
         assert_eq!(m.evicted_unused_prefetches, 1);
         m.touch(3, 5);
         // At now=6: page 4 still migrating (arrival 10); page 1's age
         // term (touched at 3) beats page 3's (touched at 5).
-        assert_eq!(m.admit(5, 20, false, 6), vec![1]);
+        assert_eq!(pages(m.admit(5, 20, false, 6)), vec![1]);
         // At now=7 only page 3 is evictable (4 and 5 in flight).
-        assert_eq!(m.admit(6, 30, false, 7), vec![3]);
+        assert_eq!(pages(m.admit(6, 30, false, 7)), vec![3]);
         assert_eq!(m.evictions, 3);
     }
 
     /// The online update: a victim that refaults inside the horizon
     /// pushes its features' weights down; one that stays out pushes
     /// them up. Stale queue entries (page re-evicted after a refault)
-    /// must not train.
+    /// must not train. Drives the raw policy with hand-built frames
+    /// (frame 0 hosts page 10 across its whole lifecycle).
     #[test]
     fn learned_updates_weights_from_refault_outcome() {
-        use crate::sim::device_memory::{PageInfo, PageState};
+        use crate::sim::device_memory::{Frame, PageInfo, PageState};
         let info = |last_touch: Cycle, via_prefetch: bool| PageInfo {
             state: PageState::Resident,
             via_prefetch,
@@ -573,25 +722,25 @@ mod tests {
         let w0 = p.weights();
 
         // Evict an unused prefetch...
-        p.on_admit(10, 0, true);
-        let pages: HashMap<PageNum, PageInfo> = [(10, info(0, true))].into_iter().collect();
-        assert_eq!(p.pick_victim(&pages, 5), Some(10));
-        p.on_remove(10, &pages[&10]);
+        p.on_admit(0, 10, 0, true);
+        let frames = vec![Frame::for_tests(10, info(0, true))];
+        assert_eq!(p.pick_victim(&frames, 5), Some(0));
+        p.on_remove(0, 10, &info(0, true));
         assert_eq!(p.weights(), w0, "no update until the outcome is known");
 
         // ...and see it refault within the horizon: mispredict, the
         // unused-prefetch weight drops.
-        p.on_admit(10, 100, false);
+        p.on_admit(0, 10, 100, false);
         let w1 = p.weights();
         assert!(w1[2] < w0[2], "refault trains the driving feature down");
 
         // Evict it again (now a demand page), then let the horizon
         // expire: good eviction, the bias weight rises. The stale
         // first queue entry for page 10 must be skipped.
-        let pages: HashMap<PageNum, PageInfo> = [(10, info(100, false))].into_iter().collect();
-        assert_eq!(p.pick_victim(&pages, 101), Some(10));
-        p.on_remove(10, &pages[&10]);
-        p.on_admit(20, 101 + REFAULT_HORIZON_CYCLES + 1, false);
+        let frames = vec![Frame::for_tests(10, info(100, false))];
+        assert_eq!(p.pick_victim(&frames, 101), Some(0));
+        p.on_remove(0, 10, &info(100, false));
+        p.on_admit(1, 20, 101 + REFAULT_HORIZON_CYCLES + 1, false);
         assert!(p.weights()[4] > w1[4], "surviving the horizon trains toward evict");
     }
 

@@ -3,9 +3,12 @@
 //! A TLB hit skips the 100-cycle page-table walk (Table 9). The TLB
 //! caches translations for *resident* pages only; a far-fault
 //! invalidates nothing (the entry never existed) and an eviction
-//! invalidates the page's entry in every TLB, as the driver shoots
-//! down stale translations on migration.
+//! shoots down the page's stale translations. Eviction-time shootdown
+//! is masked: the engine records which SMs filled an entry for each
+//! frame ([`SmSet`], DESIGN.md §12), so [`Gmmu::shootdown_masked`]
+//! visits only those TLBs instead of scanning every SM per eviction.
 
+use crate::sim::device_memory::SmSet;
 use crate::types::{Cycle, PageNum};
 
 /// A small fully-associative LRU TLB (64 entries by default — linear
@@ -38,10 +41,17 @@ impl Tlb {
 
     /// Install a translation (after a successful walk of a resident
     /// page), evicting the LRU entry if full.
+    ///
+    /// Caller contract: the page is **not** already present. A fill
+    /// only ever follows a [`Tlb::lookup`] miss in the same event, so
+    /// absence is already proven — re-scanning `entries` here (as this
+    /// method once did) paid a second full linear pass on every fill
+    /// for nothing. Enforced in debug builds.
     pub fn insert(&mut self, page: PageNum, now: Cycle) {
-        if self.entries.iter().any(|e| e.0 == page) {
-            return;
-        }
+        debug_assert!(
+            !self.entries.iter().any(|e| e.0 == page),
+            "TLB fill of already-present page {page} — a fill must follow a lookup miss"
+        );
         if self.entries.len() >= self.capacity {
             let (idx, _) =
                 self.entries.iter().enumerate().min_by_key(|(_, e)| e.1).expect("non-empty");
@@ -99,6 +109,23 @@ impl Gmmu {
         }
     }
 
+    /// Targeted shootdown: invalidate only the SMs in `mask` — the
+    /// frame's recorded fill set, a superset of the TLBs actually
+    /// holding the page, so every skipped SM would have been a no-op
+    /// `retain` scan. Falls back to the full sweep when the mask
+    /// saturated (SM ids past the mask width).
+    pub fn shootdown_masked(&mut self, page: PageNum, mask: &SmSet) {
+        if mask.saturated() {
+            self.shootdown(page);
+            return;
+        }
+        for sm in mask.sms() {
+            if let Some(t) = self.tlbs.get_mut(sm) {
+                t.invalidate(page);
+            }
+        }
+    }
+
     pub fn hits(&self) -> u64 {
         self.tlbs.iter().map(|t| t.hits).sum()
     }
@@ -124,12 +151,54 @@ mod tests {
         assert!(t.lookup(3, 6));
     }
 
+    /// Victim choice is by numerically-smallest stamp (`min_by_key`
+    /// takes the *first* minimum in scan order on ties) and removal is
+    /// `swap_remove`. Pinned under "wraparound" stamps — a tiny stamp
+    /// after huge ones is simply oldest — so the scan-free insert path
+    /// can rely on the exact ordering staying put.
     #[test]
-    fn duplicate_insert_is_noop() {
+    fn lru_victim_order_pinned_under_wraparound_stamps() {
+        let mut t = Tlb::new(3);
+        t.insert(1, u64::MAX - 1); // late-cycle stamps...
+        t.insert(2, u64::MAX);
+        t.insert(3, 5); // ...then a numerically tiny ("wrapped") one
+        t.insert(4, 7);
+        assert!(!t.lookup(3, 8), "numerically-smallest stamp is the victim");
+        assert!(t.lookup(1, 9));
+        assert!(t.lookup(2, 10));
+        assert!(t.lookup(4, 11));
+        // Tie on the minimum stamp: the first entry in scan order loses.
         let mut t = Tlb::new(2);
-        t.insert(1, 0);
-        t.insert(1, 5);
-        assert_eq!(t.len(), 1);
+        t.insert(10, 3);
+        t.insert(20, 3);
+        t.insert(30, 4);
+        assert!(!t.lookup(10, 5), "first minimum in scan order evicted");
+        assert!(t.lookup(20, 6));
+        assert!(t.lookup(30, 7));
+    }
+
+    #[test]
+    fn masked_shootdown_invalidates_only_listed_sms() {
+        let mut g = Gmmu::new(3, 4);
+        for sm in 0..3 {
+            g.fill(sm, 9, 0);
+        }
+        let mut mask = SmSet::default();
+        mask.insert(0);
+        mask.insert(2);
+        g.shootdown_masked(9, &mask);
+        assert_eq!(g.translate(0, 9, 1, 100), 100, "masked SM invalidated");
+        assert_eq!(g.translate(1, 9, 1, 100), 0, "unlisted SM keeps its entry");
+        assert_eq!(g.translate(2, 9, 1, 100), 100);
+        // A saturated mask falls back to the full sweep.
+        let mut g = Gmmu::new(2, 4);
+        g.fill(0, 9, 0);
+        g.fill(1, 9, 0);
+        let mut sat = SmSet::default();
+        sat.insert(200); // past the mask width → saturates
+        g.shootdown_masked(9, &sat);
+        assert_eq!(g.translate(0, 9, 1, 100), 100);
+        assert_eq!(g.translate(1, 9, 1, 100), 100);
     }
 
     #[test]

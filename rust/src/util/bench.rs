@@ -2,8 +2,19 @@
 //! the offline build). Warms up, runs timed batches until a minimum
 //! measurement window is reached, and reports mean/min wall time with
 //! throughput.
+//!
+//! Results can be persisted to a `bench_sim/v1` JSON artifact
+//! ([`write_bench_sim`]): one file holding every suite's cases plus
+//! the `repro perf` summary, merged read-modify-write so the cargo
+//! benches and the perf subcommand share `BENCH_sim.json`.
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+/// Schema tag of the shared benchmark artifact.
+pub const BENCH_SIM_SCHEMA: &str = "bench_sim/v1";
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -117,6 +128,51 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Load an existing `bench_sim/v1` artifact as a mutable object map;
+/// anything unreadable or off-schema starts a fresh document.
+fn load_bench_sim(path: &Path) -> BTreeMap<String, Json> {
+    match Json::parse_file(path) {
+        Ok(Json::Obj(m)) if m.get("schema").and_then(Json::as_str) == Some(BENCH_SIM_SCHEMA) => m,
+        _ => BTreeMap::new(),
+    }
+}
+
+/// Insert or replace one top-level section (e.g. `perf`) of the
+/// artifact, preserving every other section on disk.
+pub fn merge_bench_sim_section(path: &Path, key: &str, value: Json) -> anyhow::Result<()> {
+    let mut root = load_bench_sim(path);
+    root.insert("schema".into(), Json::str(BENCH_SIM_SCHEMA));
+    root.insert(key.into(), value);
+    Json::Obj(root).write_file(path)
+}
+
+/// Persist one suite's results under `suites.<suite>.cases`,
+/// read-modify-write: other suites (and the `perf` section) written by
+/// earlier invocations survive.
+pub fn write_bench_sim(path: &Path, suite: &str, results: &[BenchResult]) -> anyhow::Result<()> {
+    let mut root = load_bench_sim(path);
+    root.insert("schema".into(), Json::str(BENCH_SIM_SCHEMA));
+    let mut suites = match root.remove("suites") {
+        Some(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    let cases = Json::arr(results.iter().map(|r| {
+        let per_sec =
+            if r.mean_ns > 0.0 { r.items as f64 / (r.mean_ns / 1e9) } else { 0.0 };
+        Json::obj(vec![
+            ("name", Json::str(&r.name)),
+            ("iters", Json::num(r.iters as f64)),
+            ("mean_ns", Json::num(r.mean_ns)),
+            ("min_ns", Json::num(r.min_ns)),
+            ("items", Json::num(r.items as f64)),
+            ("items_per_sec", Json::num(per_sec)),
+        ])
+    }));
+    suites.insert(suite.into(), Json::obj(vec![("cases", cases)]));
+    root.insert("suites".into(), Json::Obj(suites));
+    Json::Obj(root).write_file(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +192,34 @@ mod tests {
         assert!(fmt_ns(12_000.0).contains("µs"));
         assert!(fmt_ns(12_000_000.0).contains("ms"));
         assert!(fmt_ns(2e9).contains(" s"));
+    }
+
+    #[test]
+    fn bench_sim_merge_preserves_other_suites_and_sections() {
+        let path =
+            std::env::temp_dir().join(format!("bench_sim_merge_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let r = BenchResult {
+            name: "case-a".into(),
+            iters: 10,
+            mean_ns: 100.0,
+            min_ns: 90.0,
+            items: 5,
+        };
+        write_bench_sim(&path, "sim_core", std::slice::from_ref(&r)).unwrap();
+        merge_bench_sim_section(&path, "perf", Json::obj(vec![("x", Json::num(1.0))])).unwrap();
+        write_bench_sim(&path, "prefetchers", &[r]).unwrap();
+        let doc = Json::parse_file(&path).unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(BENCH_SIM_SCHEMA));
+        let suites = doc.get("suites").unwrap();
+        for suite in ["sim_core", "prefetchers"] {
+            let cases = suites.get(suite).unwrap().get("cases").and_then(Json::as_arr).unwrap();
+            assert_eq!(cases.len(), 1);
+            assert_eq!(cases[0].get("name").and_then(Json::as_str), Some("case-a"));
+            let per_sec = cases[0].get("items_per_sec").and_then(Json::as_f64).unwrap();
+            assert!((per_sec - 5.0e7).abs() < 1.0, "5 items / 100ns = 5e7/s: {per_sec}");
+        }
+        assert!(doc.get("perf").is_some(), "perf section survives suite rewrites");
+        let _ = std::fs::remove_file(&path);
     }
 }

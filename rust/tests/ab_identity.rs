@@ -1,0 +1,196 @@
+//! A/B byte-identity gate for the hot-path refactor (DESIGN.md §12).
+//!
+//! The dense-frame-table / allocation-free fault loop rewrite promises
+//! **byte-identical metrics** — not "close", identical. This suite
+//! pins that promise to committed fixtures: one dense (`addvectors`)
+//! and one irregular (`spmv`) workload, at oversubscription ratios
+//! {1.0, 0.25}, across **all five** eviction policies, with the tree
+//! prefetcher so the prefetch-admit and unused-prefetch-eviction paths
+//! are on the line too. Every integer counter the simulator emits must
+//! match `ci/ab_fixtures.json` exactly.
+//!
+//! The fixture follows the repo's bootstrap convention (`repro
+//! golden`): while `"bootstrap": true` (no toolchain where the gate
+//! was authored), the grid instead runs **twice** and both runs must
+//! agree bit-for-bit — then the measured candidates are printed.
+//! Pin real numbers with `UVM_UPDATE_AB=1 cargo test -q ab_identity`
+//! and commit the diff; any later mismatch means the refactor changed
+//! observable behavior.
+
+use std::path::PathBuf;
+use uvm_prefetch::eval::runner::RunOptions;
+use uvm_prefetch::eval::sweep::CellSpec;
+use uvm_prefetch::sim::eviction::ALL_EVICTION_POLICIES;
+use uvm_prefetch::sim::Metrics;
+use uvm_prefetch::util::Json;
+
+const AB_SCHEMA: &str = "ab_fixtures/v1";
+const BENCHMARKS: &[&str] = &["addvectors", "spmv"];
+const RATIOS: &[f64] = &[1.0, 0.25];
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../ci/ab_fixtures.json"))
+}
+
+/// The tiny oversub regime (mirrors the oversub module's own tests):
+/// small enough for CI, big enough that ratio 0.25 churns evictions.
+fn tiny() -> RunOptions {
+    RunOptions { scale: 0.05, max_instructions: 30_000, ..Default::default() }
+}
+
+/// The pinned grid, in a stable order: benchmark-fastest under
+/// eviction under ratio (the oversub sweep's axis nesting).
+fn ab_cells() -> Vec<(String, CellSpec)> {
+    let opts = tiny();
+    let mut cells = Vec::new();
+    for &ratio in RATIOS {
+        for ev in ALL_EVICTION_POLICIES {
+            for b in BENCHMARKS {
+                let spec = CellSpec::new(b, "tree", &opts).with_oversub(ratio, ev);
+                cells.push((format!("{b}/tree/r{ratio:.2}/{ev}"), spec));
+            }
+        }
+    }
+    cells
+}
+
+/// Every integer counter of [`Metrics`], by stable name — the full
+/// observable surface minus the float derivations (which are pure
+/// functions of these) and the PCIe series (summarized by length and
+/// byte totals, which pin it transitively since bucket boundaries are
+/// deterministic in the cycle counters).
+fn counters(m: &Metrics) -> Vec<(&'static str, u64)> {
+    vec![
+        ("instructions", m.instructions),
+        ("cycles", m.cycles),
+        ("mem_accesses", m.mem_accesses),
+        ("page_hits", m.page_hits),
+        ("coalesced", m.coalesced),
+        ("far_faults", m.far_faults),
+        ("tlb_hits", m.tlb_hits),
+        ("tlb_misses", m.tlb_misses),
+        ("prefetch_transfers", m.prefetch_transfers),
+        ("prefetch_used", m.prefetch_used),
+        ("bytes_demand", m.bytes_demand),
+        ("bytes_prefetch", m.bytes_prefetch),
+        ("pcie_series_len", m.pcie_series.len() as u64),
+        ("pcie_series_bytes", m.pcie_series.iter().map(|&(_, b)| b).sum()),
+        ("evictions", m.evictions),
+        ("evicted_unused_prefetches", m.evicted_unused_prefetches),
+        ("refaults", m.refaults),
+        ("capacity_pages", m.capacity_pages),
+        ("footprint_pages", m.footprint_pages),
+        ("discards", m.discards),
+        ("lazy_discard_reclaims", m.lazy_discard_reclaims),
+        ("advised_pages", m.advised_pages),
+    ]
+}
+
+fn measure() -> Vec<(String, Metrics)> {
+    ab_cells()
+        .into_iter()
+        .map(|(key, spec)| {
+            let m = spec.run().unwrap_or_else(|e| panic!("{key}: cell failed: {e}"));
+            (key, m)
+        })
+        .collect()
+}
+
+fn fixture_json(measured: &[(String, Metrics)]) -> Json {
+    let cells: std::collections::BTreeMap<String, Json> = measured
+        .iter()
+        .map(|(key, m)| {
+            let fields =
+                counters(m).into_iter().map(|(k, v)| (k, Json::num(v as f64))).collect();
+            (key.clone(), Json::obj(fields))
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::str(AB_SCHEMA)),
+        ("bootstrap", Json::Bool(false)),
+        ("cells", Json::Obj(cells)),
+    ])
+}
+
+#[test]
+fn grid_shape_is_pinned() {
+    let cells = ab_cells();
+    // 2 ratios × 5 eviction policies × 2 benchmarks.
+    assert_eq!(cells.len(), 20);
+    assert_eq!(cells[0].0, "addvectors/tree/r1.00/lru");
+    assert_eq!(cells.last().unwrap().0.as_str(), "spmv/tree/r0.25/learned");
+    // u64 counters survive the f64 JSON round-trip only below 2^53;
+    // tiny cells sit far under that, but keep the guard explicit.
+    for (key, _) in &cells {
+        assert!(key.contains("/tree/"), "grid runs the tree prefetcher everywhere");
+    }
+}
+
+#[test]
+fn metrics_match_committed_fixtures_byte_for_byte() {
+    let path = fixture_path();
+    let measured = measure();
+
+    if std::env::var("UVM_UPDATE_AB").map(|v| v == "1").unwrap_or(false) {
+        fixture_json(&measured).write_file(&path).expect("write ab fixtures");
+        println!("ab_identity: pinned {} cells to {}", measured.len(), path.display());
+        return;
+    }
+
+    let doc = match Json::parse_file(&path) {
+        Ok(d) => d,
+        Err(e) => {
+            panic!("{}: unreadable A/B fixture ({e}); commit one (see module docs)", path.display())
+        }
+    };
+    assert_eq!(
+        doc.get("schema").and_then(Json::as_str),
+        Some(AB_SCHEMA),
+        "{}: wrong fixture schema",
+        path.display()
+    );
+
+    if doc.get("bootstrap").and_then(Json::as_bool).unwrap_or(false) {
+        // No pinned numbers yet: gate determinism instead (the same
+        // double-run contract the refactor must preserve), and print
+        // the candidates a maintainer would commit.
+        let second = measure();
+        for ((key, a), (_, b)) in measured.iter().zip(&second) {
+            assert_eq!(a, b, "{key}: nondeterministic across identical runs");
+        }
+        println!(
+            "ab_identity: bootstrap determinism gate OK ({} cells). Candidates:",
+            measured.len()
+        );
+        for (key, m) in &measured {
+            let cs: Vec<String> =
+                counters(m).into_iter().map(|(k, v)| format!("{k}={v}")).collect();
+            println!("  {key}: {}", cs.join(" "));
+        }
+        println!("ab_identity: pin with `UVM_UPDATE_AB=1 cargo test -q ab_identity`");
+        return;
+    }
+
+    let cells = doc.get("cells").expect("fixture has cells");
+    let mut mismatches = Vec::new();
+    for (key, m) in &measured {
+        let Some(golden) = cells.get(key) else {
+            mismatches.push(format!("{key}: missing from fixtures (re-pin with UVM_UPDATE_AB=1)"));
+            continue;
+        };
+        for (field, v) in counters(m) {
+            match golden.get(field).and_then(Json::as_f64) {
+                Some(g) if g == v as f64 => {}
+                Some(g) => mismatches
+                    .push(format!("{key}: {field} = {v}, fixture {g} — NOT byte-identical")),
+                None => mismatches.push(format!("{key}: fixture field '{field}' missing")),
+            }
+        }
+    }
+    assert!(
+        mismatches.is_empty(),
+        "A/B identity gate FAILED — {} mismatch(es):\n  {}",
+        mismatches.len(),
+        mismatches.join("\n  ")
+    );
+}

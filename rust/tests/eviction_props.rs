@@ -22,11 +22,11 @@
 //!    discarded (or a lazy mark is reclaimed) it stays gone until a
 //!    fresh admit; no hook sequence brings a freed frame back.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use uvm_prefetch::config::SimConfig;
-use uvm_prefetch::sim::device_memory::{DeviceMemory, PageInfo};
+use uvm_prefetch::sim::device_memory::{DeviceMemory, Frame, FrameIdx, PageInfo};
 use uvm_prefetch::sim::eviction::{self, EvictionPolicy, ALL_EVICTION_POLICIES};
 use uvm_prefetch::types::{page_of, Cycle, PageNum};
 use uvm_prefetch::workloads::WorkloadRegistry;
@@ -97,27 +97,27 @@ impl EvictionPolicy for Instrumented {
         self.inner.name()
     }
 
-    fn on_admit(&mut self, page: PageNum, now: Cycle, via_prefetch: bool) {
+    fn on_admit(&mut self, frame: FrameIdx, page: PageNum, now: Cycle, via_prefetch: bool) {
         self.counters.admits.fetch_add(1, Ordering::Relaxed);
-        self.inner.on_admit(page, now, via_prefetch);
+        self.inner.on_admit(frame, page, now, via_prefetch);
     }
 
-    fn on_touch(&mut self, page: PageNum, prev: Cycle, now: Cycle) {
-        self.inner.on_touch(page, prev, now);
+    fn on_touch(&mut self, frame: FrameIdx, page: PageNum, prev: Cycle, now: Cycle) {
+        self.inner.on_touch(frame, page, prev, now);
     }
 
-    fn on_remove(&mut self, page: PageNum, info: &PageInfo) {
+    fn on_remove(&mut self, frame: FrameIdx, page: PageNum, info: &PageInfo) {
         self.counters.removes.fetch_add(1, Ordering::Relaxed);
-        self.inner.on_remove(page, info);
+        self.inner.on_remove(frame, page, info);
     }
 
-    fn pick_victim(&mut self, pages: &HashMap<PageNum, PageInfo>, now: Cycle) -> Option<PageNum> {
-        let v = self.inner.pick_victim(pages, now);
-        if let Some(p) = v {
+    fn pick_victim(&mut self, frames: &[Frame], now: Cycle) -> Option<FrameIdx> {
+        let v = self.inner.pick_victim(frames, now);
+        if let Some(f) = v {
             self.counters.picks.fetch_add(1, Ordering::Relaxed);
             assert!(
-                pages.get(&p).is_some_and(|i| i.evictable(now)),
-                "{}: picked victim {p} that is not evictable now",
+                frames.get(f as usize).is_some_and(|fr| fr.evictable(now)),
+                "{}: picked victim frame {f} that is not evictable now",
                 self.inner.name()
             );
         }
@@ -157,7 +157,8 @@ fn drive(policy: &str, stream: &[PageNum], capacity: u64) -> DriveLog {
         } else {
             assert!(!model.contains(&p), "{policy}: page {p} vanished without an eviction");
             let arrival = if i % 7 == 0 { now + 3 } else { now };
-            let out = mem.admit(p, arrival, i % 4 == 0, now);
+            let out: Vec<PageNum> =
+                mem.admit(p, arrival, i % 4 == 0, now).iter().map(|e| e.page).collect();
             for &e in &out {
                 assert!(model.remove(&e), "{policy}: evicted page {e} was not resident");
             }
@@ -201,7 +202,7 @@ fn drive_with_discards(policy: &str, stream: &[PageNum], capacity: u64) {
             mem.touch(p, now);
         } else {
             assert!(!model.contains(&p), "{policy}: page {p} vanished without an eviction");
-            let out = mem.admit(p, now, false, now);
+            let out: Vec<PageNum> = mem.admit(p, now, false, now).iter().map(|e| e.page).collect();
             for &e in &out {
                 assert!(model.remove(&e), "{policy}: evicted/reclaimed page {e} not resident");
             }
@@ -212,7 +213,7 @@ fn drive_with_discards(policy: &str, stream: &[PageNum], capacity: u64) {
         if i % 5 == 0 {
             if let Some(&target) = model.first() {
                 if i % 2 == 0 {
-                    if mem.discard(target, now) {
+                    if mem.discard(target, now).is_some() {
                         model.remove(&target);
                         assert!(
                             mem.state(target, now).is_none(),
