@@ -5,6 +5,7 @@
 #   make lint          rustfmt check + clippy -D warnings + check --all-targets
 #   make check         cargo check --all-targets --release (benches/examples)
 #   make eval-smoke    small parallel all-benchmark sweep → BENCH_eval.json
+#   make inspect-smoke instrumented simulate + repro inspect → BENCH_telemetry.json
 #   make trace-smoke   ingest ci/sample_trace.txt + sweep one trace cell
 #   make oversub-smoke small oversubscription sweep → BENCH_oversub.json
 #   make oversub-learned-smoke  learned-vs-lru eviction at severe
@@ -33,7 +34,7 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test lint fmt clippy check doc eval-smoke trace-smoke oversub-smoke oversub-learned-smoke serve-smoke serve-smoke-fast kernel-bench perf perf-smoke train train-transformer analyze analyze-smoke model-smoke golden-check golden-update eval oversub artifacts clean
+.PHONY: build test lint fmt clippy check doc eval-smoke inspect-smoke trace-smoke oversub-smoke oversub-learned-smoke serve-smoke serve-smoke-fast kernel-bench perf perf-smoke train train-transformer analyze analyze-smoke model-smoke golden-check golden-update eval oversub artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -66,6 +67,18 @@ doc:
 eval-smoke:
 	$(CARGO) run --release --bin repro -- eval summary --no-pjrt \
 		--scale 0.25 --max-instructions 200000 --out results-smoke
+
+# Telemetry smoke (DESIGN.md §13): one instrumented oversubscribed
+# simulate writes the span/rollup file, then `repro inspect` renders it
+# and writes BENCH_telemetry.json — the inspect cross-checks (outcome
+# reconciliation, hit-rate series integration) are the assertions.
+inspect-smoke:
+	$(CARGO) run --release --bin repro -- simulate --benchmark spmv \
+		--prefetcher tree --oversubscribe 0.25 --scale 0.1 \
+		--max-instructions 200000 \
+		--telemetry results-smoke/telemetry.json
+	$(CARGO) run --release --bin repro -- inspect \
+		results-smoke/telemetry.json --out results-smoke
 
 # Trace-ingestion smoke (CI): ingest the checked-in sample trace, list
 # it, and sweep one `trace:` cell through the summary grid — the cells
@@ -205,4 +218,5 @@ clean:
 	$(CARGO) clean
 	rm -rf results results-smoke results-nightly traces \
 		BENCH_eval.json BENCH_oversub.json BENCH_serve.json \
-		BENCH_compare.json BENCH_gemm.json BENCH_sim.json
+		BENCH_compare.json BENCH_gemm.json BENCH_sim.json \
+		BENCH_telemetry.json

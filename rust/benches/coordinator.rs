@@ -56,9 +56,14 @@ fn main() {
         let w = Window { tokens: vec![FeatTok { pc_id: 0, page_id: 0, delta_id: 0 }; 30] };
         let mut flushed = 0usize;
         for i in 0..10_000u64 {
-            if let Some(batch) =
-                bt.push(PendingRequest { window: w.clone(), anchor_page: i, enqueued_at: i })
-            {
+            let req = PendingRequest {
+                window: w.clone(),
+                anchor_page: i,
+                enqueued_at: i,
+                cluster: 0,
+                pc: 0,
+            };
+            if let Some(batch) = bt.push(req) {
                 flushed += batch.len();
             }
         }

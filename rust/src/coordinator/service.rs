@@ -211,6 +211,13 @@ impl CoordinatorService {
                 .spawn(move || {
                     while let Ok(TimedFault { ev, enqueued }) = rx.recv() {
                         CoordinatorStats::inc(&st.faults, 1);
+                        if ev.miss {
+                            // Score the tenant's recent predictions
+                            // against the realized fault stream — the
+                            // accuracy-over-time series in the metrics
+                            // exporter (DESIGN.md §13).
+                            st.tenant(ev.tenant).note_fault_page(ev.page);
+                        }
                         let out = router.route(&ev);
                         CoordinatorStats::inc(&st.block_prefetches, out.block.len() as u64);
                         // A dead command channel ends the shard, but
@@ -268,6 +275,7 @@ impl CoordinatorService {
                             CoordinatorStats::inc(&st.bypasses, 1);
                             let c = PrefetchCommand::Predicted { tenant: ev.tenant, page };
                             if !dead && cmd.send(c).is_ok() {
+                                st.tenant(ev.tenant).note_predicted_page(page);
                                 st.record_command(
                                     ev.tenant,
                                     CommandKind::Predicted,
@@ -345,6 +353,8 @@ impl CoordinatorService {
                                         page: target as PageNum,
                                     };
                                     if !dead && cmd_tx.send(c).is_ok() {
+                                        st.tenant(req.tenant)
+                                            .note_predicted_page(target as PageNum);
                                         st.record_command(
                                             req.tenant,
                                             CommandKind::Predicted,

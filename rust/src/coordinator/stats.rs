@@ -9,9 +9,18 @@
 //! instant its command is handed to the command channel — and recorded
 //! both aggregate and per tenant.
 
-use crate::types::TenantId;
+use crate::types::{PageNum, TenantId};
 use crate::util::{AtomicHistogram, HistSummary};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Depth of the per-tenant recent-prediction ring that scores
+/// predictions against subsequent faults. Deep enough to cover the
+/// command pipeline between a `Predicted` emission and the tenant's
+/// next few faults; a prediction older than this is counted as a miss
+/// by omission (accuracy is a lower bound, like `dropped_commands`).
+const RECENT_PRED_CAP: usize = 64;
 
 /// Which command a shard delivered — the per-tenant counter it bumps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,8 +41,41 @@ pub struct TenantStats {
     pub predicted: AtomicU64,
     pub advises: AtomicU64,
     pub discards: AtomicU64,
+    /// `Predicted` pages later demanded by this tenant's fault stream
+    /// (scored through the recent-prediction ring) — the live accuracy
+    /// numerator the metrics exporter reports over time.
+    pub pred_hits: AtomicU64,
     /// End-to-end fault→command latency, microseconds.
     pub latency_us: AtomicHistogram,
+    /// Ring of recently predicted pages awaiting a matching fault.
+    /// A `Mutex` off the per-sample hot path: it is touched once per
+    /// `Predicted` command / per fault, never per access, and shards
+    /// only contend on their own tenant's ring.
+    recent_pred: Mutex<VecDeque<PageNum>>,
+}
+
+impl TenantStats {
+    /// Note a page the coordinator just told this tenant to prefetch.
+    pub fn note_predicted_page(&self, page: PageNum) {
+        let mut ring = self.recent_pred.lock().expect("recent_pred lock");
+        if ring.len() == RECENT_PRED_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(page);
+    }
+
+    /// Score an incoming fault against the recent predictions: a match
+    /// consumes the ring entry and counts a prediction hit.
+    pub fn note_fault_page(&self, page: PageNum) -> bool {
+        let mut ring = self.recent_pred.lock().expect("recent_pred lock");
+        if let Some(i) = ring.iter().position(|&p| p == page) {
+            ring.remove(i);
+            drop(ring);
+            self.pred_hits.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
 }
 
 #[derive(Debug)]
@@ -205,6 +247,22 @@ mod tests {
         assert_eq!(t.commands.load(Ordering::Relaxed), 3, "all kinds count as commands");
         assert_eq!(t.migrates.load(Ordering::Relaxed), 0);
         assert_eq!(t.predicted.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn prediction_hit_ring_scores_and_caps() {
+        let s = CoordinatorStats::with_tenants(1);
+        let t = s.tenant(0);
+        t.note_predicted_page(5);
+        assert!(t.note_fault_page(5), "predicted page faulting scores a hit");
+        assert!(!t.note_fault_page(5), "a hit consumes the ring entry");
+        assert_eq!(t.pred_hits.load(Ordering::Relaxed), 1);
+        // Overflow evicts the oldest prediction (lower-bound accuracy).
+        for p in 0..(RECENT_PRED_CAP as u64 + 1) {
+            t.note_predicted_page(p);
+        }
+        assert!(!t.note_fault_page(0), "oldest entry displaced at capacity");
+        assert!(t.note_fault_page(RECENT_PRED_CAP as u64));
     }
 
     #[test]

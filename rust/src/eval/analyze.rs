@@ -83,6 +83,27 @@ pub struct ModelArm {
     pub quant: Vec<QuantError>,
 }
 
+/// One bucket of the offline prediction post-mortem: held-out windows
+/// grouped by their newest token's PC id, with each arm's top-1 over
+/// the group. Large gaps localize *where* the cheap model loses (or
+/// matches) the transformer — the offline twin of the simulator-side
+/// telemetry post-mortem, which scores per (cluster, PC bucket) online
+/// (DESIGN.md §13).
+#[derive(Debug, Clone)]
+pub struct PostmortemBucket {
+    pub pc_id: i32,
+    pub n: usize,
+    pub native_top1: f64,
+    pub transformer_top1: f64,
+}
+
+impl PostmortemBucket {
+    /// transformer − native held-out top-1 over this bucket.
+    pub fn gap(&self) -> f64 {
+        self.transformer_top1 - self.native_top1
+    }
+}
+
 /// One attention head's profile over the held-out sample: how spread
 /// its attention is (entropy, in nats — `ln(seq_len)` = uniform) and
 /// where it looks (mean attention mass per history slot from the
@@ -113,6 +134,8 @@ pub struct AnalyzeReport {
     /// transformer ÷ native — the paper's cost-gap headline numbers.
     pub params_ratio: f64,
     pub flops_ratio: f64,
+    /// Per-PC accuracy buckets, most divergent first.
+    pub postmortem: Vec<PostmortemBucket>,
     pub heads: Vec<HeadProfile>,
     /// Held-out windows the attention statistics averaged over.
     pub maps_windows: usize,
@@ -128,12 +151,14 @@ pub fn analyze(opts: &AnalyzeOptions) -> Result<AnalyzeReport> {
     let stride_top1 = train::stride_top1(&vocab, t.history_len, &eval_set);
     std::fs::create_dir_all(&opts.out)?;
 
-    let (native_model, native) = fit_arm(opts, &vocab, &train_set, &eval_set, ModelArch::Native)?;
+    let (native_model, native, native_preds) =
+        fit_arm(opts, &vocab, &train_set, &eval_set, ModelArch::Native)?;
     drop(native_model);
-    let (trans_model, transformer) =
+    let (trans_model, transformer, trans_preds) =
         fit_arm(opts, &vocab, &train_set, &eval_set, ModelArch::Transformer)?;
     let tm = trans_model.as_transformer().expect("transformer arm yields a transformer");
     let (heads, maps_windows) = attention_profiles(tm, &eval_set, opts.max_maps);
+    let postmortem = prediction_postmortem(&eval_set, &native_preds, &trans_preds);
 
     let report = AnalyzeReport {
         benchmark: t.benchmark.clone(),
@@ -148,6 +173,7 @@ pub fn analyze(opts: &AnalyzeOptions) -> Result<AnalyzeReport> {
             / native.flops_per_inference.max(1) as f64,
         native,
         transformer,
+        postmortem,
         heads,
         maps_windows,
     };
@@ -167,7 +193,7 @@ fn fit_arm(
     train_set: &[LabelledWindow],
     eval_set: &[LabelledWindow],
     arch: ModelArch,
-) -> Result<(TrainedModel, ModelArm)> {
+) -> Result<(TrainedModel, ModelArm, Vec<u32>)> {
     let mut topts = opts.train.clone();
     topts.arch = arch;
     let t0 = Instant::now();
@@ -205,7 +231,45 @@ fn fit_arm(
         infer_us_per_window,
         quant,
     };
-    Ok((model, arm))
+    Ok((model, arm, preds))
+}
+
+/// Group the held-out split by each window's newest-token PC id and
+/// score both arms' predictions per group; buckets come back most
+/// divergent first (ties broken by PC id, so the order is
+/// deterministic for a fixed seed).
+fn prediction_postmortem(
+    eval_set: &[LabelledWindow],
+    native: &[u32],
+    transformer: &[u32],
+) -> Vec<PostmortemBucket> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<i32, (usize, usize, usize)> = BTreeMap::new();
+    for (i, lw) in eval_set.iter().enumerate() {
+        let pc = lw.window.tokens.last().map(|t| t.pc_id).unwrap_or(-1);
+        let label = lw.label.max(0) as u32;
+        let e = groups.entry(pc).or_default();
+        e.0 += 1;
+        e.1 += (native.get(i) == Some(&label)) as usize;
+        e.2 += (transformer.get(i) == Some(&label)) as usize;
+    }
+    let mut out: Vec<PostmortemBucket> = groups
+        .into_iter()
+        .map(|(pc_id, (n, native_hits, trans_hits))| PostmortemBucket {
+            pc_id,
+            n,
+            native_top1: native_hits as f64 / n.max(1) as f64,
+            transformer_top1: trans_hits as f64 / n.max(1) as f64,
+        })
+        .collect();
+    out.sort_by(|a, b| {
+        b.gap()
+            .abs()
+            .partial_cmp(&a.gap().abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.pc_id.cmp(&b.pc_id))
+    });
+    out
 }
 
 /// Held-out top-1 of the int4 checkpoint: the native arm serves the
@@ -355,6 +419,18 @@ impl AnalyzeReport {
             ("transformer", arm_json(&self.transformer)),
             ("params_ratio", Json::Num(self.params_ratio)),
             ("flops_ratio", Json::Num(self.flops_ratio)),
+            (
+                "postmortem",
+                Json::arr(self.postmortem.iter().map(|b| {
+                    Json::obj(vec![
+                        ("pc_id", Json::Num(b.pc_id as f64)),
+                        ("n", Json::Num(b.n as f64)),
+                        ("native_top1", Json::Num(b.native_top1)),
+                        ("transformer_top1", Json::Num(b.transformer_top1)),
+                        ("gap", Json::Num(b.gap())),
+                    ])
+                })),
+            ),
             ("maps_windows", Json::Num(self.maps_windows as f64)),
             (
                 "heads",
@@ -444,6 +520,34 @@ impl AnalyzeReport {
         }
         t
     }
+
+    /// Per-PC-bucket prediction post-mortem: where the two arms diverge most.
+    ///
+    /// Buckets are keyed by the newest token's `pc_id` and sorted by |gap|, so the
+    /// first rows are the access contexts where picking one architecture over the
+    /// other actually changes what gets prefetched. Capped at 12 rows — the tail
+    /// is in the `postmortem` array of `BENCH_compare.json`.
+    pub fn postmortem_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Prediction post-mortem — {} ({} held-out windows, {} PC buckets)",
+                self.benchmark,
+                self.n_eval,
+                self.postmortem.len()
+            ),
+            &["pc id", "windows", "native %", "transformer %", "gap"],
+        );
+        for b in self.postmortem.iter().take(12) {
+            t.row(vec![
+                b.pc_id.to_string(),
+                b.n.to_string(),
+                format!("{:.2}", b.native_top1 * 100.0),
+                format!("{:.2}", b.transformer_top1 * 100.0),
+                format!("{:+.2}", b.gap() * 100.0),
+            ]);
+        }
+        t
+    }
 }
 
 /// Write `BENCH_compare.json` (schema `bench_compare/v1`).
@@ -525,10 +629,20 @@ mod tests {
         }
         let heads = j.req("heads").unwrap().as_arr().unwrap();
         assert_eq!(heads.len(), 2);
+        // Post-mortem buckets partition the eval set and survive serialization.
+        let bucket_total: usize = r.postmortem.iter().map(|b| b.n).sum();
+        assert_eq!(bucket_total, r.n_eval, "post-mortem buckets must partition eval windows");
+        for b in &r.postmortem {
+            assert!((0.0..=1.0).contains(&b.native_top1));
+            assert!((0.0..=1.0).contains(&b.transformer_top1));
+        }
+        let pm = j.req("postmortem").unwrap().as_arr().unwrap();
+        assert_eq!(pm.len(), r.postmortem.len());
         // Tables render without panicking and carry both arch rows.
         let table = r.to_table().to_markdown();
         assert!(table.contains("native") && table.contains("transformer"));
         assert!(!r.heads_table().to_markdown().is_empty());
+        assert!(!r.postmortem_table().to_markdown().is_empty());
     }
 
     #[test]
@@ -545,6 +659,11 @@ mod tests {
             assert_eq!(a.entropy, b.entropy, "head entropy must be deterministic");
             assert_eq!(a.locality, b.locality, "locality profile must be deterministic");
             assert_eq!(a.top_slot, b.top_slot);
+        }
+        for (a, b) in ra.postmortem.iter().zip(&rb.postmortem) {
+            assert_eq!((a.pc_id, a.n), (b.pc_id, b.n));
+            assert_eq!(a.native_top1, b.native_top1);
+            assert_eq!(a.transformer_top1, b.transformer_top1);
         }
     }
 }

@@ -109,7 +109,40 @@ fn run_subsystems(smoke: bool) -> Vec<Subsystem> {
         .clone();
     out.push(Subsystem { key: "eviction_churn", result: r });
 
-    // 3. TLB shootdown storm: translate-miss, fill, then a masked
+    // 3. The fault loop again with the telemetry sink armed (path-less
+    //    SimTelemetry, the `--telemetry` observer of DESIGN.md §13):
+    //    the same admit+touch stream plus the per-fault hooks the
+    //    engine adds. Comparing this row against `fault_loop` is the
+    //    tracked evidence that telemetry-on stays near telemetry-off.
+    let r = b
+        .case("fault_loop_telemetry/admit+touch+spans 16k", FAULT_PAGES, || {
+            use crate::telemetry::{FaultSpan, SimTelemetry};
+            let mut m = DeviceMemory::new(FAULT_PAGES + 8);
+            let mut tel = SimTelemetry::new(None, "perf", 1024);
+            for p in 0..FAULT_PAGES {
+                black_box(m.state(p, p));
+                m.admit(p, p, p % 4 == 0, p);
+                m.touch(p, p);
+                tel.on_access(p, false);
+                tel.on_fault(FaultSpan {
+                    at: p,
+                    service_at: p,
+                    start: p,
+                    arrival: p,
+                    page: p,
+                    pc: 0x10,
+                    sm: 0,
+                    refault: false,
+                });
+                tel.set_occupancy(p, p + 1);
+            }
+            black_box(tel.unresolved());
+            m.occupancy()
+        })
+        .clone();
+    out.push(Subsystem { key: "fault_loop_telemetry", result: r });
+
+    // 4. TLB shootdown storm: translate-miss, fill, then a masked
     //    shootdown of exactly the filling SM — the path that replaced
     //    the per-eviction all-SM retain sweep.
     let r = b

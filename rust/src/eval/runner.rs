@@ -294,12 +294,32 @@ pub fn run_benchmark_with(
     tweak: impl FnOnce(ExperimentConfig) -> ExperimentConfig,
     trace: Option<TraceWriter>,
 ) -> anyhow::Result<Metrics> {
+    run_benchmark_instrumented(benchmark, prefetcher, opts, tweak, trace, None)
+}
+
+/// Full-control entry point: everything `run_benchmark_with` offers,
+/// plus an optional structured-telemetry output path (`repro simulate
+/// --telemetry`, DESIGN.md §13). The telemetry sink is attached before
+/// the run so fault spans, rollups, and the prefetcher's post-mortem
+/// all cover the whole simulation.
+pub fn run_benchmark_instrumented(
+    benchmark: &str,
+    prefetcher: &str,
+    opts: &RunOptions,
+    tweak: impl FnOnce(ExperimentConfig) -> ExperimentConfig,
+    trace: Option<TraceWriter>,
+    telemetry: Option<&Path>,
+) -> anyhow::Result<Metrics> {
     let exp = tweak(opts.experiment(benchmark, prefetcher)?);
     exp.sim.validate()?;
     let registry = opts.registry()?;
     let wl = registry.build(benchmark, &exp.sim, exp.seed, opts.scale)?;
     let pf = build_prefetcher(&exp, opts.scale, &registry)?;
-    Ok(Simulator::new(&exp, wl, pf, trace).run())
+    let mut sim = Simulator::new(&exp, wl, pf, trace);
+    if let Some(path) = telemetry {
+        sim.attach_telemetry(Some(path.to_path_buf()), benchmark);
+    }
+    Ok(sim.run())
 }
 
 /// U-vs-R pair for one benchmark (the unit of Tables 10/11, Fig 12).

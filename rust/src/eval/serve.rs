@@ -20,11 +20,14 @@ use crate::eval::runner::{workload_seed, RunOptions};
 use crate::predictor::{BackendSpec, DeltaVocab, PredictorBackend};
 use crate::prefetch::none::NonePrefetcher;
 use crate::sim::{Simulator, TraceWriter, TRACE_HEADER};
+use crate::telemetry::export::{prometheus_text, snapshot_json};
 use crate::types::{AccessOrigin, TenantId};
 use crate::util::{HistSummary, Json};
 use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Knobs for one load-generator run.
 #[derive(Debug, Clone)]
@@ -41,6 +44,11 @@ pub struct ServeOptions {
     /// the load generator actually measures the batched model path
     /// (under `Auto`, regular streams converge and skip the model).
     pub bypass: BypassMode,
+    /// Live metrics export prefix (`--metrics-out PREFIX`): while the
+    /// replay runs, `PREFIX.prom` is rewritten with the Prometheus
+    /// text exposition and one cumulative snapshot line is appended to
+    /// `PREFIX.jsonl` per tick (DESIGN.md §13). `None` = no exporter.
+    pub metrics_out: Option<PathBuf>,
     /// Backend/artifacts/seed/scale axes (shared with the eval CLI).
     pub run: RunOptions,
 }
@@ -53,6 +61,7 @@ impl Default for ServeOptions {
             shards: 1,
             max_faults: 20_000,
             bypass: BypassMode::Never,
+            metrics_out: None,
             run: RunOptions { scale: 0.1, ..Default::default() },
         }
     }
@@ -68,6 +77,10 @@ pub struct TenantReport {
     pub commands: u64,
     pub migrates: u64,
     pub predicted: u64,
+    /// Predicted pages that later showed up in this tenant's realized
+    /// fault stream (the serving-side accuracy numerator — see
+    /// [`crate::coordinator::stats::TenantStats::note_fault_page`]).
+    pub prediction_hits: u64,
     /// `Advise` commands (memory hints) emitted for this tenant.
     pub advises: u64,
     /// `Discard` commands emitted for this tenant.
@@ -273,6 +286,36 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
     };
     let mut handle = CoordinatorService::spawn(vocab, backend, &rcfg, &sopts);
 
+    // Live metrics exporter: a sidecar thread snapshots the shared
+    // [`CoordinatorStats`] every ~50 ms — `PREFIX.prom` is rewritten
+    // in place (scrape-file shape), `PREFIX.jsonl` grows one
+    // cumulative snapshot per tick. A final pair is always written
+    // after the replay drains, so even sub-tick runs export once.
+    let exporter_stop = Arc::new(AtomicBool::new(false));
+    let exporter = opts.metrics_out.as_ref().map(|prefix| {
+        let stats = handle.stats.clone();
+        let stop = exporter_stop.clone();
+        let prom_path = PathBuf::from(format!("{}.prom", prefix.display()));
+        let jsonl_path = PathBuf::from(format!("{}.jsonl", prefix.display()));
+        let t0 = std::time::Instant::now();
+        std::thread::spawn(move || -> Result<()> {
+            let mut jsonl = std::fs::File::create(&jsonl_path)
+                .map_err(|e| anyhow!("{}: {e}", jsonl_path.display()))?;
+            loop {
+                let done = stop.load(Ordering::Relaxed);
+                let elapsed = t0.elapsed().as_millis().min(u64::MAX as u128) as u64;
+                std::fs::write(&prom_path, prometheus_text(&stats, elapsed))
+                    .map_err(|e| anyhow!("{}: {e}", prom_path.display()))?;
+                writeln!(jsonl, "{}", snapshot_json(&stats, elapsed).to_string())
+                    .map_err(|e| anyhow!("{}: {e}", jsonl_path.display()))?;
+                if done {
+                    return Ok(());
+                }
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        })
+    });
+
     // Drain commands concurrently — a run can emit far more commands
     // than the channel bound, and nothing else consumes them.
     let (dummy_tx, dummy_rx) = std::sync::mpsc::sync_channel(1);
@@ -305,6 +348,10 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
     let shutdown = handle.shutdown();
     let commands = drainer.join().map_err(|_| anyhow!("serve: drainer thread panicked"))?;
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    exporter_stop.store(true, Ordering::Relaxed);
+    if let Some(t) = exporter {
+        t.join().map_err(|_| anyhow!("serve: metrics exporter thread panicked"))??;
+    }
 
     let stats = &shutdown.stats;
     let mut tenants = Vec::with_capacity(opts.streams);
@@ -318,6 +365,7 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
             commands: ts.commands.load(Ordering::Relaxed),
             migrates: ts.migrates.load(Ordering::Relaxed),
             predicted: ts.predicted.load(Ordering::Relaxed),
+            prediction_hits: ts.pred_hits.load(Ordering::Relaxed),
             advises: ts.advises.load(Ordering::Relaxed),
             discards: ts.discards.load(Ordering::Relaxed),
             latency_us: ts.latency_us.summary(),
@@ -378,6 +426,7 @@ pub fn bench_serve_json(r: &ServeReport) -> Json {
                     ("commands", Json::Num(t.commands as f64)),
                     ("migrates", Json::Num(t.migrates as f64)),
                     ("predicted", Json::Num(t.predicted as f64)),
+                    ("prediction_hits", Json::Num(t.prediction_hits as f64)),
                     ("advises", Json::Num(t.advises as f64)),
                     ("discards", Json::Num(t.discards as f64)),
                     ("latency_us", t.latency_us.to_json()),

@@ -18,7 +18,7 @@
 //! Results are re-ordered by cell index before they are merged into
 //! the [`Table`](crate::eval::report::Table) machinery.
 
-use crate::eval::runner::{run_benchmark_with, RunOptions};
+use crate::eval::runner::{run_benchmark_instrumented, RunOptions};
 use crate::sim::Metrics;
 use crate::util::Json;
 use crate::workloads::source_tag;
@@ -71,10 +71,18 @@ impl CellSpec {
 
     /// Run the cell to completion on the calling thread.
     pub fn run(&self) -> anyhow::Result<Metrics> {
+        self.run_with_telemetry(None)
+    }
+
+    /// Run the cell with an optional structured-telemetry output path.
+    /// Same tweak stack as [`CellSpec::run`] — the telemetry-identity
+    /// suite (`tests/ab_identity.rs`) leans on that: an instrumented
+    /// cell differs from its plain twin by the sink alone.
+    pub fn run_with_telemetry(&self, telemetry: Option<&Path>) -> anyhow::Result<Metrics> {
         let us = self.prediction_us;
         let ratio = self.oversub_ratio;
         let eviction = self.eviction.clone();
-        run_benchmark_with(
+        run_benchmark_instrumented(
             &self.benchmark,
             &self.prefetcher,
             &self.opts,
@@ -91,6 +99,7 @@ impl CellSpec {
                 e
             },
             None,
+            telemetry,
         )
     }
 }

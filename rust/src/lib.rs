@@ -49,6 +49,7 @@ pub mod predictor;
 pub mod prefetch;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod types;
 pub mod util;
 pub mod workloads;

@@ -8,10 +8,23 @@
 //!                  [--scale F]
 //!                  [--max-instructions N] [--prediction-us F]
 //!                  [--config FILE] [--oversubscribe R] [--eviction P]
+//!                  [--telemetry FILE]
 //!                    --oversubscribe: resident fraction of the
 //!                    workload footprint, in (0, 1]; 1.0 (default) =
 //!                    no oversubscription. --eviction: lru | random |
-//!                    freq | prefetch-aware | learned.
+//!                    freq | prefetch-aware | learned. --telemetry:
+//!                    write the structured-telemetry document
+//!                    (fault-lifecycle spans, rollup series,
+//!                    prediction post-mortem — schema telemetry/v1,
+//!                    Chrome-trace compatible) to FILE; off by
+//!                    default, and metrics are byte-identical either
+//!                    way (tests/ab_identity.rs pins that).
+//! repro inspect    FILE [--out results]
+//!                    render a telemetry/v1 document: prefetch outcome
+//!                    table, timeline, cross-checks against the
+//!                    embedded metrics snapshot; writes
+//!                    BENCH_telemetry.json (schema bench_telemetry/v1)
+//!                    and fails on cross-check violations (CI gate).
 //! repro train      [--arch native|transformer]
 //!                  [--workload B | --benchmarks a --benchmarks b]
 //!                  [--out artifacts] [--epochs N] [--batch N]
@@ -59,10 +72,14 @@
 //!                  [--precision T]
 //!                  [--artifacts DIR] [--model M] [--max-faults N]
 //!                  [--scale F] [--bypass never|auto|always]
-//!                  [--seed S] [--out results]
+//!                  [--seed S] [--out results] [--metrics-out PREFIX]
 //!                    load generator: N tenant fault streams replayed
 //!                    concurrently through K router shards + one
 //!                    shared batcher; writes BENCH_serve.json.
+//!                    --metrics-out: live exporter sidecar — rewrites
+//!                    PREFIX.prom (Prometheus text exposition) and
+//!                    appends cumulative snapshots to PREFIX.jsonl
+//!                    (schema serve_metrics/v1) while the replay runs.
 //! repro trace      <ingest FILE... [--name N] | list>
 //!                  [--trace-dir traces-ingested]
 //!                    ingest: stream-parse accelsim-style kernel
@@ -110,8 +127,8 @@ use uvm_prefetch::util::cli::Args;
 use uvm_prefetch::util::Json;
 use uvm_prefetch::workloads::{trace, WorkloadFamily, WorkloadRegistry};
 
-const USAGE: &str = "repro <trace-gen|simulate|train|analyze|eval|golden|perf|serve|trace|list|\
-                     info> [flags] (see rust/src/main.rs header)";
+const USAGE: &str = "repro <trace-gen|simulate|inspect|train|analyze|eval|golden|perf|serve|\
+                     trace|list|info> [flags] (see rust/src/main.rs header)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -120,6 +137,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "trace-gen" => trace_gen(&args),
         "simulate" => simulate(&args),
+        "inspect" => inspect_cmd(&args),
         "train" => train(&args),
         "analyze" => analyze(&args),
         "eval" => eval_cmd(&args),
@@ -244,8 +262,9 @@ fn simulate(args: &Args) -> Result<()> {
         Some(p) => Some(ExperimentConfig::from_file(Path::new(p))?),
         None => None,
     };
+    let telemetry: Option<PathBuf> = args.get("telemetry").map(PathBuf::from);
     let opts = opts_from(args)?;
-    let m = eval::runner::run_benchmark_with(
+    let m = eval::runner::run_benchmark_instrumented(
         &benchmark,
         &prefetcher,
         &opts,
@@ -263,9 +282,31 @@ fn simulate(args: &Args) -> Result<()> {
             e
         },
         None,
+        telemetry.as_deref(),
     )?;
     println!("benchmark={benchmark} prefetcher={prefetcher}");
     println!("{}", m.summary());
+    if let Some(p) = telemetry {
+        println!("telemetry: {} (render with `repro inspect {}`)", p.display(), p.display());
+    }
+    Ok(())
+}
+
+/// `repro inspect FILE` — render a telemetry/v1 document written by
+/// `repro simulate --telemetry` and cross-check it against the
+/// embedded metrics snapshot (see `telemetry/inspect.rs`). Writes
+/// `BENCH_telemetry.json` to `--out` plus a CWD copy, and errors when
+/// a cross-check fails — the CI smoke job gates on that.
+fn inspect_cmd(args: &Args) -> Result<()> {
+    let file = args
+        .positional
+        .get(1)
+        .map(PathBuf::from)
+        .ok_or_else(|| anyhow::anyhow!("inspect needs a telemetry file: repro inspect FILE"))?;
+    let out = PathBuf::from(args.str("out", "results"));
+    std::fs::create_dir_all(&out)?;
+    let rendered = uvm_prefetch::telemetry::inspect::inspect_file(&file, &out)?;
+    println!("{rendered}");
     Ok(())
 }
 
@@ -400,6 +441,7 @@ fn analyze(args: &Args) -> Result<()> {
     let r = run_analyze(&opts)?;
     println!("{}", r.to_table().to_markdown());
     println!("{}", r.heads_table().to_markdown());
+    println!("{}", r.postmortem_table().to_markdown());
     println!(
         "analyze[{}]: transformer top-1 {:.2}% vs native {:.2}% (stride floor {:.2}%) — cost \
          ratio {:.1}× params, {:.1}× FLOPs — {}",
@@ -564,6 +606,7 @@ fn serve(args: &Args) -> Result<()> {
         shards: args.usize("shards", defaults.shards)?,
         max_faults: args.usize("max-faults", defaults.max_faults)?,
         bypass,
+        metrics_out: args.get("metrics-out").map(PathBuf::from),
         run: RunOptions {
             scale: args.f64("scale", 0.1)?,
             artifacts: args.str("artifacts", ""),
@@ -584,6 +627,19 @@ fn serve(args: &Args) -> Result<()> {
     // CWD copy, like BENCH_eval.json — the per-PR serving perf record.
     if let Err(e) = srv::write_bench_serve(&r, Path::new("BENCH_serve.json")) {
         eprintln!("serve: could not write ./BENCH_serve.json: {e}");
+    }
+    if r.dropped_commands > 0 {
+        eprintln!(
+            "serve: WARNING — {} command(s) dropped (command channel closed mid-run); every \
+             reported count and latency is a LOWER BOUND on the work the pipeline produced",
+            r.dropped_commands
+        );
+    }
+    if let Some(prefix) = &opts.metrics_out {
+        println!(
+            "serve: metrics exported to {0}.prom (Prometheus) and {0}.jsonl (snapshots)",
+            prefix.display()
+        );
     }
 
     println!(

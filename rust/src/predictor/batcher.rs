@@ -18,6 +18,12 @@ pub struct PendingRequest {
     /// Faulting page the predicted delta is applied to.
     pub anchor_page: PageNum,
     pub enqueued_at: Cycle,
+    /// Requesting cluster (raw [`crate::predictor::ClusterKey`] bits)
+    /// and faulting PC — carried through the batch so the telemetry
+    /// post-mortem can attribute each answer back to the access stream
+    /// that asked (0 when the caller does not track attribution).
+    pub cluster: u64,
+    pub pc: u64,
 }
 
 #[derive(Debug)]
@@ -83,6 +89,8 @@ mod tests {
             window: Window { tokens: vec![FeatTok { pc_id: 0, page_id: 0, delta_id: 0 }] },
             anchor_page: 7,
             enqueued_at: at,
+            cluster: 0,
+            pc: 0,
         }
     }
 

@@ -28,6 +28,7 @@ use crate::predictor::engine::featurize_window;
 use crate::predictor::finetune::FinetuneScheduler;
 use crate::predictor::history::HistoryTable;
 use crate::predictor::{ClusterBy, ClusterKey, PredictorEngine, Prediction, Window};
+use crate::telemetry::{pc_bucket, BatchEvent, Postmortem};
 use crate::types::{bb_base, Cycle, PageNum, PAGES_PER_BB};
 use std::collections::HashMap;
 
@@ -46,6 +47,11 @@ const THROTTLED_SPAN: u64 = PAGES_PER_BB / 4;
 /// block it just left, so the pages can be handed back lazily instead
 /// of waiting for the eviction policy to guess.
 const DISCARD_CONVERGENCE: f64 = 0.75;
+
+/// Cap on stored inference-batch lifecycle events when telemetry is
+/// armed (the span-ring discipline of DESIGN.md §13: bounded
+/// collections, drop-newest past the cap).
+const BATCH_EVENT_CAP: usize = 1 << 16;
 
 pub struct DlPrefetcher {
     engine: PredictorEngine,
@@ -69,6 +75,17 @@ pub struct DlPrefetcher {
     matured: Vec<PrefetchRequest>,
     telemetry: PrefetchTelemetry,
     finetune_losses: Vec<f64>,
+    /// Structured-telemetry arm switch (DESIGN.md §13). Off (the
+    /// default) every field below stays empty and no per-fault work or
+    /// allocation happens — the byte-identity anchor.
+    telemetry_on: bool,
+    /// Inference-batch lifecycle events, drained by the engine's sink.
+    batch_events: Vec<BatchEvent>,
+    /// Per-cluster outstanding top-1 prediction awaiting its ground
+    /// truth: (anchor page, predicted delta, PC bucket).
+    last_pred: HashMap<ClusterKey, (PageNum, i64, u64)>,
+    /// Per-(cluster, PC-bucket) accuracy attribution.
+    postmortem: Postmortem,
 }
 
 impl DlPrefetcher {
@@ -93,6 +110,10 @@ impl DlPrefetcher {
             matured: Vec::new(),
             telemetry: PrefetchTelemetry::default(),
             finetune_losses: Vec::new(),
+            telemetry_on: false,
+            batch_events: Vec::new(),
+            last_pred: HashMap::new(),
+            postmortem: Postmortem::default(),
         }
     }
 
@@ -113,16 +134,42 @@ impl DlPrefetcher {
         self.telemetry.prediction_batches += 1;
         self.telemetry.predictions += preds.len() as u64;
         let ready = now + self.latency;
+        // Batch lifecycle span (telemetry only): FIFO batcher → the
+        // first request is the oldest enqueue.
+        let enqueued_at = batch.first().map(|r| r.enqueued_at).unwrap_or(now);
+        let size = batch.len() as u32;
+        let mut oov = 0u32;
         for (pred, req) in preds.into_iter().zip(batch) {
             match pred {
                 Prediction::Delta(d) => {
+                    if self.telemetry_on {
+                        self.last_pred.insert(
+                            ClusterKey(req.cluster),
+                            (req.anchor_page, d, pc_bucket(req.pc)),
+                        );
+                    }
                     let target = req.anchor_page as i64 + d;
                     if target >= 0 && d != 0 {
                         self.matured.push(PrefetchRequest::at(target as PageNum, ready));
                     }
                 }
-                Prediction::Oov => self.telemetry.oov_predictions += 1,
+                Prediction::Oov => {
+                    self.telemetry.oov_predictions += 1;
+                    oov += 1;
+                    if self.telemetry_on {
+                        self.postmortem.record_oov(req.cluster, pc_bucket(req.pc));
+                    }
+                }
             }
+        }
+        if self.telemetry_on && self.batch_events.len() < BATCH_EVENT_CAP {
+            self.batch_events.push(BatchEvent {
+                enqueued_at,
+                run_at: now,
+                ready_at: ready,
+                size,
+                oov,
+            });
         }
     }
 }
@@ -145,6 +192,20 @@ impl Prefetcher for DlPrefetcher {
         now: Cycle,
     ) {
         let key = self.cluster_by.key(&origin, pc);
+        // Telemetry post-mortem: this access is the cluster's ground
+        // truth for its outstanding top-1 prediction. The anchor's own
+        // fault access is skipped (a prediction is about the *next*
+        // access); the realized delta is measured from the anchor, the
+        // same frame the predicted delta was expressed in.
+        if self.telemetry_on {
+            if let Some(&(anchor, d, pcb)) = self.last_pred.get(&key) {
+                if page != anchor {
+                    self.last_pred.remove(&key);
+                    let realized = page as i64 - anchor as i64;
+                    self.postmortem.record(key.0, pcb, realized == d);
+                }
+            }
+        }
         // Harvest the ground-truth label for the cluster's previous
         // full window *before* pushing the new token.
         let tok = self.history.push(key, pc, page, now);
@@ -242,6 +303,9 @@ impl Prefetcher for DlPrefetcher {
                     let target = fault.page as i64 + d;
                     if target >= 0 && d != 0 {
                         self.telemetry.bypass_predictions += 1;
+                        if self.telemetry_on {
+                            self.last_pred.insert(key, (fault.page, d, pc_bucket(fault.pc)));
+                        }
                         out.requests.push(PrefetchRequest::at(
                             target as PageNum,
                             fault.service_at + self.latency / BYPASS_LATENCY_DIV,
@@ -253,6 +317,8 @@ impl Prefetcher for DlPrefetcher {
                     window,
                     anchor_page: fault.page,
                     enqueued_at: fault.now,
+                    cluster: key.0,
+                    pc: fault.pc,
                 });
                 if let Some(batch) = full {
                     self.run_batch(batch, fault.now);
@@ -285,6 +351,22 @@ impl Prefetcher for DlPrefetcher {
 
     fn telemetry(&self) -> PrefetchTelemetry {
         self.telemetry.clone()
+    }
+
+    fn set_telemetry_enabled(&mut self, on: bool) {
+        self.telemetry_on = on;
+    }
+
+    fn take_batch_events(&mut self) -> Vec<BatchEvent> {
+        std::mem::take(&mut self.batch_events)
+    }
+
+    fn take_postmortem(&mut self) -> Option<Postmortem> {
+        if self.postmortem.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.postmortem))
+        }
     }
 }
 
@@ -486,6 +568,47 @@ mod tests {
         let drained = p.drain(50);
         assert_eq!(drained.len(), 1);
         assert_eq!(drained[0].page, 12);
+    }
+
+    #[test]
+    fn postmortem_attributes_predictions_when_armed() {
+        let cfg = small_cfg(); // batch of 2, history 3
+        let mut p = dl(&cfg, 0, vec![7]); // always predicts delta +7
+        p.set_telemetry_enabled(true);
+        for (i, page) in [0u64, 1, 2, 3].iter().enumerate() {
+            hit_access(&mut p, *page, i as u64 * 10);
+        }
+        fault_access(&mut p, 4, 40);
+        // Fills the batch: run_batch records the outstanding prediction
+        // (anchor 5, delta +7); the anchor's own fault access must NOT
+        // resolve it.
+        fault_access(&mut p, 5, 41);
+        assert!(p.take_postmortem().is_none(), "anchor access is not ground truth");
+        // The cluster's next access (12 = 5 + 7) resolves it: correct.
+        hit_access(&mut p, 12, 50);
+        let pm = p.take_postmortem().expect("one resolved prediction");
+        let cell = pm.cells[&(0, 0x30)]; // SmWarp key 0, pc bucket 0x30
+        assert_eq!((cell.predictions, cell.correct, cell.oov), (1, 1, 0));
+        let evs = p.take_batch_events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!((evs[0].enqueued_at, evs[0].run_at, evs[0].ready_at), (40, 41, 1041));
+        assert_eq!((evs[0].size, evs[0].oov), (2, 0));
+        assert!(p.take_batch_events().is_empty(), "drained");
+    }
+
+    #[test]
+    fn postmortem_stays_empty_when_disarmed() {
+        let cfg = small_cfg();
+        let mut p = dl(&cfg, 0, vec![7]);
+        for (i, page) in [0u64, 1, 2, 3].iter().enumerate() {
+            hit_access(&mut p, *page, i as u64 * 10);
+        }
+        fault_access(&mut p, 4, 40);
+        fault_access(&mut p, 5, 41);
+        hit_access(&mut p, 12, 50);
+        assert!(p.take_postmortem().is_none());
+        assert!(p.take_batch_events().is_empty());
+        assert!(p.last_pred.is_empty(), "no tracking state accrues when off");
     }
 
     #[test]

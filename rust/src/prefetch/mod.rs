@@ -190,6 +190,26 @@ pub trait Prefetcher: Send {
     fn telemetry(&self) -> PrefetchTelemetry {
         PrefetchTelemetry::default()
     }
+
+    /// Arm structured-telemetry collection (DESIGN.md §13). Only the
+    /// engine calls this, and only when a `--telemetry` sink is
+    /// attached — policies that record nothing ignore it, and a policy
+    /// that does record must keep the disabled path allocation-free
+    /// (telemetry-off byte-identity is gated by `tests/ab_identity.rs`).
+    fn set_telemetry_enabled(&mut self, _on: bool) {}
+
+    /// Drain the inference-batch lifecycle events recorded since the
+    /// last call (empty unless telemetry is enabled and the policy
+    /// batches predictions).
+    fn take_batch_events(&mut self) -> Vec<crate::telemetry::BatchEvent> {
+        Vec::new()
+    }
+
+    /// Hand over the per-(cluster, PC-bucket) prediction post-mortem
+    /// (None unless telemetry is enabled and the policy predicts).
+    fn take_postmortem(&mut self) -> Option<crate::telemetry::Postmortem> {
+        None
+    }
 }
 
 #[cfg(test)]

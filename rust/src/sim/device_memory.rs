@@ -133,6 +133,13 @@ impl Iterator for SmBits {
 pub struct EvictedPage {
     pub page: PageNum,
     pub tlb: SmSet,
+    /// The dropped copy arrived via prefetch and was never demanded —
+    /// the telemetry sink's `evicted_unused` outcome tag (mirrors the
+    /// `evicted_unused_prefetches` counter for eager evictions).
+    pub unused_prefetch: bool,
+    /// Dropped by reclaiming a lazy-discard mark rather than by the
+    /// eviction policy (the `discarded` outcome tag).
+    pub lazy_reclaim: bool,
 }
 
 /// One frame-table slot: the resident page's bookkeeping plus the
@@ -534,7 +541,12 @@ impl DeviceMemory {
             self.read_mostly_drops += 1;
         }
         self.release(cur);
-        Some(EvictedPage { page, tlb })
+        Some(EvictedPage {
+            page,
+            tlb,
+            unused_prefetch: info.via_prefetch && !info.prefetch_used,
+            lazy_reclaim: true,
+        })
     }
 
     /// Evict the policy's victim among pages resident by `now`.
@@ -552,7 +564,12 @@ impl DeviceMemory {
         }
         self.evictions += 1;
         self.release(victim);
-        Some(EvictedPage { page, tlb })
+        Some(EvictedPage {
+            page,
+            tlb,
+            unused_prefetch: info.via_prefetch && !info.prefetch_used,
+            lazy_reclaim: false,
+        })
     }
 
     /// Take a frame off the free list (or grow the table) and reset

@@ -27,6 +27,7 @@ use crate::sim::interconnect::Interconnect;
 use crate::sim::metrics::Metrics;
 use crate::sim::sm::{SmState, WarpOp};
 use crate::sim::trace::TraceWriter;
+use crate::telemetry::{FaultSpan, PrefetchOutcome, SimTelemetry};
 use crate::types::{page_of, AccessOrigin, Cycle, TraceRecord, PAGE_SIZE};
 use crate::workloads::WorkloadInstance;
 use std::cmp::Reverse;
@@ -83,6 +84,12 @@ pub struct Simulator {
     decision_buf: PrefetchDecision,
     /// Scratch buffer for [`Prefetcher::drain_into`], reused likewise.
     drain_buf: Vec<PrefetchRequest>,
+    /// Structured-telemetry sink (DESIGN.md §13). `None` (the default)
+    /// keeps every hook below to a single pointer-null check — the
+    /// telemetry-off path stays byte-identical and allocation-free
+    /// (gated by `tests/ab_identity.rs`). The sink is strictly an
+    /// observer: nothing it records feeds back into scheduling.
+    telemetry: Option<Box<SimTelemetry>>,
 }
 
 impl Simulator {
@@ -136,6 +143,7 @@ impl Simulator {
             far_fault_cycles,
             decision_buf: PrefetchDecision::default(),
             drain_buf: Vec::new(),
+            telemetry: None,
         };
         sim.metrics.pcie_bucket_cycles = sim.cfg.pcie_bucket_cycles;
         sim.metrics.capacity_pages = capacity_pages;
@@ -150,6 +158,17 @@ impl Simulator {
     fn schedule(&mut self, at: Cycle, kind: EventKind) {
         self.seq += 1;
         self.heap.push(Reverse(Event { at, seq: self.seq, kind }));
+    }
+
+    /// Arm the structured-telemetry sink (`repro simulate --telemetry`,
+    /// DESIGN.md §13). Must be called before [`Simulator::run`]. The
+    /// prefetcher is notified so it can start recording batch events
+    /// and prediction post-mortems; with `path == None` the sink
+    /// accumulates in memory but writes nothing (perf-harness mode).
+    pub fn attach_telemetry(&mut self, path: Option<std::path::PathBuf>, benchmark: &str) {
+        let sink = SimTelemetry::new(path, benchmark, self.link.bucket_cycles());
+        self.prefetcher.set_telemetry_enabled(true);
+        self.telemetry = Some(Box::new(sink));
     }
 
     /// Run to completion (or to `max_instructions`). Returns final metrics.
@@ -185,6 +204,13 @@ impl Simulator {
         self.metrics.discards = self.device.discards;
         self.metrics.lazy_discard_reclaims = self.device.lazy_discard_reclaims;
         self.metrics.advised_pages = self.device.advised_read_mostly;
+        if let Some(mut tel) = self.telemetry.take() {
+            tel.set_batches(self.prefetcher.take_batch_events());
+            tel.set_postmortem(self.prefetcher.take_postmortem());
+            if let Err(e) = tel.write(&self.metrics) {
+                eprintln!("telemetry: write failed: {e}");
+            }
+        }
         if let Some(t) = self.trace.take() {
             let _ = t.finish();
         }
@@ -280,8 +306,15 @@ impl Simulator {
         let (done, miss) = match state {
             Some(PageState::Resident) => {
                 self.metrics.page_hits += 1;
-                if self.device.touch(page, t_eff) {
+                let first_use = self.device.touch(page, t_eff);
+                if first_use {
                     self.metrics.prefetch_used += 1;
+                }
+                if let Some(tel) = self.telemetry.as_deref_mut() {
+                    tel.on_access(t_eff, true);
+                    if first_use {
+                        tel.resolve_prefetch(page, t_eff, PrefetchOutcome::Used);
+                    }
                 }
                 self.gmmu.fill(sm as usize, page, t_eff);
                 // Record the fill on the frame so the eventual eviction
@@ -294,8 +327,17 @@ impl Simulator {
             Some(PageState::Migrating { arrival }) => {
                 // MSHR merge: wait on the in-flight transfer.
                 self.metrics.coalesced += 1;
-                if self.device.touch(page, arrival) {
+                let first_use = self.device.touch(page, arrival);
+                if first_use {
                     self.metrics.prefetch_used += 1;
+                }
+                if let Some(tel) = self.telemetry.as_deref_mut() {
+                    tel.on_access(t_eff, false);
+                    if first_use {
+                        // Demand arrived while the prefetch was still
+                        // in flight: counted as used, tagged late.
+                        tel.resolve_prefetch(page, arrival, PrefetchOutcome::Late);
+                    }
                 }
                 self.prefetcher.on_access(origin, op.access.pc, page, false, t);
                 (arrival.max(t_eff) + self.cfg.dram_cycles, 1u8)
@@ -303,7 +345,8 @@ impl Simulator {
             None => {
                 // Far-fault: host-side service + page transfer.
                 self.metrics.far_faults += 1;
-                if self.device.was_dropped(page) {
+                let was_dropped = self.device.was_dropped(page);
+                if was_dropped {
                     // The page left the device at least once (eviction
                     // or discard) — this fault is a *refault*, the
                     // thrash-ratio numerator under oversubscription.
@@ -314,6 +357,18 @@ impl Simulator {
                 for ev in self.device.admit(page, xfer.arrival, false, t_eff) {
                     self.gmmu.shootdown_masked(ev.page, &ev.tlb);
                     self.prefetcher.on_evict(ev.page);
+                    if let Some(tel) = self.telemetry.as_deref_mut() {
+                        if ev.lazy_reclaim {
+                            tel.resolve_prefetch(ev.page, t_eff, PrefetchOutcome::Discarded);
+                            tel.on_discard(t_eff, 1);
+                        } else {
+                            if ev.unused_prefetch {
+                                let o = PrefetchOutcome::EvictedUnused;
+                                tel.resolve_prefetch(ev.page, t_eff, o);
+                            }
+                            tel.on_eviction(t_eff);
+                        }
+                    }
                 }
                 self.device.touch(page, t_eff);
                 let fault = FaultInfo {
@@ -333,6 +388,20 @@ impl Simulator {
                 self.apply_prefetches(&decision.requests, t_eff);
                 self.apply_discards(&decision.discards, t_eff);
                 self.decision_buf = decision;
+                if let Some(tel) = self.telemetry.as_deref_mut() {
+                    tel.on_access(t_eff, false);
+                    tel.on_fault(FaultSpan {
+                        at: t_eff,
+                        service_at,
+                        start: xfer.start,
+                        arrival: xfer.arrival,
+                        page,
+                        pc: op.access.pc,
+                        sm,
+                        refault: was_dropped,
+                    });
+                    tel.set_occupancy(t_eff, self.device.occupancy());
+                }
                 self.prefetcher.on_access(origin, op.access.pc, page, false, t);
                 (xfer.arrival + self.cfg.dram_cycles, 1u8)
             }
@@ -369,8 +438,22 @@ impl Simulator {
             for ev in self.device.admit(r.page, xfer.arrival, true, now) {
                 self.gmmu.shootdown_masked(ev.page, &ev.tlb);
                 self.prefetcher.on_evict(ev.page);
+                if let Some(tel) = self.telemetry.as_deref_mut() {
+                    if ev.lazy_reclaim {
+                        tel.resolve_prefetch(ev.page, now, PrefetchOutcome::Discarded);
+                        tel.on_discard(now, 1);
+                    } else {
+                        if ev.unused_prefetch {
+                            tel.resolve_prefetch(ev.page, now, PrefetchOutcome::EvictedUnused);
+                        }
+                        tel.on_eviction(now);
+                    }
+                }
             }
             self.metrics.prefetch_transfers += 1;
+            if let Some(tel) = self.telemetry.as_deref_mut() {
+                tel.on_prefetch_issued(r.page, now, xfer.start, xfer.arrival);
+            }
         }
     }
 
@@ -388,6 +471,13 @@ impl Simulator {
             } else if let Some(tlb) = self.device.discard(d.page, now) {
                 self.gmmu.shootdown_masked(d.page, &tlb);
                 self.prefetcher.on_evict(d.page);
+                if let Some(tel) = self.telemetry.as_deref_mut() {
+                    // Only unresolved (never-touched) prefetches are
+                    // still in the sink's open set, so this tags
+                    // exactly the prefetched-then-discarded pages.
+                    tel.resolve_prefetch(d.page, now, PrefetchOutcome::Discarded);
+                    tel.on_discard(now, 1);
+                }
             }
         }
     }
@@ -525,6 +615,46 @@ mod tests {
         // The no-writeback accounting: only the six demand transfers
         // are charged to the interconnect; discards move no bytes.
         assert_eq!(m.pcie_bytes(), 6 * PAGE_SIZE);
+    }
+
+    #[test]
+    fn telemetry_sink_observes_without_perturbing() {
+        use crate::util::{Json, TestDir};
+        let exp = tiny_config();
+        let mk = || WorkloadInstance {
+            name: "t".into(),
+            tasks: vec![seq_task(0, 0, &[1, 2, 1, 3, 2, 4]), seq_task(1, 0, &[9, 8, 9, 7])],
+            total_ops: 10,
+        };
+        let plain = Simulator::new(&exp, mk(), Box::new(NonePrefetcher::default()), None).run();
+        let dir = TestDir::new();
+        let out = dir.file("tel.json");
+        let mut sim = Simulator::new(&exp, mk(), Box::new(NonePrefetcher::default()), None);
+        sim.attach_telemetry(Some(out.clone()), "tiny");
+        let observed = sim.run();
+        assert_eq!(plain, observed, "the sink is an observer, not a participant");
+        let doc = Json::parse_file(&out).expect("sink wrote a parseable document");
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some("telemetry/v1"));
+        let series = doc.get("series").expect("series block");
+        let total = |key: &str| -> u64 {
+            series.get(key).and_then(Json::as_arr).map_or(0, |pts| {
+                pts.iter().map(|p| p.as_arr().unwrap()[1].as_u64().unwrap()).sum()
+            })
+        };
+        assert_eq!(total("accesses"), plain.mem_accesses);
+        assert_eq!(total("hits"), plain.page_hits);
+        assert_eq!(total("faults"), plain.far_faults);
+        let n_fault_events = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .map_or(0, |evs| {
+                evs.iter()
+                    .filter(|e| {
+                        matches!(e.get("name").and_then(Json::as_str), Some("fault" | "refault"))
+                    })
+                    .count() as u64
+            });
+        assert_eq!(n_fault_events, plain.far_faults, "one span per far-fault");
     }
 
     #[test]

@@ -11,20 +11,23 @@
 //! The model also keeps a time-bucketed byte histogram so the Figure 11
 //! bandwidth timeline can be regenerated.
 
+use crate::telemetry::Rollup;
 use crate::types::Cycle;
 
 #[derive(Debug, Clone)]
 pub struct Interconnect {
     bytes_per_cycle: f64,
     latency: Cycle,
-    bucket_cycles: Cycle,
     /// Link occupied until this cycle.
     busy_until: Cycle,
     /// Total bytes moved host→device (demand + prefetch).
     pub bytes_demand: u64,
     pub bytes_prefetch: u64,
-    /// Per-bucket transferred bytes (Fig. 11 series).
-    buckets: Vec<u64>,
+    /// Per-bucket transferred bytes (Fig. 11 series) — the original
+    /// one-off byte histogram, now the shared [`Rollup`] accumulator
+    /// (same spread arithmetic; `pcie_series` stays byte-identical,
+    /// pinned by the A/B gate).
+    buckets: Rollup,
 }
 
 /// Result of scheduling one transfer.
@@ -41,15 +44,13 @@ pub struct Transfer {
 impl Interconnect {
     pub fn new(bytes_per_cycle: f64, latency: Cycle, bucket_cycles: Cycle) -> Self {
         assert!(bytes_per_cycle > 0.0);
-        assert!(bucket_cycles > 0);
         Self {
             bytes_per_cycle,
             latency,
-            bucket_cycles,
             busy_until: 0,
             bytes_demand: 0,
             bytes_prefetch: 0,
-            buckets: Vec::new(),
+            buckets: Rollup::new(bucket_cycles),
         }
     }
 
@@ -64,24 +65,8 @@ impl Interconnect {
         } else {
             self.bytes_demand += bytes;
         }
-        self.record_buckets(start, link_done, bytes);
+        self.buckets.spread(start, link_done, bytes);
         Transfer { start, link_done, arrival: link_done + self.latency }
-    }
-
-    /// Spread `bytes` uniformly over the buckets spanned by
-    /// `[start, done)`.
-    fn record_buckets(&mut self, start: Cycle, done: Cycle, bytes: u64) {
-        let first = (start / self.bucket_cycles) as usize;
-        let last = ((done.saturating_sub(1)) / self.bucket_cycles) as usize;
-        if self.buckets.len() <= last {
-            self.buckets.resize(last + 1, 0);
-        }
-        let n = (last - first + 1) as u64;
-        for b in first..=last {
-            self.buckets[b] += bytes / n;
-        }
-        // Remainder goes to the first bucket (keeps totals exact).
-        self.buckets[first] += bytes % n;
     }
 
     pub fn total_bytes(&self) -> u64 {
@@ -94,15 +79,11 @@ impl Interconnect {
 
     /// (bucket start cycle, bytes) series for the Fig. 11 timeline.
     pub fn bandwidth_series(&self) -> Vec<(Cycle, u64)> {
-        self.buckets
-            .iter()
-            .enumerate()
-            .map(|(i, &b)| (i as Cycle * self.bucket_cycles, b))
-            .collect()
+        self.buckets.series()
     }
 
     pub fn bucket_cycles(&self) -> Cycle {
-        self.bucket_cycles
+        self.buckets.bucket_cycles()
     }
 }
 

@@ -150,7 +150,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "inst={} cycles={} ipc={:.4} accesses={} hit={:.4} faults={} coalesced={} \
-             pf_xfers={} acc={:.4} cov={:.4} unity={:.4} bytes={} evict={} refault={} thrash={:.4}",
+             pf_xfers={} acc={:.4} cov={:.4} unity={:.4} bytes={} evict={} refault={} \
+             thrash={:.4} discard={} lazy_reclaim={} advised={}",
             self.instructions,
             self.cycles,
             self.ipc(),
@@ -166,6 +167,9 @@ impl Metrics {
             self.evictions,
             self.refaults,
             self.thrash_ratio(),
+            self.discards,
+            self.lazy_discard_reclaims,
+            self.advised_pages,
         )
     }
 }
@@ -218,5 +222,19 @@ mod tests {
     fn thrash_ratio_is_refaults_over_faults() {
         let m = Metrics { far_faults: 8, refaults: 2, ..Default::default() };
         assert!((m.thrash_ratio() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_reports_discard_and_advise_counters() {
+        let m = Metrics {
+            discards: 7,
+            lazy_discard_reclaims: 3,
+            advised_pages: 11,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("discard=7"), "{s}");
+        assert!(s.contains("lazy_reclaim=3"), "{s}");
+        assert!(s.contains("advised=11"), "{s}");
     }
 }

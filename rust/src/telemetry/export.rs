@@ -1,0 +1,164 @@
+//! Serving-plane metrics exporter: snapshot the lock-free
+//! [`CoordinatorStats`] into Prometheus text exposition and a JSON
+//! record (DESIGN.md §13).
+//!
+//! `repro serve --metrics-out PREFIX` runs a small exporter thread
+//! that periodically rewrites `PREFIX.prom` (the current exposition —
+//! point a Prometheus file-sd scrape or `promtool` at it) and appends
+//! one JSON line per tick to `PREFIX.jsonl`. Counters are cumulative,
+//! so the JSONL file *is* the per-tenant accuracy-over-time rollup:
+//! successive lines differenced give per-interval rates, which is
+//! exactly what ROADMAP item 4's drift detection needs.
+//!
+//! Snapshots are taken with relaxed loads while shards are still
+//! writing — each value is internally consistent, cross-counter skew
+//! of a few in-flight commands is inherent and documented (the same
+//! lower-bound semantics as `dropped_commands`).
+
+use crate::coordinator::stats::CoordinatorStats;
+use crate::util::{HistSummary, Json};
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+pub const SERVE_METRICS_SCHEMA: &str = "serve_metrics/v1";
+
+fn quantiles(w: &mut String, name: &str, s: &HistSummary) {
+    let _ = writeln!(w, "# TYPE {name} summary");
+    for (q, v) in [("0.5", s.p50), ("0.95", s.p95), ("0.99", s.p99)] {
+        let _ = writeln!(w, "{name}{{quantile=\"{q}\"}} {v}");
+    }
+    let _ = writeln!(w, "{name}_sum {}", (s.mean * s.n as f64).round() as u64);
+    let _ = writeln!(w, "{name}_count {}", s.n);
+}
+
+/// Prometheus text exposition (format 0.0.4) of the full coordinator
+/// state, per-tenant series included.
+pub fn prometheus_text(stats: &CoordinatorStats, elapsed_ms: u64) -> String {
+    let mut w = String::new();
+    let counters: [(&str, u64); 8] = [
+        ("uvm_serve_faults_total", stats.faults.load(Ordering::Relaxed)),
+        ("uvm_serve_block_prefetches_total", stats.block_prefetches.load(Ordering::Relaxed)),
+        ("uvm_serve_predictions_total", stats.predictions.load(Ordering::Relaxed)),
+        ("uvm_serve_batches_total", stats.batches.load(Ordering::Relaxed)),
+        ("uvm_serve_batched_windows_total", stats.batched_windows.load(Ordering::Relaxed)),
+        ("uvm_serve_bypasses_total", stats.bypasses.load(Ordering::Relaxed)),
+        ("uvm_serve_oov_total", stats.oov.load(Ordering::Relaxed)),
+        ("uvm_serve_dropped_commands_total", stats.dropped_commands.load(Ordering::Relaxed)),
+    ];
+    for (name, v) in counters {
+        let _ = writeln!(w, "# TYPE {name} counter");
+        let _ = writeln!(w, "{name} {v}");
+    }
+    let _ = writeln!(w, "# TYPE uvm_serve_uptime_ms gauge");
+    let _ = writeln!(w, "uvm_serve_uptime_ms {elapsed_ms}");
+    quantiles(&mut w, "uvm_serve_e2e_latency_us", &stats.fault_to_cmd_us.summary());
+    quantiles(&mut w, "uvm_serve_batch_latency_us", &stats.batch_latency_us.summary());
+    quantiles(&mut w, "uvm_serve_batch_size", &stats.batch_sizes.summary());
+    for metric in
+        ["commands", "migrates", "predicted", "advises", "discards", "prediction_hits"]
+    {
+        let _ = writeln!(w, "# TYPE uvm_serve_tenant_{metric}_total counter");
+        for t in 0..stats.n_tenants() {
+            let ts = stats.tenant(t as u32);
+            let v = match metric {
+                "commands" => ts.commands.load(Ordering::Relaxed),
+                "migrates" => ts.migrates.load(Ordering::Relaxed),
+                "predicted" => ts.predicted.load(Ordering::Relaxed),
+                "advises" => ts.advises.load(Ordering::Relaxed),
+                "discards" => ts.discards.load(Ordering::Relaxed),
+                _ => ts.pred_hits.load(Ordering::Relaxed),
+            };
+            let _ = writeln!(w, "uvm_serve_tenant_{metric}_total{{tenant=\"{t}\"}} {v}");
+        }
+    }
+    w
+}
+
+/// One cumulative JSON snapshot (a line of the `PREFIX.jsonl` series).
+pub fn snapshot_json(stats: &CoordinatorStats, elapsed_ms: u64) -> Json {
+    let tenants = (0..stats.n_tenants()).map(|t| {
+        let ts = stats.tenant(t as u32);
+        let predicted = ts.predicted.load(Ordering::Relaxed);
+        let hits = ts.pred_hits.load(Ordering::Relaxed);
+        Json::obj(vec![
+            ("tenant", Json::num(t as f64)),
+            ("commands", Json::num(ts.commands.load(Ordering::Relaxed) as f64)),
+            ("migrates", Json::num(ts.migrates.load(Ordering::Relaxed) as f64)),
+            ("predicted", Json::num(predicted as f64)),
+            ("advises", Json::num(ts.advises.load(Ordering::Relaxed) as f64)),
+            ("discards", Json::num(ts.discards.load(Ordering::Relaxed) as f64)),
+            ("prediction_hits", Json::num(hits as f64)),
+            (
+                "accuracy",
+                Json::num(if predicted == 0 { 0.0 } else { hits as f64 / predicted as f64 }),
+            ),
+            ("latency_us", ts.latency_us.summary().to_json()),
+        ])
+    });
+    Json::obj(vec![
+        ("schema", Json::str(SERVE_METRICS_SCHEMA)),
+        ("elapsed_ms", Json::num(elapsed_ms as f64)),
+        ("faults", Json::num(stats.faults.load(Ordering::Relaxed) as f64)),
+        ("block_prefetches", Json::num(stats.block_prefetches.load(Ordering::Relaxed) as f64)),
+        ("predictions", Json::num(stats.predictions.load(Ordering::Relaxed) as f64)),
+        ("batches", Json::num(stats.batches.load(Ordering::Relaxed) as f64)),
+        ("mean_batch", Json::num(stats.mean_batch())),
+        ("bypasses", Json::num(stats.bypasses.load(Ordering::Relaxed) as f64)),
+        ("oov", Json::num(stats.oov.load(Ordering::Relaxed) as f64)),
+        (
+            "dropped_commands",
+            Json::num(stats.dropped_commands.load(Ordering::Relaxed) as f64),
+        ),
+        ("e2e_latency_us", stats.fault_to_cmd_us.summary().to_json()),
+        ("batch_latency_us", stats.batch_latency_us.summary().to_json()),
+        ("tenants", Json::arr(tenants)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::stats::CommandKind;
+
+    #[test]
+    fn prometheus_text_has_counters_and_tenant_series() {
+        let s = CoordinatorStats::with_tenants(2);
+        CoordinatorStats::inc(&s.faults, 7);
+        s.record_command(1, CommandKind::Predicted, 15);
+        s.tenant(1).note_predicted_page(42);
+        assert!(s.tenant(1).note_fault_page(42));
+        let text = prometheus_text(&s, 1234);
+        assert!(text.contains("uvm_serve_faults_total 7"), "{text}");
+        assert!(text.contains("uvm_serve_tenant_predicted_total{tenant=\"1\"} 1"), "{text}");
+        assert!(
+            text.contains("uvm_serve_tenant_prediction_hits_total{tenant=\"1\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("uvm_serve_uptime_ms 1234"), "{text}");
+        assert!(text.contains("uvm_serve_e2e_latency_us{quantile=\"0.95\"}"), "{text}");
+        // Every line is either a comment or `name[{labels}] value`.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split_whitespace().count() == 2,
+                "malformed exposition line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_json_reports_per_tenant_accuracy() {
+        let s = CoordinatorStats::with_tenants(1);
+        s.record_command(0, CommandKind::Predicted, 5);
+        s.record_command(0, CommandKind::Predicted, 5);
+        s.tenant(0).note_predicted_page(9);
+        s.tenant(0).note_predicted_page(10);
+        assert!(s.tenant(0).note_fault_page(10));
+        assert!(!s.tenant(0).note_fault_page(11));
+        let doc = snapshot_json(&s, 50);
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(SERVE_METRICS_SCHEMA));
+        let t0 = &doc.get("tenants").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(t0.get("predicted").and_then(Json::as_u64), Some(2));
+        assert_eq!(t0.get("prediction_hits").and_then(Json::as_u64), Some(1));
+        assert_eq!(t0.get("accuracy").and_then(Json::as_f64), Some(0.5));
+    }
+}

@@ -1,0 +1,331 @@
+//! `repro inspect <telemetry-file>`: terminal rendering + the
+//! `BENCH_telemetry.json` record (schema `bench_telemetry/v1`).
+//!
+//! The inspector is the consumer-side half of the telemetry contract:
+//! it re-derives the headline aggregates from the *event* data and
+//! cross-checks them against the metrics snapshot embedded in the
+//! file — `used + late` must equal `Metrics::prefetch_used` exactly
+//! (those two outcomes are precisely the spans whose first use
+//! incremented the counter), and the per-bucket hit-rate series must
+//! integrate back to `Metrics::page_hit_rate()` within 1e-9. A
+//! telemetry pipeline that cannot reproduce its own aggregates is
+//! lying somewhere; the checks make that loud.
+
+use super::{BENCH_TELEMETRY_SCHEMA, TELEMETRY_SCHEMA};
+use crate::util::Json;
+use anyhow::{anyhow, Context};
+use std::path::Path;
+
+/// Maximum timeline rows rendered; longer series merge adjacent
+/// buckets.
+const MAX_ROWS: usize = 40;
+const BAR_WIDTH: usize = 40;
+
+/// Parsed + cross-checked telemetry document.
+pub struct Inspection {
+    pub benchmark: String,
+    pub bucket_cycles: u64,
+    pub n_trace_events: usize,
+    /// (name, count) in schema order, `unresolved` last.
+    pub outcomes: Vec<(String, u64)>,
+    pub dropped_faults: u64,
+    pub dropped_prefetches: u64,
+    pub prefetch_used: u64,
+    pub used_plus_late: u64,
+    pub hitrate_series: f64,
+    pub hitrate_metrics: f64,
+    /// Per-row (bucket start cycle, accesses, hits) after downsampling.
+    pub timeline: Vec<(u64, u64, u64)>,
+}
+
+fn series_pairs(doc: &Json, name: &str) -> anyhow::Result<Vec<(u64, u64)>> {
+    let arr = doc
+        .get("series")
+        .and_then(|s| s.get(name))
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("telemetry file has no series.{name}"))?;
+    arr.iter()
+        .map(|p| {
+            let pair = p.as_arr().filter(|v| v.len() == 2);
+            pair.and_then(|v| Some((v[0].as_u64()?, v[1].as_u64()?)))
+                .ok_or_else(|| anyhow!("series.{name}: malformed [t, v] pair"))
+        })
+        .collect()
+}
+
+fn metric_u64(doc: &Json, name: &str) -> anyhow::Result<u64> {
+    doc.get("metrics")
+        .and_then(|m| m.get(name))
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("telemetry file has no metrics.{name}"))
+}
+
+impl Inspection {
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let doc = Json::parse_file(path)
+            .with_context(|| format!("reading telemetry file {}", path.display()))?;
+        let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != TELEMETRY_SCHEMA {
+            anyhow::bail!(
+                "{}: schema '{schema}' is not '{TELEMETRY_SCHEMA}' (is this a --telemetry file?)",
+                path.display()
+            );
+        }
+        let outcomes_obj = doc.get("outcomes").ok_or_else(|| anyhow!("no outcomes object"))?;
+        let mut outcomes = Vec::new();
+        for name in ["used", "late", "evicted_unused", "discarded", "unresolved"] {
+            let n = outcomes_obj
+                .get(name)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("outcomes.{name} missing"))?;
+            outcomes.push((name.to_string(), n));
+        }
+        let used_plus_late = outcomes[0].1 + outcomes[1].1;
+
+        let accesses = series_pairs(&doc, "accesses")?;
+        let hits = series_pairs(&doc, "hits")?;
+        let acc_total: u64 = accesses.iter().map(|&(_, v)| v).sum();
+        let hit_total: u64 = hits.iter().map(|&(_, v)| v).sum();
+        let hitrate_series =
+            if acc_total == 0 { 0.0 } else { hit_total as f64 / acc_total as f64 };
+        let hitrate_metrics = doc
+            .get("metrics")
+            .and_then(|m| m.get("page_hit_rate"))
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("no metrics.page_hit_rate"))?;
+
+        // Merge the two series onto one row grid (hits is never longer
+        // than accesses — every hit is an access), then downsample.
+        let mut rows: Vec<(u64, u64, u64)> = accesses
+            .iter()
+            .enumerate()
+            .map(|(i, &(t, a))| (t, a, hits.get(i).map(|&(_, h)| h).unwrap_or(0)))
+            .collect();
+        if rows.len() > MAX_ROWS {
+            let merge = rows.len().div_ceil(MAX_ROWS);
+            rows = rows
+                .chunks(merge)
+                .map(|c| {
+                    let t = c[0].0;
+                    let a = c.iter().map(|r| r.1).sum();
+                    let h = c.iter().map(|r| r.2).sum();
+                    (t, a, h)
+                })
+                .collect();
+        }
+
+        Ok(Self {
+            benchmark: doc.get("benchmark").and_then(Json::as_str).unwrap_or("?").to_string(),
+            bucket_cycles: doc.get("bucket_cycles").and_then(Json::as_u64).unwrap_or(0),
+            n_trace_events: doc
+                .get("traceEvents")
+                .and_then(Json::as_arr)
+                .map(|a| a.len())
+                .unwrap_or(0),
+            outcomes,
+            dropped_faults: doc
+                .get("dropped_spans")
+                .and_then(|d| d.get("faults"))
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            dropped_prefetches: doc
+                .get("dropped_spans")
+                .and_then(|d| d.get("prefetches"))
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            prefetch_used: metric_u64(&doc, "prefetch_used")?,
+            used_plus_late,
+            hitrate_series,
+            hitrate_metrics,
+            timeline: rows,
+        })
+    }
+
+    /// `used + late` spans must account for every counted first use.
+    pub fn used_matches(&self) -> bool {
+        self.used_plus_late == self.prefetch_used
+    }
+
+    /// Series integral vs the metrics aggregate (1e-9 tolerance).
+    pub fn hitrate_integrates(&self) -> bool {
+        (self.hitrate_series - self.hitrate_metrics).abs() <= 1e-9
+    }
+
+    /// Terminal report: outcome breakdown table, cross-checks, and the
+    /// hit-rate timeline.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let total: u64 = self.outcomes.iter().map(|&(_, n)| n).sum();
+        s.push_str(&format!(
+            "telemetry: {} ({} trace events, bucket = {} cycles)\n",
+            self.benchmark, self.n_trace_events, self.bucket_cycles
+        ));
+        if self.dropped_faults + self.dropped_prefetches > 0 {
+            s.push_str(&format!(
+                "  note: span rings saturated (dropped {} fault / {} prefetch spans); \
+                 counts remain exact\n",
+                self.dropped_faults, self.dropped_prefetches
+            ));
+        }
+        s.push_str("prefetch outcomes:\n");
+        for (name, n) in &self.outcomes {
+            let pct = if total == 0 { 0.0 } else { 100.0 * *n as f64 / total as f64 };
+            s.push_str(&format!("  {name:<16} {n:>10}  {pct:>5.1}%\n"));
+        }
+        s.push_str(&format!(
+            "checks:\n  used+late == prefetch_used: {} ({} vs {})\n",
+            if self.used_matches() { "OK" } else { "FAIL" },
+            self.used_plus_late,
+            self.prefetch_used
+        ));
+        s.push_str(&format!(
+            "  hit-rate integral: {} (series {:.9} vs metrics {:.9})\n",
+            if self.hitrate_integrates() { "OK" } else { "FAIL" },
+            self.hitrate_series,
+            self.hitrate_metrics
+        ));
+        s.push_str("hit rate per bucket:\n");
+        for &(t, a, h) in &self.timeline {
+            let rate = if a == 0 { 0.0 } else { h as f64 / a as f64 };
+            let fill = (rate * BAR_WIDTH as f64).round() as usize;
+            s.push_str(&format!(
+                "  {t:>12} |{}{}| {rate:.3} ({h}/{a})\n",
+                "#".repeat(fill.min(BAR_WIDTH)),
+                "-".repeat(BAR_WIDTH - fill.min(BAR_WIDTH)),
+            ));
+        }
+        s
+    }
+
+    /// The `bench_telemetry/v1` record.
+    pub fn bench_json(&self) -> Json {
+        let outcomes =
+            self.outcomes.iter().map(|(k, n)| (k.as_str(), Json::num(*n as f64))).collect();
+        Json::obj(vec![
+            ("schema", Json::str(BENCH_TELEMETRY_SCHEMA)),
+            ("benchmark", Json::str(&self.benchmark)),
+            ("bucket_cycles", Json::num(self.bucket_cycles as f64)),
+            ("n_trace_events", Json::num(self.n_trace_events as f64)),
+            ("outcomes", Json::obj(outcomes)),
+            (
+                "dropped_spans",
+                Json::obj(vec![
+                    ("faults", Json::num(self.dropped_faults as f64)),
+                    ("prefetches", Json::num(self.dropped_prefetches as f64)),
+                ]),
+            ),
+            (
+                "checks",
+                Json::obj(vec![
+                    ("used_matches", Json::Bool(self.used_matches())),
+                    ("hitrate_integrates", Json::Bool(self.hitrate_integrates())),
+                    ("used_plus_late", Json::num(self.used_plus_late as f64)),
+                    ("prefetch_used", Json::num(self.prefetch_used as f64)),
+                    ("hitrate_series", Json::num(self.hitrate_series)),
+                    ("hitrate_metrics", Json::num(self.hitrate_metrics)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// CLI entry: load, render, write `BENCH_telemetry.json` under
+/// `out_dir` (plus the CWD copy every bench writer leaves), and fail
+/// the process if a cross-check fails — `make inspect-smoke` gates on
+/// it.
+pub fn inspect_file(path: &Path, out_dir: &Path) -> anyhow::Result<String> {
+    let insp = Inspection::load(path)?;
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let bench = insp.bench_json();
+    bench.write_file(&out_dir.join("BENCH_telemetry.json"))?;
+    bench.write_file(Path::new("BENCH_telemetry.json"))?;
+    let rendered = insp.render();
+    if !insp.used_matches() || !insp.hitrate_integrates() {
+        anyhow::bail!("telemetry cross-checks FAILED:\n{rendered}");
+    }
+    Ok(rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Metrics;
+    use crate::telemetry::{FaultSpan, PrefetchOutcome, SimTelemetry};
+    use crate::util::TestDir;
+
+    /// Build a sink whose events agree with a hand-made metrics
+    /// snapshot, write it, and inspect the file end to end.
+    fn write_consistent(dir: &TestDir) -> std::path::PathBuf {
+        let path = dir.path().join("tel.json");
+        let mut t = SimTelemetry::new(Some(path.clone()), "unit", 1000);
+        let mut m = Metrics::default();
+        for i in 0..8u64 {
+            let hit = i % 2 == 0;
+            t.on_access(i * 500, hit);
+            m.mem_accesses += 1;
+            if hit {
+                m.page_hits += 1;
+            }
+        }
+        t.on_fault(FaultSpan {
+            at: 10,
+            service_at: 110,
+            start: 110,
+            arrival: 700,
+            page: 1,
+            pc: 0,
+            sm: 0,
+            refault: false,
+        });
+        m.far_faults += 1;
+        t.on_prefetch_issued(2, 10, 700, 1300);
+        t.on_prefetch_issued(3, 10, 1300, 1900);
+        t.on_prefetch_issued(4, 10, 1900, 2500);
+        m.prefetch_transfers += 3;
+        t.resolve_prefetch(2, 1400, PrefetchOutcome::Used);
+        t.resolve_prefetch(3, 1000, PrefetchOutcome::Late);
+        m.prefetch_used += 2;
+        t.resolve_prefetch(4, 3000, PrefetchOutcome::EvictedUnused);
+        m.evicted_unused_prefetches += 1;
+        m.evictions += 1;
+        t.write(&m).unwrap();
+        path
+    }
+
+    #[test]
+    fn inspect_roundtrip_checks_pass() {
+        let dir = TestDir::new();
+        let path = write_consistent(&dir);
+        let insp = Inspection::load(&path).unwrap();
+        let (ul, pu) = (insp.used_plus_late, insp.prefetch_used);
+        assert!(insp.used_matches(), "used+late {ul} vs prefetch_used {pu}");
+        assert!(insp.hitrate_integrates());
+        assert_eq!(insp.outcomes[2], ("evicted_unused".to_string(), 1));
+        let rendered = insp.render();
+        assert!(rendered.contains("used+late == prefetch_used: OK"), "{rendered}");
+        assert!(rendered.contains("hit-rate integral: OK"), "{rendered}");
+    }
+
+    #[test]
+    fn inspect_file_writes_bench_record() {
+        let dir = TestDir::new();
+        let path = write_consistent(&dir);
+        let out = dir.path().join("results");
+        let rendered = inspect_file(&path, &out).unwrap();
+        assert!(rendered.contains("prefetch outcomes"));
+        let bench = Json::parse_file(&out.join("BENCH_telemetry.json")).unwrap();
+        assert_eq!(bench.get("schema").and_then(Json::as_str), Some(BENCH_TELEMETRY_SCHEMA));
+        let checks = bench.get("checks").unwrap();
+        assert_eq!(checks.get("used_matches").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn wrong_schema_rejected() {
+        let dir = TestDir::new();
+        let path = dir.path().join("not_tel.json");
+        Json::obj(vec![("schema", Json::str("bench_eval/v1"))]).write_file(&path).unwrap();
+        let err = Inspection::load(&path).unwrap_err().to_string();
+        assert!(err.contains("telemetry/v1"), "{err}");
+    }
+}

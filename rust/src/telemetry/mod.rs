@@ -1,0 +1,218 @@
+//! Structured telemetry: fault-lifecycle spans, time-series rollups,
+//! prediction post-mortems and the serving metrics exporter
+//! (DESIGN.md §13).
+//!
+//! Everything in this module is **strictly observer**: the simulator
+//! owns an `Option<Box<SimTelemetry>>` that is `None` unless `repro
+//! simulate --telemetry FILE` asked for it, every hook sits behind
+//! that one check, and no telemetry state feeds back into any
+//! scheduling, eviction or prediction decision. Telemetry-off runs are
+//! byte-identical to pre-telemetry builds — `tests/ab_identity.rs`
+//! pins that invariant, and a second test pins that the telemetry
+//! *file itself* is byte-deterministic for a fixed seed (events carry
+//! simulated cycles, never wall-clock).
+//!
+//! Three event families (ISSUE 10):
+//! * **fault-lifecycle spans** ([`FaultSpan`], [`PrefetchSpan`]) —
+//!   per-fault fault→service→link-grant→arrival cycle timestamps, and
+//!   per-prefetch terminal outcomes ([`PrefetchOutcome`]), collected
+//!   in bounded rings and drained to a Chrome-trace-compatible file;
+//! * **time-series rollups** ([`rollup::Rollup`],
+//!   [`rollup::GaugeRollup`]) — per-bucket accesses/hits/faults/
+//!   prefetch-issues/occupancy on the same bucket grid as the PCIe
+//!   byte series;
+//! * **prediction post-mortems** ([`Postmortem`]) — per-(cluster,
+//!   PC-bucket) top-1 accuracy attribution from the DL prefetcher.
+//!
+//! The serving plane reuses none of the simulator sink: its exporter
+//! ([`export`]) snapshots the lock-free
+//! [`CoordinatorStats`](crate::coordinator::stats::CoordinatorStats)
+//! into Prometheus text exposition + JSONL.
+
+pub mod export;
+pub mod inspect;
+pub mod rollup;
+pub mod sink;
+
+pub use rollup::{GaugeRollup, Rollup};
+pub use sink::SimTelemetry;
+
+use crate::types::{Cycle, PageNum};
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// Schema tag of the `--telemetry` output file.
+pub const TELEMETRY_SCHEMA: &str = "telemetry/v1";
+/// Schema tag of the `repro inspect` bench record.
+pub const BENCH_TELEMETRY_SCHEMA: &str = "bench_telemetry/v1";
+
+/// Terminal outcome of one prefetch transfer.
+///
+/// `Used` and `Late` together partition `Metrics::prefetch_used`
+/// (`Late` = the page was *demanded while still in flight* — the
+/// coalesced-fault arm — so it was used, just not soon enough to hide
+/// the transfer). `EvictedUnused` mirrors
+/// `Metrics::evicted_unused_prefetches`; `Discarded` covers prefetched
+/// pages handed back by the discard verbs before first use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchOutcome {
+    Used,
+    Late,
+    EvictedUnused,
+    Discarded,
+}
+
+impl PrefetchOutcome {
+    pub const ALL: [PrefetchOutcome; 4] =
+        [Self::Used, Self::Late, Self::EvictedUnused, Self::Discarded];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Used => "used",
+            Self::Late => "late",
+            Self::EvictedUnused => "evicted_unused",
+            Self::Discarded => "discarded",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Self::Used => 0,
+            Self::Late => 1,
+            Self::EvictedUnused => 2,
+            Self::Discarded => 3,
+        }
+    }
+}
+
+/// One far-fault lifecycle: observed → serviceable (fault-handling
+/// latency paid) → link grant → page resident.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpan {
+    /// Cycle the access observed the missing page (post-TLB-walk).
+    pub at: Cycle,
+    /// Cycle the migration became eligible (`at` + far-fault cycles).
+    pub service_at: Cycle,
+    /// Cycle the serialized link started serving the page.
+    pub start: Cycle,
+    /// Cycle the page became resident.
+    pub arrival: Cycle,
+    pub page: PageNum,
+    pub pc: u64,
+    pub sm: u16,
+    /// The page had been resident before and was evicted/discarded.
+    pub refault: bool,
+}
+
+/// One prefetch transfer: issue → link grant → arrival → terminal
+/// outcome (None while unresolved at end of run).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchSpan {
+    pub page: PageNum,
+    /// Cycle the decision was applied (transfer requested).
+    pub issued_at: Cycle,
+    pub start: Cycle,
+    pub arrival: Cycle,
+    pub outcome: Option<PrefetchOutcome>,
+    /// Cycle the outcome was decided (0 while unresolved).
+    pub outcome_at: Cycle,
+}
+
+/// One dynamic inference batch of the DL prefetcher: oldest enqueue →
+/// flush → results mature.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchEvent {
+    /// Enqueue cycle of the oldest request in the batch.
+    pub enqueued_at: Cycle,
+    /// Cycle the batch was flushed into the model.
+    pub run_at: Cycle,
+    /// Cycle the predictions matured (`run_at` + prediction latency).
+    pub ready_at: Cycle,
+    pub size: u32,
+    /// Predictions in this batch that decoded to the OOV class.
+    pub oov: u32,
+}
+
+/// Per-(cluster, PC-bucket) prediction accuracy cell.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PostmortemCell {
+    pub predictions: u64,
+    pub correct: u64,
+    pub oov: u64,
+}
+
+/// Top-1 accuracy attribution from the DL prefetcher: which access
+/// streams (cluster) at which code sites (PC bucket) the deployed
+/// model actually predicts, and where it loses. Keys are
+/// `(cluster key, pc & !0xF)`; the BTreeMap keeps the report order
+/// deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct Postmortem {
+    pub cells: BTreeMap<(u64, u64), PostmortemCell>,
+}
+
+/// PC-bucket granularity: 16-byte code regions, coarse enough to
+/// aggregate unrolled bodies, fine enough to separate kernels.
+pub fn pc_bucket(pc: u64) -> u64 {
+    pc & !0xF
+}
+
+impl Postmortem {
+    /// Record one resolved prediction (the cluster's next access
+    /// either matched the predicted delta or did not).
+    pub fn record(&mut self, cluster: u64, pc_bucket: u64, correct: bool) {
+        let c = self.cells.entry((cluster, pc_bucket)).or_default();
+        c.predictions += 1;
+        if correct {
+            c.correct += 1;
+        }
+    }
+
+    /// Record one OOV answer (no page predicted, nothing to resolve).
+    pub fn record_oov(&mut self, cluster: u64, pc_bucket: u64) {
+        self.cells.entry((cluster, pc_bucket)).or_default().oov += 1;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Deterministic JSON array, one object per cell in key order.
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.cells.iter().map(|(&(cluster, pcb), c)| {
+            Json::obj(vec![
+                ("cluster", Json::num(cluster as f64)),
+                ("pc_bucket", Json::num(pcb as f64)),
+                ("predictions", Json::num(c.predictions as f64)),
+                ("correct", Json::num(c.correct as f64)),
+                ("oov", Json::num(c.oov as f64)),
+            ])
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_names_and_indices_are_stable() {
+        for (i, o) in PrefetchOutcome::ALL.iter().enumerate() {
+            assert_eq!(o.index(), i);
+        }
+        assert_eq!(PrefetchOutcome::Late.as_str(), "late");
+    }
+
+    #[test]
+    fn postmortem_accumulates_and_serializes_in_key_order() {
+        let mut p = Postmortem::default();
+        p.record(7, pc_bucket(0x35), true);
+        p.record(7, pc_bucket(0x3f), false); // same 16-byte bucket
+        p.record_oov(2, 0x40);
+        let c = p.cells[&(7, 0x30)];
+        assert_eq!((c.predictions, c.correct, c.oov), (2, 1, 0));
+        let json = p.to_json().to_string();
+        // BTreeMap order: cluster 2 before cluster 7.
+        assert!(json.find("\"cluster\":2").unwrap() < json.find("\"cluster\":7").unwrap());
+    }
+}

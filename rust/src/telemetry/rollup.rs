@@ -1,0 +1,179 @@
+//! Uniform time-series accumulators (DESIGN.md §13).
+//!
+//! [`Rollup`] generalizes the one-off PCIe byte histogram the
+//! interconnect has carried since the first simulator commit: a dense
+//! vector of per-bucket sums over simulated cycles. Every time-series
+//! metric — bytes on the link, accesses, page hits, faults, prefetch
+//! issues — is now the *same* accumulator, so bucket boundaries agree
+//! across series by construction (one `bucket_cycles` for the whole
+//! run) and the Fig. 11 bandwidth timeline, the hit-rate timeline and
+//! the fault-rate timeline can be overlaid without resampling.
+//!
+//! [`GaugeRollup`] is the level-triggered sibling for sampled state
+//! (device occupancy): it keeps the *last* value observed per bucket
+//! and forward-fills gaps at read time, because a gauge that nobody
+//! sampled did not go to zero — it just did not change.
+
+use crate::types::Cycle;
+
+/// Dense per-bucket counter series over simulated time.
+#[derive(Debug, Clone)]
+pub struct Rollup {
+    bucket_cycles: Cycle,
+    buckets: Vec<u64>,
+}
+
+impl Rollup {
+    pub fn new(bucket_cycles: Cycle) -> Self {
+        assert!(bucket_cycles > 0);
+        Self { bucket_cycles, buckets: Vec::new() }
+    }
+
+    pub fn bucket_cycles(&self) -> Cycle {
+        self.bucket_cycles
+    }
+
+    /// Add `v` to the bucket containing cycle `at`.
+    pub fn add(&mut self, at: Cycle, v: u64) {
+        let b = (at / self.bucket_cycles) as usize;
+        if self.buckets.len() <= b {
+            self.buckets.resize(b + 1, 0);
+        }
+        self.buckets[b] += v;
+    }
+
+    /// Spread `v` uniformly over the buckets spanned by `[start, done)`,
+    /// with the division remainder charged to the first bucket so the
+    /// series total stays exact. This is the interconnect's original
+    /// byte-histogram arithmetic verbatim — the swap to `Rollup` must
+    /// leave `pcie_series` byte-identical (the A/B gate pins it).
+    pub fn spread(&mut self, start: Cycle, done: Cycle, v: u64) {
+        let first = (start / self.bucket_cycles) as usize;
+        let last = ((done.saturating_sub(1)) / self.bucket_cycles) as usize;
+        if self.buckets.len() <= last {
+            self.buckets.resize(last + 1, 0);
+        }
+        let n = (last - first + 1) as u64;
+        for b in first..=last {
+            self.buckets[b] += v / n;
+        }
+        self.buckets[first] += v % n;
+    }
+
+    /// `(bucket start cycle, sum)` pairs, one per bucket from cycle 0
+    /// through the last touched bucket (untouched buckets read 0).
+    pub fn series(&self) -> Vec<(Cycle, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (i as Cycle * self.bucket_cycles, b))
+            .collect()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+}
+
+/// Last-value-per-bucket series for sampled state (occupancy).
+#[derive(Debug, Clone)]
+pub struct GaugeRollup {
+    bucket_cycles: Cycle,
+    buckets: Vec<Option<u64>>,
+}
+
+impl GaugeRollup {
+    pub fn new(bucket_cycles: Cycle) -> Self {
+        assert!(bucket_cycles > 0);
+        Self { bucket_cycles, buckets: Vec::new() }
+    }
+
+    /// Record the gauge reading `v` at cycle `at`; later samples in the
+    /// same bucket win (the bucket reports its closing value).
+    pub fn set(&mut self, at: Cycle, v: u64) {
+        let b = (at / self.bucket_cycles) as usize;
+        if self.buckets.len() <= b {
+            self.buckets.resize(b + 1, None);
+        }
+        self.buckets[b] = Some(v);
+    }
+
+    /// Forward-filled `(bucket start cycle, value)` series: buckets
+    /// with no sample repeat the previous bucket's value (0 before the
+    /// first sample).
+    pub fn series(&self) -> Vec<(Cycle, u64)> {
+        let mut cur = 0u64;
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                if let Some(v) = v {
+                    cur = *v;
+                }
+                (i as Cycle * self.bucket_cycles, cur)
+            })
+            .collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates_per_bucket() {
+        let mut r = Rollup::new(100);
+        r.add(0, 5);
+        r.add(99, 5);
+        r.add(100, 7);
+        assert_eq!(r.series(), vec![(0, 10), (100, 7)]);
+        assert_eq!(r.total(), 17);
+    }
+
+    #[test]
+    fn spread_preserves_totals_with_remainder_in_first_bucket() {
+        let mut r = Rollup::new(1000);
+        // Spans buckets 0..=2 (cycles 500..2500): 100/3 = 33 each,
+        // remainder 1 to the first.
+        r.spread(500, 2500, 100);
+        assert_eq!(r.series(), vec![(0, 34), (1000, 33), (2000, 33)]);
+        assert_eq!(r.total(), 100);
+    }
+
+    #[test]
+    fn spread_matches_interconnect_edge_cases() {
+        let mut r = Rollup::new(1000);
+        // done == start + 1 lands wholly in start's bucket (the
+        // interconnect's minimum one-cycle occupancy).
+        r.spread(5, 6, 0);
+        assert_eq!(r.total(), 0);
+        assert_eq!(r.len(), 1);
+        // Exact bucket boundary: [0, 1000) touches only bucket 0.
+        r.spread(0, 1000, 10);
+        assert_eq!(r.series()[0], (0, 10));
+    }
+
+    #[test]
+    fn gauge_forward_fills() {
+        let mut g = GaugeRollup::new(10);
+        g.set(0, 3);
+        g.set(35, 8);
+        // Bucket 1..=2 carry bucket 0's closing value forward.
+        assert_eq!(g.series(), vec![(0, 3), (10, 3), (20, 3), (30, 8)]);
+        // Later sample in the same bucket wins.
+        g.set(36, 9);
+        assert_eq!(g.series()[3], (30, 9));
+    }
+}

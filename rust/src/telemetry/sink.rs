@@ -1,0 +1,386 @@
+//! The simulator-side telemetry sink (DESIGN.md §13).
+//!
+//! Owned by the engine as `Option<Box<SimTelemetry>>` — `None` (the
+//! default) costs one pointer-null check per hook site and allocates
+//! nothing, honoring the §12 allocation-free fault loop. The sink
+//! never hands state back to the engine: hooks take `&mut self` plus
+//! plain values, and every collection is bounded (`SPAN_CAP` per span
+//! family, drop-newest with a dropped counter) so a pathological run
+//! cannot balloon memory. All timestamps are simulated cycles — the
+//! output file is a pure function of the (workload, config, seed)
+//! triple and therefore byte-deterministic (pinned by
+//! `tests/ab_identity.rs`).
+//!
+//! The file layout is the Chrome trace-event *object form* —
+//! `{"traceEvents": [...], ...}` — which chrome://tracing and Perfetto
+//! load directly (extra top-level keys are ignored by the viewers);
+//! one simulated cycle is rendered as one microsecond. The extra keys
+//! carry the rollup series, the outcome breakdown, the prediction
+//! post-mortem and a metrics snapshot that lets `repro inspect`
+//! cross-check the spans against the end-of-run aggregates.
+
+use super::{
+    BatchEvent, FaultSpan, GaugeRollup, Postmortem, PrefetchOutcome, PrefetchSpan, Rollup,
+    TELEMETRY_SCHEMA,
+};
+use crate::sim::Metrics;
+use crate::types::{Cycle, PageNum};
+use crate::util::Json;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Per-family span ring capacity. Beyond it spans are counted but not
+/// stored (`dropped_spans` in the output) — rollups and outcome
+/// counters keep exact totals regardless.
+pub const SPAN_CAP: usize = 1 << 16;
+
+#[derive(Debug)]
+pub struct SimTelemetry {
+    /// Output path; `None` = collect but never write (the perf
+    /// harness's overhead probe).
+    path: Option<PathBuf>,
+    benchmark: String,
+    bucket_cycles: Cycle,
+    faults: Vec<FaultSpan>,
+    dropped_faults: u64,
+    prefetches: Vec<PrefetchSpan>,
+    dropped_prefetches: u64,
+    /// Page → open prefetch span (value = stored index, `None` when the
+    /// span fell past `SPAN_CAP`). At most one open span per page: the
+    /// engine never re-issues a prefetch for a known page.
+    open: HashMap<PageNum, Option<u32>>,
+    outcome_counts: [u64; 4],
+    accesses: Rollup,
+    hits: Rollup,
+    fault_series: Rollup,
+    prefetch_issues: Rollup,
+    evictions: Rollup,
+    discards: Rollup,
+    occupancy: GaugeRollup,
+    batches: Vec<BatchEvent>,
+    postmortem: Option<Postmortem>,
+}
+
+impl SimTelemetry {
+    pub fn new(path: Option<PathBuf>, benchmark: &str, bucket_cycles: Cycle) -> Self {
+        Self {
+            path,
+            benchmark: benchmark.to_string(),
+            bucket_cycles,
+            faults: Vec::new(),
+            dropped_faults: 0,
+            prefetches: Vec::new(),
+            dropped_prefetches: 0,
+            open: HashMap::new(),
+            outcome_counts: [0; 4],
+            accesses: Rollup::new(bucket_cycles),
+            hits: Rollup::new(bucket_cycles),
+            fault_series: Rollup::new(bucket_cycles),
+            prefetch_issues: Rollup::new(bucket_cycles),
+            evictions: Rollup::new(bucket_cycles),
+            discards: Rollup::new(bucket_cycles),
+            occupancy: GaugeRollup::new(bucket_cycles),
+            batches: Vec::new(),
+            postmortem: None,
+        }
+    }
+
+    /// One counted memory access (call exactly where
+    /// `Metrics::mem_accesses` increments, with the same hit flag as
+    /// `Metrics::page_hits`, so the per-bucket hit-rate series
+    /// integrates back to `Metrics::page_hit_rate()` exactly).
+    pub fn on_access(&mut self, at: Cycle, hit: bool) {
+        self.accesses.add(at, 1);
+        if hit {
+            self.hits.add(at, 1);
+        }
+    }
+
+    pub fn on_fault(&mut self, span: FaultSpan) {
+        self.fault_series.add(span.at, 1);
+        if self.faults.len() < SPAN_CAP {
+            self.faults.push(span);
+        } else {
+            self.dropped_faults += 1;
+        }
+    }
+
+    pub fn on_prefetch_issued(
+        &mut self,
+        page: PageNum,
+        issued_at: Cycle,
+        start: Cycle,
+        arrival: Cycle,
+    ) {
+        self.prefetch_issues.add(issued_at, 1);
+        let slot = if self.prefetches.len() < SPAN_CAP {
+            self.prefetches.push(PrefetchSpan {
+                page,
+                issued_at,
+                start,
+                arrival,
+                outcome: None,
+                outcome_at: 0,
+            });
+            Some((self.prefetches.len() - 1) as u32)
+        } else {
+            self.dropped_prefetches += 1;
+            None
+        };
+        self.open.insert(page, slot);
+    }
+
+    /// Attach the terminal outcome to the page's open prefetch span, if
+    /// any — a no-op for pages that were never prefetched or whose
+    /// span already resolved (e.g. eviction of a used prefetch).
+    pub fn resolve_prefetch(&mut self, page: PageNum, at: Cycle, outcome: PrefetchOutcome) {
+        if let Some(slot) = self.open.remove(&page) {
+            self.outcome_counts[outcome.index()] += 1;
+            if let Some(i) = slot {
+                let s = &mut self.prefetches[i as usize];
+                s.outcome = Some(outcome);
+                s.outcome_at = at;
+            }
+        }
+    }
+
+    pub fn on_eviction(&mut self, at: Cycle) {
+        self.evictions.add(at, 1);
+    }
+
+    pub fn on_discard(&mut self, at: Cycle, pages: u64) {
+        self.discards.add(at, pages);
+    }
+
+    pub fn set_occupancy(&mut self, at: Cycle, live_pages: u64) {
+        self.occupancy.set(at, live_pages);
+    }
+
+    pub fn set_batches(&mut self, batches: Vec<BatchEvent>) {
+        self.batches = batches;
+    }
+
+    pub fn set_postmortem(&mut self, pm: Option<Postmortem>) {
+        self.postmortem = pm;
+    }
+
+    pub fn outcome_count(&self, o: PrefetchOutcome) -> u64 {
+        self.outcome_counts[o.index()]
+    }
+
+    /// Prefetches still unresolved (in flight, or resident-unused at
+    /// end of run).
+    pub fn unresolved(&self) -> u64 {
+        self.open.len() as u64
+    }
+
+    fn series_json(s: &[(Cycle, u64)]) -> Json {
+        Json::arr(
+            s.iter()
+                .map(|&(t, v)| Json::arr([Json::num(t as f64), Json::num(v as f64)])),
+        )
+    }
+
+    fn trace_events(&self) -> Json {
+        let mut evs = Vec::new();
+        for f in &self.faults {
+            evs.push(Json::obj(vec![
+                ("name", Json::str(if f.refault { "refault" } else { "fault" })),
+                ("cat", Json::str("fault")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(f.at as f64)),
+                ("dur", Json::num(f.arrival.saturating_sub(f.at) as f64)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(f.sm as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("page", Json::num(f.page as f64)),
+                        ("pc", Json::num(f.pc as f64)),
+                        ("service_at", Json::num(f.service_at as f64)),
+                        ("link_start", Json::num(f.start as f64)),
+                    ]),
+                ),
+            ]));
+        }
+        for p in &self.prefetches {
+            evs.push(Json::obj(vec![
+                ("name", Json::str("prefetch")),
+                ("cat", Json::str("prefetch")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(p.issued_at as f64)),
+                ("dur", Json::num(p.arrival.saturating_sub(p.issued_at) as f64)),
+                ("pid", Json::num(2.0)),
+                ("tid", Json::num(0.0)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("page", Json::num(p.page as f64)),
+                        ("link_start", Json::num(p.start as f64)),
+                        (
+                            "outcome",
+                            match p.outcome {
+                                Some(o) => Json::str(o.as_str()),
+                                None => Json::str("unresolved"),
+                            },
+                        ),
+                        ("outcome_at", Json::num(p.outcome_at as f64)),
+                    ]),
+                ),
+            ]));
+        }
+        for b in &self.batches {
+            evs.push(Json::obj(vec![
+                ("name", Json::str("predict_batch")),
+                ("cat", Json::str("predict")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(b.enqueued_at as f64)),
+                ("dur", Json::num(b.ready_at.saturating_sub(b.enqueued_at) as f64)),
+                ("pid", Json::num(3.0)),
+                ("tid", Json::num(0.0)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("run_at", Json::num(b.run_at as f64)),
+                        ("size", Json::num(b.size as f64)),
+                        ("oov", Json::num(b.oov as f64)),
+                    ]),
+                ),
+            ]));
+        }
+        Json::arr(evs)
+    }
+
+    /// The full telemetry document (`telemetry/v1`).
+    pub fn to_json(&self, m: &Metrics) -> Json {
+        let outcomes = Json::obj(
+            PrefetchOutcome::ALL
+                .iter()
+                .map(|o| (o.as_str(), Json::num(self.outcome_counts[o.index()] as f64)))
+                .chain([("unresolved", Json::num(self.unresolved() as f64))])
+                .collect(),
+        );
+        let series = Json::obj(vec![
+            ("accesses", Self::series_json(&self.accesses.series())),
+            ("hits", Self::series_json(&self.hits.series())),
+            ("faults", Self::series_json(&self.fault_series.series())),
+            ("prefetch_issues", Self::series_json(&self.prefetch_issues.series())),
+            ("evictions", Self::series_json(&self.evictions.series())),
+            ("discards", Self::series_json(&self.discards.series())),
+            ("occupancy", Self::series_json(&self.occupancy.series())),
+        ]);
+        let metrics = Json::obj(vec![
+            ("instructions", Json::num(m.instructions as f64)),
+            ("cycles", Json::num(m.cycles as f64)),
+            ("mem_accesses", Json::num(m.mem_accesses as f64)),
+            ("page_hits", Json::num(m.page_hits as f64)),
+            ("far_faults", Json::num(m.far_faults as f64)),
+            ("refaults", Json::num(m.refaults as f64)),
+            ("prefetch_transfers", Json::num(m.prefetch_transfers as f64)),
+            ("prefetch_used", Json::num(m.prefetch_used as f64)),
+            ("evicted_unused_prefetches", Json::num(m.evicted_unused_prefetches as f64)),
+            ("evictions", Json::num(m.evictions as f64)),
+            ("discards", Json::num(m.discards as f64)),
+            ("lazy_discard_reclaims", Json::num(m.lazy_discard_reclaims as f64)),
+            ("page_hit_rate", Json::num(m.page_hit_rate())),
+            ("accuracy", Json::num(m.accuracy())),
+        ]);
+        Json::obj(vec![
+            ("schema", Json::str(TELEMETRY_SCHEMA)),
+            ("benchmark", Json::str(&self.benchmark)),
+            ("bucket_cycles", Json::num(self.bucket_cycles as f64)),
+            ("displayTimeUnit", Json::str("ms")),
+            ("traceEvents", self.trace_events()),
+            ("outcomes", outcomes),
+            (
+                "dropped_spans",
+                Json::obj(vec![
+                    ("faults", Json::num(self.dropped_faults as f64)),
+                    ("prefetches", Json::num(self.dropped_prefetches as f64)),
+                ]),
+            ),
+            ("series", series),
+            (
+                "postmortem",
+                match &self.postmortem {
+                    Some(pm) => pm.to_json(),
+                    None => Json::arr([]),
+                },
+            ),
+            ("metrics", metrics),
+        ])
+    }
+
+    /// Serialize to the configured path (no-op for a path-less sink).
+    pub fn write(&self, m: &Metrics) -> std::io::Result<()> {
+        match &self.path {
+            Some(p) => self.to_json(m).write_file(p),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink() -> SimTelemetry {
+        SimTelemetry::new(None, "test", 1000)
+    }
+
+    #[test]
+    fn outcome_resolution_tracks_open_spans() {
+        let mut t = sink();
+        t.on_prefetch_issued(7, 10, 12, 500);
+        t.on_prefetch_issued(8, 10, 520, 900);
+        assert_eq!(t.unresolved(), 2);
+        t.resolve_prefetch(7, 600, PrefetchOutcome::Used);
+        t.resolve_prefetch(8, 700, PrefetchOutcome::EvictedUnused);
+        // Re-resolving or resolving a never-prefetched page is a no-op.
+        t.resolve_prefetch(7, 800, PrefetchOutcome::Discarded);
+        t.resolve_prefetch(99, 800, PrefetchOutcome::Used);
+        assert_eq!(t.outcome_count(PrefetchOutcome::Used), 1);
+        assert_eq!(t.outcome_count(PrefetchOutcome::EvictedUnused), 1);
+        assert_eq!(t.outcome_count(PrefetchOutcome::Discarded), 0);
+        assert_eq!(t.unresolved(), 0);
+        assert_eq!(t.prefetches[0].outcome, Some(PrefetchOutcome::Used));
+        assert_eq!(t.prefetches[0].outcome_at, 600);
+    }
+
+    #[test]
+    fn hit_series_integrates_to_hit_rate() {
+        let mut t = sink();
+        for i in 0..10u64 {
+            t.on_access(i * 700, i % 2 == 0);
+        }
+        assert_eq!(t.accesses.total(), 10);
+        assert_eq!(t.hits.total(), 5);
+    }
+
+    #[test]
+    fn document_is_chrome_trace_object_form() {
+        let mut t = sink();
+        t.on_fault(FaultSpan {
+            at: 5,
+            service_at: 105,
+            start: 105,
+            arrival: 600,
+            page: 3,
+            pc: 0x40,
+            sm: 2,
+            refault: false,
+        });
+        t.on_prefetch_issued(4, 6, 600, 1100);
+        let m = Metrics::default();
+        let doc = t.to_json(&m);
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(TELEMETRY_SCHEMA));
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("ph").and_then(Json::as_str), Some("X"));
+        let out = doc.get("outcomes").unwrap();
+        assert_eq!(out.get("unresolved").and_then(Json::as_f64), Some(1.0));
+        // Round-trips through the in-tree parser.
+        let again = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(again.to_string(), doc.to_string());
+    }
+}

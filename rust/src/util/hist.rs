@@ -148,6 +148,22 @@ impl AtomicHistogram {
             p99: self.percentile(0.99),
         }
     }
+
+    /// Fold `other`'s samples into `self` (fleet-level rollup across
+    /// per-tenant or per-shard histograms). Racy-but-safe like reads: a
+    /// merge concurrent with writers may miss in-flight samples on
+    /// either side, but never double-counts what it did observe.
+    pub fn merge(&self, other: &AtomicHistogram) {
+        for (dst, src) in self.buckets.iter().zip(&other.buckets) {
+            let v = src.load(Ordering::Relaxed);
+            if v > 0 {
+                dst.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
 }
 
 impl Default for AtomicHistogram {
@@ -227,6 +243,52 @@ mod tests {
             t.join().unwrap();
         }
         assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn merge_folds_counts_sum_and_max() {
+        let a = AtomicHistogram::new();
+        let b = AtomicHistogram::new();
+        for v in 1..=100u64 {
+            a.record(v);
+        }
+        for v in 501..=600u64 {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.max(), 600);
+        let total = (1..=100u64).sum::<u64>() + (501..=600u64).sum::<u64>();
+        assert!((a.mean() - total as f64 / 200.0).abs() < 1e-9);
+        // Percentiles see the combined distribution: p99 lands in b's range.
+        assert!(a.percentile(0.99) >= 512, "p99 {}", a.percentile(0.99));
+        assert!(a.percentile(0.25) <= 127, "p25 {}", a.percentile(0.25));
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let a = AtomicHistogram::new();
+        a.record(42);
+        let before = a.summary();
+        a.merge(&AtomicHistogram::new());
+        assert_eq!(a.summary(), before);
+        // Merging *into* an empty histogram copies the distribution.
+        let c = AtomicHistogram::new();
+        c.merge(&a);
+        assert_eq!(c.summary(), before);
+    }
+
+    #[test]
+    fn merge_saturated_top_bucket_keeps_max() {
+        let a = AtomicHistogram::new();
+        let b = AtomicHistogram::new();
+        a.record(0);
+        b.record(u64::MAX);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), u64::MAX);
+        assert_eq!(a.percentile(1.0), u64::MAX);
+        assert_eq!(a.percentile(0.5), 0);
     }
 
     #[test]

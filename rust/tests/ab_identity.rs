@@ -22,7 +22,7 @@ use uvm_prefetch::eval::runner::RunOptions;
 use uvm_prefetch::eval::sweep::CellSpec;
 use uvm_prefetch::sim::eviction::ALL_EVICTION_POLICIES;
 use uvm_prefetch::sim::Metrics;
-use uvm_prefetch::util::Json;
+use uvm_prefetch::util::{Json, TestDir};
 
 const AB_SCHEMA: &str = "ab_fixtures/v1";
 const BENCHMARKS: &[&str] = &["addvectors", "spmv"];
@@ -193,4 +193,45 @@ fn metrics_match_committed_fixtures_byte_for_byte() {
         mismatches.len(),
         mismatches.join("\n  ")
     );
+}
+
+/// Telemetry is a strict observer: attaching a sink must not perturb a
+/// single counter. Run the thorniest cells of the pinned grid (the
+/// churny 0.25-ratio ones exercise eviction, unused-prefetch, and
+/// refault resolution) with and without a sink and demand equality of
+/// the *entire* `Metrics` struct — same oracle the refactor gate uses.
+#[test]
+fn telemetry_attach_leaves_metrics_byte_identical() {
+    let dir = TestDir::new();
+    let opts = tiny();
+    for (i, &ratio) in RATIOS.iter().enumerate() {
+        for b in BENCHMARKS {
+            let spec = CellSpec::new(b, "tree", &opts).with_oversub(ratio, "lru");
+            let plain = spec.run().expect("telemetry-off cell");
+            let out = dir.file(&format!("tel_{i}_{b}.json"));
+            let observed = spec.run_with_telemetry(Some(out.as_path())).expect("telemetry-on cell");
+            assert_eq!(plain, observed, "{b}/r{ratio:.2}: telemetry perturbed the simulation");
+            assert!(out.exists(), "{b}/r{ratio:.2}: sink wrote no file");
+        }
+    }
+}
+
+/// The telemetry file itself is deterministic: two identical runs must
+/// produce byte-for-byte equal output (BTreeMap-backed JSON, simulated
+/// timestamps only — no wall clock anywhere in the schema).
+#[test]
+fn telemetry_file_is_byte_deterministic_across_runs() {
+    let dir = TestDir::new();
+    let opts = tiny();
+    let spec = CellSpec::new("spmv", "tree", &opts).with_oversub(0.25, "lru");
+    let (a, b) = (dir.file("run_a.json"), dir.file("run_b.json"));
+    let ma = spec.run_with_telemetry(Some(a.as_path())).expect("first run");
+    let mb = spec.run_with_telemetry(Some(b.as_path())).expect("second run");
+    assert_eq!(ma, mb, "metrics nondeterministic across identical runs");
+    let (bytes_a, bytes_b) = (std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+    assert!(!bytes_a.is_empty(), "telemetry file is empty");
+    assert_eq!(bytes_a, bytes_b, "telemetry file differs across identical runs");
+    // Sanity: the file parses and carries the v1 schema.
+    let doc = Json::parse_file(&a).expect("telemetry file parses");
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some("telemetry/v1"));
 }

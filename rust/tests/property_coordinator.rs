@@ -87,6 +87,8 @@ fn prop_batcher_conserves_requests() {
                     },
                     anchor_page: i,
                     enqueued_at: now,
+                    cluster: 0,
+                    pc: 0,
                 };
                 pushed.push(i);
                 if let Some(batch) = b.push(req) {

@@ -166,6 +166,7 @@ fn serve_load_generator_smoke_stride() {
         shards: 2,
         max_faults: 200,
         bypass: BypassMode::Never,
+        metrics_out: None,
         run: RunOptions { scale: 0.05, max_instructions: 100_000, ..Default::default() },
     };
     let r = run(&opts).expect("serve run");
@@ -205,6 +206,7 @@ fn serve_per_tenant_counts_shard_invariant() {
         shards: 1,
         max_faults: 150,
         bypass: BypassMode::Never,
+        metrics_out: None,
         run: RunOptions { scale: 0.05, max_instructions: 100_000, ..Default::default() },
     };
     let one = run(&base).expect("1-shard run");
